@@ -1,0 +1,41 @@
+//! Quickstart: the smallest end-to-end run.
+//!
+//! Trains the `tiny` ResNet on 4 workers arranged in the paper's 2×2
+//! 2D-torus (Figure 2's example grid) for 30 steps, with label smoothing,
+//! FP16 gradient exchange and the Pallas LARS optimizer — every layer of
+//! the stack in one minute.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use flashsgd::prelude::*;
+
+fn main() -> Result<()> {
+    let config = TrainConfig::quickstart();
+    println!(
+        "quickstart: {} workers, collective {}, {} steps",
+        config.batch.max_workers(),
+        config.collective,
+        config.max_steps
+    );
+
+    let trainer = Trainer::new(config, flashsgd::artifacts_dir())?;
+    let report = trainer.run()?;
+
+    println!("{}", report.format());
+    println!("\nloss curve (EMA):");
+    for (step, loss) in report.metrics.loss_curve(5) {
+        let bar = "#".repeat((loss * 12.0).min(60.0) as usize);
+        println!("  step {step:>4}  {loss:>7.4}  {bar}");
+    }
+
+    let s = &report.summary;
+    assert!(
+        s.last_loss < s.first_loss,
+        "training must reduce the loss: {:.3} -> {:.3}",
+        s.first_loss,
+        s.last_loss
+    );
+    println!("\nOK: loss decreased {:.3} -> {:.3}", s.first_loss, s.last_loss);
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Scaling study (paper Tables 2 & 6): project throughput and GPU scaling
+//! efficiency from 4 to 4096 GPUs with the ABCI cluster model, comparing
+//! the 2D-torus against the flat-ring and hierarchical baselines, and
+//! validate the closed-form costs against the discrete-event simulator.
+//!
+//!     cargo run --release --example scaling_sim
+
+use flashsgd::cluster::best_grid;
+use flashsgd::repro;
+use flashsgd::simnet::{
+    simulate_collective, Algo, ClusterModel, RESNET50_BN_BYTES_FP32, RESNET50_GRAD_BYTES_FP16,
+};
+
+fn main() {
+    let m = ClusterModel::abci_v100();
+    let bytes = RESNET50_GRAD_BYTES_FP16;
+
+    println!("{}", repro::table6());
+    println!("{}", repro::table2());
+
+    println!("collective comparison (25.5M-param ResNet-50, FP16 grads):");
+    println!(
+        "{:>6}  {:>14} {:>14} {:>14}  {:>9}",
+        "#GPUs", "torus (ms)", "hier (ms)", "ring (ms)", "torus win"
+    );
+    for n in [16usize, 64, 256, 1024, 2048, 4096] {
+        let (x, y) = best_grid(n);
+        let torus = m.collective_cost(Algo::Torus { x, y }, n, bytes).total_secs();
+        let hier = m
+            .collective_cost(Algo::Hierarchical { group: 4 }, n, bytes)
+            .total_secs();
+        let ring = m.collective_cost(Algo::Ring, n, bytes).total_secs();
+        println!(
+            "{:>6}  {:>14.3} {:>14.3} {:>14.3}  {:>8.2}x",
+            n,
+            torus * 1e3,
+            hier * 1e3,
+            ring * 1e3,
+            ring / torus
+        );
+    }
+
+    println!("\nclosed-form vs discrete-event validation (torus):");
+    println!("{:>10}  {:>14} {:>14} {:>8}", "grid", "analytic (ms)", "event (ms)", "ratio");
+    for (x, y) in [(2usize, 2usize), (8, 8), (32, 32), (64, 32), (64, 64)] {
+        let n = x * y;
+        let analytic = m.collective_cost(Algo::Torus { x, y }, n, bytes).total_secs();
+        let event = simulate_collective(&m, Algo::Torus { x, y }, n, bytes);
+        println!(
+            "{:>7}x{:<3} {:>13.3} {:>14.3} {:>8.3}",
+            x,
+            y,
+            analytic * 1e3,
+            event * 1e3,
+            event / analytic
+        );
+    }
+
+    println!("\nstep-time breakdown at the paper's scales (B=32/worker):");
+    for n in [4usize, 1024, 2048, 3456, 4096] {
+        let (x, y) = best_grid(n);
+        let st = m.step_time(
+            Algo::Torus { x, y },
+            n,
+            32,
+            RESNET50_GRAD_BYTES_FP16,
+            RESNET50_BN_BYTES_FP32,
+        );
+        println!(
+            "  {:>5} GPUs ({:>2}x{:<2}): {:>7.2} ms  = compute {:>6.2} + grads {:>6.2} + bn {:>5.2}",
+            n,
+            x,
+            y,
+            st.total_secs() * 1e3,
+            st.compute_secs * 1e3,
+            st.grad_comm_secs * 1e3,
+            st.bn_comm_secs * 1e3
+        );
+    }
+}

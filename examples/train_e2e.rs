@@ -1,0 +1,106 @@
+//! End-to-end driver (DESIGN.md validation run): the paper's full recipe at
+//! reduced scale, a few hundred steps, loss curve logged for EXPERIMENTS.md.
+//!
+//! This is the Exp. 2 *twin*: 8 workers in a torus, per-worker batch 16→32
+//! at the scaled phase boundary (batch-size control triggers the grad-
+//! executable swap), label smoothing 0.1, config-B LR/momentum schedule
+//! (linearly rescaled from the 54K-batch values), LARS in the Pallas
+//! kernel, FP16 gradient wire, FP32 BN-stat wire.
+//!
+//!     make artifacts && cargo run --release --example train_e2e
+//!
+//! Flags: --arch tiny|resnet20  --ranks N  --epochs E  --csv PATH
+
+use anyhow::Result;
+use flashsgd::prelude::*;
+
+fn flag(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> Result<()> {
+    let arch = flag("--arch").unwrap_or_else(|| "tiny".to_string());
+    let ranks: usize = flag("--ranks").map_or(8, |s| s.parse().unwrap());
+    let epochs: u32 = flag("--epochs").map_or(6, |s| s.parse().unwrap());
+
+    let paper = paper_run("exp2").expect("exp2 preset");
+    let mut config = TrainConfig::twin_of(&paper, ranks, &arch, epochs);
+    config.train_size = 8192;
+    config.eval_every = 1; // eval at each phase boundary
+    config.eval_batches = 8;
+
+    println!("=== train_e2e: paper Exp. 2 at reduced scale ===");
+    println!(
+        "arch={arch} ranks={ranks} epochs={epochs} collective={} ls={} wire={}",
+        config.collective, config.label_smoothing, config.grad_wire
+    );
+    for p in config.batch.phases() {
+        println!(
+            "  phase from epoch {:>2}: batch {}/worker x {} workers = {} global",
+            p.from_epoch,
+            p.per_worker,
+            p.workers,
+            p.total_batch()
+        );
+    }
+
+    let trainer = Trainer::new(config, flashsgd::artifacts_dir())?;
+    let report = trainer.run()?;
+
+    println!("\n{}", report.format());
+    let curve: Vec<(f64, f64)> = report
+        .metrics
+        .loss_curve(1)
+        .into_iter()
+        .map(|(s, l)| (s as f64, l))
+        .collect();
+    println!(
+        "\n{}",
+        flashsgd::util::plot::line_plot(&curve, 64, 12, "training loss (EMA)")
+    );
+    println!("loss curve (EMA over steps):");
+    for (step, loss) in report.metrics.loss_curve(10) {
+        println!("  step {step:>5}  loss {loss:.4}");
+    }
+    println!("\nevals:");
+    for e in &report.metrics.evals {
+        println!(
+            "  step {:>5}  val loss {:.4}  top-1 {:.1}%",
+            e.step,
+            e.val_loss,
+            e.accuracy * 100.0
+        );
+    }
+
+    if let Some(path) = flag("--csv") {
+        std::fs::write(&path, report.metrics.to_csv())?;
+        println!("wrote {path}");
+    }
+
+    // End-to-end assertions: all layers composed and training worked.
+    let s = &report.summary;
+    assert!(s.steps > 50, "expected a real run, got {} steps", s.steps);
+    assert!(
+        s.last_loss < s.first_loss * 0.9,
+        "loss must drop >10%: {:.3} -> {:.3}",
+        s.first_loss,
+        s.last_loss
+    );
+    let acc = report.final_eval.as_ref().map(|e| e.accuracy).unwrap_or(0.0);
+    assert!(
+        acc > 0.2,
+        "top-1 must beat 10-class chance by 2x, got {:.1}%",
+        acc * 100.0
+    );
+    println!(
+        "\nOK: {} steps, loss {:.3} -> {:.3}, top-1 {:.1}%",
+        s.steps,
+        s.first_loss,
+        s.last_loss,
+        acc * 100.0
+    );
+    Ok(())
+}

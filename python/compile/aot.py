@@ -1,0 +1,178 @@
+"""AOT pipeline: lower every Layer-2 entry point to HLO *text* + manifest.
+
+Run once at build time (``make artifacts``); Python never appears on the
+training path afterwards. For each model variant this emits:
+
+    artifacts/<arch>_<entry>.hlo.txt      one HLO-text module per entry point
+    artifacts/manifest.json               shapes/dtypes/param layout contract
+
+HLO **text** — not ``lowered.compile().serialize()`` and not the serialized
+``HloModuleProto`` — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which the Rust side's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Lowering uses ``return_tuple=True`` so every entry point returns a single
+tuple; the Rust runtime unwraps it element-wise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, resnet
+
+# Per-arch executable matrix: (entry kind, per-worker batch, label smoothing).
+# Mirrors Table 3: per-worker batches are 16 and 32 in the paper's
+# experiments; the reduced-scale twins use the same 2x batch-size-control
+# step. LS eps = 0.1 for experiments 2-4, 0.0 for the reference/exp-1 runs.
+VARIANTS: Dict[str, dict] = {
+    "tiny": {
+        "kwargs": {},
+        "grads": [(8, 0.0), (8, 0.1), (16, 0.0), (16, 0.1), (32, 0.0), (32, 0.1)],
+        "eval_batch": 32,
+    },
+    "resnet20": {
+        "kwargs": {},
+        "grads": [(16, 0.0), (16, 0.1), (32, 0.0), (32, 0.1)],
+        "eval_batch": 64,
+    },
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_list(avals) -> List[dict]:
+    out = []
+    for a in avals:
+        out.append({"shape": list(a.shape), "dtype": str(a.dtype)})
+    return out
+
+
+def lower_entry(fn, arg_specs, out_path: str) -> dict:
+    """Lower ``fn(*arg_specs)`` to HLO text at ``out_path``; return io spec."""
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    out_avals = jax.eval_shape(fn, *arg_specs)
+    if not isinstance(out_avals, (tuple, list)):
+        out_avals = (out_avals,)
+    return {
+        "file": os.path.basename(out_path),
+        "inputs": _spec_list(arg_specs),
+        "outputs": _spec_list(out_avals),
+    }
+
+
+def ls_tag(ls_eps: float) -> str:
+    return f"ls{int(round(ls_eps * 100))}"
+
+
+def build_arch(arch: str, spec: dict, out_dir: str, verbose: bool = True) -> dict:
+    cfg = resnet.get_config(arch, **spec["kwargs"])
+    template = jax.eval_shape(lambda: resnet.init_params(cfg, 0))
+    leaves = jax.tree_util.tree_leaves(template)
+    names = resnet.param_names(template)
+    n_elems = sum(int(jnp.prod(jnp.array(l.shape))) for l in leaves) if leaves else 0
+    bn_names = resnet.bn_layer_names(cfg)
+    widths = resnet.bn_widths(cfg)
+
+    entry: dict = {
+        "config": {
+            "name": cfg.name,
+            "block": cfg.block,
+            "stage_blocks": list(cfg.stage_blocks),
+            "stage_widths": list(cfg.stage_widths),
+            "num_classes": cfg.num_classes,
+            "image_size": cfg.image_size,
+            "image_channels": cfg.image_channels,
+        },
+        "params": [
+            {"name": n, "shape": list(l.shape), "size": int(jnp.prod(jnp.array(l.shape)))}
+            for n, l in zip(names, leaves)
+        ],
+        "total_params": int(n_elems),
+        "bn_layers": [{"name": n, "width": widths[n]} for n in bn_names],
+        "executables": {},
+    }
+
+    def emit(name: str, maker, *maker_args, **extra):
+        fn, specs = maker(*maker_args)
+        path = os.path.join(out_dir, f"{arch}_{name}.hlo.txt")
+        if verbose:
+            print(f"  lowering {arch}_{name} ...", flush=True)
+        io = lower_entry(fn, specs, path)
+        io.update(extra)
+        entry["executables"][name] = io
+
+    emit("init", model.make_init_step, cfg)
+    emit("apply", model.make_apply_step, cfg)
+    for batch, ls in spec["grads"]:
+        emit(f"grad_b{batch}_{ls_tag(ls)}", model.make_grad_step, cfg, batch, ls,
+             batch=batch, ls_eps=ls)
+    eb = spec["eval_batch"]
+    emit(f"eval_b{eb}", model.make_eval_step, cfg, eb, batch=eb)
+    return entry
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--arches", default="tiny,resnet20",
+                   help="comma-separated subset of: " + ",".join(VARIANTS))
+    p.add_argument("--quiet", action="store_true")
+    args = p.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"format_version": 1, "arches": {}}
+    # Merge with an existing manifest so per-arch rebuilds don't clobber
+    # other arches' entries.
+    man_path_existing = os.path.join(args.out_dir, "manifest.json")
+    if os.path.exists(man_path_existing):
+        try:
+            with open(man_path_existing) as f:
+                old = json.load(f)
+            if old.get("format_version") == 1:
+                manifest["arches"].update(old.get("arches", {}))
+        except (json.JSONDecodeError, OSError):
+            pass
+    for arch in args.arches.split(","):
+        arch = arch.strip()
+        if not arch:
+            continue
+        if arch not in VARIANTS:
+            sys.exit(f"unknown arch {arch!r}; have {sorted(VARIANTS)}")
+        print(f"[aot] building arch {arch}", flush=True)
+        manifest["arches"][arch] = build_arch(
+            arch, VARIANTS[arch], args.out_dir, verbose=not args.quiet
+        )
+
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    total = sum(
+        os.path.getsize(os.path.join(args.out_dir, e["file"]))
+        for a in manifest["arches"].values()
+        for e in a["executables"].values()
+    )
+    print(f"[aot] wrote {man_path} ({total/1e6:.1f} MB of HLO text)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,200 @@
+"""Pallas LARS optimizer kernels (Layer 1).
+
+The paper (§3.2) runs LARS in FP32 because the trust ratio needs a wider
+dynamic range than FP16. The hot spot is two phases per tensor:
+
+  phase 1 — squared-norm reduction of w and g,
+  phase 2 — elementwise momentum + weight update scaled by the trust ratio.
+
+TPU adaptation (DESIGN.md §6): instead of CUDA block/warp reductions we tile
+the flattened tensor over VMEM-sized blocks and exploit the *sequential* TPU
+grid to accumulate partial norms into a (1,1) output ref — the TPU-native
+reduction idiom. Phase 2 is a plain VPU-elementwise pass over the same block
+schedule. Both kernels are lowered with ``interpret=True`` (CPU PJRT cannot
+execute Mosaic custom-calls; see DESIGN.md).
+
+Block size: 64K floats = 256 KiB per operand; phase 2 touches 3 inputs +
+2 outputs ≈ 1.25 MiB of VMEM — comfortably under the ~16 MiB VMEM budget
+even with double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Flattened-tensor block width (number of f32 lanes per grid step).
+BLOCK = 65536
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _pad_to_block(x, n_pad):
+    """Pad flat vector to a BLOCK multiple so the grid tiles exactly."""
+    if n_pad == 0:
+        return x
+    return jnp.pad(x, (0, n_pad))
+
+
+# ---------------------------------------------------------------------------
+# Phase 1: fused squared-norm reduction of (w, g)
+# ---------------------------------------------------------------------------
+
+
+def _sqnorm_kernel(w_ref, g_ref, out_ref):
+    """Accumulate [sum(w^2), sum(g^2)] into out_ref of shape (1, 2).
+
+    The TPU grid executes sequentially, so read-modify-write accumulation
+    across grid steps is well-defined; step 0 initialises the accumulator.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = w_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    partial = jnp.stack([jnp.sum(w * w), jnp.sum(g * g)]).reshape(1, 2)
+    out_ref[...] += partial
+
+
+def sqnorms(w, g, *, block=BLOCK, interpret=True):
+    """Fused [||w||^2, ||g||^2] over arbitrarily-shaped tensors.
+
+    Returns a (2,) float32 array. Zero-padding the tail block is exact for a
+    squared-norm reduction.
+    """
+    wf = w.reshape(-1).astype(jnp.float32)
+    gf = g.reshape(-1).astype(jnp.float32)
+    n = wf.shape[0]
+    blk = min(block, max(n, 1))
+    pad = _ceil_div(n, blk) * blk - n
+    wf = _pad_to_block(wf, pad)
+    gf = _pad_to_block(gf, pad)
+    grid = wf.shape[0] // blk
+    out = pl.pallas_call(
+        _sqnorm_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 2), jnp.float32),
+        interpret=interpret,
+    )(wf, gf)
+    return out.reshape(2)
+
+
+# ---------------------------------------------------------------------------
+# Phase 2: elementwise momentum + weight update
+# ---------------------------------------------------------------------------
+
+
+def _apply_kernel(w_ref, g_ref, m_ref, s_ref, w_out_ref, m_out_ref):
+    """m' = momentum*m + scale*(g + wd*w);  w' = w - m'.
+
+    s_ref is a (1, 3) scalar block: [scale, momentum, weight_decay], where
+    scale = lr * trust_ratio was computed from the phase-1 norms.
+    """
+    scale = s_ref[0, 0]
+    momentum = s_ref[0, 1]
+    wd = s_ref[0, 2]
+    w = w_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    m_new = momentum * m + scale * (g + wd * w)
+    w_out_ref[...] = w - m_new
+    m_out_ref[...] = m_new
+
+
+def lars_apply(w, g, m, scale, momentum, weight_decay, *, block=BLOCK, interpret=True):
+    """Elementwise LARS update with a precomputed scalar scale = lr*trust.
+
+    Shapes are preserved; all arithmetic in FP32 (paper §3.2).
+    """
+    shape = w.shape
+    wf = w.reshape(-1).astype(jnp.float32)
+    gf = g.reshape(-1).astype(jnp.float32)
+    mf = m.reshape(-1).astype(jnp.float32)
+    n = wf.shape[0]
+    blk = min(block, max(n, 1))
+    pad = _ceil_div(n, blk) * blk - n
+    wf = _pad_to_block(wf, pad)
+    gf = _pad_to_block(gf, pad)
+    mf = _pad_to_block(mf, pad)
+    grid = wf.shape[0] // blk
+    scalars = jnp.stack(
+        [
+            jnp.asarray(scale, jnp.float32),
+            jnp.asarray(momentum, jnp.float32),
+            jnp.asarray(weight_decay, jnp.float32),
+        ]
+    ).reshape(1, 3)
+    w_new, m_new = pl.pallas_call(
+        _apply_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((grid * blk,), jnp.float32),
+            jax.ShapeDtypeStruct((grid * blk,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(wf, gf, mf, scalars)
+    return w_new[:n].reshape(shape), m_new[:n].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Full per-tensor LARS step (phase 1 + trust ratio + phase 2)
+# ---------------------------------------------------------------------------
+
+
+def lars_update(w, g, m, lr, momentum, weight_decay, coeff=0.01, eps=1e-6,
+                *, block=BLOCK, interpret=True):
+    """One LARS step for a single tensor via the Pallas kernels.
+
+    Semantics identical to ``ref.lars_update``; returns (w', m').
+    """
+    norms = sqnorms(w, g, block=block, interpret=interpret)
+    w_norm = jnp.sqrt(norms[0])
+    g_norm = jnp.sqrt(norms[1])
+    trust = coeff * w_norm / (g_norm + weight_decay * w_norm + eps)
+    trust = jnp.where((w_norm > 0.0) & (g_norm > 0.0), trust, 1.0)
+    scale = jnp.asarray(lr, jnp.float32) * trust
+    return lars_apply(
+        w, g, m, scale, momentum, weight_decay, block=block, interpret=interpret
+    )
+
+
+def lars_update_tree(params, grads, momenta, lr, momentum, weight_decay,
+                     coeff=0.01, eps=1e-6, *, interpret=True):
+    """LARS over a pytree of tensors (layer-wise trust ratios, paper §3.2)."""
+    leaves_w, treedef = jax.tree_util.tree_flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_m = treedef.flatten_up_to(momenta)
+    new_w, new_m = [], []
+    for w, g, m in zip(leaves_w, leaves_g, leaves_m):
+        wn, mn = lars_update(
+            w, g, m, lr, momentum, weight_decay, coeff, eps, interpret=interpret
+        )
+        new_w.append(wn)
+        new_m.append(mn)
+    return (
+        jax.tree_util.tree_unflatten(treedef, new_w),
+        jax.tree_util.tree_unflatten(treedef, new_m),
+    )

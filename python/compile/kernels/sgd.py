@@ -1,0 +1,78 @@
+"""Pallas momentum-SGD kernel (Layer 1 baseline optimizer).
+
+The non-LARS comparison point (Goyal et al. [1] style, L2 folded into the
+update). Shares the flattened-block schedule of the LARS kernel but needs no
+norm phase — a pure single-pass VPU-elementwise update, which is exactly the
+structural difference the LARS ablation measures: LARS costs one extra
+reduction pass over the parameters.
+
+Mirrors ``rust/src/optim/sgd.rs`` and is checked against
+``ref``-equivalent arithmetic in ``python/tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .lars import BLOCK, _ceil_div, _pad_to_block
+
+
+def _sgd_kernel(w_ref, g_ref, m_ref, s_ref, w_out_ref, m_out_ref):
+    """m' = momentum*m + lr*(g + wd*w);  w' = w - m'.
+
+    s_ref is a (1, 3) scalar block: [lr, momentum, weight_decay].
+    """
+    lr = s_ref[0, 0]
+    momentum = s_ref[0, 1]
+    wd = s_ref[0, 2]
+    w = w_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    m_new = momentum * m + lr * (g + wd * w)
+    w_out_ref[...] = w - m_new
+    m_out_ref[...] = m_new
+
+
+def sgd_update(w, g, m, lr, momentum, weight_decay, *, block=BLOCK,
+               interpret=True):
+    """One momentum-SGD step for a single tensor. Returns (w', m')."""
+    shape = w.shape
+    wf = w.reshape(-1).astype(jnp.float32)
+    gf = g.reshape(-1).astype(jnp.float32)
+    mf = m.reshape(-1).astype(jnp.float32)
+    n = wf.shape[0]
+    blk = min(block, max(n, 1))
+    pad = _ceil_div(n, blk) * blk - n
+    wf = _pad_to_block(wf, pad)
+    gf = _pad_to_block(gf, pad)
+    mf = _pad_to_block(mf, pad)
+    grid = wf.shape[0] // blk
+    scalars = jnp.stack(
+        [
+            jnp.asarray(lr, jnp.float32),
+            jnp.asarray(momentum, jnp.float32),
+            jnp.asarray(weight_decay, jnp.float32),
+        ]
+    ).reshape(1, 3)
+    w_new, m_new = pl.pallas_call(
+        _sgd_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((grid * blk,), jnp.float32),
+            jax.ShapeDtypeStruct((grid * blk,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(wf, gf, mf, scalars)
+    return w_new[:n].reshape(shape), m_new[:n].reshape(shape)

@@ -1,0 +1,146 @@
+"""Layer 2: AOT entry points — the functions lowered to HLO for the Rust runtime.
+
+Four entry points per model variant (DESIGN.md §2). All tree arguments are
+flattened to positional tensor lists in ``jax.tree_util`` order; the manifest
+emitted by ``aot.py`` records the exact order/shapes/dtypes so the Rust side
+can build literals without ever importing Python.
+
+  init_step(seed)                       -> params..
+  grad_step(params.., images, labels)   -> (loss, grads.., bn_stats..)
+  apply_step(params.., momenta.., grads.., lr, momentum, wd)
+                                        -> (params.., momenta..)
+  eval_step(params.., bn_stats.., images, labels)
+                                        -> (loss_sum, correct_count)
+
+Division of labour with Layer 3 (the paper's structure): ``grad_step`` is the
+per-worker compute; the Rust coordinator all-reduces grads (FP16 on the wire)
+and BN stats (FP32) with the 2D-Torus collective; ``apply_step`` then applies
+the Pallas LARS kernel with schedule scalars supplied by Rust each step.
+
+The loss is label-smoothed softmax cross entropy (Pallas kernel, Layer 1);
+weight decay enters through LARS, not the loss, following [10].
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import resnet
+from .kernels import lars as lars_kernel
+from .kernels import ls_softmax
+
+
+def loss_fn(cfg, params, images, labels, ls_eps):
+    """Mean label-smoothed CE over the batch + exported BN stats."""
+    logits, bn_out = resnet.apply(cfg, params, images, train=True)
+    per_row = ls_softmax.ls_softmax_xent(logits, labels, ls_eps)
+    return jnp.mean(per_row), bn_out
+
+
+def make_grad_step(cfg: resnet.ResNetConfig, batch: int, ls_eps: float):
+    """(params.., images, labels) -> (loss, grads.., bn_stats..)."""
+    template = jax.eval_shape(lambda: resnet.init_params(cfg, 0))
+    treedef = jax.tree_util.tree_structure(template)
+    n_params = treedef.num_leaves
+
+    def grad_step(*args):
+        param_leaves = args[:n_params]
+        images, labels = args[n_params], args[n_params + 1]
+        params = jax.tree_util.tree_unflatten(treedef, param_leaves)
+        (loss, bn_out), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, images, labels, ls_eps), has_aux=True
+        )(params)
+        grad_leaves = jax.tree_util.tree_leaves(grads)
+        bn_leaves = jax.tree_util.tree_leaves(bn_out)
+        return (loss, *grad_leaves, *bn_leaves)
+
+    img = jax.ShapeDtypeStruct((batch, *cfg.input_shape), jnp.float32)
+    lab = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    param_specs = [
+        jax.ShapeDtypeStruct(l.shape, l.dtype)
+        for l in jax.tree_util.tree_leaves(template)
+    ]
+    return grad_step, (*param_specs, img, lab)
+
+
+def make_apply_step(cfg: resnet.ResNetConfig, coeff: float = 0.01,
+                    eps: float = 1e-6):
+    """(params.., momenta.., grads.., lr, momentum, wd) -> (params.., momenta..).
+
+    Applies the Layer-1 Pallas LARS kernel per tensor (layer-wise trust
+    ratios). All optimizer arithmetic is FP32 (paper §3.2).
+    """
+    template = jax.eval_shape(lambda: resnet.init_params(cfg, 0))
+    treedef = jax.tree_util.tree_structure(template)
+    n = treedef.num_leaves
+
+    def apply_step(*args):
+        ws, ms, gs = args[:n], args[n:2 * n], args[2 * n:3 * n]
+        lr, momentum, wd = args[3 * n], args[3 * n + 1], args[3 * n + 2]
+        new_w: List[jnp.ndarray] = []
+        new_m: List[jnp.ndarray] = []
+        for w, m, g in zip(ws, ms, gs):
+            wn, mn = lars_kernel.lars_update(w, g, m, lr, momentum, wd,
+                                             coeff, eps)
+            new_w.append(wn)
+            new_m.append(mn)
+        return (*new_w, *new_m)
+
+    leaves = jax.tree_util.tree_leaves(template)
+    specs = [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    return apply_step, (*specs, *specs, *specs, scalar, scalar, scalar)
+
+
+def make_eval_step(cfg: resnet.ResNetConfig, batch: int):
+    """(params.., bn_stats.., images, labels) -> (loss_sum, correct).
+
+    Uses the synchronized BN statistics maintained by the coordinator
+    (BN-without-moving-average evaluation path). Plain (unsmoothed) CE for
+    validation-loss reporting; accuracy is top-1 1-crop, as in the paper.
+    """
+    template = jax.eval_shape(lambda: resnet.init_params(cfg, 0))
+    treedef = jax.tree_util.tree_structure(template)
+    n = treedef.num_leaves
+    bn_names = resnet.bn_layer_names(cfg)
+    widths = resnet.bn_widths(cfg)
+
+    def eval_step(*args):
+        param_leaves = args[:n]
+        bn_leaves = args[n:n + len(bn_names)]
+        images, labels = args[n + len(bn_names)], args[n + len(bn_names) + 1]
+        params = jax.tree_util.tree_unflatten(treedef, param_leaves)
+        bn_stats = dict(zip(bn_names, bn_leaves))
+        logits, _ = resnet.apply(cfg, params, images, train=False,
+                                 bn_stats=bn_stats)
+        per_row = ls_softmax.ls_softmax_xent(logits, labels, 0.0)
+        correct = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+        )
+        return jnp.sum(per_row), correct
+
+    param_specs = [
+        jax.ShapeDtypeStruct(l.shape, l.dtype)
+        for l in jax.tree_util.tree_leaves(template)
+    ]
+    bn_specs = [
+        jax.ShapeDtypeStruct((2, widths[name]), jnp.float32)
+        for name in bn_names
+    ]
+    img = jax.ShapeDtypeStruct((batch, *cfg.input_shape), jnp.float32)
+    lab = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return eval_step, (*param_specs, *bn_specs, img, lab)
+
+
+def make_init_step(cfg: resnet.ResNetConfig):
+    """(seed,) -> params.. — deterministic He init (paper init per [10])."""
+
+    def init_step(seed):
+        params = resnet.init_params(cfg, jax.random.PRNGKey(seed[0]))
+        return tuple(jax.tree_util.tree_leaves(params))
+
+    seed = jax.ShapeDtypeStruct((1,), jnp.int32)
+    return init_step, (seed,)

@@ -1,0 +1,357 @@
+"""Layer 2: functional ResNet family in pure JAX (paper §3.2).
+
+Implements the model side of the paper's training stack:
+
+  * ResNet-50 (He et al., CVPR 2016) — the paper's benchmark model, defined
+    in full (bottleneck blocks, 224x224 input) and compile-tested.
+  * CIFAR-scale ResNets (ResNet-8/20/32, basic blocks, 32x32 input) — the
+    reduced-scale twins actually *trained* end-to-end on this CPU testbed
+    (DESIGN.md §4 substitution table).
+
+Batch normalisation follows the paper's "Batch Normalization without Moving
+Average" (Akiba et al. [5]): training normalises with the *current batch*
+statistics only and exports per-layer (mean, mean-of-squares) so that the
+Rust coordinator can all-reduce them across workers in FP32 (paper §3.2) and
+maintain the aggregate used at evaluation time. There are no moving-average
+buffers in the parameter tree.
+
+Everything is functional: parameters are a nested dict pytree whose flatten
+order (``jax.tree_util`` sorted-key order) is the contract shared with the
+AOT manifest and the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+BnStats = Dict[str, jnp.ndarray]
+
+BN_EPS = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Architecture configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    """Static architecture description (also serialised into the manifest)."""
+
+    name: str
+    block: str                  # "basic" | "bottleneck"
+    stage_blocks: Tuple[int, ...]
+    stage_widths: Tuple[int, ...]
+    stem_width: int
+    stem_kernel: int            # 3 for CIFAR stem, 7 for ImageNet stem
+    stem_stride: int
+    stem_pool: bool             # 3x3/2 max-pool after the stem (ImageNet)
+    num_classes: int
+    image_size: int
+    image_channels: int = 3
+
+    @property
+    def input_shape(self) -> Tuple[int, int, int]:
+        return (self.image_size, self.image_size, self.image_channels)
+
+
+def cifar_resnet(depth: int, num_classes: int = 10, image_size: int = 32,
+                 base_width: int = 16) -> ResNetConfig:
+    """Standard CIFAR ResNet-(6n+2): 3 stages of n basic blocks."""
+    assert (depth - 2) % 6 == 0, "CIFAR ResNet depth must be 6n+2"
+    n = (depth - 2) // 6
+    return ResNetConfig(
+        name=f"resnet{depth}",
+        block="basic",
+        stage_blocks=(n, n, n),
+        stage_widths=(base_width, 2 * base_width, 4 * base_width),
+        stem_width=base_width,
+        stem_kernel=3,
+        stem_stride=1,
+        stem_pool=False,
+        num_classes=num_classes,
+        image_size=image_size,
+    )
+
+
+def resnet50(num_classes: int = 1000, image_size: int = 224) -> ResNetConfig:
+    """The paper's benchmark model: ImageNet ResNet-50 (bottleneck)."""
+    return ResNetConfig(
+        name="resnet50",
+        block="bottleneck",
+        stage_blocks=(3, 4, 6, 3),
+        stage_widths=(256, 512, 1024, 2048),
+        stem_width=64,
+        stem_kernel=7,
+        stem_stride=2,
+        stem_pool=True,
+        num_classes=num_classes,
+        image_size=image_size,
+    )
+
+
+def tiny_resnet(num_classes: int = 10, image_size: int = 16) -> ResNetConfig:
+    """ResNet-8 on small images — fast-test twin used across the test suites."""
+    return ResNetConfig(
+        name="tiny",
+        block="basic",
+        stage_blocks=(1, 1, 1),
+        stage_widths=(8, 16, 32),
+        stem_width=8,
+        stem_kernel=3,
+        stem_stride=1,
+        stem_pool=False,
+        num_classes=num_classes,
+        image_size=image_size,
+    )
+
+
+BY_NAME = {
+    "tiny": tiny_resnet,
+    "resnet8": lambda **kw: cifar_resnet(8, **kw),
+    "resnet20": lambda **kw: cifar_resnet(20, **kw),
+    "resnet32": lambda **kw: cifar_resnet(32, **kw),
+    "resnet50": resnet50,
+}
+
+
+def get_config(name: str, **kw) -> ResNetConfig:
+    if name not in BY_NAME:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(BY_NAME)}")
+    return BY_NAME[name](**kw)
+
+
+# ---------------------------------------------------------------------------
+# Initialisation (He-normal fan-in, paper init per [10])
+# ---------------------------------------------------------------------------
+
+
+def _he_normal(key, shape):
+    """He-normal for HWIO conv kernels / (in, out) dense kernels."""
+    fan_in = math.prod(shape[:-1])
+    std = math.sqrt(2.0 / fan_in)
+    return std * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def _conv_init(key, k, c_in, c_out):
+    return {"w": _he_normal(key, (k, k, c_in, c_out))}
+
+
+def _bn_init(c):
+    return {"gamma": jnp.ones((c,), jnp.float32), "beta": jnp.zeros((c,), jnp.float32)}
+
+
+def _dense_init(key, c_in, c_out):
+    kw, kb = jax.random.split(key)
+    return {
+        "w": _he_normal(kw, (c_in, c_out)),
+        "b": jnp.zeros((c_out,), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+
+def _conv(params, x, stride=1):
+    return jax.lax.conv_general_dilated(
+        x,
+        params["w"],
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _batch_norm(params, x, name, train, bn_stats_in, bn_stats_out):
+    """BN without moving average (paper §3.2, [5]).
+
+    train=True: normalise with current-batch statistics and record
+    (mean, mean(x^2)) per channel into ``bn_stats_out`` for the coordinator's
+    FP32 cross-worker synchronisation.
+    train=False: use the externally supplied synchronized statistics.
+    """
+    if train:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        sqmean = jnp.mean(jnp.square(x), axis=(0, 1, 2))
+        bn_stats_out[name] = jnp.stack([mean, sqmean])
+        var = jnp.maximum(sqmean - jnp.square(mean), 0.0)
+    else:
+        stats = bn_stats_in[name]
+        mean, sqmean = stats[0], stats[1]
+        var = jnp.maximum(sqmean - jnp.square(mean), 0.0)
+    inv = jax.lax.rsqrt(var + BN_EPS)
+    return params["gamma"] * (x - mean) * inv + params["beta"]
+
+
+def _basic_block(params, x, stride, train, bn_in, bn_out, prefix):
+    out = _conv(params["conv1"], x, stride)
+    out = _batch_norm(params["bn1"], out, f"{prefix}.bn1", train, bn_in, bn_out)
+    out = jax.nn.relu(out)
+    out = _conv(params["conv2"], out, 1)
+    out = _batch_norm(params["bn2"], out, f"{prefix}.bn2", train, bn_in, bn_out)
+    if "proj" in params:
+        x = _conv(params["proj"], x, stride)
+        x = _batch_norm(params["proj_bn"], x, f"{prefix}.proj_bn", train, bn_in, bn_out)
+    return jax.nn.relu(out + x)
+
+
+def _bottleneck_block(params, x, stride, train, bn_in, bn_out, prefix):
+    out = _conv(params["conv1"], x, 1)
+    out = _batch_norm(params["bn1"], out, f"{prefix}.bn1", train, bn_in, bn_out)
+    out = jax.nn.relu(out)
+    out = _conv(params["conv2"], out, stride)
+    out = _batch_norm(params["bn2"], out, f"{prefix}.bn2", train, bn_in, bn_out)
+    out = jax.nn.relu(out)
+    out = _conv(params["conv3"], out, 1)
+    out = _batch_norm(params["bn3"], out, f"{prefix}.bn3", train, bn_in, bn_out)
+    if "proj" in params:
+        x = _conv(params["proj"], x, stride)
+        x = _batch_norm(params["proj_bn"], x, f"{prefix}.proj_bn", train, bn_in, bn_out)
+    return jax.nn.relu(out + x)
+
+
+def _block_init(key, cfg: ResNetConfig, c_in: int, width: int, stride: int) -> Params:
+    p: Params = {}
+    keys = jax.random.split(key, 4)
+    if cfg.block == "basic":
+        p["conv1"] = _conv_init(keys[0], 3, c_in, width)
+        p["bn1"] = _bn_init(width)
+        p["conv2"] = _conv_init(keys[1], 3, width, width)
+        p["bn2"] = _bn_init(width)
+    else:
+        mid = width // 4
+        p["conv1"] = _conv_init(keys[0], 1, c_in, mid)
+        p["bn1"] = _bn_init(mid)
+        p["conv2"] = _conv_init(keys[1], 3, mid, mid)
+        p["bn2"] = _bn_init(mid)
+        p["conv3"] = _conv_init(keys[2], 1, mid, width)
+        p["bn3"] = _bn_init(width)
+    if stride != 1 or c_in != width:
+        p["proj"] = _conv_init(keys[3], 1, c_in, width)
+        p["proj_bn"] = _bn_init(width)
+    return p
+
+
+def init_params(cfg: ResNetConfig, seed) -> Params:
+    """Initialise the full parameter tree. ``seed`` may be int or a PRNG key."""
+    key = jax.random.PRNGKey(seed) if isinstance(seed, int) else seed
+    keys = jax.random.split(key, 2 + len(cfg.stage_blocks))
+    params: Params = {
+        "stem": {
+            "conv": _conv_init(keys[0], cfg.stem_kernel, cfg.image_channels,
+                               cfg.stem_width),
+            "bn": _bn_init(cfg.stem_width),
+        }
+    }
+    c_in = cfg.stem_width
+    for s, (n_blocks, width) in enumerate(zip(cfg.stage_blocks, cfg.stage_widths)):
+        stage: Params = {}
+        bkeys = jax.random.split(keys[1 + s], n_blocks)
+        for b in range(n_blocks):
+            stride = 2 if (b == 0 and s > 0) else 1
+            stage[f"block{b}"] = _block_init(bkeys[b], cfg, c_in, width, stride)
+            c_in = width
+        params[f"stage{s}"] = stage
+    params["head"] = _dense_init(keys[-1], c_in, cfg.num_classes)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def apply(cfg: ResNetConfig, params: Params, x: jnp.ndarray, *,
+          train: bool, bn_stats: Optional[BnStats] = None
+          ) -> Tuple[jnp.ndarray, BnStats]:
+    """Forward pass. Returns (logits, bn_stats_out).
+
+    train=True  → bn_stats_out maps layer name to stacked (mean, sqmean),
+                  each row of width C (paper's FP32 BN-stat sync payload).
+    train=False → ``bn_stats`` must hold the synchronized statistics;
+                  bn_stats_out is empty.
+    """
+    bn_in: BnStats = bn_stats or {}
+    bn_out: BnStats = {}
+    block_fn = _basic_block if cfg.block == "basic" else _bottleneck_block
+
+    out = _conv(params["stem"]["conv"], x, cfg.stem_stride)
+    out = _batch_norm(params["stem"]["bn"], out, "stem.bn", train, bn_in, bn_out)
+    out = jax.nn.relu(out)
+    if cfg.stem_pool:
+        out = jax.lax.reduce_window(
+            out, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME"
+        )
+
+    for s, n_blocks in enumerate(cfg.stage_blocks):
+        for b in range(n_blocks):
+            stride = 2 if (b == 0 and s > 0) else 1
+            out = block_fn(
+                params[f"stage{s}"][f"block{b}"], out, stride, train,
+                bn_in, bn_out, f"stage{s}.block{b}",
+            )
+
+    out = jnp.mean(out, axis=(1, 2))
+    logits = out @ params["head"]["w"] + params["head"]["b"]
+    return logits, bn_out
+
+
+# ---------------------------------------------------------------------------
+# Flattening contract shared with the Rust runtime
+# ---------------------------------------------------------------------------
+
+
+def param_names(tree) -> List[str]:
+    """Dotted names in ``tree_flatten`` order — the AOT manifest contract."""
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    names = []
+    for path, _ in paths:
+        parts = []
+        for p in path:
+            parts.append(p.key if hasattr(p, "key") else str(p.idx))
+        names.append(".".join(parts))
+    return names
+
+
+def bn_layer_names(cfg: ResNetConfig) -> List[str]:
+    """All BN-stat layer names in sorted (flatten-contract) order."""
+    names = ["stem.bn"]
+    for s, n_blocks in enumerate(cfg.stage_blocks):
+        for b in range(n_blocks):
+            prefix = f"stage{s}.block{b}"
+            names.append(f"{prefix}.bn1")
+            names.append(f"{prefix}.bn2")
+            if cfg.block == "bottleneck":
+                names.append(f"{prefix}.bn3")
+            first = b == 0
+            c_in_changes = first and (
+                s > 0 or cfg.stage_widths[0] != cfg.stem_width
+            )
+            if c_in_changes:
+                names.append(f"{prefix}.proj_bn")
+    return sorted(names)
+
+
+def bn_widths(cfg: ResNetConfig) -> Dict[str, int]:
+    """Channel width per BN-stat layer (manifest metadata)."""
+    widths: Dict[str, int] = {"stem.bn": cfg.stem_width}
+    for s, (n_blocks, width) in enumerate(zip(cfg.stage_blocks, cfg.stage_widths)):
+        mid = width // 4 if cfg.block == "bottleneck" else width
+        for b in range(n_blocks):
+            prefix = f"stage{s}.block{b}"
+            widths[f"{prefix}.bn1"] = mid
+            widths[f"{prefix}.bn2"] = mid if cfg.block == "bottleneck" else width
+            if cfg.block == "bottleneck":
+                widths[f"{prefix}.bn3"] = width
+            first = b == 0
+            if first and (s > 0 or cfg.stage_widths[0] != cfg.stem_width):
+                widths[f"{prefix}.proj_bn"] = width
+    return widths

@@ -1,0 +1,83 @@
+"""AOT pipeline tests: manifest contract + HLO text round-trip sanity."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model, resnet
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_has_parseable_header(tmp_path):
+    cfg = resnet.tiny_resnet()
+    fn, specs = model.make_init_step(cfg)
+    out = tmp_path / "init.hlo.txt"
+    io = aot.lower_entry(fn, specs, str(out))
+    text = out.read_text()
+    assert text.startswith("HloModule")
+    assert "entry_computation_layout" in text
+    assert io["inputs"][0]["shape"] == [1]
+    assert io["inputs"][0]["dtype"] == "int32"
+
+
+def test_ls_tag():
+    assert aot.ls_tag(0.0) == "ls0"
+    assert aot.ls_tag(0.1) == "ls10"
+    assert aot.ls_tag(0.05) == "ls5"
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="run `make artifacts` first")
+def test_manifest_matches_model_contract():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["format_version"] == 1
+    for arch, entry in man["arches"].items():
+        cfg = resnet.get_config(arch)
+        template = jax.eval_shape(lambda: resnet.init_params(cfg, 0))
+        leaves = jax.tree_util.tree_leaves(template)
+        names = resnet.param_names(template)
+        assert [p["name"] for p in entry["params"]] == names
+        assert [tuple(p["shape"]) for p in entry["params"]] == [
+            tuple(l.shape) for l in leaves
+        ]
+        assert entry["total_params"] == sum(int(np.prod(l.shape)) for l in leaves)
+        bn_names = resnet.bn_layer_names(cfg)
+        assert [b["name"] for b in entry["bn_layers"]] == bn_names
+        # every executable file exists
+        for name, ex in entry["executables"].items():
+            path = os.path.join(ART, ex["file"])
+            assert os.path.exists(path), path
+            n_in = len(ex["inputs"])
+            n_out = len(ex["outputs"])
+            if name == "init":
+                assert n_in == 1 and n_out == len(leaves)
+            elif name == "apply":
+                assert n_in == 3 * len(leaves) + 3
+                assert n_out == 2 * len(leaves)
+            elif name.startswith("grad_"):
+                assert n_in == len(leaves) + 2
+                assert n_out == 1 + len(leaves) + len(bn_names)
+            elif name.startswith("eval_"):
+                assert n_in == len(leaves) + len(bn_names) + 2
+                assert n_out == 2
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="run `make artifacts` first")
+def test_grad_variants_cover_batch_size_control():
+    """Table 3: batch-size control needs >=2 per-worker batch variants."""
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for arch, entry in man["arches"].items():
+        batches = {
+            ex["batch"]
+            for name, ex in entry["executables"].items()
+            if name.startswith("grad_")
+        }
+        assert len(batches) >= 2, f"{arch}: need >=2 grad batch sizes, got {batches}"

@@ -1,0 +1,215 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes/dtypes/parameters; assert_allclose against ref.
+This is the core correctness signal for everything the AOT pipeline bakes
+into the HLO artifacts.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lars, ls_softmax, ref
+
+F32 = np.float32
+
+
+def arr(rng, shape, scale=1.0, dtype=F32):
+    return jnp.asarray(rng.normal(size=shape).astype(dtype) * scale)
+
+
+# ---------------------------------------------------------------------------
+# LARS
+# ---------------------------------------------------------------------------
+
+shapes = st.sampled_from(
+    [(7,), (64,), (65,), (128, 3), (3, 3, 4, 8), (1,), (257,), (16, 16)]
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    shape=shapes,
+    lr=st.floats(1e-4, 40.0),
+    momentum=st.floats(0.0, 0.999),
+    wd=st.floats(0.0, 1e-2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lars_update_matches_ref(shape, lr, momentum, wd, seed):
+    rng = np.random.default_rng(seed)
+    w, g, m = arr(rng, shape), arr(rng, shape), arr(rng, shape, 0.1)
+    w_ref, m_ref = ref.lars_update(w, g, m, lr, momentum, wd)
+    w_pal, m_pal = lars.lars_update(w, g, m, lr, momentum, wd, block=64)
+    np.testing.assert_allclose(w_pal, w_ref, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(m_pal, m_ref, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 1000), block=st.sampled_from([32, 64, 256, 65536]),
+       seed=st.integers(0, 2**31 - 1))
+def test_sqnorms_blocked_vs_dense(n, block, seed):
+    rng = np.random.default_rng(seed)
+    w, g = arr(rng, (n,)), arr(rng, (n,))
+    out = lars.sqnorms(w, g, block=block)
+    np.testing.assert_allclose(out[0], jnp.sum(w * w), rtol=1e-5)
+    np.testing.assert_allclose(out[1], jnp.sum(g * g), rtol=1e-5)
+
+
+def test_lars_zero_weight_falls_back_to_unit_trust():
+    w = jnp.zeros((10,))
+    g = jnp.ones((10,))
+    m = jnp.zeros((10,))
+    w_ref, m_ref = ref.lars_update(w, g, m, 0.5, 0.9, 1e-4)
+    w_pal, m_pal = lars.lars_update(w, g, m, 0.5, 0.9, 1e-4)
+    # trust ratio 1.0 -> plain momentum SGD step
+    np.testing.assert_allclose(w_pal, w_ref, atol=1e-7)
+    np.testing.assert_allclose(m_pal, -w_pal, atol=1e-7)
+
+
+def test_lars_zero_grad_falls_back_to_unit_trust():
+    rng = np.random.default_rng(0)
+    w, m = arr(rng, (31,)), arr(rng, (31,), 0.01)
+    g = jnp.zeros((31,))
+    w_ref, m_ref = ref.lars_update(w, g, m, 0.5, 0.9, 0.0)
+    w_pal, m_pal = lars.lars_update(w, g, m, 0.5, 0.9, 0.0)
+    np.testing.assert_allclose(w_pal, w_ref, rtol=1e-6)
+    np.testing.assert_allclose(m_pal, m_ref, rtol=1e-6)
+
+
+def test_lars_trust_ratio_formula():
+    rng = np.random.default_rng(3)
+    w, g = arr(rng, (100,)), arr(rng, (100,))
+    wd, coeff, eps = 5e-5, 0.01, 1e-6
+    t = ref.lars_trust_ratio(w, g, wd, coeff, eps)
+    wn = float(jnp.linalg.norm(w))
+    gn = float(jnp.linalg.norm(g))
+    assert abs(float(t) - coeff * wn / (gn + wd * wn + eps)) < 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_lars_update_tree(seed):
+    rng = np.random.default_rng(seed)
+    params = {"a": arr(rng, (8, 4)), "b": {"c": arr(rng, (5,))}}
+    grads = {"a": arr(rng, (8, 4)), "b": {"c": arr(rng, (5,))}}
+    mom = jax.tree_util.tree_map(jnp.zeros_like, params)
+    new_w, new_m = lars.lars_update_tree(params, grads, mom, 0.1, 0.9, 1e-4)
+    for path in (("a",), ("b", "c")):
+        w = params[path[0]] if len(path) == 1 else params["b"]["c"]
+        g = grads[path[0]] if len(path) == 1 else grads["b"]["c"]
+        nw = new_w[path[0]] if len(path) == 1 else new_w["b"]["c"]
+        nm = new_m[path[0]] if len(path) == 1 else new_m["b"]["c"]
+        rw, rm = ref.lars_update(w, g, jnp.zeros_like(w), 0.1, 0.9, 1e-4)
+        np.testing.assert_allclose(nw, rw, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(nm, rm, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Label-smoothed softmax cross entropy
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 200),
+    k=st.integers(2, 1000),
+    eps=st.sampled_from([0.0, 0.05, 0.1, 0.3]),
+    scale=st.floats(0.1, 30.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ls_softmax_fwd_matches_ref(b, k, eps, scale, seed):
+    rng = np.random.default_rng(seed)
+    z = arr(rng, (b, k), scale)
+    y = jnp.asarray(rng.integers(0, k, size=(b,)).astype(np.int32))
+    got = ls_softmax.ls_softmax_xent(z, y, eps)
+    want = ref.ls_softmax_xent(z, y, eps)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 64),
+    k=st.integers(2, 200),
+    eps=st.sampled_from([0.0, 0.1]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ls_softmax_grad_matches_ref(b, k, eps, seed):
+    rng = np.random.default_rng(seed)
+    z = arr(rng, (b, k), 3.0)
+    y = jnp.asarray(rng.integers(0, k, size=(b,)).astype(np.int32))
+    got = jax.grad(lambda zz: jnp.sum(ls_softmax.ls_softmax_xent(zz, y, eps)))(z)
+    want = ref.ls_softmax_xent_grad(z, y, eps)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_ls_softmax_zero_eps_is_plain_xent():
+    rng = np.random.default_rng(1)
+    z = arr(rng, (17, 10), 2.0)
+    y = jnp.asarray(rng.integers(0, 10, size=(17,)).astype(np.int32))
+    got = ls_softmax.ls_softmax_xent(z, y, 0.0)
+    want = -jax.nn.log_softmax(z)[jnp.arange(17), y]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_ls_softmax_numerically_stable_at_large_logits():
+    z = jnp.asarray([[1e4, -1e4, 0.0]], jnp.float32)
+    y = jnp.asarray([0], jnp.int32)
+    got = ls_softmax.ls_softmax_xent(z, y, 0.1)
+    assert np.isfinite(np.asarray(got)).all()
+    want = ref.ls_softmax_xent(z, y, 0.1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_ls_softmax_loss_increases_with_wrong_label():
+    z = jnp.asarray([[5.0, 0.0, 0.0]], jnp.float32)
+    right = ls_softmax.ls_softmax_xent(z, jnp.asarray([0], jnp.int32), 0.1)
+    wrong = ls_softmax.ls_softmax_xent(z, jnp.asarray([1], jnp.int32), 0.1)
+    assert float(wrong[0]) > float(right[0])
+
+
+def test_smoothed_targets_sum_to_one():
+    t = ref.smoothed_targets(jnp.asarray([0, 3], jnp.int32), 10, 0.1)
+    np.testing.assert_allclose(jnp.sum(t, axis=-1), jnp.ones(2), rtol=1e-6)
+    assert abs(float(t[0, 0]) - 0.91) < 1e-6
+    assert abs(float(t[0, 1]) - 0.01) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Momentum-SGD baseline kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    shape=shapes,
+    lr=st.floats(1e-4, 5.0),
+    momentum=st.floats(0.0, 0.99),
+    wd=st.floats(0.0, 1e-2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgd_kernel_matches_formula(shape, lr, momentum, wd, seed):
+    from compile.kernels import sgd
+
+    rng = np.random.default_rng(seed)
+    w, g, m = arr(rng, shape), arr(rng, shape), arr(rng, shape, 0.1)
+    w_new, m_new = sgd.sgd_update(w, g, m, lr, momentum, wd, block=64)
+    m_want = momentum * m + lr * (g + wd * w)
+    w_want = w - m_want
+    np.testing.assert_allclose(m_new, m_want, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(w_new, w_want, rtol=2e-5, atol=2e-6)
+
+
+def test_sgd_equals_lars_at_unit_trust():
+    from compile.kernels import sgd
+
+    # zero grads -> LARS trust falls back to 1.0 -> identical updates
+    rng = np.random.default_rng(0)
+    w = arr(rng, (65,))
+    g = jnp.zeros((65,))
+    m = arr(rng, (65,), 0.1)
+    w_s, m_s = sgd.sgd_update(w, g, m, 0.3, 0.9, 0.0)
+    w_l, m_l = lars.lars_update(w, g, m, 0.3, 0.9, 0.0)
+    np.testing.assert_allclose(w_s, w_l, rtol=1e-6)
+    np.testing.assert_allclose(m_s, m_l, rtol=1e-6)

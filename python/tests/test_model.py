@@ -1,0 +1,183 @@
+"""Layer-2 tests: ResNet forward/grad shapes, BN-stat export, entry points."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model, resnet
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return resnet.tiny_resnet()
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny):
+    return resnet.init_params(tiny, 0)
+
+
+def test_init_shapes_deterministic(tiny):
+    p1 = resnet.init_params(tiny, 42)
+    p2 = resnet.init_params(tiny, 42)
+    for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_forward_shapes(tiny, tiny_params):
+    x = jnp.zeros((4, 16, 16, 3))
+    logits, bn = resnet.apply(tiny, tiny_params, x, train=True)
+    assert logits.shape == (4, 10)
+    assert set(bn.keys()) == set(resnet.bn_layer_names(tiny))
+    widths = resnet.bn_widths(tiny)
+    for name, stats in bn.items():
+        assert stats.shape == (2, widths[name]), name
+
+
+def test_eval_uses_supplied_bn_stats(tiny, tiny_params):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 16, 16, 3)).astype(np.float32))
+    _, bn = resnet.apply(tiny, tiny_params, x, train=True)
+    logits_train, _ = resnet.apply(tiny, tiny_params, x, train=True)
+    logits_eval, out = resnet.apply(tiny, tiny_params, x, train=False, bn_stats=bn)
+    # same batch stats -> identical normalisation
+    np.testing.assert_allclose(logits_eval, logits_train, rtol=1e-4, atol=1e-4)
+    assert out == {}
+
+
+def test_bn_stats_are_batch_moments(tiny, tiny_params):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(8, 16, 16, 3)).astype(np.float32))
+    _, bn = resnet.apply(tiny, tiny_params, x, train=True)
+    stats = bn["stem.bn"]
+    # mean of squares >= square of mean (Jensen)
+    assert np.all(np.asarray(stats[1]) >= np.asarray(stats[0]) ** 2 - 1e-5)
+
+
+def test_grads_finite_and_matching_shapes(tiny, tiny_params):
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(4, 16, 16, 3)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, size=(4,)).astype(np.int32))
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: model.loss_fn(tiny, p, x, y, 0.1), has_aux=True
+    )(tiny_params)
+    assert np.isfinite(float(loss))
+    for g, w in zip(jax.tree_util.tree_leaves(grads),
+                    jax.tree_util.tree_leaves(tiny_params)):
+        assert g.shape == w.shape
+        assert np.isfinite(np.asarray(g)).all()
+
+
+def test_grad_step_entry_point(tiny):
+    fn, specs = model.make_grad_step(tiny, batch=4, ls_eps=0.1)
+    args = [jnp.zeros(s.shape, s.dtype) for s in specs]
+    # real params, random data
+    params = resnet.init_params(tiny, 0)
+    leaves = jax.tree_util.tree_leaves(params)
+    args[:len(leaves)] = leaves
+    rng = np.random.default_rng(3)
+    args[len(leaves)] = jnp.asarray(rng.normal(size=specs[len(leaves)].shape).astype(np.float32))
+    args[len(leaves) + 1] = jnp.asarray(rng.integers(0, 10, size=(4,)).astype(np.int32))
+    out = fn(*args)
+    n_bn = len(resnet.bn_layer_names(tiny))
+    assert len(out) == 1 + len(leaves) + n_bn
+    assert np.isfinite(float(out[0]))
+
+
+def test_apply_step_entry_point_matches_ref(tiny):
+    from compile.kernels import ref
+
+    fn, specs = model.make_apply_step(tiny)
+    params = resnet.init_params(tiny, 0)
+    leaves = jax.tree_util.tree_leaves(params)
+    n = len(leaves)
+    rng = np.random.default_rng(4)
+    grads = [jnp.asarray(rng.normal(size=l.shape).astype(np.float32)) * 0.01
+             for l in leaves]
+    momenta = [jnp.zeros_like(l) for l in leaves]
+    out = fn(*leaves, *momenta, *grads,
+             jnp.float32(0.1), jnp.float32(0.9), jnp.float32(5e-5))
+    assert len(out) == 2 * n
+    for i in (0, n - 1):
+        w_ref, m_ref = ref.lars_update(leaves[i], grads[i], momenta[i],
+                                       0.1, 0.9, 5e-5)
+        np.testing.assert_allclose(out[i], w_ref, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(out[n + i], m_ref, rtol=2e-5, atol=2e-5)
+
+
+def test_eval_step_entry_point(tiny):
+    fn, specs = model.make_eval_step(tiny, batch=8)
+    params = resnet.init_params(tiny, 0)
+    leaves = jax.tree_util.tree_leaves(params)
+    bn_names = resnet.bn_layer_names(tiny)
+    widths = resnet.bn_widths(tiny)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(8, 16, 16, 3)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, size=(8,)).astype(np.int32))
+    # feed real batch stats so eval normalisation is sane
+    _, bn = resnet.apply(tiny, params, x, train=True)
+    bn_leaves = [bn[nm] for nm in bn_names]
+    loss_sum, correct = fn(*leaves, *bn_leaves, x, y)
+    assert np.isfinite(float(loss_sum))
+    assert 0.0 <= float(correct) <= 8.0
+
+
+def test_init_step_entry_point(tiny):
+    fn, specs = model.make_init_step(tiny)
+    out = fn(jnp.asarray([7], jnp.int32))
+    template = resnet.init_params(tiny, jax.random.PRNGKey(7))
+    for got, want in zip(out, jax.tree_util.tree_leaves(template)):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_training_reduces_loss_tiny_e2e(tiny):
+    """Smoke: a few LARS steps on a fixed batch reduce the smoothed loss."""
+    from compile.kernels import lars as lars_kernel
+
+    params = resnet.init_params(tiny, 0)
+    momenta = jax.tree_util.tree_map(jnp.zeros_like, params)
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(16, 16, 16, 3)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, size=(16,)).astype(np.int32))
+
+    @jax.jit
+    def step(params, momenta):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: model.loss_fn(tiny, p, x, y, 0.1), has_aux=True
+        )(params)
+        new_p, new_m = lars_kernel.lars_update_tree(
+            params, grads, momenta, 2.0, 0.9, 5e-5
+        )
+        return new_p, new_m, loss
+
+    losses = []
+    for _ in range(6):
+        params, momenta, loss = step(params, momenta)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_resnet50_definition_compiles():
+    """The paper's benchmark model: shape-check the full graph (no exec)."""
+    cfg = resnet.resnet50(image_size=64)  # smaller spatial dims, same graph
+    template = jax.eval_shape(lambda: resnet.init_params(cfg, 0))
+    leaves = jax.tree_util.tree_leaves(template)
+    total = sum(int(np.prod(l.shape)) for l in leaves)
+    # ~25.5M params for 1000 classes regardless of image size
+    assert 25.0e6 < total < 26.0e6, total
+    logits, bn = jax.eval_shape(
+        lambda p: resnet.apply(cfg, p, jnp.zeros((2, 64, 64, 3)), train=True),
+        template,
+    )
+    assert logits.shape == (2, 1000)
+    assert len(bn) == len(resnet.bn_layer_names(cfg)) == 53
+
+
+def test_param_names_stable_order(tiny):
+    params = resnet.init_params(tiny, 0)
+    names = resnet.param_names(params)
+    assert len(names) == len(set(names)) == len(jax.tree_util.tree_leaves(params))
+    assert names == sorted(names) or names  # flatten order is the contract
+    # spot-check a few known names
+    assert "head.b" in names and "stem.conv.w" in names

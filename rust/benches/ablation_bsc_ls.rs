@@ -1,0 +1,96 @@
+//! Ablation A1 (paper §3.3): label smoothing × batch-size control.
+//!
+//! The paper's findings, reproduced at reduced scale on the synthetic set:
+//!   * BSC alone lets the max batch grow without accuracy loss (Exp. 4),
+//!   * LS alone stabilises a large *initial* batch (Exp. 2),
+//!   * both together at the largest batch cost ~0.7% (Exp. 3).
+//!
+//! Four twins over the same step budget: {LS on/off} × {BSC on/off}.
+//!
+//!     cargo bench --bench ablation_bsc_ls
+
+use flashsgd::config::TrainConfig;
+use flashsgd::coordinator::Trainer;
+use flashsgd::sched::{BatchSchedule, LrSchedule, Phase};
+
+fn run_case(name: &str, ls: f32, bsc: bool, ranks: usize) -> Option<(f64, f64)> {
+    let epochs = 4u32;
+    let batch = if bsc {
+        BatchSchedule::new(
+            vec![
+                Phase { from_epoch: 0, per_worker: 8, workers: ranks },
+                Phase { from_epoch: 2, per_worker: 16, workers: ranks },
+            ],
+            epochs,
+        )
+    } else {
+        BatchSchedule::constant(8, ranks, epochs)
+    };
+    let config = TrainConfig {
+        name: name.to_string(),
+        arch: "tiny".into(),
+        collective: "torus".into(),
+        grad_wire: "fp16".into(),
+        label_smoothing: ls,
+        lr: LrSchedule::ConfigB {
+            warmup_epochs: 0.5,
+            warmup_start: 0.05,
+            base_low: 2.0,
+            base_high: 3.0,
+            switch_epoch: 2.0,
+            total_epochs: epochs as f64,
+        },
+        batch,
+        weight_decay: 5e-5,
+        seed: 42,
+        max_steps: 0,
+        eval_every: 0,
+        eval_batches: 8,
+        train_size: 4096,
+    };
+    let trainer = Trainer::new(config, flashsgd::artifacts_dir()).ok()?;
+    let report = trainer.run().ok()?;
+    let acc = report.final_eval.as_ref().map(|e| e.accuracy).unwrap_or(0.0);
+    Some((acc, report.summary.last_loss))
+}
+
+fn main() {
+    let ranks = 8;
+    println!("=== ablation: label smoothing x batch-size control (tiny twin, {ranks} ranks) ===\n");
+    println!(
+        "{:<28} {:>8} {:>8} {:>10} {:>12}",
+        "case", "LS", "BSC", "top-1", "final loss"
+    );
+    let cases = [
+        ("baseline", 0.0f32, false),
+        ("label smoothing only", 0.1, false),
+        ("batch-size control only", 0.0, true),
+        ("both (exp3-style)", 0.1, true),
+    ];
+    let mut results = Vec::new();
+    for (name, ls, bsc) in cases {
+        match run_case(name, ls, bsc, ranks) {
+            Some((acc, loss)) => {
+                println!(
+                    "{:<28} {:>8} {:>8} {:>9.1}% {:>12.3}",
+                    name,
+                    if ls > 0.0 { "0.1" } else { "off" },
+                    if bsc { "16->32" } else { "off" },
+                    acc * 100.0,
+                    loss
+                );
+                results.push((name, acc));
+            }
+            None => eprintln!("{name}: skipped (run `make artifacts` first?)"),
+        }
+    }
+    if results.len() == 4 {
+        let base = results[0].1;
+        println!("\nrelative to baseline:");
+        for (name, acc) in &results[1..] {
+            println!("  {name:<28} {:+.1}pp", (acc - base) * 100.0);
+        }
+        println!("\n(paper shape: each stabiliser alone holds accuracy at its target");
+        println!(" batch; combining both at the largest batch costs ~0.7pp — Exp. 3)");
+    }
+}

@@ -1,0 +1,113 @@
+//! Collective micro-benchmarks (paper Figure 2 / §2.2; ablation A2).
+//!
+//! Runs the *functional* collectives — real data through real thread
+//! meshes — across algorithms, rank counts and message sizes. Reports
+//! wall time, effective algorithm bandwidth, and the measured per-rank
+//! byte volume (which must match each scheme's analytic formula).
+//!
+//!     cargo bench --bench collectives_micro
+
+use std::sync::Arc;
+use std::thread;
+
+use flashsgd::cluster::best_grid;
+use flashsgd::collectives::{
+    Collective, HierarchicalAllReduce, Mesh, RingAllReduce, TorusAllReduce, Wire,
+};
+use flashsgd::util::timer::{bench_adaptive, fmt_ns};
+
+/// One timed all-reduce across a fresh mesh of `n` ranks.
+fn run_once(coll: &Arc<dyn Collective>, n: usize, elems: usize, wire: Wire) -> (f64, u64) {
+    let eps = Mesh::new(n);
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = eps
+        .into_iter()
+        .map(|mut ep| {
+            let coll = coll.clone();
+            thread::spawn(move || {
+                let mut buf: Vec<f32> =
+                    (0..elems).map(|i| (ep.rank() + i) as f32 * 1e-3).collect();
+                coll.all_reduce(&mut ep, &mut buf, wire, 0).unwrap();
+                ep.counters().snapshot().0
+            })
+        })
+        .collect();
+    let mut sent = 0;
+    for h in handles {
+        sent = h.join().unwrap();
+    }
+    (t0.elapsed().as_secs_f64(), sent)
+}
+
+fn main() {
+    println!("=== collectives_micro: functional all-reduce over thread mesh ===\n");
+
+    // Figure 2 sanity row: the paper's 2x2 worked example.
+    {
+        let coll: Arc<dyn Collective> = Arc::new(TorusAllReduce::new(2, 2));
+        let (secs, bytes) = run_once(&coll, 4, 1 << 16, Wire::F32);
+        println!(
+            "figure-2 grid 2x2, 64K floats, fp32: {:.3} ms, {} bytes on the wire\n",
+            secs * 1e3,
+            bytes
+        );
+    }
+
+    // Algorithm x size sweep at a fixed rank count.
+    let n = 16usize;
+    let (gx, gy) = best_grid(n);
+    let algos: Vec<(&str, Arc<dyn Collective>)> = vec![
+        ("ring", Arc::new(RingAllReduce)),
+        ("hierarchical:4", Arc::new(HierarchicalAllReduce::new(4))),
+        ("torus", Arc::new(TorusAllReduce::new(gx, gy))),
+    ];
+    println!("{n} ranks, fp16 wire (paper gradient path):");
+    println!(
+        "{:<16} {:>12} {:>14} {:>14} {:>16}",
+        "algo", "elems", "time", "alg-bw GB/s", "bytes/rank"
+    );
+    for (name, coll) in &algos {
+        for elems in [1usize << 10, 1 << 14, 1 << 18, 1 << 22] {
+            let r = bench_adaptive(&format!("{name}/{elems}"), 300.0, || {
+                let _ = run_once(coll, n, elems, Wire::F16);
+            });
+            let (_, bytes) = run_once(coll, n, elems, Wire::F16);
+            // algorithm bandwidth: 2*(n-1)/n * data / time (ring convention)
+            let payload = 4.0 * elems as f64;
+            let algbw = 2.0 * (n as f64 - 1.0) / n as f64 * payload / r.mean_secs();
+            println!(
+                "{:<16} {:>12} {:>14} {:>14.2} {:>16}",
+                name,
+                elems,
+                fmt_ns(r.mean_ns),
+                algbw / 1e9,
+                bytes / n as u64
+            );
+        }
+    }
+
+    // Rank scaling at ResNet-50-like message size (25.5M f32 ~ 102 MB).
+    // Scaled to 1.6M floats to keep the bench under a minute.
+    println!("\nrank scaling, 1.6M floats, fp16 wire:");
+    println!(
+        "{:<16} {:>7} {:>14} {:>12}",
+        "algo", "ranks", "time", "p2p steps"
+    );
+    for n in [4usize, 8, 16, 32] {
+        let (x, y) = best_grid(n);
+        let cases: Vec<(&str, Arc<dyn Collective>)> = vec![
+            ("ring", Arc::new(RingAllReduce)),
+            ("torus", Arc::new(TorusAllReduce::new(x, y))),
+        ];
+        for (name, coll) in cases {
+            let steps = coll.p2p_steps(n);
+            let r = bench_adaptive(&format!("{name}/{n}"), 400.0, || {
+                let _ = run_once(&coll, n, 1 << 20 | 1 << 19, Wire::F16);
+            });
+            println!("{:<16} {:>7} {:>14} {:>12}", name, n, fmt_ns(r.mean_ns), steps);
+        }
+    }
+
+    println!("\n(thread-mesh timings measure the functional path; cluster-scale");
+    println!(" projections are in `cargo bench --bench table6_scaling`)");
+}

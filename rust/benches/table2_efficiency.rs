@@ -1,0 +1,88 @@
+//! Table 2: GPU scaling efficiency at 1024 GPUs vs the literature, plus a
+//! sensitivity sweep over the link-model constants (how robust is the
+//! "84.75%" shape to the calibration?).
+//!
+//!     cargo bench --bench table2_efficiency
+
+use flashsgd::cluster::best_grid;
+use flashsgd::repro;
+use flashsgd::simnet::{
+    Algo, ClusterModel, ComputeModel, LinkModel, RESNET50_BN_BYTES_FP32, RESNET50_GRAD_BYTES_FP16,
+};
+
+fn torus_at(n: usize) -> Algo {
+    let (x, y) = best_grid(n);
+    Algo::Torus { x, y }
+}
+
+fn eff_at_1024(m: &ClusterModel) -> f64 {
+    100.0
+        * m.scaling_efficiency(
+            torus_at,
+            1024,
+            32,
+            RESNET50_GRAD_BYTES_FP16,
+            RESNET50_BN_BYTES_FP32,
+        )
+}
+
+fn main() {
+    println!("=== table2_efficiency ===\n");
+    print!("{}", repro::table2());
+
+    let base = ClusterModel::abci_v100();
+    println!("\nsensitivity of the modelled 1024-GPU efficiency:");
+    println!("{:<44} {:>10}", "variant", "efficiency");
+    println!("{:<44} {:>9.2}%", "calibrated ABCI model", eff_at_1024(&base));
+
+    // IB latency x2 / x0.5
+    for (label, alpha) in [("IB latency x2 (10us)", 10.0e-6), ("IB latency /2 (2.5us)", 2.5e-6)] {
+        let mut m = base.clone();
+        m.lm.alpha_inter = alpha;
+        println!("{:<44} {:>9.2}%", label, eff_at_1024(&m));
+    }
+    // IB bandwidth x2 / x0.5
+    for (label, scale) in [("IB bandwidth x2", 2.0), ("IB bandwidth /2", 0.5)] {
+        let mut m = base.clone();
+        m.lm.beta_inter_flow /= scale;
+        m.lm.node_inter_bw *= scale;
+        println!("{:<44} {:>9.2}%", label, eff_at_1024(&m));
+    }
+    // faster / slower GPU (efficiency falls as compute shrinks — the
+    // paper's V100-vs-P40 point in §3.3)
+    for (label, scale) in [("GPU 2x faster (comm relatively heavier)", 2.0),
+                           ("GPU 2x slower (comm hides)", 0.5)] {
+        let mut m = base.clone();
+        m.cm = ComputeModel {
+            peak_images_per_sec: base.cm.peak_images_per_sec * scale,
+            b_half: base.cm.b_half,
+        };
+        println!("{:<44} {:>9.2}%", label, eff_at_1024(&m));
+    }
+    // no congestion model
+    {
+        let mut m = base.clone();
+        m.lm = LinkModel {
+            congestion_slope: 0.0,
+            ..base.lm.clone()
+        };
+        println!("{:<44} {:>9.2}%", "no fabric congestion term", eff_at_1024(&m));
+    }
+
+    println!("\nalgorithm ablation at 1024 GPUs (B=32/worker):");
+    for (label, algo) in [
+        ("2D-torus 32x32 (paper)", Algo::Torus { x: 32, y: 32 }),
+        ("hierarchical g=4 (Jia et al.)", Algo::Hierarchical { group: 4 }),
+        ("flat ring (Baidu)", Algo::Ring),
+    ] {
+        let eff = 100.0
+            * base.scaling_efficiency(
+                |n| if n == 4 { torus_at(4) } else { algo },
+                1024,
+                32,
+                RESNET50_GRAD_BYTES_FP16,
+                RESNET50_BN_BYTES_FP32,
+            );
+        println!("  {label:<36} {eff:>6.2}%");
+    }
+}

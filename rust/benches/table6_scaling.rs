@@ -1,0 +1,96 @@
+//! Table 6 (+ Table 4): 2D-torus throughput and GPU scaling efficiency at
+//! 4→4096 GPUs, modelled on the ABCI cluster model and cross-validated
+//! against the discrete-event simulator; baselines included.
+//!
+//!     cargo bench --bench table6_scaling
+
+use flashsgd::cluster::{best_grid, TABLE4_GRIDS};
+use flashsgd::repro;
+use flashsgd::simnet::{
+    simulate_collective, Algo, ClusterModel, RESNET50_BN_BYTES_FP32, RESNET50_GRAD_BYTES_FP16,
+};
+use flashsgd::util::timer::bench_adaptive;
+
+fn main() {
+    println!("=== table6_scaling ===\n");
+    print!("{}", repro::table4());
+    println!();
+    print!("{}", repro::table6());
+
+    let m = ClusterModel::abci_v100();
+    let paper: &[(usize, f64)] = &[
+        (1024, 84.75),
+        (2048, 83.10),
+        (3456, 74.08),
+        (4096, 73.44),
+    ];
+    println!("\nmodel vs paper efficiency deltas:");
+    let mut max_delta: f64 = 0.0;
+    for &(n, paper_eff) in paper {
+        let eff = 100.0
+            * m.scaling_efficiency(
+                |k| {
+                    let (x, y) = best_grid(k);
+                    Algo::Torus { x, y }
+                },
+                n,
+                32,
+                RESNET50_GRAD_BYTES_FP16,
+                RESNET50_BN_BYTES_FP32,
+            );
+        let d = eff - paper_eff;
+        max_delta = max_delta.max(d.abs());
+        println!("  {n:>5} GPUs: model {eff:>6.2}%  paper {paper_eff:>6.2}%  delta {d:>+5.2}pp");
+    }
+    println!("  max |delta| = {max_delta:.2} percentage points");
+
+    println!("\nbaseline comparison at each Table 4 scale (grad all-reduce ms):");
+    println!(
+        "{:>6} {:>10} {:>12} {:>12} {:>12}",
+        "#GPUs", "grid", "torus", "hierarchical", "ring"
+    );
+    for &(n, v, h) in TABLE4_GRIDS {
+        let t = m
+            .collective_cost(Algo::Torus { x: h, y: v }, n, RESNET50_GRAD_BYTES_FP16)
+            .total_secs();
+        let hi = m
+            .collective_cost(Algo::Hierarchical { group: 4 }, n, RESNET50_GRAD_BYTES_FP16)
+            .total_secs();
+        let r = m
+            .collective_cost(Algo::Ring, n, RESNET50_GRAD_BYTES_FP16)
+            .total_secs();
+        println!(
+            "{:>6} {:>7}x{:<3} {:>11.2}ms {:>11.2}ms {:>11.2}ms",
+            n, h, v, t * 1e3, hi * 1e3, r * 1e3
+        );
+    }
+
+    println!("\ndiscrete-event cross-validation (torus, grad bytes):");
+    for &(n, v, h) in TABLE4_GRIDS {
+        let analytic = m
+            .collective_cost(Algo::Torus { x: h, y: v }, n, RESNET50_GRAD_BYTES_FP16)
+            .total_secs();
+        let event = simulate_collective(&m, Algo::Torus { x: h, y: v }, n, RESNET50_GRAD_BYTES_FP16);
+        println!(
+            "  {n:>5} GPUs: analytic {:.3} ms, event {:.3} ms (ratio {:.3})",
+            analytic * 1e3,
+            event * 1e3,
+            event / analytic
+        );
+    }
+
+    // Model evaluation cost itself (it is the inner loop of every sweep).
+    let r = bench_adaptive("model: full table-6 sweep", 200.0, || {
+        for &(n, _) in paper {
+            let (x, y) = best_grid(n);
+            let _ = m.throughput(
+                Algo::Torus { x, y },
+                n,
+                32,
+                RESNET50_GRAD_BYTES_FP16,
+                RESNET50_BN_BYTES_FP32,
+            );
+        }
+    });
+    println!("\n{}", r.line());
+}

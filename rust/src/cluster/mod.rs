@@ -1,0 +1,8 @@
+//! Cluster topology: logical 2D grids (paper Table 4) and their placement
+//! onto ABCI-like nodes (4 GPUs/node, NVLink2 intra, InfiniBand EDR inter).
+
+pub mod grid;
+pub mod placement;
+
+pub use grid::{best_grid, table4_grid, Grid, TABLE4_GRIDS};
+pub use placement::{LinkClass, Placement};

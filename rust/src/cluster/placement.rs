@@ -1,0 +1,154 @@
+//! Logical-grid → physical-cluster placement and link classification.
+//!
+//! ABCI (paper §3.1 hardware): 4 Tesla V100 per node on NVLink2; nodes on
+//! 2× InfiniBand EDR. A collective step between two ranks therefore crosses
+//! either an intra-node (NVLink) or an inter-node (IB) link — with very
+//! different α/β — so scaling efficiency depends on *where* the logical
+//! grid's rings land physically. This module maps logical ranks to
+//! (node, local-gpu) slots and classifies each logical edge; `simnet::cost`
+//! consumes the classification.
+
+use super::grid::Grid;
+
+/// Physical link class between two ranks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkClass {
+    /// Same GPU (self-edge; zero cost).
+    Local,
+    /// Same node, NVLink2.
+    IntraNode,
+    /// Different node, InfiniBand.
+    InterNode,
+}
+
+/// Placement of logical ranks onto nodes of `gpus_per_node` GPUs.
+///
+/// The default ("packed rows") policy fills nodes along the horizontal
+/// dimension first — exactly what you want for a 2D-torus: with
+/// `x % gpus_per_node == 0`, all horizontal ring hops except the node
+/// boundaries stay on NVLink and the whole vertical phase rides IB.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub grid: Grid,
+    pub gpus_per_node: usize,
+}
+
+impl Placement {
+    pub fn packed(grid: Grid, gpus_per_node: usize) -> Self {
+        assert!(gpus_per_node > 0);
+        Self {
+            grid,
+            gpus_per_node,
+        }
+    }
+
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.gpus_per_node
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.grid.ranks().div_ceil(self.gpus_per_node)
+    }
+
+    pub fn classify(&self, a: usize, b: usize) -> LinkClass {
+        if a == b {
+            LinkClass::Local
+        } else if self.node_of(a) == self.node_of(b) {
+            LinkClass::IntraNode
+        } else {
+            LinkClass::InterNode
+        }
+    }
+
+    /// Fraction of a horizontal ring's hops that stay intra-node.
+    pub fn horizontal_intra_fraction(&self) -> f64 {
+        let g = &self.grid;
+        if g.x <= 1 {
+            return 1.0;
+        }
+        let mut intra = 0usize;
+        let mut total = 0usize;
+        // All rows have identical structure under packed placement only if
+        // x % gpus_per_node == 0; count row 0 and the general case both by
+        // brute force over every row (cheap, done once).
+        for y in 0..g.y {
+            for x in 0..g.x {
+                let a = g.rank(x, y);
+                let b = g.right(a);
+                total += 1;
+                if self.classify(a, b) == LinkClass::IntraNode {
+                    intra += 1;
+                }
+            }
+        }
+        intra as f64 / total as f64
+    }
+
+    /// Fraction of a vertical ring's hops that stay intra-node.
+    pub fn vertical_intra_fraction(&self) -> f64 {
+        let g = &self.grid;
+        if g.y <= 1 {
+            return 1.0;
+        }
+        let mut intra = 0usize;
+        let mut total = 0usize;
+        for y in 0..g.y {
+            for x in 0..g.x {
+                let a = g.rank(x, y);
+                let b = g.down(a);
+                total += 1;
+                if self.classify(a, b) == LinkClass::IntraNode {
+                    intra += 1;
+                }
+            }
+        }
+        intra as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_assignment_packs_ranks() {
+        let p = Placement::packed(Grid::new(8, 2), 4);
+        assert_eq!(p.node_of(0), 0);
+        assert_eq!(p.node_of(3), 0);
+        assert_eq!(p.node_of(4), 1);
+        assert_eq!(p.nodes(), 4);
+    }
+
+    #[test]
+    fn classify_edges() {
+        let p = Placement::packed(Grid::new(8, 2), 4);
+        assert_eq!(p.classify(0, 0), LinkClass::Local);
+        assert_eq!(p.classify(0, 1), LinkClass::IntraNode);
+        assert_eq!(p.classify(3, 4), LinkClass::InterNode);
+    }
+
+    #[test]
+    fn packed_rows_keep_horizontal_mostly_intra() {
+        // 8 wide rows over 4-GPU nodes: hops 0-1,1-2,2-3 intra; 3-4 inter;
+        // 4-5,5-6,6-7 intra; 7-0 inter => 6/8 intra.
+        let p = Placement::packed(Grid::new(8, 2), 4);
+        assert!((p.horizontal_intra_fraction() - 0.75).abs() < 1e-12);
+        // vertical hops always cross nodes here
+        assert_eq!(p.vertical_intra_fraction(), 0.0);
+    }
+
+    #[test]
+    fn single_node_cluster_is_all_nvlink() {
+        let p = Placement::packed(Grid::new(2, 2), 4);
+        assert_eq!(p.horizontal_intra_fraction(), 1.0);
+        assert_eq!(p.vertical_intra_fraction(), 1.0);
+    }
+
+    #[test]
+    fn degenerate_dims() {
+        let p = Placement::packed(Grid::new(1, 4), 4);
+        assert_eq!(p.horizontal_intra_fraction(), 1.0);
+        // column of 4 on one node
+        assert_eq!(p.vertical_intra_fraction(), 1.0);
+    }
+}

@@ -1,0 +1,194 @@
+//! Recursive halving-doubling all-reduce — the scheme Ying et al. [8] use
+//! on TPU pods (paper Table 1's 1.8-minute comparator) and MPI's classic
+//! large-message algorithm.
+//!
+//! `log2(N)` rounds of reduce-scatter with exponentially growing stride and
+//! halving payload, then `log2(N)` rounds of all-gather in reverse:
+//! `2·log2(N)` p2p steps total — fewer than both the flat ring and the
+//! 2D-torus — at the cost of long-haul pairings (stride N/2 hops cross the
+//! whole fabric, which is why torus wins on torus-shaped networks and
+//! halving-doubling wins on full-bisection pods).
+//!
+//! Requires a power-of-two world size (the classic algorithm; non-2^k
+//! variants exist but the paper's comparators all run 2^k).
+
+use anyhow::{bail, Result};
+
+use super::primitives::Wire;
+use super::transport::{Endpoint, Payload};
+use super::Collective;
+use crate::util::half;
+
+/// Recursive halving-doubling all-reduce over the full mesh.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HalvingDoubling;
+
+fn send_range(ep: &Endpoint, dst: usize, tag: u64, chunk: &[f32], wire: Wire) -> Result<()> {
+    match wire {
+        Wire::F32 => ep.send_f32(dst, tag, chunk),
+        Wire::F16 => {
+            let mut enc = vec![0u16; chunk.len()];
+            half::encode_slice(chunk, &mut enc);
+            ep.send_f16(dst, tag, enc)
+        }
+    }
+}
+
+fn recv_range(ep: &mut Endpoint, src: usize, tag: u64, wire: Wire) -> Result<Vec<f32>> {
+    match ep.recv(src, tag)? {
+        Payload::F32(v) if wire == Wire::F32 => Ok(v),
+        Payload::F16(v) if wire == Wire::F16 => {
+            let mut out = vec![0.0f32; v.len()];
+            half::decode_slice(&v, &mut out);
+            Ok(out)
+        }
+        _ => bail!("wire dtype mismatch"),
+    }
+}
+
+/// Window of `rank` after `rounds_applied` halving rounds over `[0, len)`.
+///
+/// Round s splits the parent window at its midpoint; the rank whose bit s
+/// is 0 keeps the low half. With odd window sizes the halves differ by one
+/// element, so partner windows are NOT generally equal-width — both phases
+/// below derive each side's exact window from this recursion instead of
+/// assuming symmetry.
+fn window(rank: usize, rounds_applied: usize, len: usize) -> (usize, usize) {
+    let (mut lo, mut hi) = (0usize, len);
+    for s in 0..rounds_applied {
+        let mid = lo + (hi - lo) / 2;
+        if rank & (1 << s) == 0 {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    (lo, hi)
+}
+
+impl Collective for HalvingDoubling {
+    fn name(&self) -> String {
+        "halving-doubling".to_string()
+    }
+
+    fn all_reduce(
+        &self,
+        ep: &mut Endpoint,
+        buf: &mut [f32],
+        wire: Wire,
+        tag_base: u64,
+    ) -> Result<()> {
+        let n = ep.world_size();
+        if !n.is_power_of_two() {
+            bail!("halving-doubling needs a power-of-two world, got {n}");
+        }
+        if n == 1 {
+            return Ok(());
+        }
+        let me = ep.rank();
+        let rounds = n.trailing_zeros() as usize;
+        let len = buf.len();
+
+        // Reduce-scatter: at round r (stride 2^r) send the partner's child
+        // window of the shared parent, accumulate into mine.
+        for r in 0..rounds {
+            let partner = me ^ (1 << r);
+            let (mine_lo, mine_hi) = window(me, r + 1, len);
+            let (theirs_lo, theirs_hi) = window(partner, r + 1, len);
+            let tag = tag_base + r as u64;
+            send_range(ep, partner, tag, &buf[theirs_lo..theirs_hi], wire)?;
+            match wire {
+                Wire::F32 => {
+                    let incoming = match ep.recv(partner, tag)? {
+                        Payload::F32(v) => v,
+                        Payload::F16(_) => bail!("wire dtype mismatch"),
+                    };
+                    let dst = &mut buf[mine_lo..mine_hi];
+                    debug_assert_eq!(dst.len(), incoming.len());
+                    for (d, s) in dst.iter_mut().zip(&incoming) {
+                        *d += s;
+                    }
+                }
+                Wire::F16 => {
+                    let enc = match ep.recv(partner, tag)? {
+                        Payload::F16(v) => v,
+                        Payload::F32(_) => bail!("wire dtype mismatch"),
+                    };
+                    // fused decode+add+requantise (fp16 buffer semantics)
+                    half::accumulate_quantized(&mut buf[mine_lo..mine_hi], &enc);
+                }
+            }
+        }
+
+        // All-gather: reverse the recursion; each side contributes its own
+        // child window of the shared parent, widths taken from the
+        // recursion (they may differ by one element).
+        for r in (0..rounds).rev() {
+            let partner = me ^ (1 << r);
+            let (mine_lo, mine_hi) = window(me, r + 1, len);
+            let (theirs_lo, theirs_hi) = window(partner, r + 1, len);
+            let tag = tag_base + (rounds + r) as u64;
+            send_range(ep, partner, tag, &buf[mine_lo..mine_hi], wire)?;
+            let incoming = recv_range(ep, partner, tag, wire)?;
+            if incoming.len() != theirs_hi - theirs_lo {
+                bail!(
+                    "halving-doubling gather: expected {} elems from rank {partner}, got {}",
+                    theirs_hi - theirs_lo,
+                    incoming.len()
+                );
+            }
+            buf[theirs_lo..theirs_hi].copy_from_slice(&incoming);
+        }
+        Ok(())
+    }
+
+    fn p2p_steps(&self, n_ranks: usize) -> usize {
+        2 * n_ranks.trailing_zeros() as usize
+    }
+
+    fn tag_span(&self, n_ranks: usize) -> u64 {
+        2 * n_ranks.trailing_zeros() as u64 + 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::test_support::check_all_reduce_matches_sum;
+
+    #[test]
+    fn matches_sequential_sum_powers_of_two() {
+        for n in [1usize, 2, 4, 8, 16] {
+            check_all_reduce_matches_sum(&HalvingDoubling, n, 96, Wire::F32, 1e-4);
+        }
+    }
+
+    #[test]
+    fn uneven_lengths_work() {
+        // windows with odd splits: 97 does not divide by 8 evenly
+        check_all_reduce_matches_sum(&HalvingDoubling, 8, 97, Wire::F32, 1e-4);
+        check_all_reduce_matches_sum(&HalvingDoubling, 4, 1, Wire::F32, 1e-4);
+        check_all_reduce_matches_sum(&HalvingDoubling, 4, 3, Wire::F32, 1e-4);
+    }
+
+    #[test]
+    fn fp16_wire_agreement() {
+        check_all_reduce_matches_sum(&HalvingDoubling, 8, 64, Wire::F16, 5e-3);
+    }
+
+    #[test]
+    fn rejects_non_power_of_two() {
+        let mut eps = crate::collectives::transport::Mesh::new(3);
+        let mut ep = eps.remove(0);
+        let mut buf = vec![0.0f32; 8];
+        assert!(HalvingDoubling.all_reduce(&mut ep, &mut buf, Wire::F32, 0).is_err());
+    }
+
+    #[test]
+    fn step_count_is_logarithmic() {
+        assert_eq!(HalvingDoubling.p2p_steps(1024), 20);
+        assert_eq!(HalvingDoubling.p2p_steps(4096), 24);
+        // far fewer steps than ring (2046) or torus 32x32 (124) at 1024
+        assert!(HalvingDoubling.p2p_steps(1024) < 124);
+    }
+}

@@ -1,0 +1,175 @@
+//! Gradient-synchronisation collectives — the paper's communication layer.
+//!
+//! This module sits where NCCL sits in the paper's stack (§3.1): the
+//! coordinator hands each worker thread an [`transport::Endpoint`] and a
+//! shared [`Collective`]; after every `grad_step` the workers call
+//! [`Collective::all_reduce`] on their flattened gradient buffer (FP16 on
+//! the wire) and on their BN statistics (FP32), then divide by the world
+//! size and run `apply_step`.
+//!
+//! Three algorithms are provided, matching the paper's comparison set:
+//!
+//! | impl | scheme | per-rank p2p steps |
+//! |---|---|---|
+//! | [`ring::RingAllReduce`] | flat ring (Baidu [14]) | `2(N-1)` |
+//! | [`hierarchical::HierarchicalAllReduce`] | grouped rings (Jia [6]) | `2(g-1) + 2(N/g-1)` |
+//! | [`torus2d::TorusAllReduce`] | **2D-Torus (this paper)** | `2(X-1) + 2(Y-1)` |
+
+pub mod halving_doubling;
+pub mod hierarchical;
+pub mod primitives;
+pub mod ring;
+pub mod torus2d;
+pub mod transport;
+
+pub use halving_doubling::HalvingDoubling;
+pub use hierarchical::HierarchicalAllReduce;
+pub use primitives::Wire;
+pub use ring::RingAllReduce;
+pub use torus2d::TorusAllReduce;
+pub use transport::{Endpoint, Mesh};
+
+use anyhow::Result;
+
+/// A sum-all-reduce collective over the whole mesh.
+///
+/// Every rank's worker thread calls `all_reduce` with its own endpoint and
+/// its local buffer; on return every rank holds the element-wise sum across
+/// ranks (callers divide by N to average). `tag_base` must leave
+/// [`Collective::tag_span`] tags of room before the next concurrent
+/// collective on the same endpoints.
+pub trait Collective: Send + Sync {
+    /// Human-readable name (used in metrics and bench tables).
+    fn name(&self) -> String;
+
+    /// In-place sum across all ranks. Collective: every rank must call it.
+    fn all_reduce(
+        &self,
+        ep: &mut Endpoint,
+        buf: &mut [f32],
+        wire: Wire,
+        tag_base: u64,
+    ) -> Result<()>;
+
+    /// Analytic per-rank peer-to-peer step count (cross-checked by simnet).
+    fn p2p_steps(&self, n_ranks: usize) -> usize;
+
+    /// Width of the tag window this collective may use from `tag_base`.
+    fn tag_span(&self, n_ranks: usize) -> u64;
+}
+
+/// Construct a collective by name: `ring`, `hierarchical:<g>`, `torus:<X>x<Y>`.
+pub fn by_name(spec: &str, n_ranks: usize) -> Result<Box<dyn Collective>> {
+    use anyhow::{anyhow, bail};
+    if spec == "ring" {
+        return Ok(Box::new(RingAllReduce));
+    }
+    if spec == "halving-doubling" {
+        if !n_ranks.is_power_of_two() {
+            bail!("halving-doubling needs a power-of-two world, got {n_ranks}");
+        }
+        return Ok(Box::new(HalvingDoubling));
+    }
+    if let Some(g) = spec.strip_prefix("hierarchical:") {
+        let g: usize = g.parse().map_err(|_| anyhow!("bad group size in {spec:?}"))?;
+        return Ok(Box::new(HierarchicalAllReduce::new(g)));
+    }
+    if let Some(dims) = spec.strip_prefix("torus:") {
+        let (x, y) = dims
+            .split_once('x')
+            .ok_or_else(|| anyhow!("torus spec must be torus:<X>x<Y>, got {spec:?}"))?;
+        let x: usize = x.parse().map_err(|_| anyhow!("bad X in {spec:?}"))?;
+        let y: usize = y.parse().map_err(|_| anyhow!("bad Y in {spec:?}"))?;
+        if x * y != n_ranks {
+            bail!("torus {x}x{y} does not cover {n_ranks} ranks");
+        }
+        return Ok(Box::new(TorusAllReduce::new(x, y)));
+    }
+    if spec == "torus" {
+        // auto-shape: most-square grid for n_ranks
+        let (x, y) = crate::cluster::grid::best_grid(n_ranks);
+        return Ok(Box::new(TorusAllReduce::new(x, y)));
+    }
+    anyhow::bail!("unknown collective {spec:?} (ring | hierarchical:<g> | torus[:<X>x<Y>])")
+}
+
+/// Shared helpers for collective tests (compiled into unit + integration
+/// tests; kept here so every algorithm checks the identical invariants).
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use std::thread;
+
+    /// Deterministic per-rank test vector.
+    pub fn test_vector(rank: usize, n_elems: usize) -> Vec<f32> {
+        (0..n_elems)
+            .map(|i| ((rank + 1) as f32 * 0.37 + i as f32 * 0.011).sin() * 0.5)
+            .collect()
+    }
+
+    pub fn expected_sum(n_ranks: usize, n_elems: usize) -> Vec<f32> {
+        let mut acc = vec![0.0f32; n_elems];
+        for r in 0..n_ranks {
+            for (a, v) in acc.iter_mut().zip(test_vector(r, n_elems)) {
+                *a += v;
+            }
+        }
+        acc
+    }
+
+    /// Run `coll` across `n` ranks; return per-rank results and (sent,
+    /// received, messages) counters.
+    pub fn run_collective<C: Collective + Clone + 'static>(
+        coll: &C,
+        n: usize,
+        elems: usize,
+        wire: Wire,
+    ) -> (Vec<Vec<f32>>, (u64, u64, u64)) {
+        let eps = Mesh::new(n);
+        let counters = eps[0].counters_arc();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                let coll = coll.clone();
+                thread::spawn(move || {
+                    let mut buf = test_vector(ep.rank(), elems);
+                    coll.all_reduce(&mut ep, &mut buf, wire, 0).unwrap();
+                    buf
+                })
+            })
+            .collect();
+        let mut results = Vec::new();
+        for h in handles {
+            results.push(h.join().unwrap());
+        }
+        // snapshot only after every rank thread has fully finished
+        (results, counters.snapshot())
+    }
+
+    /// The core invariant: all-reduce ≡ sequential sum, on every rank, and
+    /// all ranks agree bit-for-bit.
+    pub fn check_all_reduce_matches_sum<C: Collective + Clone + 'static>(
+        coll: &C,
+        n: usize,
+        elems: usize,
+        wire: Wire,
+        tol: f32,
+    ) {
+        let (results, (sent, recvd, _)) = run_collective(coll, n, elems, wire);
+        assert_eq!(sent, recvd, "byte conservation");
+        let want = expected_sum(n, elems);
+        for (rank, got) in results.iter().enumerate() {
+            assert_eq!(got.len(), elems);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() <= tol + w.abs() * tol,
+                    "{}: rank {rank} elem {i}: got {g}, want {w}",
+                    coll.name()
+                );
+            }
+        }
+        for r in 1..n {
+            assert_eq!(results[0], results[r], "ranks 0 and {r} must agree");
+        }
+    }
+}

@@ -1,0 +1,379 @@
+//! Ring-schedule building blocks: reduce-scatter, all-gather, all-reduce.
+//!
+//! All three higher-level collectives (flat ring, hierarchical, 2D-torus)
+//! are compositions of these primitives over different *groups* — subsets of
+//! global ranks (a row, a column, a node, or the whole world). Each primitive
+//! takes the group as a slice of global ranks plus the caller's position in
+//! it, so the same code runs a horizontal row ring and a vertical column
+//! ring (paper Figure 2).
+//!
+//! Wire precision is a parameter ([`Wire`]): the paper sends gradients as
+//! FP16 and BN statistics as FP32 (§3.2). With `Wire::F16` every hop
+//! quantises to binary16 on send and widens to f32 before accumulating —
+//! the same numerics as an FP16 NCCL ring — so precision effects are
+//! faithfully modelled, while accumulator state stays f32.
+
+use anyhow::Result;
+
+use super::transport::Endpoint;
+use crate::util::half;
+
+/// Wire precision for a collective (paper §3.2 mixed-precision policy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Wire {
+    F32,
+    F16,
+}
+
+impl Wire {
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            Wire::F32 => 4,
+            Wire::F16 => 2,
+        }
+    }
+}
+
+/// Even chunk boundaries: `k+1` offsets over `n` elements, remainder spread
+/// over the leading chunks (chunk sizes differ by at most 1).
+pub fn chunk_offsets(n: usize, k: usize) -> Vec<usize> {
+    assert!(k > 0);
+    let base = n / k;
+    let rem = n % k;
+    let mut offs = Vec::with_capacity(k + 1);
+    let mut acc = 0;
+    offs.push(0);
+    for i in 0..k {
+        acc += base + usize::from(i < rem);
+        offs.push(acc);
+    }
+    offs
+}
+
+fn send_chunk(ep: &Endpoint, dst: usize, tag: u64, chunk: &[f32], wire: Wire) -> Result<()> {
+    match wire {
+        Wire::F32 => ep.send_f32(dst, tag, chunk),
+        Wire::F16 => {
+            let mut enc = vec![0u16; chunk.len()];
+            half::encode_slice(chunk, &mut enc);
+            ep.send_f16(dst, tag, enc)
+        }
+    }
+}
+
+fn recv_chunk(ep: &mut Endpoint, src: usize, tag: u64, out: &mut Vec<f32>, wire: Wire) -> Result<()> {
+    match wire {
+        Wire::F32 => {
+            *out = ep.recv_f32(src, tag)?;
+        }
+        Wire::F16 => {
+            let enc = ep.recv_f16(src, tag)?;
+            out.resize(enc.len(), 0.0);
+            half::decode_slice(&enc, out);
+        }
+    }
+    Ok(())
+}
+
+/// Receive a chunk and accumulate it into `dst` (reduce-scatter hop),
+/// fusing decode+add+requantise on the FP16 path (single pass, no
+/// intermediate buffer).
+fn recv_accumulate(
+    ep: &mut Endpoint,
+    src: usize,
+    tag: u64,
+    dst: &mut [f32],
+    wire: Wire,
+) -> Result<()> {
+    match wire {
+        Wire::F32 => {
+            let incoming = ep.recv_f32(src, tag)?;
+            debug_assert_eq!(dst.len(), incoming.len());
+            for (d, s) in dst.iter_mut().zip(&incoming) {
+                *d += s;
+            }
+        }
+        Wire::F16 => {
+            let enc = ep.recv_f16(src, tag)?;
+            debug_assert_eq!(dst.len(), enc.len());
+            half::accumulate_quantized(dst, &enc);
+        }
+    }
+    Ok(())
+}
+
+/// Ring reduce-scatter over `group`.
+///
+/// On entry every rank holds a full local `buf`; after `k-1` steps the rank
+/// at position `my_pos` holds the fully reduced (summed) chunk
+/// `(my_pos + 1) % k` — other regions of `buf` hold partial sums and must be
+/// treated as scratch. Returns the owned chunk index.
+pub fn ring_reduce_scatter(
+    ep: &mut Endpoint,
+    group: &[usize],
+    my_pos: usize,
+    buf: &mut [f32],
+    wire: Wire,
+    tag_base: u64,
+) -> Result<usize> {
+    let k = group.len();
+    debug_assert_eq!(group[my_pos], ep.rank());
+    if k == 1 {
+        return Ok(0);
+    }
+    let offs = chunk_offsets(buf.len(), k);
+    let right = group[(my_pos + 1) % k];
+    let left = group[(my_pos + k - 1) % k];
+    for step in 0..k - 1 {
+        let send_idx = (my_pos + k - step) % k;
+        let recv_idx = (my_pos + 2 * k - step - 1) % k;
+        let tag = tag_base + step as u64;
+        send_chunk(ep, right, tag, &buf[offs[send_idx]..offs[send_idx + 1]], wire)?;
+        // Accumulate in place. On the FP16 wire the buffer itself is fp16
+        // (as in an FP16 NCCL ring): the partial is re-quantised per hop;
+        // decode+add+requantise run fused in a single pass.
+        recv_accumulate(
+            ep,
+            left,
+            tag,
+            &mut buf[offs[recv_idx]..offs[recv_idx + 1]],
+            wire,
+        )?;
+    }
+    Ok((my_pos + 1) % k)
+}
+
+/// Ring all-gather over `group`.
+///
+/// On entry the rank at position `my_pos` holds the final value of chunk
+/// `(my_pos + 1) % k` (the reduce-scatter ownership convention); after `k-1`
+/// steps every rank holds all final chunks.
+pub fn ring_all_gather(
+    ep: &mut Endpoint,
+    group: &[usize],
+    my_pos: usize,
+    buf: &mut [f32],
+    wire: Wire,
+    tag_base: u64,
+) -> Result<()> {
+    let k = group.len();
+    debug_assert_eq!(group[my_pos], ep.rank());
+    if k == 1 {
+        return Ok(());
+    }
+    let offs = chunk_offsets(buf.len(), k);
+    if wire == Wire::F16 {
+        // The owner's copy of its chunk lives in the fp16 buffer too; it
+        // must match what every peer receives, bit for bit.
+        let own = (my_pos + 1) % k;
+        for v in &mut buf[offs[own]..offs[own + 1]] {
+            *v = half::quantize_f16(*v);
+        }
+    }
+    let right = group[(my_pos + 1) % k];
+    let left = group[(my_pos + k - 1) % k];
+    let mut incoming: Vec<f32> = Vec::new();
+    for step in 0..k - 1 {
+        let send_idx = (my_pos + 2 * k - step + 1) % k;
+        let recv_idx = (my_pos + 2 * k - step) % k;
+        let tag = tag_base + step as u64;
+        send_chunk(ep, right, tag, &buf[offs[send_idx]..offs[send_idx + 1]], wire)?;
+        recv_chunk(ep, left, tag, &mut incoming, wire)?;
+        let dst = &mut buf[offs[recv_idx]..offs[recv_idx + 1]];
+        debug_assert_eq!(dst.len(), incoming.len());
+        dst.copy_from_slice(&incoming);
+    }
+    Ok(())
+}
+
+/// Ring all-reduce (sum) over `group`: reduce-scatter followed by all-gather.
+/// `2(k-1)` peer-to-peer steps, each moving `n/k` elements — the baseline
+/// cost model the paper compares against (its ref. [14]).
+pub fn ring_all_reduce(
+    ep: &mut Endpoint,
+    group: &[usize],
+    my_pos: usize,
+    buf: &mut [f32],
+    wire: Wire,
+    tag_base: u64,
+) -> Result<()> {
+    ring_reduce_scatter(ep, group, my_pos, buf, wire, tag_base)?;
+    ring_all_gather(ep, group, my_pos, buf, wire, tag_base + group.len() as u64)
+}
+
+/// Position of `rank` in `group`, or None.
+pub fn position_in(group: &[usize], rank: usize) -> Option<usize> {
+    group.iter().position(|&r| r == rank)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::transport::Mesh;
+    use std::thread;
+
+    fn run_group<F>(n: usize, f: F) -> Vec<Vec<f32>>
+    where
+        F: Fn(&mut Endpoint, usize) -> Vec<f32> + Send + Sync + 'static,
+    {
+        let eps = Mesh::new(n);
+        let f = std::sync::Arc::new(f);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut ep)| {
+                let f = f.clone();
+                thread::spawn(move || f(&mut ep, rank))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    fn test_vector(rank: usize, n_elems: usize) -> Vec<f32> {
+        (0..n_elems)
+            .map(|i| ((rank + 1) * (i + 1)) as f32 * 0.001)
+            .collect()
+    }
+
+    fn expected_sum(n_ranks: usize, n_elems: usize) -> Vec<f32> {
+        let mut acc = vec![0.0f32; n_elems];
+        for r in 0..n_ranks {
+            for (a, v) in acc.iter_mut().zip(test_vector(r, n_elems)) {
+                *a += v;
+            }
+        }
+        acc
+    }
+
+    #[test]
+    fn chunk_offsets_cover_exactly() {
+        for (n, k) in [(10, 3), (7, 7), (3, 5), (0, 2), (100, 1)] {
+            let offs = chunk_offsets(n, k);
+            assert_eq!(offs.len(), k + 1);
+            assert_eq!(offs[0], 0);
+            assert_eq!(offs[k], n);
+            for w in offs.windows(2) {
+                assert!(w[0] <= w[1]);
+                assert!(w[1] - w[0] <= n / k + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_all_reduce_matches_sum() {
+        for n in [1usize, 2, 3, 4, 7] {
+            let elems = 103;
+            let group: Vec<usize> = (0..n).collect();
+            let results = run_group(n, move |ep, rank| {
+                let group: Vec<usize> = (0..n).collect();
+                let mut buf = test_vector(rank, elems);
+                ring_all_reduce(ep, &group, rank, &mut buf, Wire::F32, 0).unwrap();
+                buf
+            });
+            let want = expected_sum(n, elems);
+            for (r, got) in results.iter().enumerate() {
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-4, "n={n} rank={r}: {g} vs {w}");
+                }
+            }
+            drop(group);
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_owned_chunk_is_correct() {
+        let n = 4;
+        let elems = 37; // uneven chunks
+        let results = run_group(n, move |ep, rank| {
+            let group: Vec<usize> = (0..n).collect();
+            let mut buf = test_vector(rank, elems);
+            let owned = ring_reduce_scatter(ep, &group, rank, &mut buf, Wire::F32, 0).unwrap();
+            let offs = chunk_offsets(elems, n);
+            let mut tagged = vec![owned as f32];
+            tagged.extend_from_slice(&buf[offs[owned]..offs[owned + 1]]);
+            tagged
+        });
+        let want = expected_sum(n, elems);
+        let offs = chunk_offsets(elems, n);
+        let mut seen = vec![false; n];
+        for got in &results {
+            let owned = got[0] as usize;
+            seen[owned] = true;
+            let want_chunk = &want[offs[owned]..offs[owned + 1]];
+            for (g, w) in got[1..].iter().zip(want_chunk) {
+                assert!((g - w).abs() < 1e-4);
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every chunk owned exactly once");
+    }
+
+    #[test]
+    fn all_reduce_on_sub_group_leaves_others_untouched() {
+        // Ranks 1..3 of a 4-mesh reduce among themselves; rank 0 idles.
+        let results = run_group(4, move |ep, rank| {
+            let group = vec![1usize, 2, 3];
+            let mut buf = test_vector(rank, 50);
+            if let Some(pos) = position_in(&group, rank) {
+                ring_all_reduce(ep, &group, pos, &mut buf, Wire::F32, 0).unwrap();
+            }
+            buf
+        });
+        // rank 0 unchanged
+        assert_eq!(results[0], test_vector(0, 50));
+        // ranks 1..3 hold sum of their three vectors
+        let mut want = vec![0.0f32; 50];
+        for r in 1..4 {
+            for (a, v) in want.iter_mut().zip(test_vector(r, 50)) {
+                *a += v;
+            }
+        }
+        for r in 1..4 {
+            for (g, w) in results[r].iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn fp16_wire_reduces_with_bounded_error() {
+        let n = 4;
+        let elems = 64;
+        let results = run_group(n, move |ep, rank| {
+            let group: Vec<usize> = (0..n).collect();
+            let mut buf = test_vector(rank, elems);
+            ring_all_reduce(ep, &group, rank, &mut buf, Wire::F16, 0).unwrap();
+            buf
+        });
+        let want = expected_sum(n, elems);
+        for got in &results {
+            for (g, w) in got.iter().zip(&want) {
+                // f16 has ~3 decimal digits; values here are O(0.001..0.5)
+                let tol = (w.abs() * 4e-3).max(1e-4);
+                assert!((g - w).abs() < tol, "{g} vs {w}");
+            }
+        }
+        // all ranks agree exactly? Not guaranteed by fp16 path ordering, but
+        // ranks received identical final chunks during all-gather:
+        for r in 1..n {
+            assert_eq!(results[0], results[r], "ranks must agree bit-for-bit");
+        }
+    }
+
+    #[test]
+    fn elems_fewer_than_ranks() {
+        // Degenerate chunking: some chunks are empty.
+        let n = 5;
+        let results = run_group(n, move |ep, rank| {
+            let group: Vec<usize> = (0..n).collect();
+            let mut buf = test_vector(rank, 3);
+            ring_all_reduce(ep, &group, rank, &mut buf, Wire::F32, 0).unwrap();
+            buf
+        });
+        let want = expected_sum(n, 3);
+        for got in &results {
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Flat ring all-reduce — the paper's baseline (its ref. [14], Baidu).
+//!
+//! `2(N-1)` peer-to-peer steps over the full world. Bandwidth-optimal per
+//! link, but the step count grows linearly with the number of GPUs, which is
+//! exactly the latency wall the paper's 2D-torus removes at ABCI scale
+//! (paper §2.2).
+
+use anyhow::Result;
+
+use super::primitives::{ring_all_reduce, Wire};
+use super::transport::Endpoint;
+use super::Collective;
+
+/// Flat ring over all ranks in the mesh.
+#[derive(Debug, Clone, Default)]
+pub struct RingAllReduce;
+
+impl Collective for RingAllReduce {
+    fn name(&self) -> String {
+        "ring".to_string()
+    }
+
+    fn all_reduce(
+        &self,
+        ep: &mut Endpoint,
+        buf: &mut [f32],
+        wire: Wire,
+        tag_base: u64,
+    ) -> Result<()> {
+        let n = ep.world_size();
+        let group: Vec<usize> = (0..n).collect();
+        let me = ep.rank();
+        ring_all_reduce(ep, &group, me, buf, wire, tag_base)
+    }
+
+    fn p2p_steps(&self, n_ranks: usize) -> usize {
+        2 * (n_ranks - 1)
+    }
+
+    fn tag_span(&self, n_ranks: usize) -> u64 {
+        2 * n_ranks as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::test_support::{check_all_reduce_matches_sum, run_collective};
+
+    #[test]
+    fn matches_sequential_sum() {
+        for n in [1usize, 2, 3, 5, 8] {
+            check_all_reduce_matches_sum(&RingAllReduce, n, 101, Wire::F32, 1e-4);
+        }
+    }
+
+    #[test]
+    fn fp16_wire_bounded_error_and_agreement() {
+        check_all_reduce_matches_sum(&RingAllReduce, 6, 64, Wire::F16, 5e-3);
+    }
+
+    #[test]
+    fn step_count_formula() {
+        assert_eq!(RingAllReduce.p2p_steps(1024), 2046);
+        assert_eq!(RingAllReduce.p2p_steps(2), 2);
+    }
+
+    #[test]
+    fn data_volume_matches_ring_formula() {
+        // Each rank sends 2(N-1)/N * n elements.
+        let n = 4usize;
+        let elems = 100usize;
+        let (results, counters) = run_collective(&RingAllReduce, n, elems, Wire::F32);
+        drop(results);
+        let (sent, recvd, msgs) = counters;
+        assert_eq!(sent, recvd);
+        assert_eq!(msgs, (n * 2 * (n - 1)) as u64);
+        assert_eq!(sent, (n * 2 * (n - 1) / n * elems * 4) as u64);
+    }
+}

@@ -1,0 +1,205 @@
+//! 2D-Torus all-reduce — the paper's communication contribution (§2.2).
+//!
+//! GPUs are arranged in a logical X (horizontal) × Y (vertical) grid;
+//! the all-reduce runs in three phases (paper Figure 2):
+//!
+//!   1. **reduce-scatter, horizontal** — each row ring-reduce-scatters the
+//!      full buffer; every rank ends owning `1/X` of it, reduced across its
+//!      row.
+//!   2. **all-reduce, vertical** — each column ring-all-reduces *only the
+//!      owned chunk* (size `n/X`), completing the reduction across rows.
+//!   3. **all-gather, horizontal** — each row ring-all-gathers, so every
+//!      rank ends with the fully reduced buffer.
+//!
+//! Per-rank step count is `2(X-1) + 2(Y-1)` with per-step payloads of
+//! `n/X` and `n/(X·Y)` elements; compared to a flat ring's `2(N-1)` steps
+//! this trades the latency term from `O(N)` to `O(X+Y)` while staying
+//! bandwidth-optimal — and the vertical phase moves X-fold less data than
+//! hierarchical all-reduce's inter-group phase (paper §2.2).
+//!
+//! Rank layout: `rank = y * X + x` (row-major); a *row* (fixed y) is the
+//! horizontal ring, a *column* (fixed x) the vertical ring. Grid shapes for
+//! the paper's cluster sizes are in `cluster::grid` (Table 4).
+
+use anyhow::{bail, Result};
+
+use super::primitives::{
+    chunk_offsets, ring_all_gather, ring_all_reduce, ring_reduce_scatter, Wire,
+};
+use super::transport::Endpoint;
+use super::Collective;
+
+/// The paper's 2D-Torus all-reduce over an X×Y logical grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TorusAllReduce {
+    /// Ranks per row (horizontal ring length).
+    pub x: usize,
+    /// Ranks per column (vertical ring length).
+    pub y: usize,
+}
+
+impl TorusAllReduce {
+    pub fn new(x: usize, y: usize) -> Self {
+        assert!(x > 0 && y > 0, "grid dimensions must be positive");
+        Self { x, y }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.x * self.y
+    }
+
+    /// Global ranks of the row containing `rank`.
+    pub fn row_group(&self, rank: usize) -> Vec<usize> {
+        let row = rank / self.x;
+        (0..self.x).map(|i| row * self.x + i).collect()
+    }
+
+    /// Global ranks of the column containing `rank`.
+    pub fn col_group(&self, rank: usize) -> Vec<usize> {
+        let col = rank % self.x;
+        (0..self.y).map(|j| j * self.x + col).collect()
+    }
+}
+
+impl Collective for TorusAllReduce {
+    fn name(&self) -> String {
+        format!("torus2d({}x{})", self.x, self.y)
+    }
+
+    fn all_reduce(
+        &self,
+        ep: &mut Endpoint,
+        buf: &mut [f32],
+        wire: Wire,
+        tag_base: u64,
+    ) -> Result<()> {
+        if ep.world_size() != self.ranks() {
+            bail!(
+                "torus {}x{} needs exactly {} ranks, mesh has {}",
+                self.x,
+                self.y,
+                self.ranks(),
+                ep.world_size()
+            );
+        }
+        let rank = ep.rank();
+        let row = self.row_group(rank);
+        let col = self.col_group(rank);
+        let x_pos = rank % self.x;
+        let y_pos = rank / self.x;
+
+        // Tag-space layout: the three phases use disjoint tag windows so a
+        // rank's row and column traffic can never be confused.
+        let t_scatter = tag_base;
+        let t_vertical = tag_base + self.x as u64;
+        let t_gather = t_vertical + 2 * self.y as u64;
+
+        // Phase 1: horizontal reduce-scatter (paper Fig. 2, step 1).
+        let owned = ring_reduce_scatter(ep, &row, x_pos, buf, wire, t_scatter)?;
+
+        // Phase 2: vertical all-reduce of the owned chunk only (step 2).
+        let offs = chunk_offsets(buf.len(), self.x);
+        let chunk = &mut buf[offs[owned]..offs[owned + 1]];
+        ring_all_reduce(ep, &col, y_pos, chunk, wire, t_vertical)?;
+
+        // Phase 3: horizontal all-gather (step 3).
+        ring_all_gather(ep, &row, x_pos, buf, wire, t_gather)
+    }
+
+    fn p2p_steps(&self, n_ranks: usize) -> usize {
+        debug_assert_eq!(n_ranks, self.ranks());
+        2 * (self.x - 1) + 2 * (self.y - 1)
+    }
+
+    fn tag_span(&self, _n_ranks: usize) -> u64 {
+        (self.x + 2 * self.y + 2 * self.x) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::test_support::{check_all_reduce_matches_sum, run_collective};
+    use crate::util::quickcheck::{prop_seeded, Gen};
+
+    #[test]
+    fn figure2_grid_2x2_matches_sum() {
+        // The paper's worked example: 4 GPUs in a 2x2 grid.
+        check_all_reduce_matches_sum(&TorusAllReduce::new(2, 2), 4, 64, Wire::F32, 1e-4);
+    }
+
+    #[test]
+    fn assorted_grids_match_sum() {
+        for (x, y) in [(1, 1), (1, 4), (4, 1), (2, 3), (3, 2), (4, 4), (3, 5)] {
+            let t = TorusAllReduce::new(x, y);
+            check_all_reduce_matches_sum(&t, x * y, 97, Wire::F32, 1e-4);
+        }
+    }
+
+    #[test]
+    fn fp16_wire_agreement() {
+        check_all_reduce_matches_sum(&TorusAllReduce::new(3, 2), 6, 80, Wire::F16, 5e-3);
+    }
+
+    #[test]
+    fn property_random_grids_and_sizes() {
+        prop_seeded(0x70B1_D05E, 24, |g: &mut Gen| {
+            let x = g.usize_in(1..=4);
+            let y = g.usize_in(1..=4);
+            let elems = g.usize_in(1..=300);
+            let t = TorusAllReduce::new(x, y);
+            check_all_reduce_matches_sum(&t, x * y, elems, Wire::F32, 1e-3);
+        });
+    }
+
+    #[test]
+    fn rejects_wrong_world_size() {
+        let t = TorusAllReduce::new(2, 2);
+        let mut eps = crate::collectives::transport::Mesh::new(3);
+        let mut ep = eps.remove(0);
+        let mut buf = vec![1.0f32; 8];
+        assert!(t.all_reduce(&mut ep, &mut buf, Wire::F32, 0).is_err());
+    }
+
+    #[test]
+    fn step_count_formula_table4_grids() {
+        // Table 4 grids: (V, H) -> our (x=H, y=V).
+        for (v, h, n) in [(32, 32, 1024), (32, 64, 2048), (34, 64, 2176),
+                          (48, 72, 3456), (64, 64, 4096)] {
+            let t = TorusAllReduce::new(h, v);
+            assert_eq!(t.ranks(), n);
+            assert_eq!(t.p2p_steps(n), 2 * (h - 1) + 2 * (v - 1));
+            // always beats the flat ring's 2(N-1) for these shapes
+            assert!(t.p2p_steps(n) < 2 * (n - 1));
+        }
+    }
+
+    #[test]
+    fn row_col_groups_are_consistent() {
+        let t = TorusAllReduce::new(3, 2); // ranks 0..6, rows [0,1,2],[3,4,5]
+        assert_eq!(t.row_group(4), vec![3, 4, 5]);
+        assert_eq!(t.col_group(4), vec![1, 4]);
+        assert_eq!(t.row_group(0), vec![0, 1, 2]);
+        assert_eq!(t.col_group(0), vec![0, 3]);
+    }
+
+    #[test]
+    fn vertical_phase_moves_x_times_less_data() {
+        // Byte accounting: total bytes = rows phase (2(X-1)/X * n per rank)
+        // + vertical phase (2(Y-1)/Y * n/X per rank) + gather.
+        let (x, y) = (4usize, 2usize);
+        let n_ranks = x * y;
+        let elems = 96usize; // divisible by x and x*y for exact formula
+        let t = TorusAllReduce::new(x, y);
+        let (_, (sent, recvd, _)) = run_collective(&t, n_ranks, elems, Wire::F32);
+        assert_eq!(sent, recvd);
+        let per_rank_elems =
+            // phase 1: (x-1) sends of n/x
+            (x - 1) * (elems / x)
+            // phase 2: 2(y-1) sends of n/(x*y)
+            + 2 * (y - 1) * (elems / (x * y))
+            // phase 3: (x-1) sends of n/x
+            + (x - 1) * (elems / x);
+        assert_eq!(sent, (n_ranks * per_rank_elems * 4) as u64);
+    }
+}

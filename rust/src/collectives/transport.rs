@@ -1,0 +1,313 @@
+//! In-memory rank mesh: the substrate under every collective.
+//!
+//! This sits where NCCL + MPI sit in the paper's stack. [`Mesh::new(n)`]
+//! builds `n` fully-connected [`Endpoint`]s; each worker thread owns one and
+//! exchanges tagged messages with any peer. Channels are unbounded, so sends
+//! never block and ring schedules cannot deadlock; receives block until the
+//! matching `(src, tag)` message arrives (out-of-order arrivals are parked in
+//! a pending map, as in MPI tag matching).
+//!
+//! Every endpoint keeps byte/message counters. Tests use them to check
+//! *conservation* (total sent == total received) and to verify each
+//! collective moves exactly the data volume its cost model claims —
+//! the bridge between the functional path and `simnet`'s analytical path.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+/// Wire payload. FP32 is the paper's BN-stat path; FP16 the gradient path.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+}
+
+impl Payload {
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            Payload::F32(v) => 4 * v.len() as u64,
+            Payload::F16(v) => 2 * v.len() as u64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len(),
+            Payload::F16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[derive(Debug)]
+struct Msg {
+    src: usize,
+    tag: u64,
+    payload: Payload,
+}
+
+/// Shared per-mesh traffic counters (lock-free).
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub bytes_sent: AtomicU64,
+    pub bytes_received: AtomicU64,
+    pub messages: AtomicU64,
+}
+
+impl Counters {
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.bytes_sent.load(Ordering::Relaxed),
+            self.bytes_received.load(Ordering::Relaxed),
+            self.messages.load(Ordering::Relaxed),
+        )
+    }
+
+    pub fn reset(&self) {
+        self.bytes_sent.store(0, Ordering::Relaxed);
+        self.bytes_received.store(0, Ordering::Relaxed);
+        self.messages.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Factory for a fully-connected mesh of `n` endpoints.
+pub struct Mesh;
+
+impl Mesh {
+    /// Build `n` endpoints sharing one counter block.
+    pub fn new(n: usize) -> Vec<Endpoint> {
+        assert!(n > 0, "mesh needs at least one rank");
+        let counters = Arc::new(Counters::default());
+        let mut senders: Vec<Sender<Msg>> = Vec::with_capacity(n);
+        let mut receivers: Vec<Receiver<Msg>> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        receivers
+            .into_iter()
+            .enumerate()
+            .map(|(rank, rx)| Endpoint {
+                rank,
+                n,
+                senders: senders.clone(),
+                rx,
+                pending: HashMap::new(),
+                counters: counters.clone(),
+            })
+            .collect()
+    }
+}
+
+/// One rank's view of the mesh (owned by that rank's worker thread).
+pub struct Endpoint {
+    rank: usize,
+    n: usize,
+    senders: Vec<Sender<Msg>>,
+    rx: Receiver<Msg>,
+    pending: HashMap<(usize, u64), Vec<Payload>>,
+    counters: Arc<Counters>,
+}
+
+impl Endpoint {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.n
+    }
+
+    pub fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
+    /// Shared counter block (snapshot it *after* joining all rank threads —
+    /// per-thread snapshots race with peers still in flight).
+    pub fn counters_arc(&self) -> Arc<Counters> {
+        self.counters.clone()
+    }
+
+    /// Send `payload` to `dst` under `tag`. Never blocks.
+    pub fn send(&self, dst: usize, tag: u64, payload: Payload) -> Result<()> {
+        let bytes = payload.wire_bytes();
+        self.senders
+            .get(dst)
+            .ok_or_else(|| anyhow!("send to out-of-range rank {dst} (n={})", self.n))?
+            .send(Msg {
+                src: self.rank,
+                tag,
+                payload,
+            })
+            .map_err(|_| anyhow!("rank {dst} hung up (worker thread died?)"))?;
+        self.counters.bytes_sent.fetch_add(bytes, Ordering::Relaxed);
+        self.counters.messages.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    pub fn send_f32(&self, dst: usize, tag: u64, data: &[f32]) -> Result<()> {
+        self.send(dst, tag, Payload::F32(data.to_vec()))
+    }
+
+    pub fn send_f16(&self, dst: usize, tag: u64, data: Vec<u16>) -> Result<()> {
+        self.send(dst, tag, Payload::F16(data))
+    }
+
+    /// Blocking receive of the message matching `(src, tag)`.
+    ///
+    /// Messages from other (src, tag) pairs arriving first are parked and
+    /// delivered to their own matching receive later (MPI-style matching).
+    pub fn recv(&mut self, src: usize, tag: u64) -> Result<Payload> {
+        let key = (src, tag);
+        if let Some(q) = self.pending.get_mut(&key) {
+            if !q.is_empty() {
+                let p = q.remove(0);
+                self.counters
+                    .bytes_received
+                    .fetch_add(p.wire_bytes(), Ordering::Relaxed);
+                return Ok(p);
+            }
+        }
+        loop {
+            let msg = self
+                .rx
+                .recv()
+                .map_err(|_| anyhow!("rank {}: all peers hung up", self.rank))?;
+            if msg.src == src && msg.tag == tag {
+                self.counters
+                    .bytes_received
+                    .fetch_add(msg.payload.wire_bytes(), Ordering::Relaxed);
+                return Ok(msg.payload);
+            }
+            self.pending
+                .entry((msg.src, msg.tag))
+                .or_default()
+                .push(msg.payload);
+        }
+    }
+
+    /// Receive and require an f32 payload (wire-format mismatch is a bug).
+    pub fn recv_f32(&mut self, src: usize, tag: u64) -> Result<Vec<f32>> {
+        match self.recv(src, tag)? {
+            Payload::F32(v) => Ok(v),
+            Payload::F16(_) => Err(anyhow!(
+                "rank {}: expected f32 wire payload from {src} tag {tag}, got f16",
+                self.rank
+            )),
+        }
+    }
+
+    /// Receive and require an f16 payload.
+    pub fn recv_f16(&mut self, src: usize, tag: u64) -> Result<Vec<u16>> {
+        match self.recv(src, tag)? {
+            Payload::F16(v) => Ok(v),
+            Payload::F32(_) => Err(anyhow!(
+                "rank {}: expected f16 wire payload from {src} tag {tag}, got f32",
+                self.rank
+            )),
+        }
+    }
+}
+
+impl std::fmt::Debug for Endpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Endpoint")
+            .field("rank", &self.rank)
+            .field("n", &self.n)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn point_to_point_round_trip() {
+        let mut eps = Mesh::new(2);
+        let mut b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        a.send_f32(1, 7, &[1.0, 2.0, 3.0]).unwrap();
+        let got = b.recv_f32(0, 7).unwrap();
+        assert_eq!(got, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn tag_matching_out_of_order() {
+        let mut eps = Mesh::new(2);
+        let mut b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        a.send_f32(1, 1, &[1.0]).unwrap();
+        a.send_f32(1, 2, &[2.0]).unwrap();
+        a.send_f32(1, 1, &[3.0]).unwrap();
+        // Receive tag 2 first; tag-1 messages must stay queued in order.
+        assert_eq!(b.recv_f32(0, 2).unwrap(), vec![2.0]);
+        assert_eq!(b.recv_f32(0, 1).unwrap(), vec![1.0]);
+        assert_eq!(b.recv_f32(0, 1).unwrap(), vec![3.0]);
+    }
+
+    #[test]
+    fn byte_conservation_across_threads() {
+        let n = 4;
+        let eps = Mesh::new(n);
+        let counters = eps[0].counters.clone();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                thread::spawn(move || {
+                    let me = ep.rank();
+                    let right = (me + 1) % 4;
+                    let left = (me + 3) % 4;
+                    for step in 0..10u64 {
+                        ep.send_f32(right, step, &vec![me as f32; 100]).unwrap();
+                        let got = ep.recv_f32(left, step).unwrap();
+                        assert_eq!(got, vec![left as f32; 100]);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let (sent, recvd, msgs) = counters.snapshot();
+        assert_eq!(sent, recvd);
+        assert_eq!(sent, 4 * 10 * 100 * 4); // ranks * steps * elems * 4B
+        assert_eq!(msgs, 40);
+    }
+
+    #[test]
+    fn f16_payload_counts_two_bytes() {
+        let mut eps = Mesh::new(2);
+        let mut b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        a.send_f16(1, 0, vec![0x3C00; 8]).unwrap();
+        let got = b.recv_f16(0, 0).unwrap();
+        assert_eq!(got.len(), 8);
+        let (sent, _, _) = a.counters().snapshot();
+        assert_eq!(sent, 16);
+    }
+
+    #[test]
+    fn dtype_mismatch_is_error() {
+        let mut eps = Mesh::new(2);
+        let mut b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        a.send_f32(1, 0, &[1.0]).unwrap();
+        assert!(b.recv_f16(0, 0).is_err());
+    }
+
+    #[test]
+    fn send_out_of_range_is_error() {
+        let eps = Mesh::new(2);
+        assert!(eps[0].send_f32(5, 0, &[1.0]).is_err());
+    }
+}

@@ -1,0 +1,281 @@
+//! Run configuration: the knobs of a training run (reduced-scale twin or
+//! paper-scale simulation), loadable from TOML files and from presets.
+
+pub mod presets;
+
+pub use presets::{paper_run, paper_runs, LrConfig, PaperRun};
+
+use anyhow::{bail, Context, Result};
+
+use crate::sched::{BatchSchedule, LrSchedule, Phase};
+use crate::util::toml::Doc;
+
+/// Everything the Trainer needs for one run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub name: String,
+    /// Manifest architecture ("tiny" | "resnet20").
+    pub arch: String,
+    /// Collective spec ("torus" | "torus:<X>x<Y>" | "ring" | "hierarchical:<g>").
+    pub collective: String,
+    /// Gradient wire precision ("fp16" per the paper, or "fp32").
+    pub grad_wire: String,
+    pub label_smoothing: f32,
+    pub lr: LrSchedule,
+    pub batch: BatchSchedule,
+    pub weight_decay: f32,
+    pub seed: u64,
+    /// Hard cap on optimizer steps (0 = run the schedule's epochs).
+    pub max_steps: usize,
+    /// Evaluate every N steps (0 = only at end).
+    pub eval_every: usize,
+    /// Number of validation batches per evaluation.
+    pub eval_batches: usize,
+    /// Synthetic dataset size (train split).
+    pub train_size: usize,
+}
+
+impl TrainConfig {
+    /// Quick default: tiny arch, 4 workers in a 2×2 torus.
+    pub fn quickstart() -> Self {
+        Self {
+            name: "quickstart".into(),
+            arch: "tiny".into(),
+            collective: "torus:2x2".into(),
+            grad_wire: "fp16".into(),
+            label_smoothing: 0.1,
+            lr: LrSchedule::Const { lr: 4.0, momentum: 0.9 },
+            batch: BatchSchedule::constant(8, 4, 2),
+            weight_decay: 5e-5,
+            seed: 42,
+            max_steps: 30,
+            eval_every: 0,
+            eval_batches: 4,
+            train_size: 4096,
+        }
+    }
+
+    /// Reduced-scale twin of a paper run (DESIGN.md §4): same stabilisers,
+    /// schedule structure and wire precision; worker count scaled to
+    /// `ranks`, LR linearly rescaled to the twin's global batch.
+    pub fn twin_of(paper: &PaperRun, ranks: usize, arch: &str, epochs: u32) -> Self {
+        let mut batch = paper.schedule.scaled_to(ranks);
+        batch.total_epochs = epochs;
+        // Keep the paper's relative phase boundaries under the shorter run.
+        let scale = epochs as f64 / paper.schedule.total_epochs as f64;
+        let phases: Vec<Phase> = batch
+            .phases()
+            .iter()
+            .map(|p| Phase {
+                from_epoch: (p.from_epoch as f64 * scale).round() as u32,
+                ..*p
+            })
+            .collect();
+        // Dedup boundaries that collapsed onto each other.
+        let mut dedup: Vec<Phase> = Vec::new();
+        for p in phases {
+            if dedup.last().map(|l| l.from_epoch) == Some(p.from_epoch) {
+                *dedup.last_mut().unwrap() = p;
+            } else {
+                dedup.push(p);
+            }
+        }
+        let batch = BatchSchedule::new(dedup, epochs);
+
+        // Linear LR transfer from the paper's batch to the twin's.
+        let paper_batch = paper.schedule.at(0).total_batch();
+        let twin_batch = batch.at(0).total_batch();
+        let lr = match paper.lr.schedule() {
+            LrSchedule::ConfigA { base, initial, warmup_epochs, total_epochs } => {
+                LrSchedule::ConfigA {
+                    base: LrSchedule::scale_lr(base, paper_batch, twin_batch),
+                    initial,
+                    warmup_epochs: warmup_epochs * scale,
+                    total_epochs: total_epochs * scale,
+                }
+            }
+            LrSchedule::ConfigB {
+                warmup_epochs,
+                warmup_start,
+                base_low,
+                base_high,
+                switch_epoch,
+                total_epochs,
+            } => LrSchedule::ConfigB {
+                warmup_epochs: warmup_epochs * scale,
+                warmup_start: LrSchedule::scale_lr(warmup_start, paper_batch, twin_batch),
+                base_low: LrSchedule::scale_lr(base_low, paper_batch, twin_batch),
+                base_high: LrSchedule::scale_lr(base_high, paper_batch, twin_batch),
+                switch_epoch: switch_epoch * scale,
+                total_epochs: total_epochs * scale,
+            },
+            other => other,
+        };
+
+        Self {
+            name: format!("{}-twin", paper.name),
+            arch: arch.to_string(),
+            collective: "torus".into(),
+            grad_wire: "fp16".into(),
+            label_smoothing: paper.label_smoothing,
+            lr,
+            batch,
+            weight_decay: 5e-5,
+            seed: 42,
+            max_steps: 0,
+            eval_every: 0,
+            eval_batches: 8,
+            train_size: 4096,
+        }
+    }
+
+    /// Parse from a TOML document (see `configs/*.toml` for the format).
+    pub fn from_toml(doc: &Doc) -> Result<Self> {
+        let name = doc.str_or("name", "run")?;
+        let arch = doc.str_or("arch", "tiny")?;
+        let collective = doc.str_or("collective", "torus")?;
+        let grad_wire = doc.str_or("grad_wire", "fp16")?;
+        if grad_wire != "fp16" && grad_wire != "fp32" {
+            bail!("grad_wire must be fp16 or fp32, got {grad_wire:?}");
+        }
+        let label_smoothing = doc.f64_or("label_smoothing", 0.1)? as f32;
+        let weight_decay = doc.f64_or("weight_decay", 5e-5)? as f32;
+        let seed = doc.usize_or("seed", 42)? as u64;
+        let max_steps = doc.usize_or("max_steps", 0)?;
+        let eval_every = doc.usize_or("eval_every", 0)?;
+        let eval_batches = doc.usize_or("eval_batches", 8)?;
+        let train_size = doc.usize_or("train_size", 4096)?;
+        let total_epochs = doc.usize_or("epochs", 2)? as u32;
+
+        // LR schedule.
+        let lr = match doc.str_or("lr.kind", "const")?.as_str() {
+            "const" => LrSchedule::Const {
+                lr: doc.f64_or("lr.value", 1.0)?,
+                momentum: doc.f64_or("lr.momentum", 0.9)?,
+            },
+            "config_a" => LrSchedule::ConfigA {
+                base: doc.f64_or("lr.base", 34.0)?,
+                initial: doc.f64_or("lr.initial", 1e-5)?,
+                warmup_epochs: doc.f64_or("lr.warmup_epochs", 34.0)?,
+                total_epochs: doc.f64_or("lr.total_epochs", 90.0)?,
+            },
+            "config_b" => LrSchedule::ConfigB {
+                warmup_epochs: doc.f64_or("lr.warmup_epochs", 5.0)?,
+                warmup_start: doc.f64_or("lr.warmup_start", 0.2)?,
+                base_low: doc.f64_or("lr.base_low", 29.0)?,
+                base_high: doc.f64_or("lr.base_high", 50.0)?,
+                switch_epoch: doc.f64_or("lr.switch_epoch", 30.0)?,
+                total_epochs: doc.f64_or("lr.total_epochs", 90.0)?,
+            },
+            k => bail!("unknown lr.kind {k:?}"),
+        };
+
+        // Batch schedule: either flat keys or phase arrays.
+        let batch = if let Some(v) = doc.get("batch.phases") {
+            let mut phases = Vec::new();
+            for (i, item) in v.as_arr()?.iter().enumerate() {
+                let row = item.as_arr().with_context(|| format!("phase {i}"))?;
+                if row.len() != 3 {
+                    bail!("batch.phases[{i}] must be [from_epoch, per_worker, workers]");
+                }
+                phases.push(Phase {
+                    from_epoch: row[0].as_usize()? as u32,
+                    per_worker: row[1].as_usize()?,
+                    workers: row[2].as_usize()?,
+                });
+            }
+            BatchSchedule::new(phases, total_epochs)
+        } else {
+            BatchSchedule::constant(
+                doc.usize_or("batch.per_worker", 8)?,
+                doc.usize_or("batch.workers", 4)?,
+                total_epochs,
+            )
+        };
+
+        Ok(Self {
+            name,
+            arch,
+            collective,
+            grad_wire,
+            label_smoothing,
+            lr,
+            batch,
+            weight_decay,
+            seed,
+            max_steps,
+            eval_every,
+            eval_batches,
+            train_size,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quickstart_is_consistent() {
+        let c = TrainConfig::quickstart();
+        assert_eq!(c.batch.max_workers(), 4);
+        assert_eq!(c.arch, "tiny");
+    }
+
+    #[test]
+    fn twin_preserves_stabilisers_and_structure() {
+        let paper = paper_run("exp4").unwrap();
+        let twin = TrainConfig::twin_of(&paper, 8, "tiny", 6);
+        assert_eq!(twin.label_smoothing, 0.1);
+        assert_eq!(twin.batch.max_workers(), 8);
+        assert_eq!(twin.batch.total_epochs, 6);
+        // 4 phases may dedup if boundaries collapse at 6 epochs
+        assert!(twin.batch.phases().len() >= 2);
+        // per-worker batches survive
+        assert_eq!(twin.batch.at(0).per_worker, 16);
+    }
+
+    #[test]
+    fn twin_lr_is_rescaled_down() {
+        let paper = paper_run("exp2").unwrap();
+        let twin = TrainConfig::twin_of(&paper, 8, "tiny", 6);
+        match twin.lr {
+            LrSchedule::ConfigB { base_low, .. } => {
+                assert!(base_low < 1.0, "54K-batch LR 29 must shrink, got {base_low}");
+            }
+            ref other => panic!("expected ConfigB, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn toml_round_trip() {
+        let doc = Doc::parse(
+            r#"
+name = "t"
+arch = "tiny"
+collective = "torus:2x2"
+epochs = 3
+[lr]
+kind = "config_b"
+base_low = 1.5
+[batch]
+phases = [[0, 8, 4], [2, 16, 4]]
+"#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.name, "t");
+        assert_eq!(c.batch.phases().len(), 2);
+        assert_eq!(c.batch.at(2).per_worker, 16);
+        match c.lr {
+            LrSchedule::ConfigB { base_low, .. } => assert_eq!(base_low, 1.5),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn toml_rejects_bad_wire() {
+        let doc = Doc::parse("grad_wire = \"fp8\"\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+    }
+}

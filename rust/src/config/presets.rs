@@ -1,0 +1,184 @@
+//! Paper experiment presets: Table 3 (training configurations) and the
+//! Table 5 expectations (accuracy/time) they produced.
+//!
+//! Exact worker counts for the phases are reconstructed from the printed
+//! totals ("34K", "68K", …) and per-worker batches; where the paper rounds
+//! (e.g. 68K at 16/worker under a 4096-GPU cap) we use the nearest
+//! consistent count and note it in EXPERIMENTS.md.
+
+use crate::sched::{BatchSchedule, LrSchedule, Phase};
+
+/// LR configuration selector (paper Table 3 "LR" column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LrConfig {
+    /// Reference row: settings from [10] (LARS paper).
+    Reference,
+    /// Config A (TensorFlow-repo recipe).
+    A,
+    /// Config B (paper's formula block).
+    B,
+}
+
+impl LrConfig {
+    pub fn schedule(self) -> LrSchedule {
+        match self {
+            // [10] trains 90 epochs with poly decay and 5-epoch warmup —
+            // structurally config B's low branch without the 50 switch.
+            LrConfig::Reference => LrSchedule::ConfigB {
+                warmup_epochs: 5.0,
+                warmup_start: 0.2,
+                base_low: 29.0,
+                base_high: 29.0,
+                switch_epoch: 30.0,
+                total_epochs: 90.0,
+            },
+            LrConfig::A => LrSchedule::config_a(),
+            LrConfig::B => LrSchedule::config_b(),
+        }
+    }
+}
+
+/// One row of Table 3 + its Table 5 outcome.
+#[derive(Debug, Clone)]
+pub struct PaperRun {
+    pub name: &'static str,
+    pub gpus_max: usize,
+    pub label_smoothing: f32,
+    pub lr: LrConfig,
+    pub schedule: BatchSchedule,
+    /// Table 5: top-1 validation accuracy (%).
+    pub paper_accuracy: f64,
+    /// Table 5: wall-clock training time (seconds).
+    pub paper_secs: f64,
+}
+
+/// All five rows of Tables 3/5: Reference + Exp. 1–4.
+pub fn paper_runs() -> Vec<PaperRun> {
+    vec![
+        PaperRun {
+            name: "reference",
+            gpus_max: 1024,
+            label_smoothing: 0.0,
+            lr: LrConfig::Reference,
+            schedule: BatchSchedule::constant(32, 1024, 90),
+            paper_accuracy: 75.40,
+            paper_secs: 505.0,
+        },
+        PaperRun {
+            name: "exp1",
+            gpus_max: 2176,
+            label_smoothing: 0.0,
+            lr: LrConfig::A,
+            schedule: BatchSchedule::new(
+                vec![
+                    Phase { from_epoch: 0, per_worker: 16, workers: 2176 },  // 34K
+                    Phase { from_epoch: 30, per_worker: 32, workers: 2176 }, // 68K
+                ],
+                90,
+            ),
+            paper_accuracy: 75.03,
+            paper_secs: 224.0,
+        },
+        PaperRun {
+            name: "exp2",
+            gpus_max: 3456,
+            label_smoothing: 0.1,
+            lr: LrConfig::B,
+            schedule: BatchSchedule::new(
+                vec![
+                    Phase { from_epoch: 0, per_worker: 16, workers: 3456 },  // 54K
+                    Phase { from_epoch: 30, per_worker: 32, workers: 1728 }, // 54K
+                ],
+                90,
+            ),
+            paper_accuracy: 75.29,
+            paper_secs: 122.0,
+        },
+        PaperRun {
+            name: "exp3",
+            gpus_max: 3456,
+            label_smoothing: 0.1,
+            lr: LrConfig::B,
+            schedule: BatchSchedule::new(
+                vec![
+                    Phase { from_epoch: 0, per_worker: 16, workers: 3456 },  // 54K
+                    Phase { from_epoch: 30, per_worker: 32, workers: 2000 }, // 64K
+                ],
+                90,
+            ),
+            paper_accuracy: 74.62,
+            paper_secs: 115.0,
+        },
+        PaperRun {
+            name: "exp4",
+            gpus_max: 4096,
+            label_smoothing: 0.1,
+            lr: LrConfig::A,
+            schedule: BatchSchedule::new(
+                vec![
+                    Phase { from_epoch: 0, per_worker: 16, workers: 2176 },  // 34K
+                    Phase { from_epoch: 30, per_worker: 16, workers: 4096 }, // 68K
+                    Phase { from_epoch: 45, per_worker: 32, workers: 2656 }, // 85K
+                    Phase { from_epoch: 75, per_worker: 32, workers: 3712 }, // 119K
+                ],
+                90,
+            ),
+            paper_accuracy: 75.23,
+            paper_secs: 129.0,
+        },
+    ]
+}
+
+/// Look up a paper run by name.
+pub fn paper_run(name: &str) -> Option<PaperRun> {
+    paper_runs().into_iter().find(|r| r.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_rows_with_table5_bounds() {
+        let runs = paper_runs();
+        assert_eq!(runs.len(), 5);
+        for r in &runs {
+            assert!(r.paper_accuracy > 74.0 && r.paper_accuracy < 76.0);
+            assert!(r.schedule.max_workers() <= r.gpus_max);
+        }
+    }
+
+    #[test]
+    fn exp2_is_the_headline_122s_run() {
+        let r = paper_run("exp2").unwrap();
+        assert_eq!(r.paper_secs, 122.0);
+        assert_eq!(r.schedule.at(0).total_batch(), 55_296); // "54K"
+        assert_eq!(r.schedule.at(30).total_batch(), 55_296); // stays 54K
+        assert_eq!(r.label_smoothing, 0.1);
+        assert_eq!(r.lr, LrConfig::B);
+    }
+
+    #[test]
+    fn exp4_batch_range_is_34k_to_119k() {
+        let r = paper_run("exp4").unwrap();
+        assert_eq!(r.schedule.min_total_batch(), 34_816);
+        assert_eq!(r.schedule.max_total_batch(), 118_784); // "119K"
+        assert_eq!(r.label_smoothing, 0.1);
+    }
+
+    #[test]
+    fn reference_has_no_stabilisers() {
+        let r = paper_run("reference").unwrap();
+        assert_eq!(r.label_smoothing, 0.0);
+        assert_eq!(r.schedule.phases().len(), 1);
+    }
+
+    #[test]
+    fn lr_configs_resolve() {
+        assert_eq!(LrConfig::A.schedule(), LrSchedule::config_a());
+        assert_eq!(LrConfig::B.schedule(), LrSchedule::config_b());
+        // Reference never switches to base 50
+        let s = LrConfig::Reference.schedule();
+        assert!(s.lr(40.0) < s.lr(29.0));
+    }
+}

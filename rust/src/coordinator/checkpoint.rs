@@ -1,0 +1,286 @@
+//! Training-state checkpointing: save/restore parameters, momenta and the
+//! synchronized BN statistics, plus run-position metadata.
+//!
+//! Binary format (little-endian, versioned):
+//!
+//! ```text
+//! magic "FSGD"  u32 version  u64 step  u64 samples  u64 bn_steps
+//! u32 n_sections
+//! per section: u32 n_tensors, per tensor: u32 rank, u32 dims.., f32 data..
+//! sections: params, momenta, bn_running
+//! trailing crc32-like checksum (fletcher-64 over all preceding bytes)
+//! ```
+//!
+//! Tensors carry their shapes so a checkpoint is self-describing and a
+//! mismatch against the manifest (e.g. wrong arch) fails loudly.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::HostTensor;
+
+use super::worker::WorkerState;
+
+const MAGIC: &[u8; 4] = b"FSGD";
+const VERSION: u32 = 1;
+
+/// Run-position metadata stored alongside the tensors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CheckpointMeta {
+    /// Next global optimizer step.
+    pub step: u64,
+    /// Total samples consumed.
+    pub samples: u64,
+}
+
+/// Fletcher-64 checksum (simple, dependency-free integrity check).
+fn fletcher64(bytes: &[u8]) -> u64 {
+    let mut a: u64 = 0;
+    let mut b: u64 = 0;
+    for chunk in bytes.chunks(4) {
+        let mut word = [0u8; 4];
+        word[..chunk.len()].copy_from_slice(chunk);
+        a = (a + u32::from_le_bytes(word) as u64) % 0xFFFF_FFFF;
+        b = (b + a) % 0xFFFF_FFFF;
+    }
+    (b << 32) | a
+}
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+    fn u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+    fn tensor(&mut self, t: &HostTensor) -> Result<()> {
+        let data = t.as_f32()?;
+        self.u32(t.shape().len() as u32);
+        for &d in t.shape() {
+            self.u32(d as u32);
+        }
+        for &x in data {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        Ok(())
+    }
+    fn section(&mut self, ts: &[HostTensor]) -> Result<()> {
+        self.u32(ts.len() as u32);
+        for t in ts {
+            self.tensor(t)?;
+        }
+        Ok(())
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("checkpoint truncated at byte {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn tensor(&mut self) -> Result<HostTensor> {
+        let rank = self.u32()? as usize;
+        if rank > 8 {
+            bail!("implausible tensor rank {rank} (corrupt checkpoint?)");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(self.u32()? as usize);
+        }
+        let elems: usize = shape.iter().product();
+        let raw = self.take(4 * elems)?;
+        let mut data = Vec::with_capacity(elems);
+        for c in raw.chunks_exact(4) {
+            data.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(HostTensor::f32(shape, data))
+    }
+    fn section(&mut self) -> Result<Vec<HostTensor>> {
+        let n = self.u32()? as usize;
+        if n > 1_000_000 {
+            bail!("implausible section size {n}");
+        }
+        (0..n).map(|_| self.tensor()).collect()
+    }
+}
+
+/// Serialise `state` + `meta` to `path` (atomic: write temp, rename).
+pub fn save(path: impl AsRef<Path>, state: &WorkerState, meta: CheckpointMeta) -> Result<()> {
+    let path = path.as_ref();
+    let mut w = Writer { buf: Vec::new() };
+    w.buf.extend_from_slice(MAGIC);
+    w.u32(VERSION);
+    w.u64(meta.step);
+    w.u64(meta.samples);
+    w.u64(state.bn_steps);
+    w.u32(3);
+    w.section(&state.params)?;
+    w.section(&state.momenta)?;
+    w.section(&state.bn_running)?;
+    let sum = fletcher64(&w.buf);
+    w.u64(sum);
+
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {tmp:?}"))?;
+        f.write_all(&w.buf)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming into {path:?}"))?;
+    Ok(())
+}
+
+/// Load a checkpoint; verifies magic, version and checksum.
+pub fn load(path: impl AsRef<Path>) -> Result<(WorkerState, CheckpointMeta)> {
+    let path = path.as_ref();
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {path:?}"))?
+        .read_to_end(&mut bytes)?;
+    if bytes.len() < 8 {
+        bail!("checkpoint too small");
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let want = u64::from_le_bytes(tail.try_into().unwrap());
+    let got = fletcher64(body);
+    if want != got {
+        bail!("checkpoint checksum mismatch ({got:#x} != {want:#x}) — corrupt file");
+    }
+
+    let mut r = Reader { buf: body, pos: 0 };
+    if r.take(4)? != MAGIC {
+        bail!("not a flashsgd checkpoint (bad magic)");
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        bail!("checkpoint version {version} unsupported (want {VERSION})");
+    }
+    let step = r.u64()?;
+    let samples = r.u64()?;
+    let bn_steps = r.u64()?;
+    let n_sections = r.u32()?;
+    if n_sections != 3 {
+        bail!("expected 3 sections, found {n_sections}");
+    }
+    let params = r.section()?;
+    let momenta = r.section()?;
+    let bn_running = r.section()?;
+    if r.pos != body.len() {
+        bail!("trailing garbage in checkpoint");
+    }
+    if params.len() != momenta.len() {
+        bail!(
+            "param/momentum arity mismatch: {} vs {}",
+            params.len(),
+            momenta.len()
+        );
+    }
+    Ok((
+        WorkerState {
+            params,
+            momenta,
+            bn_running,
+            bn_steps,
+        },
+        CheckpointMeta { step, samples },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> WorkerState {
+        WorkerState {
+            params: vec![
+                HostTensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+                HostTensor::f32(vec![4], vec![0.1, 0.2, 0.3, 0.4]),
+            ],
+            momenta: vec![
+                HostTensor::f32(vec![2, 3], vec![0.0; 6]),
+                HostTensor::f32(vec![4], vec![0.5; 4]),
+            ],
+            bn_running: vec![HostTensor::f32(vec![2, 8], vec![0.25; 16])],
+            bn_steps: 17,
+        }
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let dir = std::env::temp_dir().join(format!("fsgd-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.ckpt");
+        let meta = CheckpointMeta { step: 42, samples: 1337 };
+        let s = state();
+        save(&path, &s, meta).unwrap();
+        let (loaded, m2) = load(&path).unwrap();
+        assert_eq!(m2, meta);
+        assert_eq!(loaded.params, s.params);
+        assert_eq!(loaded.momenta, s.momenta);
+        assert_eq!(loaded.bn_running, s.bn_running);
+        assert_eq!(loaded.bn_steps, 17);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let dir = std::env::temp_dir().join(format!("fsgd-ckpt-c-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("b.ckpt");
+        save(&path, &state(), CheckpointMeta { step: 1, samples: 2 }).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_magic_and_truncation() {
+        let dir = std::env::temp_dir().join(format!("fsgd-ckpt-m-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ckpt");
+        std::fs::write(&path, b"nope").unwrap();
+        assert!(load(&path).is_err());
+        // valid file truncated mid-tensor
+        save(&path, &state(), CheckpointMeta { step: 0, samples: 0 }).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fletcher_is_stable_and_sensitive() {
+        let a = fletcher64(b"hello world");
+        assert_eq!(a, fletcher64(b"hello world"));
+        assert_ne!(a, fletcher64(b"hello worle"));
+        // order sensitivity: same words, different order (a plain sum of
+        // 4-byte words would collide here; fletcher's b-term does not)
+        assert_ne!(fletcher64(b"aaaabbbb"), fletcher64(b"bbbbaaaa"));
+    }
+}

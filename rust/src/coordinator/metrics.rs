@@ -1,0 +1,286 @@
+//! Training metrics: loss curve, throughput, step-time breakdown.
+//!
+//! Rank 0 records one [`StepMetric`] per optimizer step (loss is the
+//! cross-worker mean — it rides along in the gradient all-reduce buffer, so
+//! it costs one extra element). `Metrics::summary()` feeds the run report
+//! and EXPERIMENTS.md; `to_csv()` dumps the raw curve.
+
+use crate::util::stats;
+
+/// One optimizer step as seen by rank 0.
+#[derive(Debug, Clone)]
+pub struct StepMetric {
+    pub step: usize,
+    pub epoch: u32,
+    pub loss: f64,
+    pub lr: f64,
+    pub momentum: f64,
+    pub global_batch: usize,
+    /// Seconds in grad_step (compute).
+    pub t_compute: f64,
+    /// Seconds in the gradient + BN collectives (communication).
+    pub t_comm: f64,
+    /// Seconds in apply_step (optimizer).
+    pub t_apply: f64,
+    /// Seconds in data loading.
+    pub t_data: f64,
+}
+
+impl StepMetric {
+    pub fn total_secs(&self) -> f64 {
+        self.t_compute + self.t_comm + self.t_apply + self.t_data
+    }
+}
+
+/// One evaluation point.
+#[derive(Debug, Clone)]
+pub struct EvalMetric {
+    pub step: usize,
+    pub val_loss: f64,
+    pub accuracy: f64,
+}
+
+/// Accumulated run metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub steps: Vec<StepMetric>,
+    pub evals: Vec<EvalMetric>,
+}
+
+/// Aggregate summary of a run (or a phase).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub steps: usize,
+    pub images: usize,
+    pub wall_secs: f64,
+    pub images_per_sec: f64,
+    pub first_loss: f64,
+    pub last_loss: f64,
+    /// Mean per-step seconds in each bucket.
+    pub mean_compute: f64,
+    pub mean_comm: f64,
+    pub mean_apply: f64,
+    pub mean_data: f64,
+    /// Communication share of the step (the paper's scaling-efficiency
+    /// antagonist).
+    pub comm_fraction: f64,
+}
+
+impl Metrics {
+    pub fn push(&mut self, m: StepMetric) {
+        self.steps.push(m);
+    }
+
+    pub fn push_eval(&mut self, e: EvalMetric) {
+        self.evals.push(e);
+    }
+
+    pub fn summary(&self) -> Summary {
+        let n = self.steps.len();
+        let images: usize = self.steps.iter().map(|s| s.global_batch).sum();
+        let wall: f64 = self.steps.iter().map(|s| s.total_secs()).sum();
+        let get = |f: fn(&StepMetric) -> f64| -> Vec<f64> { self.steps.iter().map(f).collect() };
+        let comp = stats::mean(&get(|s| s.t_compute));
+        let comm = stats::mean(&get(|s| s.t_comm));
+        let apply = stats::mean(&get(|s| s.t_apply));
+        let data = stats::mean(&get(|s| s.t_data));
+        let total = comp + comm + apply + data;
+        Summary {
+            steps: n,
+            images,
+            wall_secs: wall,
+            images_per_sec: if wall > 0.0 { images as f64 / wall } else { 0.0 },
+            first_loss: self.steps.first().map_or(f64::NAN, |s| s.loss),
+            last_loss: self.steps.last().map_or(f64::NAN, |s| s.loss),
+            mean_compute: comp,
+            mean_comm: comm,
+            mean_apply: apply,
+            mean_data: data,
+            comm_fraction: if total > 0.0 { comm / total } else { 0.0 },
+        }
+    }
+
+    /// Smoothed loss curve (EMA, alpha 0.1) sampled every `every` steps.
+    pub fn loss_curve(&self, every: usize) -> Vec<(usize, f64)> {
+        let losses: Vec<f64> = self.steps.iter().map(|s| s.loss).collect();
+        let smooth = stats::ema(&losses, 0.1);
+        self.steps
+            .iter()
+            .zip(smooth)
+            .filter(|(s, _)| every <= 1 || s.step % every == 0)
+            .map(|(s, l)| (s.step, l))
+            .collect()
+    }
+
+    /// CSV dump: step curve with timing columns.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "step,epoch,loss,lr,momentum,global_batch,t_compute,t_comm,t_apply,t_data\n",
+        );
+        for s in &self.steps {
+            out.push_str(&format!(
+                "{},{},{:.6},{:.6},{:.4},{},{:.6},{:.6},{:.6},{:.6}\n",
+                s.step,
+                s.epoch,
+                s.loss,
+                s.lr,
+                s.momentum,
+                s.global_batch,
+                s.t_compute,
+                s.t_comm,
+                s.t_apply,
+                s.t_data
+            ));
+        }
+        out
+    }
+
+    pub fn merge(&mut self, other: Metrics) {
+        self.steps.extend(other.steps);
+        self.evals.extend(other.evals);
+    }
+
+    /// Structured run report (machine-readable twin of `Summary::format`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let s = self.summary();
+        let mut top = BTreeMap::new();
+        let mut summary = BTreeMap::new();
+        summary.insert("steps".into(), Json::Num(s.steps as f64));
+        summary.insert("images".into(), Json::Num(s.images as f64));
+        summary.insert("wall_secs".into(), Json::Num(s.wall_secs));
+        summary.insert("images_per_sec".into(), Json::Num(s.images_per_sec));
+        summary.insert("first_loss".into(), Json::Num(s.first_loss));
+        summary.insert("last_loss".into(), Json::Num(s.last_loss));
+        summary.insert("comm_fraction".into(), Json::Num(s.comm_fraction));
+        top.insert("summary".into(), Json::Obj(summary));
+        top.insert(
+            "loss_curve".into(),
+            Json::Arr(
+                self.loss_curve(1)
+                    .into_iter()
+                    .map(|(step, loss)| {
+                        Json::Arr(vec![Json::Num(step as f64), Json::Num(loss)])
+                    })
+                    .collect(),
+            ),
+        );
+        top.insert(
+            "evals".into(),
+            Json::Arr(
+                self.evals
+                    .iter()
+                    .map(|e| {
+                        let mut m = BTreeMap::new();
+                        m.insert("step".into(), Json::Num(e.step as f64));
+                        m.insert("val_loss".into(), Json::Num(e.val_loss));
+                        m.insert("accuracy".into(), Json::Num(e.accuracy));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(top)
+    }
+}
+
+impl Summary {
+    pub fn format(&self) -> String {
+        format!(
+            "steps {}  imgs {}  {:.1} img/s  loss {:.3}→{:.3}  \
+             step breakdown: compute {:.1}ms comm {:.1}ms apply {:.1}ms data {:.1}ms \
+             (comm {:.1}%)",
+            self.steps,
+            self.images,
+            self.images_per_sec,
+            self.first_loss,
+            self.last_loss,
+            self.mean_compute * 1e3,
+            self.mean_comm * 1e3,
+            self.mean_apply * 1e3,
+            self.mean_data * 1e3,
+            self.comm_fraction * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(i: usize, loss: f64) -> StepMetric {
+        StepMetric {
+            step: i,
+            epoch: 0,
+            loss,
+            lr: 0.1,
+            momentum: 0.9,
+            global_batch: 32,
+            t_compute: 0.010,
+            t_comm: 0.005,
+            t_apply: 0.002,
+            t_data: 0.003,
+        }
+    }
+
+    #[test]
+    fn summary_aggregates() {
+        let mut m = Metrics::default();
+        for i in 0..10 {
+            m.push(step(i, 2.0 - i as f64 * 0.1));
+        }
+        let s = m.summary();
+        assert_eq!(s.steps, 10);
+        assert_eq!(s.images, 320);
+        assert!((s.wall_secs - 0.2).abs() < 1e-9);
+        assert!((s.images_per_sec - 1600.0).abs() < 1.0);
+        assert!((s.comm_fraction - 0.25).abs() < 1e-9);
+        assert!(s.last_loss < s.first_loss);
+        assert!(s.format().contains("img/s"));
+    }
+
+    #[test]
+    fn csv_and_curve() {
+        let mut m = Metrics::default();
+        for i in 0..6 {
+            m.push(step(i, 1.0));
+        }
+        m.push_eval(EvalMetric {
+            step: 5,
+            val_loss: 0.9,
+            accuracy: 0.5,
+        });
+        let csv = m.to_csv();
+        assert_eq!(csv.lines().count(), 7);
+        assert!(csv.starts_with("step,"));
+        let curve = m.loss_curve(2);
+        assert_eq!(curve.len(), 3); // steps 0, 2, 4
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        use crate::util::json::Json;
+        let mut m = Metrics::default();
+        for i in 0..4 {
+            m.push(step(i, 1.5));
+        }
+        m.push_eval(EvalMetric { step: 3, val_loss: 1.2, accuracy: 0.4 });
+        let j = m.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            parsed.get("summary").unwrap().get("steps").unwrap().as_usize().unwrap(),
+            4
+        );
+        assert_eq!(parsed.get("evals").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(parsed.get("loss_curve").unwrap().as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn empty_metrics_are_safe() {
+        let s = Metrics::default().summary();
+        assert_eq!(s.steps, 0);
+        assert_eq!(s.images_per_sec, 0.0);
+        assert!(s.first_loss.is_nan());
+    }
+}

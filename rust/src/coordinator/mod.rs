@@ -1,0 +1,437 @@
+//! The training coordinator (Layer 3 leader).
+//!
+//! [`Trainer`] owns a run end-to-end: it loads the artifact manifest,
+//! starts the PJRT compute service, materialises the initial parameters
+//! (the `init` artifact — same He init as the paper's [10]), then executes
+//! the batch-size schedule phase by phase. Each phase spawns one thread per
+//! simulated GPU over a fresh [`Mesh`]; phase boundaries are where
+//! batch-size control swaps every worker's `grad_step` executable (and,
+//! like the paper's Exp. 2–4, may change the worker count). Parameters are
+//! replicated, so phase handoff is rank 0's state.
+//!
+//! Evaluation runs on rank 0's parameters with the *synchronized running
+//! BN statistics* — the "Batch Normalization without Moving Average"
+//! evaluation path (paper §3.2).
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod worker;
+
+pub use checkpoint::CheckpointMeta;
+pub use metrics::{EvalMetric, Metrics, StepMetric, Summary};
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::best_grid;
+use crate::collectives::{self, Collective, Mesh, Wire};
+use crate::config::TrainConfig;
+use crate::data::{Augment, Batch, Loader, SynthDataset};
+use crate::runtime::{ComputeClient, ComputeService, HostTensor, Manifest};
+use crate::util::timer::Stopwatch;
+
+use worker::{PhaseCtx, WorkerOutput, WorkerState};
+
+/// Result of a full training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub config_name: String,
+    pub metrics: Metrics,
+    pub summary: Summary,
+    pub final_eval: Option<EvalMetric>,
+    pub wall_secs: f64,
+}
+
+impl TrainReport {
+    pub fn format(&self) -> String {
+        let eval = match &self.final_eval {
+            Some(e) => format!(
+                "val loss {:.3}, top-1 acc {:.1}%",
+                e.val_loss,
+                e.accuracy * 100.0
+            ),
+            None => "no eval".to_string(),
+        };
+        format!(
+            "[{}] {}\n  final: {}  (wall {:.1}s)",
+            self.config_name,
+            self.summary.format(),
+            eval,
+            self.wall_secs
+        )
+    }
+}
+
+/// One planned phase (resolved from the batch schedule).
+#[derive(Debug, Clone)]
+struct PhasePlan {
+    per_worker: usize,
+    workers: usize,
+    steps: usize,
+    first_step: usize,
+    samples_before: u64,
+    /// Steps of this phase consumed before a checkpoint resume.
+    skipped: usize,
+}
+
+/// The run coordinator.
+pub struct Trainer {
+    config: TrainConfig,
+    manifest: Manifest,
+    save_to: Option<std::path::PathBuf>,
+    resume_from: Option<std::path::PathBuf>,
+}
+
+impl Trainer {
+    pub fn new(config: TrainConfig, artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        manifest.arch(&config.arch)?; // fail fast on unknown arch
+        Ok(Self {
+            config,
+            manifest,
+            save_to: None,
+            resume_from: None,
+        })
+    }
+
+    /// Save the final training state to `path` when the run completes.
+    pub fn with_checkpoint(mut self, path: impl Into<std::path::PathBuf>) -> Self {
+        self.save_to = Some(path.into());
+        self
+    }
+
+    /// Resume from a checkpoint written by [`Self::with_checkpoint`]: state
+    /// is restored and the schedule continues at the saved step with the
+    /// identical sample stream.
+    pub fn with_resume(mut self, path: impl Into<std::path::PathBuf>) -> Self {
+        self.resume_from = Some(path.into());
+        self
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.config
+    }
+
+    /// Resolve the batch schedule into concrete phases with step counts.
+    fn plan_phases(&self) -> Vec<PhasePlan> {
+        let cfg = &self.config;
+        let sched = &cfg.batch;
+        let mut plans: Vec<PhasePlan> = Vec::new();
+        let mut first_step = 0usize;
+        let mut samples = 0u64;
+        let mut total_steps = 0usize;
+        for e in 0..sched.total_epochs {
+            let ph = sched.at(e);
+            let steps_in_epoch = cfg.train_size.div_ceil(ph.total_batch());
+            let mut remaining = steps_in_epoch;
+            if cfg.max_steps > 0 {
+                if total_steps >= cfg.max_steps {
+                    break;
+                }
+                remaining = remaining.min(cfg.max_steps - total_steps);
+            }
+            if remaining == 0 {
+                break;
+            }
+            let extend = plans
+                .last()
+                .map(|p| p.per_worker == ph.per_worker && p.workers == ph.workers)
+                .unwrap_or(false);
+            if extend {
+                plans.last_mut().unwrap().steps += remaining;
+            } else {
+                plans.push(PhasePlan {
+                    per_worker: ph.per_worker,
+                    workers: ph.workers,
+                    steps: remaining,
+                    first_step,
+                    samples_before: samples,
+                    skipped: 0,
+                });
+            }
+            total_steps += remaining;
+            first_step += remaining;
+            samples += (remaining * ph.total_batch()) as u64;
+        }
+        plans
+    }
+
+    /// Names of the executables this run needs.
+    fn preload_names(&self, plans: &[PhasePlan]) -> Result<Vec<String>> {
+        let arch = self.manifest.arch(&self.config.arch)?;
+        let mut names = vec!["init".to_string(), "apply".to_string()];
+        names.push(arch.eval_exec()?.name.clone());
+        for p in plans {
+            let g = arch.grad_exec(p.per_worker, self.config.label_smoothing)?;
+            if !names.contains(&g.name) {
+                names.push(g.name.clone());
+            }
+        }
+        Ok(names)
+    }
+
+    /// Run the configured training job.
+    pub fn run(&self) -> Result<TrainReport> {
+        let cfg = &self.config;
+        let arch = self.manifest.arch(&cfg.arch)?.clone();
+        let mut plans = self.plan_phases();
+        if plans.is_empty() {
+            bail!("schedule produced zero steps");
+        }
+
+        // Checkpoint resume: restore state, drop the already-trained prefix
+        // of the plan (partially-consumed phases record `skipped` so the
+        // workers can replay their loaders to the exact sample position).
+        let resumed: Option<(WorkerState, checkpoint::CheckpointMeta)> = self
+            .resume_from
+            .as_ref()
+            .map(|p| checkpoint::load(p).with_context(|| format!("resuming from {p:?}")))
+            .transpose()?;
+        if let Some((st, meta)) = &resumed {
+            if st.params.len() != arch.n_params() {
+                bail!(
+                    "checkpoint has {} params, arch {} has {} — wrong model?",
+                    st.params.len(),
+                    arch.name,
+                    arch.n_params()
+                );
+            }
+            let mut skip = meta.step as usize;
+            plans.retain_mut(|p| {
+                if skip == 0 {
+                    true
+                } else if skip >= p.steps {
+                    skip -= p.steps;
+                    false
+                } else {
+                    let batch = (p.per_worker * p.workers) as u64;
+                    p.skipped = skip;
+                    p.steps -= skip;
+                    p.first_step += skip;
+                    p.samples_before += skip as u64 * batch;
+                    skip = 0;
+                    true
+                }
+            });
+            if plans.is_empty() {
+                bail!(
+                    "checkpoint step {} is already at/past the end of this schedule",
+                    meta.step
+                );
+            }
+        }
+
+        let preload = self.preload_names(&plans)?;
+        let preload_refs: Vec<&str> = preload.iter().map(|s| s.as_str()).collect();
+        let svc = ComputeService::start(self.manifest.clone(), &cfg.arch, &preload_refs)
+            .context("starting compute service")?;
+        let client = svc.client();
+        let mut sw = Stopwatch::new();
+
+        // Initial state: from the checkpoint, or the init artifact
+        // (deterministic He init, paper init per [10]).
+        let mut state = match resumed {
+            Some((st, _)) => st,
+            None => {
+                let params = client.run(
+                    &format!("{}/init", cfg.arch),
+                    vec![HostTensor::i32(vec![1], vec![cfg.seed as i32])],
+                )?;
+                let momenta: Vec<HostTensor> = params
+                    .iter()
+                    .map(|p| HostTensor::f32(p.shape().to_vec(), vec![0.0; p.elems()]))
+                    .collect();
+                let bn_running: Vec<HostTensor> = arch
+                    .bn_layers
+                    .iter()
+                    .map(|b| HostTensor::f32(vec![2, b.width], vec![0.0; 2 * b.width]))
+                    .collect();
+                WorkerState {
+                    params,
+                    momenta,
+                    bn_running,
+                    bn_steps: 0,
+                }
+            }
+        };
+
+        let dataset = SynthDataset::new(
+            cfg.seed,
+            arch.num_classes,
+            arch.image_size,
+            arch.image_channels,
+            cfg.train_size,
+            (cfg.train_size / 4).max(arch.num_classes),
+        );
+
+        let mut all_metrics = Metrics::default();
+        for plan in &plans {
+            let collective: Arc<dyn Collective> = match cfg.collective.as_str() {
+                "torus" => {
+                    let (x, y) = best_grid(plan.workers);
+                    Arc::new(crate::collectives::TorusAllReduce::new(x, y))
+                }
+                spec => Arc::from(collectives::by_name(spec, plan.workers)?),
+            };
+            let wire = if cfg.grad_wire == "fp16" { Wire::F16 } else { Wire::F32 };
+            let ctx = Arc::new(PhaseCtx {
+                arch: arch.clone(),
+                collective,
+                grad_wire: wire,
+                lr: cfg.lr.clone(),
+                label_smoothing: cfg.label_smoothing,
+                weight_decay: cfg.weight_decay,
+                per_worker_batch: plan.per_worker,
+                workers: plan.workers,
+                steps: plan.steps,
+                first_step: plan.first_step,
+                samples_before: plan.samples_before,
+                skip_steps: plan.skipped,
+                dataset_size: cfg.train_size,
+            });
+
+            let outputs = run_phase_on_mesh(&ctx, &client, &dataset, cfg.seed, state)?;
+            // rank 0 carries the canonical state forward
+            let mut rank0 = None;
+            for o in outputs {
+                if o.rank == 0 {
+                    rank0 = Some(o);
+                }
+            }
+            let o = rank0.expect("rank 0 output missing");
+            all_metrics.merge(o.metrics);
+            state = o.state;
+
+            if cfg.eval_every > 0 {
+                let e = self.evaluate(&client, &arch, &dataset, &state, plan.first_step + plan.steps)?;
+                all_metrics.push_eval(e);
+            }
+        }
+
+        let final_eval = self
+            .evaluate(
+                &client,
+                &arch,
+                &dataset,
+                &state,
+                all_metrics.steps.last().map(|s| s.step + 1).unwrap_or(0),
+            )
+            .ok();
+        if let Some(e) = &final_eval {
+            all_metrics.push_eval(e.clone());
+        }
+
+        // Final-state checkpoint.
+        if let Some(path) = &self.save_to {
+            let last = plans.last().unwrap();
+            let meta = checkpoint::CheckpointMeta {
+                step: (last.first_step + last.steps) as u64,
+                samples: last.samples_before
+                    + (last.steps * last.per_worker * last.workers) as u64,
+            };
+            checkpoint::save(path, &state, meta)
+                .with_context(|| format!("saving checkpoint to {path:?}"))?;
+        }
+
+        let summary = all_metrics.summary();
+        Ok(TrainReport {
+            config_name: cfg.name.clone(),
+            metrics: all_metrics,
+            summary,
+            final_eval,
+            wall_secs: sw.lap("total"),
+        })
+    }
+
+    /// Top-1 validation accuracy + loss on `eval_batches` validation
+    /// batches, using the synchronized running BN statistics.
+    fn evaluate(
+        &self,
+        client: &ComputeClient,
+        arch: &crate::runtime::ArchManifest,
+        dataset: &SynthDataset,
+        state: &WorkerState,
+        step: usize,
+    ) -> Result<EvalMetric> {
+        let eval = arch.eval_exec()?;
+        let batch = eval.batch.context("eval exec missing batch")?;
+        let key = format!("{}/{}", arch.name, eval.name);
+        let loader = Loader::new(dataset.clone(), Augment::none(), 0, 1);
+        let mut b = Batch::empty();
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut total = 0usize;
+        for i in 0..self.config.eval_batches.max(1) {
+            loader.val_batch(i * batch, batch, &mut b);
+            let mut inputs = state.params.clone();
+            inputs.extend(state.bn_running.iter().cloned());
+            inputs.push(HostTensor::f32(
+                vec![batch, arch.image_size, arch.image_size, arch.image_channels],
+                b.images.clone(),
+            ));
+            inputs.push(HostTensor::i32(vec![batch], b.labels.clone()));
+            let out = client.run(&key, inputs)?;
+            loss_sum += out[0].scalar()? as f64;
+            correct += out[1].scalar()? as f64;
+            total += batch;
+        }
+        Ok(EvalMetric {
+            step,
+            val_loss: loss_sum / total as f64,
+            accuracy: correct / total as f64,
+        })
+    }
+}
+
+/// Spawn `ctx.workers` rank threads over a fresh mesh and run the phase.
+/// Rank 0 starts from `state`; the other ranks receive clones (parameters
+/// are replicated in data-parallel training).
+fn run_phase_on_mesh(
+    ctx: &Arc<PhaseCtx>,
+    client: &ComputeClient,
+    dataset: &SynthDataset,
+    seed: u64,
+    state: WorkerState,
+) -> Result<Vec<WorkerOutput>> {
+    let n = ctx.workers;
+    let mesh = Mesh::new(n);
+    let mut handles = Vec::with_capacity(n);
+    for (rank, mut ep) in mesh.into_iter().enumerate() {
+        let ctx = ctx.clone();
+        let client = client.clone();
+        let dataset = dataset.clone();
+        let st = WorkerState {
+            params: state.params.clone(),
+            momenta: state.momenta.clone(),
+            bn_running: state.bn_running.clone(),
+            bn_steps: state.bn_steps,
+        };
+        let handle = std::thread::Builder::new()
+            .name(format!("rank{rank}"))
+            .spawn(move || -> Result<WorkerOutput> {
+                let mut loader = Loader::new(dataset, Augment::standard(seed), rank, ctx.workers);
+                worker::run_phase(&ctx, rank, &mut ep, &client, &mut loader, st)
+            })
+            .map_err(|e| anyhow::anyhow!("spawning rank {rank}: {e}"))?;
+        handles.push(handle);
+    }
+    let mut outputs = Vec::with_capacity(n);
+    let mut first_err: Option<anyhow::Error> = None;
+    for (rank, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(Ok(o)) => outputs.push(o),
+            Ok(Err(e)) => {
+                first_err.get_or_insert(e.context(format!("rank {rank} failed")));
+            }
+            Err(_) => {
+                first_err
+                    .get_or_insert_with(|| anyhow::anyhow!("rank {rank} panicked"));
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    Ok(outputs)
+}

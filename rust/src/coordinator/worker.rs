@@ -1,0 +1,301 @@
+//! Worker rank: one simulated GPU's training loop.
+//!
+//! Per step (the paper's data-parallel structure, §2):
+//!   1. load the next local batch (shard of the synthetic set),
+//!   2. `grad_step` artifact → loss, local grads, local BN stats,
+//!   3. all-reduce grads via the configured collective, **FP16 wire**,
+//!      with the step loss riding in the same buffer (1 extra element),
+//!   4. all-reduce BN stats, **FP32 wire** (paper §3.2 precision split),
+//!   5. scale by 1/N, `apply_step` artifact (Pallas LARS) with the
+//!      schedule's (lr, momentum) for this step's epoch.
+//!
+//! Parameters stay replicated: identical reduced grads + identical update
+//! = identical weights on every rank (asserted in integration tests).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::collectives::{Collective, Endpoint, Wire};
+use crate::data::{Batch, Loader};
+use crate::runtime::{ArchManifest, ComputeClient, HostTensor};
+use crate::sched::LrSchedule;
+use crate::util::timer::Stopwatch;
+
+use super::metrics::{Metrics, StepMetric};
+
+/// Static per-phase context shared by all workers.
+pub struct PhaseCtx {
+    pub arch: ArchManifest,
+    pub collective: Arc<dyn Collective>,
+    pub grad_wire: Wire,
+    pub lr: LrSchedule,
+    pub label_smoothing: f32,
+    pub weight_decay: f32,
+    pub per_worker_batch: usize,
+    pub workers: usize,
+    pub steps: usize,
+    /// Global step index of this phase's first step.
+    pub first_step: usize,
+    /// Samples consumed before this phase (for epoch accounting).
+    pub samples_before: u64,
+    /// Steps of this phase already consumed by an earlier (checkpointed)
+    /// run — the loader fast-forwards past their batches on entry.
+    pub skip_steps: usize,
+    pub dataset_size: usize,
+}
+
+impl PhaseCtx {
+    /// Epoch (continuous) after `samples` total processed samples.
+    pub fn epoch_at(&self, samples: u64) -> f64 {
+        samples as f64 / self.dataset_size as f64
+    }
+
+    pub fn grad_key(&self) -> String {
+        format!(
+            "{}/grad_b{}_ls{}",
+            self.arch.name,
+            self.per_worker_batch,
+            (self.label_smoothing * 100.0).round() as i64
+        )
+    }
+
+    pub fn apply_key(&self) -> String {
+        format!("{}/apply", self.arch.name)
+    }
+}
+
+/// Mutable per-rank state threaded through a phase.
+#[derive(Debug, Clone)]
+pub struct WorkerState {
+    pub params: Vec<HostTensor>,
+    pub momenta: Vec<HostTensor>,
+    /// Running mean of the synchronized BN stats (rank 0 uses it for eval).
+    pub bn_running: Vec<HostTensor>,
+    pub bn_steps: u64,
+}
+
+/// Result of one rank finishing a phase.
+pub struct WorkerOutput {
+    pub rank: usize,
+    pub state: WorkerState,
+    /// Step metrics (only rank 0 fills this).
+    pub metrics: Metrics,
+}
+
+/// Flatten f32 tensors into `flat` (resizing as needed); returns offsets.
+pub fn flatten_into(tensors: &[HostTensor], flat: &mut Vec<f32>) -> Result<Vec<usize>> {
+    let mut offsets = Vec::with_capacity(tensors.len() + 1);
+    let total: usize = tensors.iter().map(|t| t.elems()).sum();
+    flat.clear();
+    flat.reserve(total);
+    offsets.push(0);
+    for t in tensors {
+        flat.extend_from_slice(t.as_f32()?);
+        offsets.push(flat.len());
+    }
+    Ok(offsets)
+}
+
+/// Scatter `flat` back into tensors shaped like `templates`.
+pub fn unflatten_from(
+    flat: &[f32],
+    templates: &[HostTensor],
+    out: &mut Vec<HostTensor>,
+) -> Result<()> {
+    out.clear();
+    let mut off = 0;
+    for t in templates {
+        let n = t.elems();
+        out.push(HostTensor::f32(
+            t.shape().to_vec(),
+            flat[off..off + n].to_vec(),
+        ));
+        off += n;
+    }
+    Ok(())
+}
+
+/// Run one phase on one rank. `ep` is this rank's mesh endpoint.
+#[allow(clippy::too_many_arguments)]
+pub fn run_phase(
+    ctx: &PhaseCtx,
+    rank: usize,
+    ep: &mut Endpoint,
+    compute: &ComputeClient,
+    loader: &mut Loader,
+    mut state: WorkerState,
+) -> Result<WorkerOutput> {
+    let grad_key = ctx.grad_key();
+    let apply_key = ctx.apply_key();
+    let n_params = ctx.arch.n_params();
+    let n_bn = ctx.arch.n_bn();
+    let inv_n = 1.0f32 / ctx.workers as f32;
+    let mut metrics = Metrics::default();
+    let mut batch = Batch::empty();
+    let mut grad_flat: Vec<f32> = Vec::new();
+    let mut bn_flat: Vec<f32> = Vec::new();
+    let mut tag: u64 = 0;
+
+    let img_shape = vec![
+        ctx.per_worker_batch,
+        ctx.arch.image_size,
+        ctx.arch.image_size,
+        ctx.arch.image_channels,
+    ];
+
+    // Start this phase's data stream at the schedule's current epoch
+    // (not epoch 0 — a later phase continues the dataset pass), then, on
+    // checkpoint resume, replay past the already-trained steps so the
+    // sample stream continues exactly where the saved run stopped.
+    loader.seek_epoch(ctx.epoch_at(ctx.samples_before -
+        (ctx.skip_steps * ctx.per_worker_batch * ctx.workers) as u64) as u32);
+    for _ in 0..ctx.skip_steps {
+        loader.skip_batch(ctx.per_worker_batch);
+    }
+
+    for local_step in 0..ctx.steps {
+        let mut sw = Stopwatch::new();
+        let global_step = ctx.first_step + local_step;
+        let samples = ctx.samples_before
+            + (local_step as u64) * (ctx.per_worker_batch * ctx.workers) as u64;
+        let epoch = ctx.epoch_at(samples);
+        let total_batch = ctx.per_worker_batch * ctx.workers;
+        let lr = ctx.lr.lr(epoch) as f32;
+        let momentum = ctx.lr.momentum(epoch, total_batch) as f32;
+
+        // 1. data
+        let data_epoch = loader.next_batch(ctx.per_worker_batch, &mut batch);
+        let t_data = sw.lap("data");
+
+        // 2. local gradients
+        let mut inputs = state.params.clone();
+        inputs.push(HostTensor::f32(img_shape.clone(), batch.images.clone()));
+        inputs.push(HostTensor::i32(
+            vec![ctx.per_worker_batch],
+            batch.labels.clone(),
+        ));
+        let out = compute
+            .run(&grad_key, inputs)
+            .with_context(|| format!("rank {rank} step {global_step}: grad_step"))?;
+        let t_compute = sw.lap("compute");
+
+        // 3. gradient all-reduce (FP16 wire), loss rides along
+        let loss_local = out[0].scalar()?;
+        let grads = &out[1..1 + n_params];
+        let bn_stats = &out[1 + n_params..1 + n_params + n_bn];
+        let offsets = flatten_into(grads, &mut grad_flat)?;
+        grad_flat.push(loss_local);
+        ctx.collective
+            .all_reduce(ep, &mut grad_flat, ctx.grad_wire, tag)?;
+        tag += ctx.collective.tag_span(ctx.workers);
+        let loss_mean = grad_flat.pop().unwrap() as f64 * inv_n as f64;
+        for g in grad_flat.iter_mut() {
+            *g *= inv_n;
+        }
+
+        // 4. BN-stat all-reduce (FP32 wire, paper §3.2)
+        flatten_into(bn_stats, &mut bn_flat)?;
+        ctx.collective.all_reduce(ep, &mut bn_flat, Wire::F32, tag)?;
+        tag += ctx.collective.tag_span(ctx.workers);
+        for s in bn_flat.iter_mut() {
+            *s *= inv_n;
+        }
+        // Synced-stat aggregate for the eval path. The paper's "BN without
+        // moving average" uses *current* statistics; for evaluation we keep
+        // a recent-weighted EMA of the cross-worker synced stats (early-
+        // training stats are stale — activations rescale as params move, so
+        // a uniform mean underestimates late-run variance and detonates the
+        // eval forward pass).
+        {
+            let alpha: f32 = if state.bn_steps == 0 { 1.0 } else { 0.2 };
+            let mut off = 0;
+            for t in state.bn_running.iter_mut() {
+                let dst = t.as_f32_mut()?;
+                for d in dst.iter_mut() {
+                    *d += alpha * (bn_flat[off] - *d);
+                    off += 1;
+                }
+            }
+            state.bn_steps += 1;
+        }
+        let t_comm = sw.lap("comm");
+
+        // 5. LARS update (Pallas kernel inside the apply artifact)
+        let mut grads_avg = Vec::with_capacity(n_params);
+        let _ = offsets; // offsets define the same split as the templates
+        unflatten_from(&grad_flat, grads, &mut grads_avg)?;
+        let mut ap_in =
+            Vec::with_capacity(2 * n_params + n_params + 3);
+        ap_in.extend(state.params.iter().cloned());
+        ap_in.extend(state.momenta.iter().cloned());
+        ap_in.extend(grads_avg);
+        ap_in.push(HostTensor::scalar_f32(lr));
+        ap_in.push(HostTensor::scalar_f32(momentum));
+        ap_in.push(HostTensor::scalar_f32(ctx.weight_decay));
+        let applied = compute
+            .run(&apply_key, ap_in)
+            .with_context(|| format!("rank {rank} step {global_step}: apply_step"))?;
+        let (new_params, new_momenta) = applied.split_at(n_params);
+        state.params = new_params.to_vec();
+        state.momenta = new_momenta.to_vec();
+        let t_apply = sw.lap("apply");
+
+        if rank == 0 {
+            metrics.push(StepMetric {
+                step: global_step,
+                epoch: data_epoch,
+                loss: loss_mean,
+                lr: lr as f64,
+                momentum: momentum as f64,
+                global_batch: total_batch,
+                t_compute,
+                t_comm,
+                t_apply,
+                t_data,
+            });
+        }
+    }
+
+    Ok(WorkerOutput {
+        rank,
+        state,
+        metrics,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flatten_round_trip() {
+        let ts = vec![
+            HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+            HostTensor::f32(vec![3], vec![5.0, 6.0, 7.0]),
+        ];
+        let mut flat = Vec::new();
+        let offs = flatten_into(&ts, &mut flat).unwrap();
+        assert_eq!(flat, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(offs, vec![0, 4, 7]);
+        let mut back = Vec::new();
+        unflatten_from(&flat, &ts, &mut back).unwrap();
+        assert_eq!(back, ts);
+    }
+
+    #[test]
+    fn flatten_rejects_i32() {
+        let ts = vec![HostTensor::i32(vec![1], vec![3])];
+        let mut flat = Vec::new();
+        assert!(flatten_into(&ts, &mut flat).is_err());
+    }
+
+    #[test]
+    fn epoch_accounting() {
+        let ctx_dataset = 1000usize;
+        // free function behaviour via a minimal ctx is covered in trainer
+        // integration tests; here just the arithmetic:
+        let samples = 2500u64;
+        assert_eq!(samples as f64 / ctx_dataset as f64, 2.5);
+    }
+}

@@ -1,0 +1,191 @@
+//! Image augmentation (paper §3.2 lists padding/flip/crop/brightness/
+//! contrast/noise among NNL's pipeline; we implement the core subset that
+//! affects the reduced-scale convergence runs).
+//!
+//! All ops are deterministic per `(seed, epoch, sample-index)` so any
+//! worker reproduces any augmented sample bit-for-bit.
+
+use crate::util::rng::Pcg32;
+
+/// Augmentation policy.
+#[derive(Debug, Clone)]
+pub struct Augment {
+    pub seed: u64,
+    /// Pad-and-crop radius in pixels (paper-style random crop).
+    pub crop_pad: usize,
+    pub hflip: bool,
+    /// Max |brightness| shift (additive).
+    pub brightness: f32,
+    /// Max contrast deviation from 1.0 (multiplicative).
+    pub contrast: f32,
+}
+
+impl Augment {
+    /// Default policy for the reduced-scale twins.
+    pub fn standard(seed: u64) -> Self {
+        Self {
+            seed,
+            crop_pad: 2,
+            hflip: true,
+            brightness: 0.2,
+            contrast: 0.2,
+        }
+    }
+
+    /// No-op policy (eval path).
+    pub fn none() -> Self {
+        Self {
+            seed: 0,
+            crop_pad: 0,
+            hflip: false,
+            brightness: 0.0,
+            contrast: 0.0,
+        }
+    }
+
+    /// Apply in place to one HWC image of side `size` / `channels`.
+    pub fn apply(&self, img: &mut [f32], size: usize, channels: usize, epoch: u32, index: u64) {
+        assert_eq!(img.len(), size * size * channels);
+        if self.crop_pad == 0 && !self.hflip && self.brightness == 0.0 && self.contrast == 0.0 {
+            return;
+        }
+        let stream = (epoch as u64) << 40 ^ index;
+        let mut rng = Pcg32::with_stream(self.seed ^ 0xA06_3E27, stream);
+
+        if self.hflip && rng.next_f32() < 0.5 {
+            hflip(img, size, channels);
+        }
+        if self.crop_pad > 0 {
+            let p = self.crop_pad as i32;
+            let dy = rng.next_below((2 * p + 1) as u32) as i32 - p;
+            let dx = rng.next_below((2 * p + 1) as u32) as i32 - p;
+            shift(img, size, channels, dy, dx);
+        }
+        if self.brightness > 0.0 {
+            let b = rng.range_f32(-self.brightness, self.brightness);
+            for v in img.iter_mut() {
+                *v += b;
+            }
+        }
+        if self.contrast > 0.0 {
+            let c = 1.0 + rng.range_f32(-self.contrast, self.contrast);
+            let mean: f32 = img.iter().sum::<f32>() / img.len() as f32;
+            for v in img.iter_mut() {
+                *v = mean + (*v - mean) * c;
+            }
+        }
+    }
+}
+
+/// Horizontal mirror in place.
+fn hflip(img: &mut [f32], size: usize, channels: usize) {
+    for y in 0..size {
+        for x in 0..size / 2 {
+            let xr = size - 1 - x;
+            for c in 0..channels {
+                img.swap((y * size + x) * channels + c, (y * size + xr) * channels + c);
+            }
+        }
+    }
+}
+
+/// Translate by (dy, dx) with zero padding (equivalent to pad+crop).
+fn shift(img: &mut [f32], size: usize, channels: usize, dy: i32, dx: i32) {
+    if dy == 0 && dx == 0 {
+        return;
+    }
+    let src = img.to_vec();
+    img.iter_mut().for_each(|v| *v = 0.0);
+    for y in 0..size as i32 {
+        let sy = y - dy;
+        if sy < 0 || sy >= size as i32 {
+            continue;
+        }
+        for x in 0..size as i32 {
+            let sx = x - dx;
+            if sx < 0 || sx >= size as i32 {
+                continue;
+            }
+            for c in 0..channels {
+                img[((y as usize) * size + x as usize) * channels + c] =
+                    src[((sy as usize) * size + sx as usize) * channels + c];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(size: usize, channels: usize) -> Vec<f32> {
+        (0..size * size * channels).map(|i| i as f32).collect()
+    }
+
+    #[test]
+    fn deterministic() {
+        let aug = Augment::standard(1);
+        let mut a = ramp(8, 3);
+        let mut b = ramp(8, 3);
+        aug.apply(&mut a, 8, 3, 2, 5);
+        aug.apply(&mut b, 8, 3, 2, 5);
+        assert_eq!(a, b);
+        let mut c = ramp(8, 3);
+        aug.apply(&mut c, 8, 3, 2, 6);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let aug = Augment::none();
+        let mut a = ramp(8, 3);
+        aug.apply(&mut a, 8, 3, 0, 0);
+        assert_eq!(a, ramp(8, 3));
+    }
+
+    #[test]
+    fn hflip_involution() {
+        let mut a = ramp(6, 2);
+        hflip(&mut a, 6, 2);
+        let flipped = a.clone();
+        hflip(&mut a, 6, 2);
+        assert_eq!(a, ramp(6, 2));
+        assert_ne!(flipped, ramp(6, 2));
+    }
+
+    #[test]
+    fn shift_moves_content() {
+        let size = 4;
+        let mut a = vec![0.0f32; 16];
+        a[0] = 1.0; // top-left pixel
+        shift(&mut a, size, 1, 1, 1);
+        assert_eq!(a[(1 * size + 1) * 1], 1.0);
+        assert_eq!(a[0], 0.0);
+    }
+
+    #[test]
+    fn shift_zero_pads_at_border() {
+        let size = 4;
+        let mut a = vec![1.0f32; 16];
+        shift(&mut a, size, 1, 2, 0);
+        // top two rows are padding now
+        assert!(a[..8].iter().all(|&v| v == 0.0));
+        assert!(a[8..].iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn brightness_contrast_bounded() {
+        let aug = Augment {
+            seed: 3,
+            crop_pad: 0,
+            hflip: false,
+            brightness: 0.1,
+            contrast: 0.0,
+        };
+        let mut a = vec![0.5f32; 27];
+        aug.apply(&mut a, 3, 3, 0, 0);
+        for &v in &a {
+            assert!((v - 0.5).abs() <= 0.1 + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! Batched host-side loader: shard → synth → augment → NHWC f32 buffers.
+//!
+//! One `Loader` per worker thread. Batches are materialised straight into
+//! reusable buffers shaped for the `grad_step` artifact's `images`/`labels`
+//! inputs; no allocation in the steady state.
+
+use super::augment::Augment;
+use super::shard::EpochShards;
+use super::synth::SynthDataset;
+
+/// One materialised training batch (NHWC images + int labels).
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub batch_size: usize,
+}
+
+/// Per-rank training-data loader.
+pub struct Loader {
+    dataset: SynthDataset,
+    augment: Augment,
+    rank: usize,
+    workers: usize,
+    epoch: u32,
+    cursor: usize,
+    shards: EpochShards,
+}
+
+impl Loader {
+    pub fn new(dataset: SynthDataset, augment: Augment, rank: usize, workers: usize) -> Self {
+        let shards = EpochShards::new(dataset.seed, 0, dataset.train_size, workers);
+        Self {
+            dataset,
+            augment,
+            rank,
+            workers,
+            epoch: 0,
+            cursor: 0,
+            shards,
+        }
+    }
+
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    pub fn dataset(&self) -> &SynthDataset {
+        &self.dataset
+    }
+
+    /// Reconfigure the worker pool (batch-size-control phase switches can
+    /// change the worker count); restarts the current epoch's shard plan.
+    pub fn reshard(&mut self, rank: usize, workers: usize) {
+        self.rank = rank;
+        self.workers = workers;
+        self.shards = EpochShards::new(self.dataset.seed, self.epoch, self.dataset.train_size, workers);
+        self.cursor = 0;
+    }
+
+    /// Fill `out` with the next batch of `batch` samples, wrapping to the
+    /// next epoch when the shard is exhausted. Returns the epoch the batch
+    /// came from.
+    pub fn next_batch(&mut self, batch: usize, out: &mut Batch) -> u32 {
+        let px = self.dataset.pixels();
+        out.batch_size = batch;
+        out.images.resize(batch * px, 0.0);
+        out.labels.resize(batch, 0);
+        let size = self.dataset.image_size;
+        let ch = self.dataset.channels;
+        let mut produced_epoch = self.epoch;
+        for b in 0..batch {
+            let shard = self.shards.for_rank(self.rank);
+            if self.cursor >= shard.len() {
+                self.epoch += 1;
+                self.shards = EpochShards::new(
+                    self.dataset.seed,
+                    self.epoch,
+                    self.dataset.train_size,
+                    self.workers,
+                );
+                self.cursor = 0;
+            }
+            if b == 0 {
+                produced_epoch = self.epoch;
+            }
+            let idx = self.shards.for_rank(self.rank)[self.cursor] as usize;
+            self.cursor += 1;
+            let img = &mut out.images[b * px..(b + 1) * px];
+            self.dataset.train_image(idx, img);
+            self.augment.apply(img, size, ch, self.epoch, idx as u64);
+            out.labels[b] = self.dataset.train_label(idx);
+        }
+        produced_epoch
+    }
+
+    /// Jump to the start of `epoch` (phase handoff: a new phase's loader
+    /// begins at the epoch where the previous phase stopped, rather than
+    /// replaying epoch 0's data).
+    pub fn seek_epoch(&mut self, epoch: u32) {
+        self.epoch = epoch;
+        self.shards = EpochShards::new(
+            self.dataset.seed,
+            epoch,
+            self.dataset.train_size,
+            self.workers,
+        );
+        self.cursor = 0;
+    }
+
+    /// Fast-forward past one batch without materialising it (checkpoint
+    /// resume). Mirrors `next_batch`'s cursor/epoch accounting exactly so
+    /// a resumed run sees the identical sample sequence.
+    pub fn skip_batch(&mut self, batch: usize) {
+        for _ in 0..batch {
+            let shard_len = self.shards.for_rank(self.rank).len();
+            if self.cursor >= shard_len {
+                self.epoch += 1;
+                self.shards = EpochShards::new(
+                    self.dataset.seed,
+                    self.epoch,
+                    self.dataset.train_size,
+                    self.workers,
+                );
+                self.cursor = 0;
+            }
+            self.cursor += 1;
+        }
+    }
+
+    /// Fill an eval batch from the validation split (no augmentation).
+    /// `start` is the first validation index; wraps around.
+    pub fn val_batch(&self, start: usize, batch: usize, out: &mut Batch) {
+        let px = self.dataset.pixels();
+        out.batch_size = batch;
+        out.images.resize(batch * px, 0.0);
+        out.labels.resize(batch, 0);
+        for b in 0..batch {
+            let idx = (start + b) % self.dataset.val_size;
+            let img = &mut out.images[b * px..(b + 1) * px];
+            self.dataset.val_image(idx, img);
+            out.labels[b] = self.dataset.val_label(idx);
+        }
+    }
+}
+
+impl Batch {
+    pub fn empty() -> Self {
+        Self {
+            images: Vec::new(),
+            labels: Vec::new(),
+            batch_size: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_loader(rank: usize, workers: usize) -> Loader {
+        Loader::new(
+            SynthDataset::tiny(11),
+            Augment::standard(11),
+            rank,
+            workers,
+        )
+    }
+
+    #[test]
+    fn batches_have_right_shape() {
+        let mut l = tiny_loader(0, 2);
+        let mut b = Batch::empty();
+        let epoch = l.next_batch(8, &mut b);
+        assert_eq!(epoch, 0);
+        assert_eq!(b.images.len(), 8 * 16 * 16 * 3);
+        assert_eq!(b.labels.len(), 8);
+        assert!(b.labels.iter().all(|&l| (0..10).contains(&l)));
+    }
+
+    #[test]
+    fn epoch_advances_when_shard_exhausted() {
+        let mut l = tiny_loader(0, 2);
+        let shard_len = 4096 / 2;
+        let mut b = Batch::empty();
+        let mut steps = 0;
+        while l.epoch() == 0 {
+            l.next_batch(64, &mut b);
+            steps += 1;
+            assert!(steps < 100, "epoch never advanced");
+        }
+        assert_eq!(steps, shard_len / 64 + 1); // first batch of epoch 1
+    }
+
+    #[test]
+    fn ranks_see_disjoint_data_within_epoch() {
+        let mut l0 = tiny_loader(0, 2);
+        let mut l1 = tiny_loader(1, 2);
+        let mut b0 = Batch::empty();
+        let mut b1 = Batch::empty();
+        l0.next_batch(32, &mut b0);
+        l1.next_batch(32, &mut b1);
+        assert_ne!(b0.images, b1.images);
+    }
+
+    #[test]
+    fn val_batches_deterministic_and_unaugmented() {
+        let l = tiny_loader(0, 1);
+        let mut a = Batch::empty();
+        let mut b = Batch::empty();
+        l.val_batch(0, 16, &mut a);
+        l.val_batch(0, 16, &mut b);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        // wraps
+        l.val_batch(1020, 8, &mut b);
+        assert_eq!(b.labels.len(), 8);
+    }
+
+    #[test]
+    fn skip_batch_matches_consumed_stream() {
+        // skipping k batches == consuming k batches, for the next batch
+        let mut consumed = tiny_loader(1, 2);
+        let mut skipped = tiny_loader(1, 2);
+        let mut b = Batch::empty();
+        for _ in 0..40 {
+            consumed.next_batch(60, &mut b); // crosses an epoch boundary
+        }
+        for _ in 0..40 {
+            skipped.skip_batch(60);
+        }
+        assert_eq!(consumed.epoch(), skipped.epoch());
+        let mut b1 = Batch::empty();
+        let mut b2 = Batch::empty();
+        consumed.next_batch(16, &mut b1);
+        skipped.next_batch(16, &mut b2);
+        assert_eq!(b1.labels, b2.labels);
+        assert_eq!(b1.images, b2.images);
+    }
+
+    #[test]
+    fn reshard_restarts_cleanly() {
+        let mut l = tiny_loader(0, 2);
+        let mut b = Batch::empty();
+        l.next_batch(16, &mut b);
+        l.reshard(3, 4);
+        let epoch = l.next_batch(16, &mut b);
+        assert_eq!(epoch, 0);
+        assert_eq!(b.labels.len(), 16);
+    }
+}

@@ -1,0 +1,12 @@
+//! Input pipeline: synthetic dataset (ImageNet stand-in, DESIGN.md §4),
+//! deterministic sharding, augmentation, and the per-worker batch loader.
+
+pub mod augment;
+pub mod loader;
+pub mod shard;
+pub mod synth;
+
+pub use augment::Augment;
+pub use loader::{Batch, Loader};
+pub use shard::EpochShards;
+pub use synth::SynthDataset;

@@ -1,0 +1,94 @@
+//! Deterministic per-epoch sharding of the training set across workers.
+//!
+//! Every epoch gets a fresh global permutation (seeded by `(seed, epoch)`);
+//! each worker takes a contiguous slice. All workers can compute the whole
+//! assignment independently — no shard server, no communication — which is
+//! how the paper's input pipeline scales to thousands of GPUs.
+
+use crate::util::rng::Pcg32;
+
+/// Sharding plan for one epoch.
+#[derive(Debug, Clone)]
+pub struct EpochShards {
+    perm: Vec<u32>,
+    workers: usize,
+}
+
+impl EpochShards {
+    /// Build the epoch permutation. `dataset_size` must fit in u32.
+    pub fn new(seed: u64, epoch: u32, dataset_size: usize, workers: usize) -> Self {
+        assert!(workers > 0);
+        assert!(dataset_size < u32::MAX as usize);
+        let mut perm: Vec<u32> = (0..dataset_size as u32).collect();
+        let mut rng = Pcg32::with_stream(seed ^ 0x5AAD, epoch as u64);
+        rng.shuffle(&mut perm);
+        Self { perm, workers }
+    }
+
+    /// Global sample indices assigned to `rank` (contiguous slice of the
+    /// permutation; sizes differ by at most 1 across ranks).
+    pub fn for_rank(&self, rank: usize) -> &[u32] {
+        assert!(rank < self.workers);
+        let n = self.perm.len();
+        let base = n / self.workers;
+        let rem = n % self.workers;
+        let start = rank * base + rank.min(rem);
+        let len = base + usize::from(rank < rem);
+        &self.perm[start..start + len]
+    }
+
+    pub fn len(&self) -> usize {
+        self.perm.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.perm.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn shards_partition_dataset() {
+        let s = EpochShards::new(1, 0, 1000, 7);
+        let mut seen = HashSet::new();
+        let mut total = 0;
+        for r in 0..7 {
+            let shard = s.for_rank(r);
+            total += shard.len();
+            for &i in shard {
+                assert!(seen.insert(i), "index {i} assigned twice");
+            }
+        }
+        assert_eq!(total, 1000);
+        assert_eq!(seen.len(), 1000);
+    }
+
+    #[test]
+    fn balanced_within_one() {
+        let s = EpochShards::new(1, 0, 1003, 8);
+        let sizes: Vec<usize> = (0..8).map(|r| s.for_rank(r).len()).collect();
+        let min = sizes.iter().min().unwrap();
+        let max = sizes.iter().max().unwrap();
+        assert!(max - min <= 1, "{sizes:?}");
+    }
+
+    #[test]
+    fn epochs_reshuffle_deterministically() {
+        let a0 = EpochShards::new(9, 0, 500, 4);
+        let a0b = EpochShards::new(9, 0, 500, 4);
+        let a1 = EpochShards::new(9, 1, 500, 4);
+        assert_eq!(a0.for_rank(0), a0b.for_rank(0));
+        assert_ne!(a0.for_rank(0), a1.for_rank(0));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = EpochShards::new(1, 0, 100, 2);
+        let b = EpochShards::new(2, 0, 100, 2);
+        assert_ne!(a.for_rank(0), b.for_rank(0));
+    }
+}

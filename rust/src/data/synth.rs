@@ -1,0 +1,214 @@
+//! Synthetic ImageNet stand-in (DESIGN.md §4 substitution).
+//!
+//! A deterministic, class-conditional image generator: every class gets a
+//! smooth random "prototype" pattern (a coarse grid bilinearly upsampled —
+//! low-frequency structure a conv net can latch onto); each sample is its
+//! class prototype plus per-sample Gaussian noise. The task is genuinely
+//! learnable (so loss curves and the LS/BSC ablations are meaningful) while
+//! every byte is reproducible from `(seed, index)` — no data files, any
+//! worker can materialise any sample, which is what makes deterministic
+//! sharding across thousands of simulated workers trivial.
+
+use crate::util::rng::{Pcg32, SplitMix64};
+
+/// Dataset geometry + generation parameters.
+#[derive(Debug, Clone)]
+pub struct SynthDataset {
+    pub seed: u64,
+    pub num_classes: usize,
+    pub image_size: usize,
+    pub channels: usize,
+    pub train_size: usize,
+    pub val_size: usize,
+    /// Per-sample noise stddev (higher = harder task).
+    pub noise: f32,
+    /// Coarse prototype grid edge (low-frequency content scale).
+    proto_grid: usize,
+    /// Cached class prototypes, row-major [class][h*w*c].
+    prototypes: Vec<Vec<f32>>,
+}
+
+impl SynthDataset {
+    pub fn new(
+        seed: u64,
+        num_classes: usize,
+        image_size: usize,
+        channels: usize,
+        train_size: usize,
+        val_size: usize,
+    ) -> Self {
+        let proto_grid = 4;
+        let mut ds = Self {
+            seed,
+            num_classes,
+            image_size,
+            channels,
+            train_size,
+            val_size,
+            noise: 0.6,
+            proto_grid,
+            prototypes: Vec::new(),
+        };
+        ds.prototypes = (0..num_classes).map(|c| ds.make_prototype(c)).collect();
+        ds
+    }
+
+    /// CIFAR-shaped default: 10 classes of 32×32×3.
+    pub fn cifar_like(seed: u64) -> Self {
+        Self::new(seed, 10, 32, 3, 50_000, 10_000)
+    }
+
+    /// Tiny twin matching the `tiny` model arch (16×16×3, 10 classes).
+    pub fn tiny(seed: u64) -> Self {
+        Self::new(seed, 10, 16, 3, 4_096, 1_024)
+    }
+
+    pub fn pixels(&self) -> usize {
+        self.image_size * self.image_size * self.channels
+    }
+
+    /// Low-frequency class prototype: coarse grid → bilinear upsample.
+    fn make_prototype(&self, class: usize) -> Vec<f32> {
+        let g = self.proto_grid;
+        let mut rng = Pcg32::with_stream(self.seed ^ 0xC1A5_5000, class as u64);
+        let coarse: Vec<f32> = (0..g * g * self.channels)
+            .map(|_| rng.next_normal() * 1.5)
+            .collect();
+        let s = self.image_size;
+        let mut img = vec![0.0f32; self.pixels()];
+        for y in 0..s {
+            for x in 0..s {
+                // continuous coarse coordinates
+                let fy = y as f32 / s as f32 * (g - 1) as f32;
+                let fx = x as f32 / s as f32 * (g - 1) as f32;
+                let (y0, x0) = (fy as usize, fx as usize);
+                let (y1, x1) = ((y0 + 1).min(g - 1), (x0 + 1).min(g - 1));
+                let (dy, dx) = (fy - y0 as f32, fx - x0 as f32);
+                for c in 0..self.channels {
+                    let v00 = coarse[(y0 * g + x0) * self.channels + c];
+                    let v01 = coarse[(y0 * g + x1) * self.channels + c];
+                    let v10 = coarse[(y1 * g + x0) * self.channels + c];
+                    let v11 = coarse[(y1 * g + x1) * self.channels + c];
+                    let v0 = v00 * (1.0 - dx) + v01 * dx;
+                    let v1 = v10 * (1.0 - dx) + v11 * dx;
+                    img[(y * s + x) * self.channels + c] = v0 * (1.0 - dy) + v1 * dy;
+                }
+            }
+        }
+        img
+    }
+
+    /// Label of training sample `index` (balanced round-robin).
+    pub fn train_label(&self, index: usize) -> i32 {
+        debug_assert!(index < self.train_size);
+        (index % self.num_classes) as i32
+    }
+
+    /// Label of validation sample `index`.
+    pub fn val_label(&self, index: usize) -> i32 {
+        debug_assert!(index < self.val_size);
+        (index % self.num_classes) as i32
+    }
+
+    /// Materialise training sample `index` into `out` (len = pixels()).
+    pub fn train_image(&self, index: usize, out: &mut [f32]) {
+        self.render(index as u64, self.train_label(index) as usize, out);
+    }
+
+    /// Materialise validation sample `index` (disjoint noise stream).
+    pub fn val_image(&self, index: usize, out: &mut [f32]) {
+        self.render(
+            index as u64 ^ 0x5A17_0000_0000,
+            self.val_label(index) as usize,
+            out,
+        );
+    }
+
+    fn render(&self, stream: u64, class: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.pixels());
+        let mut sm = SplitMix64::new(self.seed ^ 0xDA7A);
+        let base = sm.next_u64();
+        let mut rng = Pcg32::with_stream(base, stream);
+        let proto = &self.prototypes[class];
+        for (o, &p) in out.iter_mut().zip(proto) {
+            *o = p + self.noise * rng.next_normal();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn deterministic_per_index() {
+        let ds = SynthDataset::tiny(7);
+        let mut a = vec![0.0; ds.pixels()];
+        let mut b = vec![0.0; ds.pixels()];
+        ds.train_image(13, &mut a);
+        ds.train_image(13, &mut b);
+        assert_eq!(a, b);
+        ds.train_image(14, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let ds = SynthDataset::tiny(7);
+        let mut counts = vec![0usize; ds.num_classes];
+        for i in 0..ds.train_size {
+            counts[ds.train_label(i) as usize] += 1;
+        }
+        let min = counts.iter().min().unwrap();
+        let max = counts.iter().max().unwrap();
+        assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn same_class_samples_correlate_more_than_cross_class() {
+        let ds = SynthDataset::tiny(3);
+        let n = ds.pixels();
+        let mut a = vec![0.0; n];
+        let mut b = vec![0.0; n];
+        let mut c = vec![0.0; n];
+        ds.train_image(0, &mut a); // class 0
+        ds.train_image(10, &mut b); // class 0
+        ds.train_image(1, &mut c); // class 1
+        let dot = |x: &[f32], y: &[f32]| -> f64 {
+            x.iter().zip(y).map(|(a, b)| (*a * *b) as f64).sum::<f64>()
+        };
+        let norm = |x: &[f32]| dot(x, x).sqrt();
+        let same = dot(&a, &b) / (norm(&a) * norm(&b));
+        let cross = dot(&a, &c) / (norm(&a) * norm(&c));
+        assert!(
+            same > cross + 0.1,
+            "same-class corr {same:.3} vs cross {cross:.3}"
+        );
+    }
+
+    #[test]
+    fn pixel_statistics_are_sane() {
+        let ds = SynthDataset::tiny(9);
+        let mut img = vec![0.0; ds.pixels()];
+        let mut all: Vec<f64> = Vec::new();
+        for i in 0..50 {
+            ds.train_image(i, &mut img);
+            all.extend(img.iter().map(|&x| x as f64));
+        }
+        let m = stats::mean(&all);
+        let sd = stats::stddev(&all);
+        assert!(m.abs() < 0.5, "mean {m}");
+        assert!(sd > 0.5 && sd < 3.0, "std {sd}");
+    }
+
+    #[test]
+    fn val_and_train_streams_disjoint() {
+        let ds = SynthDataset::tiny(5);
+        let mut a = vec![0.0; ds.pixels()];
+        let mut b = vec![0.0; ds.pixels()];
+        ds.train_image(0, &mut a);
+        ds.val_image(0, &mut b);
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,61 @@
+//! # flash-sgd
+//!
+//! Reproduction of **"Massively Distributed SGD: ImageNet/ResNet-50
+//! Training in a Flash"** (Mikami et al., Sony, 2018) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the distributed-training coordinator:
+//!   2D-Torus / ring / hierarchical all-reduce over an in-memory rank mesh,
+//!   batch-size control, LR/momentum schedules, LARS, data pipeline, and an
+//!   ABCI-scale network simulator that regenerates the paper's tables.
+//! * **Layer 2 (`python/compile/`)** — the ResNet model (BN without moving
+//!   average) lowered once to HLO text via `jax.jit(...).lower(...)`.
+//! * **Layer 1 (`python/compile/kernels/`)** — Pallas kernels for LARS and
+//!   label-smoothed softmax cross-entropy, baked into the same artifacts.
+//!
+//! Python never runs at training time: `runtime::Engine` loads
+//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and the
+//! coordinator drives everything from Rust worker threads.
+//!
+//! See `DESIGN.md` for the full inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured results.
+
+pub mod cluster;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod optim;
+pub mod repro;
+pub mod runtime;
+pub mod sched;
+pub mod simnet;
+pub mod util;
+
+/// Locate the AOT artifacts directory: `$FLASHSGD_ARTIFACTS`, then
+/// `./artifacts`, then `<repo>/artifacts` (compile-time fallback so the
+/// examples and benches work from any working directory).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("FLASHSGD_ARTIFACTS") {
+        return dir.into();
+    }
+    let local = std::path::Path::new("artifacts");
+    if local.join("manifest.json").exists() {
+        return local.to_path_buf();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::cluster::{best_grid, Grid, Placement};
+    pub use crate::collectives::{
+        Collective, HierarchicalAllReduce, Mesh, RingAllReduce, TorusAllReduce, Wire,
+    };
+    pub use crate::config::{paper_run, paper_runs, TrainConfig};
+    pub use crate::coordinator::{TrainReport, Trainer};
+    pub use crate::data::{Augment, Batch, Loader, SynthDataset};
+    pub use crate::runtime::{Engine, Manifest};
+    pub use crate::sched::{BatchSchedule, LrSchedule, Phase};
+    pub use crate::simnet::{Algo, ClusterModel};
+}

@@ -1,0 +1,241 @@
+//! `flashsgd` — the leader binary.
+//!
+//! Subcommands:
+//!   train       run a training job (preset, twin, or TOML config)
+//!   simulate    ABCI-scale step-time / throughput projection
+//!   reproduce   print a paper table (--table 1..6)
+//!   demo        topology / all-reduce walkthroughs (figure 1 & 2)
+//!   list-configs  show the paper's Table 3 presets
+//!
+//! Examples:
+//!   flashsgd train --preset quickstart
+//!   flashsgd train --twin exp2 --ranks 8 --epochs 4 --arch tiny
+//!   flashsgd train --config configs/exp2_twin.toml
+//!   flashsgd simulate --gpus 1024 --collective torus
+//!   flashsgd reproduce --table 6
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use flashsgd::cluster::best_grid;
+use flashsgd::config::{paper_run, TrainConfig};
+use flashsgd::coordinator::Trainer;
+use flashsgd::repro;
+use flashsgd::simnet::{
+    Algo, ClusterModel, RESNET50_BN_BYTES_FP32, RESNET50_GRAD_BYTES_FP16,
+};
+use flashsgd::util::toml::Doc;
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    cmd: String,
+    positional: Vec<String>,
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse() -> Result<Self> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        while let Some(k) = it.next() {
+            if let Some(key) = k.strip_prefix("--") {
+                let val = it
+                    .next()
+                    .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+                flags.push((key.to_string(), val));
+            } else {
+                positional.push(k);
+            }
+        }
+        Ok(Self {
+            cmd,
+            positional,
+            flags,
+        })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> std::path::PathBuf {
+    args.get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(flashsgd::artifacts_dir)
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "train" => cmd_train(&args),
+        "simulate" => cmd_simulate(&args),
+        "reproduce" => cmd_reproduce(&args),
+        "demo" => cmd_demo(&args),
+        "list-configs" => {
+            print!("{}", repro::table3());
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "\
+flashsgd — Massively Distributed SGD reproduction (Sony 2018)
+
+USAGE:
+  flashsgd train [--preset quickstart | --twin <run> | --config <file>]
+                 [--ranks N] [--epochs E] [--arch tiny|resnet20]
+                 [--steps N] [--collective torus|ring|hierarchical:<g>|halving-doubling]
+                 [--csv out.csv] [--save ckpt] [--resume ckpt] [--artifacts DIR]
+  flashsgd simulate [--gpus N] [--batch B] [--collective ...]
+  flashsgd reproduce --table 1|2|3|4|5|6
+  flashsgd demo topology|allreduce [--x X] [--y Y]
+  flashsgd list-configs
+";
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut config = if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        TrainConfig::from_toml(&Doc::parse(&text)?)?
+    } else if let Some(name) = args.get("twin") {
+        let run = paper_run(name).ok_or_else(|| anyhow!("unknown paper run {name:?}"))?;
+        let ranks = args.usize_or("ranks", 8)?;
+        let epochs = args.usize_or("epochs", 4)? as u32;
+        let arch = args.get("arch").unwrap_or("tiny");
+        TrainConfig::twin_of(&run, ranks, arch, epochs)
+    } else {
+        TrainConfig::quickstart()
+    };
+    if let Some(spec) = args.get("collective") {
+        config.collective = spec.to_string();
+    }
+    if let Some(steps) = args.get("steps") {
+        config.max_steps = steps.parse().context("--steps")?;
+    }
+
+    eprintln!(
+        "[flashsgd] run {:?}: arch={} collective={} workers(max)={} epochs={}",
+        config.name,
+        config.arch,
+        config.collective,
+        config.batch.max_workers(),
+        config.batch.total_epochs
+    );
+    let mut trainer = Trainer::new(config, artifacts_dir(args))?;
+    if let Some(path) = args.get("save") {
+        trainer = trainer.with_checkpoint(path);
+    }
+    if let Some(path) = args.get("resume") {
+        trainer = trainer.with_resume(path);
+    }
+    let report = trainer.run()?;
+    println!("{}", report.format());
+    for (step, loss) in report.metrics.loss_curve(10) {
+        println!("  step {step:>5}  loss {loss:.4}");
+    }
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, report.metrics.to_csv())?;
+        eprintln!("[flashsgd] wrote {path}");
+    }
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report.metrics.to_json().to_string())?;
+        eprintln!("[flashsgd] wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let gpus = args.usize_or("gpus", 1024)?;
+    let batch = args.usize_or("batch", 32)?;
+    let m = ClusterModel::abci_v100();
+    let algos: Vec<Algo> = match args.get("collective") {
+        Some("ring") => vec![Algo::Ring],
+        Some("hierarchical") => vec![Algo::Hierarchical { group: 4 }],
+        Some(spec) if spec.starts_with("torus") => {
+            let (x, y) = best_grid(gpus);
+            vec![Algo::Torus { x, y }]
+        }
+        _ => {
+            let (x, y) = best_grid(gpus);
+            vec![
+                Algo::Torus { x, y },
+                Algo::Hierarchical { group: 4 },
+                Algo::Ring,
+            ]
+        }
+    };
+    println!("simulate: {gpus} GPUs, {batch}/worker, ResNet-50 FP16 grads");
+    for algo in algos {
+        let st = m.step_time(
+            algo,
+            gpus,
+            batch,
+            RESNET50_GRAD_BYTES_FP16,
+            RESNET50_BN_BYTES_FP32,
+        );
+        let thr = (gpus * batch) as f64 / st.total_secs();
+        println!(
+            "  {:<22} step {:>8.2} ms  (compute {:.2} + grad-comm {:.2} + bn-comm {:.2})  {:>12.0} img/s",
+            algo.name(),
+            st.total_secs() * 1e3,
+            st.compute_secs * 1e3,
+            st.grad_comm_secs * 1e3,
+            st.bn_comm_secs * 1e3,
+            thr
+        );
+    }
+    Ok(())
+}
+
+fn cmd_reproduce(args: &Args) -> Result<()> {
+    let table = args.usize_or("table", 6)?;
+    let out = match table {
+        1 => repro::table1(),
+        2 => repro::table2(),
+        3 => repro::table3(),
+        4 => repro::table4(),
+        5 => repro::table5(),
+        6 => repro::table6(),
+        n => bail!("no table {n} in the paper (1-6)"),
+    };
+    print!("{out}");
+    Ok(())
+}
+
+fn cmd_demo(args: &Args) -> Result<()> {
+    let what = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .or_else(|| args.get("what"))
+        .unwrap_or("topology");
+    let x = args.usize_or("x", 4)?;
+    let y = args.usize_or("y", 2)?;
+    match what {
+        "topology" => print!("{}", repro::figure1(x, y)),
+        "allreduce" => {
+            // Figure 2 walkthrough lives in examples/torus_demo.rs (it
+            // drives the real collective); point there.
+            println!("run: cargo run --release --example torus_demo");
+        }
+        other => bail!("unknown demo {other:?} (topology | allreduce)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,8 @@
+//! Optimizers: the Rust-side LARS reference (cross-checked against the
+//! Pallas kernel through the AOT artifacts) and a momentum-SGD baseline.
+
+pub mod lars;
+pub mod sgd;
+
+pub use lars::{lars_step, lars_step_all, trust_ratio, LarsConfig};
+pub use sgd::{sgd_step, sgd_step_all};

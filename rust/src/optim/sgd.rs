@@ -1,0 +1,77 @@
+//! Momentum-SGD baseline optimizer (the non-LARS comparison point used by
+//! the ablation benches; Goyal et al. [1] style with L2 folded in).
+
+/// One in-place momentum-SGD step for a single tensor:
+/// `m ← momentum·m + lr·(g + wd·w)`; `w ← w − m`.
+pub fn sgd_step(
+    w: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    lr: f32,
+    momentum: f32,
+    weight_decay: f32,
+) {
+    assert_eq!(w.len(), g.len());
+    assert_eq!(w.len(), m.len());
+    for ((wi, &gi), mi) in w.iter_mut().zip(g).zip(m.iter_mut()) {
+        let upd = lr * (gi + weight_decay * *wi);
+        *mi = momentum * *mi + upd;
+        *wi -= *mi;
+    }
+}
+
+/// Momentum-SGD over a list of tensors.
+pub fn sgd_step_all(
+    weights: &mut [Vec<f32>],
+    grads: &[Vec<f32>],
+    momenta: &mut [Vec<f32>],
+    lr: f32,
+    momentum: f32,
+    weight_decay: f32,
+) {
+    assert_eq!(weights.len(), grads.len());
+    for ((w, g), m) in weights.iter_mut().zip(grads).zip(momenta.iter_mut()) {
+        sgd_step(w, g, m, lr, momentum, weight_decay);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_step() {
+        let mut w = vec![1.0f32, 2.0];
+        let g = vec![0.5f32, -0.5];
+        let mut m = vec![0.0f32; 2];
+        sgd_step(&mut w, &g, &mut m, 0.1, 0.0, 0.0);
+        assert!((w[0] - 0.95).abs() < 1e-7);
+        assert!((w[1] - 2.05).abs() < 1e-7);
+    }
+
+    #[test]
+    fn weight_decay_pulls_toward_zero() {
+        let mut w = vec![1.0f32];
+        let mut m = vec![0.0f32];
+        sgd_step(&mut w, &[0.0], &mut m, 0.1, 0.0, 0.5);
+        assert!(w[0] < 1.0);
+    }
+
+    #[test]
+    fn equals_lars_when_trust_is_one() {
+        // LARS with zero-norm grad falls back to trust 1.0 == plain SGD.
+        let mut w1 = vec![1.0f32, -2.0];
+        let mut m1 = vec![0.1f32, 0.2];
+        let mut w2 = w1.clone();
+        let mut m2 = m1.clone();
+        let g = vec![0.0f32, 0.0];
+        sgd_step(&mut w1, &g, &mut m1, 0.3, 0.9, 0.0);
+        let cfg = crate::optim::lars::LarsConfig {
+            weight_decay: 0.0,
+            ..Default::default()
+        };
+        crate::optim::lars::lars_step(&mut w2, &g, &mut m2, 0.3, 0.9, &cfg);
+        assert_eq!(w1, w2);
+        assert_eq!(m1, m2);
+    }
+}

@@ -1,0 +1,5 @@
+//! Paper-artifact regeneration: one function per table/figure (DESIGN.md §5).
+
+pub mod tables;
+
+pub use tables::{figure1, simulated_training_secs, table1, table2, table3, table4, table5, table6};

@@ -1,0 +1,320 @@
+//! Regeneration of every table in the paper (DESIGN.md §5 experiment
+//! index). Each function prints the paper's rows next to this system's
+//! modelled/measured values; the benches in `rust/benches/` call these and
+//! EXPERIMENTS.md records the outputs.
+
+use std::fmt::Write as _;
+
+use crate::cluster::{best_grid, TABLE4_GRIDS};
+use crate::config::{paper_runs, LrConfig};
+use crate::simnet::{
+    Algo, ClusterModel, RESNET50_BN_BYTES_FP32, RESNET50_GRAD_BYTES_FP16,
+};
+
+fn torus_at(n: usize) -> Algo {
+    let (x, y) = best_grid(n);
+    Algo::Torus { x, y }
+}
+
+/// Table 1: training time and top-1 accuracy across the literature.
+/// Static rows from the paper + this system's modelled "this work" row.
+pub fn table1() -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "Table 1: ImageNet/ResNet-50 training time and accuracy");
+    let _ = writeln!(
+        s,
+        "{:<18} {:>8} {:>20} {:>12} {:>10}",
+        "work", "batch", "processor", "time", "top-1"
+    );
+    let rows = [
+        ("He et al.", "256", "Tesla P100 x8", "29 hours", "75.3%"),
+        ("Goyal et al.", "8K", "Tesla P100 x256", "1 hour", "76.3%"),
+        ("Smith et al.", "8K->16K", "full TPU Pod", "30 mins", "76.1%"),
+        ("Akiba et al.", "32K", "Tesla P100 x1024", "15 mins", "74.9%"),
+        ("Jia et al.", "64K", "Tesla P40 x2048", "6.6 mins", "75.8%"),
+        ("Ying et al.", "32K", "TPU v3 x1024", "2.2 mins", "76.3%"),
+        ("Ying et al.", "64K", "TPU v3 x1024", "1.8 mins", "75.2%"),
+        ("This work (paper)", "54K", "Tesla V100 x3456", "2.0 mins", "75.29%"),
+    ];
+    for (w, b, p, t, a) in rows {
+        let _ = writeln!(s, "{w:<18} {b:>8} {p:>20} {t:>12} {a:>10}");
+    }
+    let modelled = simulated_training_secs("exp2");
+    let _ = writeln!(
+        s,
+        "{:<18} {:>8} {:>20} {:>11.1}s {:>10}",
+        "This repo (model)", "54K", "simnet V100 x3456", modelled, "(twin run)"
+    );
+    s
+}
+
+/// Table 2: GPU scaling efficiency at ~1024 GPUs across the literature.
+pub fn table2() -> String {
+    let m = ClusterModel::abci_v100();
+    let ours = 100.0
+        * m.scaling_efficiency(
+            torus_at,
+            1024,
+            32,
+            RESNET50_GRAD_BYTES_FP16,
+            RESNET50_BN_BYTES_FP32,
+        );
+    let mut s = String::new();
+    let _ = writeln!(s, "Table 2: GPU scaling efficiency, ImageNet/ResNet-50");
+    let _ = writeln!(
+        s,
+        "{:<18} {:>20} {:>22} {:>12}",
+        "work", "processor", "interconnect", "efficiency"
+    );
+    let rows = [
+        ("Goyal et al.", "Tesla P100 x256", "50Gbit Ethernet", "~90%"),
+        ("Akiba et al.", "Tesla P100 x1024", "Infiniband FDR", "80%"),
+        ("Jia et al.", "Tesla P40 x1024", "100Gbit Ethernet", "87.9%"),
+        ("This work (paper)", "Tesla V100 x1024", "Infiniband EDR x2", "84.75%"),
+    ];
+    for (w, p, i, e) in rows {
+        let _ = writeln!(s, "{w:<18} {p:>20} {i:>22} {e:>12}");
+    }
+    let _ = writeln!(
+        s,
+        "{:<18} {:>20} {:>22} {:>11.2}%",
+        "This repo (model)", "simnet V100 x1024", "alpha-beta IB EDR x2", ours
+    );
+    s
+}
+
+/// Table 3: the training configurations (presets echoed back).
+pub fn table3() -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "Table 3: training configurations");
+    let _ = writeln!(
+        s,
+        "{:<10} {:>6} {:>4} {:>4}  batch phases (epoch: per-worker x workers = total)",
+        "run", "#GPUs", "LS", "LR"
+    );
+    for r in paper_runs() {
+        let lr = match r.lr {
+            LrConfig::Reference => "-",
+            LrConfig::A => "A",
+            LrConfig::B => "B",
+        };
+        let phases: Vec<String> = r
+            .schedule
+            .phases()
+            .iter()
+            .map(|p| {
+                format!(
+                    "{}: {}x{}={}",
+                    p.from_epoch,
+                    p.per_worker,
+                    p.workers,
+                    p.total_batch()
+                )
+            })
+            .collect();
+        let _ = writeln!(
+            s,
+            "{:<10} {:>6} {:>4} {:>4}  [{}]",
+            r.name,
+            r.gpus_max,
+            if r.label_smoothing > 0.0 { "yes" } else { "no" },
+            lr,
+            phases.join(", ")
+        );
+    }
+    s
+}
+
+/// Table 4: 2D-torus grid dimensions per GPU count.
+pub fn table4() -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "Table 4: 2D-torus grid dimensions");
+    let _ = writeln!(s, "{:>6} {:>9} {:>11} {:>11}", "#GPUs", "vertical", "horizontal", "p2p steps");
+    for &(n, v, h) in TABLE4_GRIDS {
+        let steps = 2 * (h - 1) + 2 * (v - 1);
+        let _ = writeln!(s, "{n:>6} {v:>9} {h:>11} {steps:>11}");
+    }
+    s
+}
+
+/// Modelled wall-clock seconds for a paper run's full schedule: pure step
+/// time over the batch schedule plus a fixed per-run overhead (startup,
+/// validation, BN-stat finalisation) fitted on the headline Exp. 2 row
+/// (122 s).
+///
+/// The Reference row is knowingly NOT reproduced by this model: its 505 s
+/// implies ~228 img/s/GPU while Table 6 measures ~543 img/s/GPU on the same
+/// hardware — the row ran "[10]'s training settings" on an older software
+/// path. EXPERIMENTS.md §Table 5 discusses the discrepancy.
+pub fn simulated_training_secs(run_name: &str) -> f64 {
+    let runs = paper_runs();
+    let run = runs.iter().find(|r| r.name == run_name).expect("run");
+    let m = ClusterModel::abci_v100();
+    let dataset = 1_281_167usize; // ImageNet train size
+
+    let pure = |r: &crate::config::PaperRun| -> f64 {
+        let mut secs = 0.0;
+        for e in 0..r.schedule.total_epochs {
+            let ph = r.schedule.at(e);
+            let steps = dataset.div_ceil(ph.total_batch());
+            let algo = torus_at(ph.workers);
+            let st = m.step_time(
+                algo,
+                ph.workers,
+                ph.per_worker,
+                RESNET50_GRAD_BYTES_FP16,
+                RESNET50_BN_BYTES_FP32,
+            );
+            secs += steps as f64 * st.total_secs();
+        }
+        secs
+    };
+
+    // Fixed overhead fitted on the headline run (exp2 = 122 s).
+    let exp2 = runs.iter().find(|r| r.name == "exp2").unwrap();
+    let overhead = (122.0 - pure(exp2)).max(0.0);
+
+    pure(run) + overhead
+}
+
+/// Table 5: accuracy and training time. Accuracy comes from the
+/// reduced-scale twin runs (bench `table5_training`); time from the model.
+pub fn table5() -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "Table 5: validation accuracy and training time");
+    let _ = writeln!(
+        s,
+        "{:<10} {:>6} {:>12} {:>10} {:>12} {:>14}",
+        "run", "#GPUs", "batch", "paper acc", "paper time", "modelled time"
+    );
+    for r in paper_runs() {
+        let modelled = simulated_training_secs(r.name);
+        let batch = if r.schedule.min_total_batch() == r.schedule.max_total_batch() {
+            format!("{}K", r.schedule.min_total_batch() / 1024)
+        } else {
+            format!(
+                "{}K/{}K",
+                r.schedule.min_total_batch() / 1024,
+                r.schedule.max_total_batch() / 1024
+            )
+        };
+        let _ = writeln!(
+            s,
+            "{:<10} {:>6} {:>12} {:>9.2}% {:>11.0}s {:>13.0}s",
+            r.name, r.gpus_max, batch, r.paper_accuracy, r.paper_secs, modelled
+        );
+    }
+    let _ = writeln!(
+        s,
+        "(accuracy reproduced at reduced scale by `cargo bench --bench table5_training`)"
+    );
+    s
+}
+
+/// Table 6: training throughput and scaling efficiency of the 2D-torus.
+pub fn table6() -> String {
+    let m = ClusterModel::abci_v100();
+    let paper: &[(usize, f64, Option<f64>)] = &[
+        (4, 2565.0, None),
+        (1024, 556_522.0, Some(84.75)),
+        (2048, 1_091_357.0, Some(83.10)),
+        (3456, 1_641_853.0, Some(74.08)),
+        (4096, 1_929_054.0, Some(73.44)),
+    ];
+    let mut s = String::new();
+    let _ = writeln!(s, "Table 6: 2D-torus throughput and scaling efficiency (B=32/worker)");
+    let _ = writeln!(
+        s,
+        "{:>6} {:>14} {:>11} {:>14} {:>11}",
+        "#GPUs", "paper img/s", "paper eff", "model img/s", "model eff"
+    );
+    for &(n, p_thr, p_eff) in paper {
+        let thr = m.throughput(
+            torus_at(n),
+            n,
+            32,
+            RESNET50_GRAD_BYTES_FP16,
+            RESNET50_BN_BYTES_FP32,
+        );
+        let eff = 100.0
+            * m.scaling_efficiency(
+                torus_at,
+                n,
+                32,
+                RESNET50_GRAD_BYTES_FP16,
+                RESNET50_BN_BYTES_FP32,
+            );
+        let p_eff_s = p_eff.map_or("-".to_string(), |e| format!("{e:.2}%"));
+        let eff_s = if n == 4 { "-".to_string() } else { format!("{eff:.2}%") };
+        let _ = writeln!(s, "{n:>6} {p_thr:>14.0} {p_eff_s:>11} {thr:>14.0} {eff_s:>11}");
+    }
+    s
+}
+
+/// Figure 1: the 2D-torus topology (ASCII rendering of the ring structure).
+pub fn figure1(x: usize, y: usize) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "Figure 1: 2D-torus topology, {x} horizontal x {y} vertical");
+    for row in 0..y {
+        let mut line = String::new();
+        for col in 0..x {
+            let _ = write!(line, "G{:<3}", row * x + col);
+            if col + 1 < x {
+                line.push_str("— ");
+            }
+        }
+        let _ = writeln!(s, "  {line} ⟲  (horizontal ring)");
+        if row + 1 < y {
+            let _ = writeln!(s, "  {}", "|    ".repeat(x));
+        }
+    }
+    let _ = writeln!(s, "  (columns wrap vertically: each column is a ring ⟲)");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render_nonempty() {
+        for t in [table1(), table2(), table3(), table4(), table5(), table6()] {
+            assert!(t.lines().count() >= 5, "{t}");
+        }
+    }
+
+    #[test]
+    fn table6_model_matches_paper_shape() {
+        let t = table6();
+        assert!(t.contains("84.75%"));
+        // modelled efficiencies present for all scales
+        assert!(t.lines().count() == 7);
+    }
+
+    #[test]
+    fn simulated_times_ordered_like_paper() {
+        // exp2 anchors the overhead fit at exactly the paper's 122 s.
+        let exp2 = simulated_training_secs("exp2");
+        assert!((exp2 - 122.0).abs() < 0.5, "exp2 fitted: {exp2}");
+        // exp3 (64K after epoch 30) is a touch faster, like the paper
+        // (115 s); shape within 20%.
+        let exp3 = simulated_training_secs("exp3");
+        assert!(exp3 < exp2, "exp3 {exp3} !< exp2 {exp2}");
+        assert!((exp3 - 115.0).abs() / 115.0 < 0.20, "exp3 modelled {exp3}");
+        // exp4 (129 s) within 35%.
+        let exp4 = simulated_training_secs("exp4");
+        assert!((exp4 - 129.0).abs() / 129.0 < 0.35, "exp4 modelled {exp4}");
+        // the 1024-GPU reference is far slower than the 3456-GPU headline
+        // (paper: 505 s; our model reproduces the optimized stack only —
+        // see doc comment).
+        let reference = simulated_training_secs("reference");
+        assert!(reference > 1.5 * exp2, "ref {reference} vs exp2 {exp2}");
+    }
+
+    #[test]
+    fn figure1_renders_grid() {
+        let f = figure1(4, 2);
+        assert!(f.contains("G0"));
+        assert!(f.contains("G7"));
+    }
+}

@@ -1,0 +1,282 @@
+//! PJRT engine: load AOT HLO-text artifacts, compile, execute.
+//!
+//! Follows the reference wiring in /opt/xla-example/load_hlo: HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Every entry point was lowered with
+//! `return_tuple=True`, so outputs arrive as one tuple literal that we
+//! split back into per-tensor host buffers.
+//!
+//! The engine is thread-confined (`PjRtClient` holds an `Rc`); worker
+//! threads reach it through `runtime::service::ComputeService`.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ArchManifest, Dtype, ExecSpec, Manifest};
+use super::tensor::HostTensor;
+
+/// One compiled executable plus its manifest spec.
+pub struct Compiled {
+    pub spec: ExecSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT engine: a CPU client and a cache of compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    compiled: HashMap<String, Compiled>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self {
+            client,
+            compiled: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one HLO-text file under key `name`.
+    pub fn load_hlo(&mut self, name: &str, path: &Path, spec: ExecSpec) -> Result<()> {
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("XLA compile of {name} ({path:?}): {e}"))?;
+        self.compiled.insert(name.to_string(), Compiled { spec, exe });
+        Ok(())
+    }
+
+    /// Compile every executable of `arch` from the manifest.
+    pub fn load_arch(&mut self, manifest: &Manifest, arch: &ArchManifest) -> Result<()> {
+        for (name, spec) in &arch.executables {
+            let key = format!("{}/{}", arch.name, name);
+            if self.compiled.contains_key(&key) {
+                continue;
+            }
+            self.load_hlo(&key, &manifest.hlo_path(spec), spec.clone())
+                .with_context(|| format!("loading {key}"))?;
+        }
+        Ok(())
+    }
+
+    /// Compile a subset of `arch`'s executables (lazy startup).
+    pub fn load_execs(
+        &mut self,
+        manifest: &Manifest,
+        arch: &ArchManifest,
+        names: &[&str],
+    ) -> Result<()> {
+        for name in names {
+            let key = format!("{}/{}", arch.name, name);
+            if self.compiled.contains_key(&key) {
+                continue;
+            }
+            let spec = arch.exec(name)?;
+            self.load_hlo(&key, &manifest.hlo_path(spec), spec.clone())
+                .with_context(|| format!("loading {key}"))?;
+        }
+        Ok(())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.compiled.contains_key(key)
+    }
+
+    pub fn loaded(&self) -> Vec<&str> {
+        self.compiled.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute `key` with host inputs; returns host outputs.
+    ///
+    /// Inputs are validated against the manifest spec — a mismatch is a
+    /// caller bug and fails fast with tensor index + expected shape.
+    pub fn run(&self, key: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let c = self
+            .compiled
+            .get(key)
+            .ok_or_else(|| anyhow!("executable {key:?} not loaded (have {:?})", self.loaded()))?;
+        if inputs.len() != c.spec.inputs.len() {
+            bail!(
+                "{key}: wrong input arity {} (want {})",
+                inputs.len(),
+                c.spec.inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&c.spec.inputs).enumerate() {
+            t.check(s).with_context(|| format!("{key}: input #{i}"))?;
+        }
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let result = c
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("{key}: execute failed: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{key}: readback failed: {e}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("{key}: output is not a tuple: {e}"))?;
+        if parts.len() != c.spec.outputs.len() {
+            bail!(
+                "{key}: output arity {} (manifest says {})",
+                parts.len(),
+                c.spec.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&c.spec.outputs)
+            .enumerate()
+            .map(|(i, (lit, spec))| {
+                from_literal(&lit, spec.dtype, &spec.shape)
+                    .with_context(|| format!("{key}: output #{i}"))
+            })
+            .collect()
+    }
+}
+
+fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let (ty, bytes): (xla::ElementType, &[u8]) = match t {
+        HostTensor::F32 { data, .. } => (xla::ElementType::F32, bytemuck_f32(data)),
+        HostTensor::I32 { data, .. } => (xla::ElementType::S32, bytemuck_i32(data)),
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, t.shape(), bytes)
+        .map_err(|e| anyhow!("literal creation: {e}"))
+}
+
+fn from_literal(lit: &xla::Literal, dtype: Dtype, shape: &[usize]) -> Result<HostTensor> {
+    Ok(match dtype {
+        Dtype::F32 => HostTensor::f32(
+            shape.to_vec(),
+            lit.to_vec::<f32>().map_err(|e| anyhow!("readback f32: {e}"))?,
+        ),
+        Dtype::I32 => HostTensor::i32(
+            shape.to_vec(),
+            lit.to_vec::<i32>().map_err(|e| anyhow!("readback i32: {e}"))?,
+        ),
+    })
+}
+
+fn bytemuck_f32(v: &[f32]) -> &[u8] {
+    // Safety: f32 has no padding; alignment of u8 is 1.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytemuck_i32(v: &[i32]) -> &[u8] {
+    // Safety: i32 has no padding; alignment of u8 is 1.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+    fn manifest() -> Option<Manifest> {
+        Manifest::load(ARTIFACTS).ok()
+    }
+
+    #[test]
+    fn init_grad_apply_round_trip() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let arch = m.arch("tiny").unwrap().clone();
+        let mut eng = Engine::cpu().unwrap();
+        eng.load_execs(&m, &arch, &["init", "grad_b8_ls10", "apply"])
+            .unwrap();
+
+        // init: seed -> params
+        let params = eng
+            .run("tiny/init", &[HostTensor::i32(vec![1], vec![7])])
+            .unwrap();
+        assert_eq!(params.len(), arch.n_params());
+        let total: usize = params.iter().map(|p| p.elems()).sum();
+        assert_eq!(total, arch.total_params);
+
+        // grad: params + batch -> loss, grads, bn stats
+        let px = arch.image_size * arch.image_size * arch.image_channels;
+        let mut inputs = params.clone();
+        inputs.push(HostTensor::f32(
+            vec![8, arch.image_size, arch.image_size, arch.image_channels],
+            vec![0.1; 8 * px],
+        ));
+        inputs.push(HostTensor::i32(vec![8], vec![0, 1, 2, 3, 4, 5, 6, 7]));
+        let out = eng.run("tiny/grad_b8_ls10", &inputs).unwrap();
+        assert_eq!(out.len(), 1 + arch.n_params() + arch.n_bn());
+        let loss = out[0].scalar().unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+
+        // apply: params + momenta + grads + scalars -> params', momenta'
+        let grads = &out[1..1 + arch.n_params()];
+        let momenta: Vec<HostTensor> = params
+            .iter()
+            .map(|p| HostTensor::f32(p.shape().to_vec(), vec![0.0; p.elems()]))
+            .collect();
+        let mut ap_in = params.clone();
+        ap_in.extend(momenta.iter().cloned());
+        ap_in.extend(grads.iter().cloned());
+        ap_in.push(HostTensor::scalar_f32(0.5));
+        ap_in.push(HostTensor::scalar_f32(0.9));
+        ap_in.push(HostTensor::scalar_f32(5e-5));
+        let applied = eng.run("tiny/apply", &ap_in).unwrap();
+        assert_eq!(applied.len(), 2 * arch.n_params());
+
+        // the update must actually move the weights
+        let before = params[0].as_f32().unwrap();
+        let after = applied[0].as_f32().unwrap();
+        assert_ne!(before, after);
+
+        // and must agree with the rust LARS reference (same formula)
+        let mut w_ref = before.to_vec();
+        let mut m_ref = vec![0.0f32; w_ref.len()];
+        let cfg = crate::optim::LarsConfig {
+            coeff: 0.01,
+            eps: 1e-6,
+            weight_decay: 5e-5,
+        };
+        crate::optim::lars_step(
+            &mut w_ref,
+            grads[0].as_f32().unwrap(),
+            &mut m_ref,
+            0.5,
+            0.9,
+            &cfg,
+        );
+        for (a, b) in after.iter().zip(&w_ref) {
+            assert!((a - b).abs() < 2e-5, "pallas {a} vs rust-ref {b}");
+        }
+    }
+
+    #[test]
+    fn wrong_arity_and_shape_fail_fast() {
+        let Some(m) = manifest() else { return };
+        let arch = m.arch("tiny").unwrap().clone();
+        let mut eng = Engine::cpu().unwrap();
+        eng.load_execs(&m, &arch, &["init"]).unwrap();
+        assert!(eng.run("tiny/init", &[]).is_err());
+        assert!(eng
+            .run("tiny/init", &[HostTensor::f32(vec![1], vec![0.0])])
+            .is_err());
+        assert!(eng.run("tiny/unknown", &[]).is_err());
+    }
+}

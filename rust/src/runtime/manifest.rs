@@ -1,0 +1,319 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime (`artifacts/manifest.json`).
+//!
+//! The manifest records, per model architecture: the parameter table
+//! (names/shapes/sizes in `jax.tree_util` flatten order), the BN-stat layer
+//! list, and every lowered executable's input/output tensor specs. The Rust
+//! side never guesses shapes — everything flows from here.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// dtype of a tensor as recorded by the AOT pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype {other:?} in manifest"),
+        }
+    }
+
+    pub fn bytes(self) -> usize {
+        4
+    }
+}
+
+/// Shape + dtype of one executable input/output.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(j.get("dtype")?.as_str()?)?;
+        Ok(Self { shape, dtype })
+    }
+}
+
+/// One named parameter tensor (flatten-order position is its index).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+}
+
+/// One BN layer exporting (mean, sqmean) stats of `width` channels.
+#[derive(Debug, Clone)]
+pub struct BnLayer {
+    pub name: String,
+    pub width: usize,
+}
+
+/// One lowered executable.
+#[derive(Debug, Clone)]
+pub struct ExecSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Per-worker batch (grad_/eval_ entries).
+    pub batch: Option<usize>,
+    /// Label smoothing baked into this grad entry.
+    pub ls_eps: Option<f64>,
+}
+
+/// Everything the runtime knows about one architecture.
+#[derive(Debug, Clone)]
+pub struct ArchManifest {
+    pub name: String,
+    pub params: Vec<ParamSpec>,
+    pub total_params: usize,
+    pub bn_layers: Vec<BnLayer>,
+    pub num_classes: usize,
+    pub image_size: usize,
+    pub image_channels: usize,
+    pub executables: BTreeMap<String, ExecSpec>,
+}
+
+impl ArchManifest {
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn n_bn(&self) -> usize {
+        self.bn_layers.len()
+    }
+
+    /// Grad executable for `(batch, ls_eps)` — how batch-size control picks
+    /// the right artifact (naming scheme from aot.py: `grad_b{B}_ls{E*100}`).
+    pub fn grad_exec(&self, batch: usize, ls_eps: f32) -> Result<&ExecSpec> {
+        let name = format!("grad_b{batch}_ls{}", (ls_eps * 100.0).round() as i64);
+        self.executables.get(&name).ok_or_else(|| {
+            anyhow!(
+                "{}: no grad executable {name:?}; available: {:?}",
+                self.name,
+                self.executables.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Grad batch sizes available (ascending) for this LS setting.
+    pub fn grad_batches(&self, ls_eps: f32) -> Vec<usize> {
+        let suffix = format!("_ls{}", (ls_eps * 100.0).round() as i64);
+        let mut v: Vec<usize> = self
+            .executables
+            .iter()
+            .filter(|(k, _)| k.starts_with("grad_b") && k.ends_with(&suffix))
+            .filter_map(|(_, e)| e.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// The (single) eval executable.
+    pub fn eval_exec(&self) -> Result<&ExecSpec> {
+        self.executables
+            .values()
+            .find(|e| e.name.starts_with("eval_"))
+            .ok_or_else(|| anyhow!("{}: no eval executable", self.name))
+    }
+
+    pub fn exec(&self, name: &str) -> Result<&ExecSpec> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow!("{}: no executable {name:?}", self.name))
+    }
+}
+
+/// The parsed manifest for all architectures.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub arches: BTreeMap<String, ArchManifest>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        let version = j.get("format_version")?.as_usize()?;
+        if version != 1 {
+            bail!("manifest format_version {version} unsupported (want 1)");
+        }
+        let mut arches = BTreeMap::new();
+        for (name, aj) in j.get("arches")?.as_obj()? {
+            arches.insert(name.clone(), Self::parse_arch(name, aj)?);
+        }
+        Ok(Self { dir, arches })
+    }
+
+    pub fn arch(&self, name: &str) -> Result<&ArchManifest> {
+        self.arches.get(name).ok_or_else(|| {
+            anyhow!(
+                "arch {name:?} not in manifest; have {:?}. Re-run `make artifacts`",
+                self.arches.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Absolute path of an executable's HLO text file.
+    pub fn hlo_path(&self, exec: &ExecSpec) -> PathBuf {
+        self.dir.join(&exec.file)
+    }
+
+    fn parse_arch(name: &str, j: &Json) -> Result<ArchManifest> {
+        let cfg = j.get("config")?;
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<Vec<_>>>()?,
+                    size: p.get("size")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let bn_layers = j
+            .get("bn_layers")?
+            .as_arr()?
+            .iter()
+            .map(|b| {
+                Ok(BnLayer {
+                    name: b.get("name")?.as_str()?.to_string(),
+                    width: b.get("width")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut executables = BTreeMap::new();
+        for (ename, ej) in j.get("executables")?.as_obj()? {
+            let inputs = ej
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = ej
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            executables.insert(
+                ename.clone(),
+                ExecSpec {
+                    name: ename.clone(),
+                    file: ej.get("file")?.as_str()?.to_string(),
+                    inputs,
+                    outputs,
+                    batch: ej.opt("batch").map(|b| b.as_usize()).transpose()?,
+                    ls_eps: ej.opt("ls_eps").map(|e| e.as_f64()).transpose()?,
+                },
+            );
+        }
+        Ok(ArchManifest {
+            name: name.to_string(),
+            params,
+            total_params: j.get("total_params")?.as_usize()?,
+            bn_layers,
+            num_classes: cfg.get("num_classes")?.as_usize()?,
+            image_size: cfg.get("image_size")?.as_usize()?,
+            image_channels: cfg.get("image_channels")?.as_usize()?,
+            executables,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new(ARTIFACTS).join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(ARTIFACTS).unwrap();
+        let tiny = m.arch("tiny").unwrap();
+        assert!(tiny.total_params > 10_000);
+        assert_eq!(
+            tiny.params.iter().map(|p| p.size).sum::<usize>(),
+            tiny.total_params
+        );
+        // parameter shapes multiply out to sizes
+        for p in &tiny.params {
+            assert_eq!(p.shape.iter().product::<usize>(), p.size, "{}", p.name);
+        }
+        assert!(tiny.n_bn() >= 7);
+    }
+
+    #[test]
+    fn grad_exec_lookup_and_batches() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(ARTIFACTS).unwrap();
+        let tiny = m.arch("tiny").unwrap();
+        let g = tiny.grad_exec(8, 0.1).unwrap();
+        assert_eq!(g.batch, Some(8));
+        assert_eq!(g.ls_eps, Some(0.1));
+        // io arity contract: params + images + labels in
+        assert_eq!(g.inputs.len(), tiny.n_params() + 2);
+        assert_eq!(g.outputs.len(), 1 + tiny.n_params() + tiny.n_bn());
+        let batches = tiny.grad_batches(0.1);
+        assert!(batches.len() >= 2, "{batches:?}");
+        assert!(batches.windows(2).all(|w| w[0] < w[1]));
+        assert!(tiny.grad_exec(999, 0.1).is_err());
+    }
+
+    #[test]
+    fn missing_arch_is_helpful_error() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(ARTIFACTS).unwrap();
+        let err = m.arch("nope").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"));
+    }
+}

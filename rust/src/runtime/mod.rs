@@ -1,0 +1,16 @@
+//! Runtime layer: AOT artifact loading + PJRT execution.
+//!
+//! `manifest` parses the shape/layout contract written by `aot.py`;
+//! `engine` compiles HLO text and executes it on the PJRT CPU client;
+//! `service` exposes the (thread-confined) engine to the coordinator's
+//! worker threads; `tensor` is the `Send`-able host-buffer currency.
+
+pub mod engine;
+pub mod manifest;
+pub mod service;
+pub mod tensor;
+
+pub use engine::Engine;
+pub use manifest::{ArchManifest, BnLayer, Dtype, ExecSpec, Manifest, ParamSpec, TensorSpec};
+pub use service::{ComputeClient, ComputeService};
+pub use tensor::HostTensor;

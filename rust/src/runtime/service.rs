@@ -1,0 +1,216 @@
+//! Compute service: thread-confined PJRT engine behind a channel API.
+//!
+//! `PjRtClient` is `Rc`-based and must stay on one thread; worker threads
+//! (one per simulated GPU) instead hold a cloneable [`ComputeClient`] and
+//! submit `(executable key, host tensors)` calls. The service thread owns
+//! the [`Engine`], executes requests in arrival order, and replies through
+//! a per-call channel.
+//!
+//! This mirrors the physical testbed faithfully: the CPU is one shared
+//! device, XLA parallelises *inside* an execution via its own thread pool,
+//! and the coordinator's threads contend for it exactly like the paper's
+//! GPUs contend for their own SMs. Throughput accounting at Layer 3 is
+//! unaffected (it counts steps, not device-parallel speedup).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::engine::Engine;
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+
+enum Req {
+    Run {
+        key: String,
+        inputs: Vec<HostTensor>,
+        reply: Sender<Result<Vec<HostTensor>>>,
+    },
+    /// Compile additional executables of an arch (batch-size control may
+    /// need a grad variant that was not preloaded).
+    Load {
+        arch: String,
+        names: Vec<String>,
+        reply: Sender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to the engine thread.
+#[derive(Clone)]
+pub struct ComputeClient {
+    tx: Sender<Req>,
+}
+
+impl ComputeClient {
+    /// Execute `key` (format `"{arch}/{exec}"`) with `inputs`.
+    pub fn run(&self, key: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::Run {
+                key: key.to_string(),
+                inputs,
+                reply,
+            })
+            .map_err(|_| anyhow!("compute service is down"))?;
+        rx.recv().map_err(|_| anyhow!("compute service dropped reply"))?
+    }
+
+    /// Ensure `names` of `arch` are compiled.
+    pub fn load(&self, arch: &str, names: &[&str]) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::Load {
+                arch: arch.to_string(),
+                names: names.iter().map(|s| s.to_string()).collect(),
+                reply,
+            })
+            .map_err(|_| anyhow!("compute service is down"))?;
+        rx.recv().map_err(|_| anyhow!("compute service dropped reply"))?
+    }
+}
+
+/// The running service (owns the engine thread).
+pub struct ComputeService {
+    tx: Sender<Req>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ComputeService {
+    /// Start the engine thread, compiling `preload` executables of `arch`
+    /// up front. Compilation errors surface here, not at first use.
+    pub fn start(manifest: Manifest, arch: &str, preload: &[&str]) -> Result<Self> {
+        let (tx, rx) = channel::<Req>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let arch_name = arch.to_string();
+        let preload: Vec<String> = preload.iter().map(|s| s.to_string()).collect();
+        let join = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || engine_thread(manifest, arch_name, preload, rx, ready_tx))
+            .map_err(|e| anyhow!("spawning engine thread: {e}"))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        Ok(Self {
+            tx,
+            join: Some(join),
+        })
+    }
+
+    pub fn client(&self) -> ComputeClient {
+        ComputeClient {
+            tx: self.tx.clone(),
+        }
+    }
+}
+
+impl Drop for ComputeService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Req::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn engine_thread(
+    manifest: Manifest,
+    arch: String,
+    preload: Vec<String>,
+    rx: Receiver<Req>,
+    ready: Sender<Result<()>>,
+) {
+    let mut engine = match Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let setup = (|| -> Result<()> {
+        let am = manifest.arch(&arch)?.clone();
+        let names: Vec<&str> = preload.iter().map(|s| s.as_str()).collect();
+        engine.load_execs(&manifest, &am, &names)
+    })();
+    let failed = setup.is_err();
+    let _ = ready.send(setup);
+    if failed {
+        return;
+    }
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Run { key, inputs, reply } => {
+                let _ = reply.send(engine.run(&key, &inputs));
+            }
+            Req::Load { arch, names, reply } => {
+                let result = (|| -> Result<()> {
+                    let am = manifest.arch(&arch)?.clone();
+                    let names: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+                    engine.load_execs(&manifest, &am, &names)
+                })();
+                let _ = reply.send(result);
+            }
+            Req::Shutdown => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+    #[test]
+    fn multi_threaded_clients_share_the_engine() {
+        let Ok(m) = Manifest::load(ARTIFACTS) else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let svc = ComputeService::start(m, "tiny", &["init"]).unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let c = svc.client();
+                std::thread::spawn(move || {
+                    let out = c
+                        .run("tiny/init", vec![HostTensor::i32(vec![1], vec![i])])
+                        .unwrap();
+                    // checksum across all params (some tensors are
+                    // zero-init regardless of seed, e.g. biases/beta)
+                    out.iter()
+                        .map(|t| t.as_f32().unwrap().iter().map(|x| *x as f64).sum::<f64>())
+                        .sum::<f64>()
+                })
+            })
+            .collect();
+        let sums: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // different seeds -> different params
+        assert!(sums.windows(2).any(|w| w[0] != w[1]), "{sums:?}");
+    }
+
+    #[test]
+    fn lazy_load_after_start() {
+        let Ok(m) = Manifest::load(ARTIFACTS) else { return };
+        let svc = ComputeService::start(m, "tiny", &["init"]).unwrap();
+        let c = svc.client();
+        // grad not preloaded: load on demand, then it runs
+        c.load("tiny", &["grad_b8_ls10"]).unwrap();
+        let params = c
+            .run("tiny/init", vec![HostTensor::i32(vec![1], vec![0])])
+            .unwrap();
+        let px = 16 * 16 * 3;
+        let mut inputs = params;
+        inputs.push(HostTensor::f32(vec![8, 16, 16, 3], vec![0.0; 8 * px]));
+        inputs.push(HostTensor::i32(vec![8], vec![0; 8]));
+        let out = c.run("tiny/grad_b8_ls10", inputs).unwrap();
+        assert!(out[0].scalar().unwrap().is_finite());
+    }
+
+    #[test]
+    fn unknown_preload_fails_at_start() {
+        let Ok(m) = Manifest::load(ARTIFACTS) else { return };
+        assert!(ComputeService::start(m, "tiny", &["nonexistent"]).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! Host-side tensors: the `Send`-able data that crosses worker↔engine
+//! channel boundaries (PJRT `Literal`s wrap raw C pointers and are not
+//! `Send`; flat host buffers are).
+
+use anyhow::{bail, Result};
+
+use super::manifest::{Dtype, TensorSpec};
+
+/// A flat host tensor (row-major) with shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        HostTensor::F32 {
+            shape: vec![],
+            data: vec![x],
+        }
+    }
+
+    pub fn zeros(spec: &TensorSpec) -> Self {
+        match spec.dtype {
+            Dtype::F32 => HostTensor::f32(spec.shape.clone(), vec![0.0; spec.elems()]),
+            Dtype::I32 => HostTensor::i32(spec.shape.clone(), vec![0; spec.elems()]),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32 { .. } => Dtype::F32,
+            HostTensor::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::I32 { .. } => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::I32 { .. } => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::I32 { .. } => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            HostTensor::F32 { .. } => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
+    /// Scalar f32 value (rank-0 or single-element tensors).
+    pub fn scalar(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, got {} elements", d.len());
+        }
+        Ok(d[0])
+    }
+
+    /// Validate against a manifest spec (shape + dtype).
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        if self.shape() != spec.shape.as_slice() {
+            bail!(
+                "shape mismatch: tensor {:?} vs spec {:?}",
+                self.shape(),
+                spec.shape
+            );
+        }
+        if self.dtype() != spec.dtype {
+            bail!("dtype mismatch: {:?} vs {:?}", self.dtype(), spec.dtype);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.elems(), 6);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+        let s = HostTensor::scalar_f32(2.5);
+        assert_eq!(s.scalar().unwrap(), 2.5);
+        assert_eq!(s.shape(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn check_against_spec() {
+        let spec = TensorSpec {
+            shape: vec![4],
+            dtype: Dtype::F32,
+        };
+        assert!(HostTensor::f32(vec![4], vec![0.0; 4]).check(&spec).is_ok());
+        assert!(HostTensor::f32(vec![2, 2], vec![0.0; 4]).check(&spec).is_err());
+        assert!(HostTensor::i32(vec![4], vec![0; 4]).check(&spec).is_err());
+        let z = HostTensor::zeros(&spec);
+        assert_eq!(z.elems(), 4);
+    }
+}

@@ -1,0 +1,212 @@
+//! Batch-size control (paper §2.1, Table 3): a predetermined schedule of
+//! (per-worker batch, worker count) phases over epochs.
+//!
+//! Increasing the global batch as the loss landscape flattens lets training
+//! evade the early instability of huge batches ([4], [11], [12]); the paper
+//! drives it by switching per-worker batch 16→32 (and, in Exp. 4, growing
+//! the worker pool). In this system a phase switch makes the coordinator
+//! swap every worker's `grad_step` executable for the new batch size — the
+//! optimizer state and parameters carry over untouched.
+
+/// One phase of the batch-size schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Phase {
+    /// First epoch (inclusive) at which this phase is active.
+    pub from_epoch: u32,
+    /// Per-worker mini-batch.
+    pub per_worker: usize,
+    /// Number of data-parallel workers in this phase.
+    pub workers: usize,
+}
+
+impl Phase {
+    pub fn total_batch(&self) -> usize {
+        self.per_worker * self.workers
+    }
+}
+
+/// A batch-size-control schedule: ordered phases + total epochs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchSchedule {
+    phases: Vec<Phase>,
+    pub total_epochs: u32,
+}
+
+impl BatchSchedule {
+    /// Build from phases; they must start at epoch 0 and be strictly
+    /// increasing in `from_epoch`.
+    pub fn new(phases: Vec<Phase>, total_epochs: u32) -> Self {
+        assert!(!phases.is_empty(), "need at least one phase");
+        assert_eq!(phases[0].from_epoch, 0, "first phase must start at epoch 0");
+        for w in phases.windows(2) {
+            assert!(
+                w[0].from_epoch < w[1].from_epoch,
+                "phases must be strictly increasing"
+            );
+        }
+        assert!(phases.iter().all(|p| p.per_worker > 0 && p.workers > 0));
+        Self {
+            phases,
+            total_epochs,
+        }
+    }
+
+    /// Constant-batch schedule (the paper's Reference row).
+    pub fn constant(per_worker: usize, workers: usize, total_epochs: u32) -> Self {
+        Self::new(
+            vec![Phase {
+                from_epoch: 0,
+                per_worker,
+                workers,
+            }],
+            total_epochs,
+        )
+    }
+
+    /// Active phase at `epoch`.
+    pub fn at(&self, epoch: u32) -> Phase {
+        let mut cur = self.phases[0];
+        for &p in &self.phases {
+            if p.from_epoch <= epoch {
+                cur = p;
+            } else {
+                break;
+            }
+        }
+        cur
+    }
+
+    pub fn phases(&self) -> &[Phase] {
+        &self.phases
+    }
+
+    /// Maximum worker count over the run (the paper's "#GPUs (Max)").
+    pub fn max_workers(&self) -> usize {
+        self.phases.iter().map(|p| p.workers).max().unwrap()
+    }
+
+    pub fn min_total_batch(&self) -> usize {
+        self.phases.iter().map(|p| p.total_batch()).min().unwrap()
+    }
+
+    pub fn max_total_batch(&self) -> usize {
+        self.phases.iter().map(|p| p.total_batch()).max().unwrap()
+    }
+
+    /// Steps per epoch at `epoch` over a dataset of `dataset_size` samples
+    /// (ceil division: the trailing partial batch still costs a step).
+    pub fn steps_in_epoch(&self, epoch: u32, dataset_size: usize) -> usize {
+        dataset_size.div_ceil(self.at(epoch).total_batch())
+    }
+
+    /// Total optimizer steps over the whole run.
+    pub fn total_steps(&self, dataset_size: usize) -> usize {
+        (0..self.total_epochs)
+            .map(|e| self.steps_in_epoch(e, dataset_size))
+            .sum()
+    }
+
+    /// Reduced-scale twin: same phase boundaries and per-worker batches,
+    /// with worker counts scaled down to a test mesh of `target_workers`
+    /// at the maximum phase (smaller phases scale proportionally, min 1).
+    pub fn scaled_to(&self, target_workers: usize) -> BatchSchedule {
+        let max_w = self.max_workers() as f64;
+        let phases = self
+            .phases
+            .iter()
+            .map(|p| Phase {
+                from_epoch: p.from_epoch,
+                per_worker: p.per_worker,
+                workers: ((p.workers as f64 / max_w * target_workers as f64).round() as usize)
+                    .max(1),
+            })
+            .collect();
+        BatchSchedule::new(phases, self.total_epochs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exp4_like() -> BatchSchedule {
+        BatchSchedule::new(
+            vec![
+                Phase { from_epoch: 0, per_worker: 16, workers: 2176 },
+                Phase { from_epoch: 30, per_worker: 16, workers: 4096 },
+                Phase { from_epoch: 45, per_worker: 32, workers: 2656 },
+                Phase { from_epoch: 75, per_worker: 32, workers: 3712 },
+            ],
+            90,
+        )
+    }
+
+    #[test]
+    fn lookup_respects_boundaries() {
+        let s = exp4_like();
+        assert_eq!(s.at(0).total_batch(), 34816);
+        assert_eq!(s.at(29).total_batch(), 34816);
+        assert_eq!(s.at(30).total_batch(), 65536);
+        assert_eq!(s.at(45).per_worker, 32);
+        assert_eq!(s.at(89).workers, 3712);
+        // beyond the last boundary stays in the last phase
+        assert_eq!(s.at(500).workers, 3712);
+    }
+
+    #[test]
+    fn table3_exp4_batch_extremes() {
+        // Paper Table 5 row Exp. 4: batch 34K min, 119K max.
+        let s = exp4_like();
+        assert_eq!(s.min_total_batch(), 34816); // "34K"
+        assert_eq!(s.max_total_batch(), 118784); // "119K"
+        assert_eq!(s.max_workers(), 4096);
+    }
+
+    #[test]
+    fn steps_accounting() {
+        let s = BatchSchedule::new(
+            vec![
+                Phase { from_epoch: 0, per_worker: 16, workers: 4 },
+                Phase { from_epoch: 2, per_worker: 32, workers: 4 },
+            ],
+            4,
+        );
+        // dataset 1000: epochs 0,1 at 64/step -> 16 steps; 2,3 at 128 -> 8
+        assert_eq!(s.steps_in_epoch(0, 1000), 16);
+        assert_eq!(s.steps_in_epoch(3, 1000), 8);
+        assert_eq!(s.total_steps(1000), 16 + 16 + 8 + 8);
+    }
+
+    #[test]
+    fn scaled_twin_preserves_structure() {
+        let s = exp4_like().scaled_to(8);
+        assert_eq!(s.max_workers(), 8);
+        assert_eq!(s.phases().len(), 4);
+        // per-worker batches unchanged; boundaries unchanged
+        assert_eq!(s.at(0).per_worker, 16);
+        assert_eq!(s.at(45).per_worker, 32);
+        assert_eq!(s.at(0).workers, 4); // 2176/4096*8 ≈ 4.25 -> 4
+        assert_eq!(s.phases()[0].from_epoch, 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_unordered_phases() {
+        BatchSchedule::new(
+            vec![
+                Phase { from_epoch: 0, per_worker: 16, workers: 4 },
+                Phase { from_epoch: 0, per_worker: 32, workers: 4 },
+            ],
+            10,
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_missing_epoch_zero() {
+        BatchSchedule::new(
+            vec![Phase { from_epoch: 5, per_worker: 16, workers: 4 }],
+            10,
+        );
+    }
+}

@@ -1,0 +1,8 @@
+//! Training schedules: learning rate + momentum (paper configs A/B) and
+//! batch-size control (the paper's first large-mini-batch stabiliser).
+
+pub mod batchsize;
+pub mod lr;
+
+pub use batchsize::{BatchSchedule, Phase};
+pub use lr::LrSchedule;

@@ -1,0 +1,95 @@
+//! V100 compute-time model for ResNet-50 (paper workload).
+//!
+//! Calibrated against the paper's own single-node measurement: Table 6 row
+//! one reports 2565 images/s on 4 GPUs with per-worker batch 32 — i.e.
+//! ≈641 img/s per V100 including the (tiny) intra-node all-reduce. With the
+//! NVLink cost model charging ~1.9 ms of communication per 49.9 ms step,
+//! per-GPU pure-compute throughput comes out at ≈667 img/s, which is what
+//! `ComputeModel::v100_resnet50` encodes via FLOP counts and an effective
+//! utilisation factor.
+//!
+//! Batch-size dependence uses a saturation curve: small per-worker batches
+//! underutilise the GPU (`b_half` is the batch at which half the peak is
+//! reached); this matters for the paper's 16/worker phases (Table 3).
+
+/// FLOPs for one ResNet-50 forward pass at 224×224 (fwd only).
+pub const RESNET50_FWD_FLOPS: f64 = 3.9e9;
+
+/// fwd+bwd multiplier (backward ≈ 2× forward).
+pub const FWD_BWD_FACTOR: f64 = 3.0;
+
+/// Gradient bytes exchanged per step: 25.5M params in FP16 (paper §3.2).
+pub const RESNET50_GRAD_BYTES_FP16: f64 = 25.5e6 * 2.0;
+
+/// BN-stat bytes exchanged per step in FP32: 53 BN layers, 2 vectors each
+/// (mean, sqmean); total channel count ≈ 26.5K floats ≈ 0.2 MB. Small but
+/// modelled, since the paper calls out its FP32 precision explicitly.
+pub const RESNET50_BN_BYTES_FP32: f64 = 26_560.0 * 2.0 * 4.0;
+
+/// Per-GPU compute-time model.
+#[derive(Debug, Clone)]
+pub struct ComputeModel {
+    /// Peak sustainable images/sec at large batch (per GPU).
+    pub peak_images_per_sec: f64,
+    /// Batch at which throughput reaches half of peak.
+    pub b_half: f64,
+}
+
+impl ComputeModel {
+    /// V100 + mixed precision + NNL, calibrated to paper Table 6 (see
+    /// module docs).
+    pub fn v100_resnet50() -> Self {
+        Self {
+            peak_images_per_sec: 750.0,
+            b_half: 4.0,
+        }
+    }
+
+    /// Sustained images/sec at per-worker batch `b`.
+    pub fn images_per_sec(&self, b: usize) -> f64 {
+        let b = b as f64;
+        self.peak_images_per_sec * b / (b + self.b_half)
+    }
+
+    /// Seconds of fwd+bwd compute for one step at per-worker batch `b`.
+    pub fn step_seconds(&self, b: usize) -> f64 {
+        b as f64 / self.images_per_sec(b)
+    }
+
+    /// Implied utilisation of the V100's 125 TFLOPS tensor-core peak.
+    pub fn mxu_utilisation(&self, b: usize) -> f64 {
+        let flops_per_sec = self.images_per_sec(b) * RESNET50_FWD_FLOPS * FWD_BWD_FACTOR;
+        flops_per_sec / 125.0e12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_matches_paper_single_gpu() {
+        let m = ComputeModel::v100_resnet50();
+        let thr = m.images_per_sec(32);
+        // ≈667 img/s pure compute (module docs derivation)
+        assert!((thr - 667.0).abs() < 10.0, "thr={thr}");
+        assert!((m.step_seconds(32) - 0.048).abs() < 0.001);
+    }
+
+    #[test]
+    fn small_batches_less_efficient() {
+        let m = ComputeModel::v100_resnet50();
+        assert!(m.images_per_sec(16) < m.images_per_sec(32));
+        assert!(m.images_per_sec(16) > 0.5 * m.images_per_sec(32));
+        // step time grows sublinearly with batch
+        assert!(m.step_seconds(32) < 2.0 * m.step_seconds(16));
+    }
+
+    #[test]
+    fn utilisation_is_plausible() {
+        let m = ComputeModel::v100_resnet50();
+        let u = m.mxu_utilisation(32);
+        // mixed-precision ResNet-50 lands ~5-15% of the 125 TF peak
+        assert!(u > 0.03 && u < 0.2, "utilisation {u}");
+    }
+}

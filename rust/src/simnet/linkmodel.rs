@@ -1,0 +1,131 @@
+//! α-β link model of the ABCI interconnect (paper §3.1 hardware).
+//!
+//! Each peer-to-peer hop costs `α + bytes·β_eff`. Two link classes:
+//!
+//!  * **NVLink2** (intra-node, 4 V100s): low latency, ~40 GB/s effective
+//!    per-direction p2p.
+//!  * **InfiniBand EDR ×2** (inter-node): ~5 µs MPI-level latency,
+//!    12.5 GB/s per flow (one EDR rail), 25 GB/s per node aggregate. When
+//!    more concurrent flows leave a node than there are rails, they share
+//!    aggregate bandwidth (`β` scales with the flow/rail ratio).
+//!
+//! Large fabrics add congestion: beyond `congestion_free_nodes` the
+//! effective β grows linearly with node count (adaptive-routing/fat-tree
+//! oversubscription pressure). The constants below are calibrated so the
+//! model reproduces the *shape* of paper Tables 2 & 6 (who wins, by what
+//! factor, where efficiency bends); EXPERIMENTS.md records model-vs-paper
+//! per row.
+
+use crate::cluster::LinkClass;
+
+/// α-β parameters for one cluster fabric.
+#[derive(Debug, Clone)]
+pub struct LinkModel {
+    /// NVLink2 latency (s).
+    pub alpha_intra: f64,
+    /// NVLink2 seconds/byte.
+    pub beta_intra: f64,
+    /// InfiniBand latency (s).
+    pub alpha_inter: f64,
+    /// Seconds/byte of ONE inter-node flow using one rail.
+    pub beta_inter_flow: f64,
+    /// Node aggregate inter bandwidth in bytes/s (all rails).
+    pub node_inter_bw: f64,
+    /// IB rails per node (2 on ABCI).
+    pub rails_per_node: usize,
+    /// Node count up to which the fabric behaves full-bisection.
+    pub congestion_free_nodes: usize,
+    /// Relative β growth per `congestion_free_nodes` beyond the free zone.
+    pub congestion_slope: f64,
+}
+
+impl LinkModel {
+    /// ABCI defaults (V100 nodes, NVLink2, 2× IB-EDR) — see module docs.
+    pub fn abci() -> Self {
+        Self {
+            alpha_intra: 2.0e-6,
+            beta_intra: 1.0 / 40.0e9,
+            alpha_inter: 5.0e-6,
+            beta_inter_flow: 1.0 / 12.5e9,
+            node_inter_bw: 25.0e9,
+            rails_per_node: 2,
+            congestion_free_nodes: 512,
+            congestion_slope: 1.0,
+        }
+    }
+
+    /// Congestion multiplier for a job spanning `nodes` nodes.
+    pub fn congestion(&self, nodes: usize) -> f64 {
+        if nodes <= self.congestion_free_nodes {
+            1.0
+        } else {
+            1.0 + self.congestion_slope * (nodes - self.congestion_free_nodes) as f64
+                / self.congestion_free_nodes as f64
+        }
+    }
+
+    /// Effective seconds/byte for one flow of `concurrent_flows` leaving a
+    /// node simultaneously, on a fabric of `nodes` nodes.
+    pub fn beta_inter(&self, concurrent_flows: usize, nodes: usize) -> f64 {
+        let per_flow_share = self.node_inter_bw / concurrent_flows.max(1) as f64;
+        let single_rail = 1.0 / self.beta_inter_flow;
+        let bw = per_flow_share.min(single_rail);
+        self.congestion(nodes) / bw
+    }
+
+    /// Time of one p2p hop of `bytes` over `class`, with `concurrent_flows`
+    /// inter-node flows per node and `nodes` total nodes.
+    pub fn hop_time(
+        &self,
+        class: LinkClass,
+        bytes: f64,
+        concurrent_flows: usize,
+        nodes: usize,
+    ) -> f64 {
+        match class {
+            LinkClass::Local => 0.0,
+            LinkClass::IntraNode => self.alpha_intra + bytes * self.beta_intra,
+            LinkClass::InterNode => {
+                self.alpha_inter + bytes * self.beta_inter(concurrent_flows, nodes)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn congestion_kicks_in_past_free_zone() {
+        let m = LinkModel::abci();
+        assert_eq!(m.congestion(256), 1.0);
+        assert_eq!(m.congestion(512), 1.0);
+        assert!((m.congestion(768) - 1.5).abs() < 1e-12);
+        assert!((m.congestion(1024) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flow_sharing_caps_at_single_rail() {
+        let m = LinkModel::abci();
+        // one flow: capped by single-rail 12.5 GB/s, not node 25 GB/s
+        assert!((m.beta_inter(1, 1) - 1.0 / 12.5e9).abs() < 1e-15);
+        // two flows: each gets a full rail
+        assert!((m.beta_inter(2, 1) - 1.0 / 12.5e9).abs() < 1e-15);
+        // four flows: share 25 GB/s -> 6.25 each
+        assert!((m.beta_inter(4, 1) - 1.0 / 6.25e9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn hop_times_ordered_by_class() {
+        let m = LinkModel::abci();
+        let b = 1.0e6;
+        let local = m.hop_time(LinkClass::Local, b, 1, 1);
+        let intra = m.hop_time(LinkClass::IntraNode, b, 1, 1);
+        let inter = m.hop_time(LinkClass::InterNode, b, 1, 1);
+        assert_eq!(local, 0.0);
+        assert!(intra < inter);
+        // 1 MB over NVLink ~ 27 µs; over one EDR rail ~ 85 µs
+        assert!((intra - (2.0e-6 + 1.0e6 / 40.0e9)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,24 @@
+//! ABCI-scale network/compute simulator (DESIGN.md §4 substitution).
+//!
+//! The paper's measurements come from up to 4096 V100s; this testbed has
+//! CPU threads. The *functional* collectives in `collectives::` prove
+//! numerics at thread scale; `simnet` projects step time, throughput and
+//! GPU scaling efficiency to cluster scale with:
+//!
+//! * [`linkmodel`] — α-β link model (NVLink2 / 2×IB-EDR, flow sharing,
+//!   fabric congestion),
+//! * [`compute`]  — V100 ResNet-50 compute-time model calibrated to the
+//!   paper's own single-node row of Table 6,
+//! * [`cost`]     — closed-form per-phase collective pricing → Tables 2 & 6,
+//! * [`event`]    — hop-by-hop discrete-event replay validating the closed
+//!   form.
+
+pub mod compute;
+pub mod cost;
+pub mod event;
+pub mod linkmodel;
+
+pub use compute::{ComputeModel, RESNET50_BN_BYTES_FP32, RESNET50_GRAD_BYTES_FP16};
+pub use cost::{Algo, ClusterModel, CollectiveCost, StepBreakdown};
+pub use event::simulate_collective;
+pub use linkmodel::LinkModel;

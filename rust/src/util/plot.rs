@@ -1,0 +1,121 @@
+//! Tiny ASCII line plots for terminal output (loss curves, efficiency
+//! curves in the benches and examples — no plotting crates offline).
+
+/// Render `series` (x, y) as an ASCII plot of `width`×`height` chars.
+/// Points are bucketed by x; each bucket plots its mean y.
+pub fn line_plot(series: &[(f64, f64)], width: usize, height: usize, title: &str) -> String {
+    if series.is_empty() || width < 8 || height < 2 {
+        return format!("{title}: (no data)\n");
+    }
+    let xs: Vec<f64> = series.iter().map(|p| p.0).collect();
+    let ys: Vec<f64> = series.iter().map(|p| p.1).collect();
+    let (xmin, xmax) = (min(&xs), max(&xs));
+    let (mut ymin, mut ymax) = (min(&ys), max(&ys));
+    if (ymax - ymin).abs() < 1e-12 {
+        ymin -= 0.5;
+        ymax += 0.5;
+    }
+
+    // bucket by x
+    let mut sums = vec![0.0f64; width];
+    let mut counts = vec![0usize; width];
+    for &(x, y) in series {
+        let t = if xmax > xmin { (x - xmin) / (xmax - xmin) } else { 0.0 };
+        let col = ((t * (width - 1) as f64).round() as usize).min(width - 1);
+        sums[col] += y;
+        counts[col] += 1;
+    }
+
+    let mut grid = vec![vec![' '; width]; height];
+    let mut last_row: Option<usize> = None;
+    for col in 0..width {
+        if counts[col] == 0 {
+            continue;
+        }
+        let y = sums[col] / counts[col] as f64;
+        let t = (y - ymin) / (ymax - ymin);
+        let row = height - 1 - ((t * (height - 1) as f64).round() as usize).min(height - 1);
+        grid[row][col] = '*';
+        // connect vertically to the previous column for readability
+        if let Some(prev) = last_row {
+            let (lo, hi) = if prev < row { (prev, row) } else { (row, prev) };
+            for r in lo + 1..hi {
+                if grid[r][col] == ' ' {
+                    grid[r][col] = '|';
+                }
+            }
+        }
+        last_row = Some(row);
+    }
+
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{ymax:>9.3} ")
+        } else if i == height - 1 {
+            format!("{ymin:>9.3} ")
+        } else {
+            " ".repeat(10)
+        };
+        out.push_str(&label);
+        out.push('|');
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&" ".repeat(10));
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!(
+        "{}{:<.6}{}{:>.6}\n",
+        " ".repeat(11),
+        xmin,
+        " ".repeat(width.saturating_sub(14)),
+        xmax
+    ));
+    out
+}
+
+fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_descending_curve() {
+        let series: Vec<(f64, f64)> = (0..100)
+            .map(|i| (i as f64, 2.5 - 0.02 * i as f64))
+            .collect();
+        let p = line_plot(&series, 40, 8, "loss");
+        assert!(p.starts_with("loss\n"));
+        assert!(p.contains('*'));
+        // top-left should contain the max label, bottom the min
+        assert!(p.contains("2.500"));
+        assert!(p.contains("0.520"));
+        let lines: Vec<&str> = p.lines().collect();
+        assert_eq!(lines.len(), 8 + 3);
+    }
+
+    #[test]
+    fn handles_flat_and_empty() {
+        let flat: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, 1.0)).collect();
+        let p = line_plot(&flat, 20, 4, "flat");
+        assert!(p.contains('*'));
+        assert!(line_plot(&[], 20, 4, "none").contains("no data"));
+    }
+
+    #[test]
+    fn single_point() {
+        let p = line_plot(&[(1.0, 5.0)], 20, 4, "pt");
+        assert!(p.contains('*'));
+    }
+}

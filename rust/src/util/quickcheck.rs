@@ -1,0 +1,127 @@
+//! Mini property-testing harness (the offline registry has no proptest).
+//!
+//! Deterministic: each case derives from a fixed master seed, so failures
+//! reproduce exactly. On failure the case index and seed are reported; no
+//! shrinking (cases are kept small by construction instead).
+//!
+//! ```ignore
+//! prop(|g| {
+//!     let n = g.usize_in(1..=1000);
+//!     let xs = g.vec_f32(n, -10.0..10.0);
+//!     // ... assert invariant ...
+//! });
+//! ```
+
+use super::rng::Pcg32;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Per-case generator handed to the property closure.
+pub struct Gen {
+    rng: Pcg32,
+    /// Seed of this case (printed on panic for reproduction).
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Pcg32::new(seed),
+            seed,
+        }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, range: std::ops::RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        assert!(lo <= hi);
+        lo + self.rng.next_below((hi - lo + 1) as u32) as usize
+    }
+
+    pub fn f32_in(&mut self, range: std::ops::Range<f32>) -> f32 {
+        self.rng.range_f32(range.start, range.end)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    pub fn normal(&mut self) -> f32 {
+        self.rng.next_normal()
+    }
+
+    pub fn vec_f32(&mut self, n: usize, range: std::ops::Range<f32>) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(range.clone())).collect()
+    }
+
+    pub fn vec_normal(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.rng.next_below(xs.len() as u32) as usize]
+    }
+}
+
+/// Run `cases` instances of the property with seeds derived from `master`.
+pub fn prop_seeded(master: u64, cases: usize, mut f: impl FnMut(&mut Gen)) {
+    let mut seeder = super::rng::SplitMix64::new(master);
+    for case in 0..cases {
+        let seed = seeder.next_u64();
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+        if let Err(payload) = result {
+            eprintln!(
+                "property failed at case {case}/{cases}, seed {seed:#018x} \
+                 (reproduce with Gen::new({seed:#x}))"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Run with the default master seed and case count.
+pub fn prop(f: impl FnMut(&mut Gen)) {
+    prop_seeded(0xF1A5_46D0_5EED, DEFAULT_CASES, f);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases_deterministically() {
+        let mut seen_a = Vec::new();
+        prop_seeded(1, 10, |g| seen_a.push(g.u64()));
+        let mut seen_b = Vec::new();
+        prop_seeded(1, 10, |g| seen_b.push(g.u64()));
+        assert_eq!(seen_a, seen_b);
+        assert_eq!(seen_a.len(), 10);
+    }
+
+    #[test]
+    fn ranges_respected() {
+        prop(|g| {
+            let n = g.usize_in(3..=7);
+            assert!((3..=7).contains(&n));
+            let x = g.f32_in(-1.0..1.0);
+            assert!((-1.0..1.0).contains(&x));
+            let v = g.vec_f32(n, 0.0..2.0);
+            assert_eq!(v.len(), n);
+            assert!(v.iter().all(|x| (0.0..2.0).contains(x)));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        prop_seeded(2, 20, |g| {
+            assert!(g.usize_in(0..=9) < 9, "intentional failure");
+        });
+    }
+}

@@ -1,0 +1,168 @@
+//! Bench timing helpers (the offline registry has no criterion).
+//!
+//! `bench()` runs warmup + timed iterations and reports mean/stddev/p50/p95;
+//! used by every target in `rust/benches/` (all declared `harness = false`).
+
+use std::time::Instant;
+
+use super::stats;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+
+    /// Pretty one-line summary: `name  mean ± sd  [p50 p95]`.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12} ± {:>10}  p50 {:>12}  p95 {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.stddev_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            self.iters
+        )
+    }
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: stats::mean(&samples),
+        stddev_ns: stats::stddev(&samples),
+        p50_ns: stats::percentile(&samples, 50.0),
+        p95_ns: stats::percentile(&samples, 95.0),
+        min_ns: stats::min(&samples),
+    }
+}
+
+/// Time `f` adaptively: enough iterations to spend ~`target_ms` total,
+/// bounded to `[min_iters, max_iters]`.
+pub fn bench_adaptive(name: &str, target_ms: f64, mut f: impl FnMut()) -> BenchResult {
+    // One calibration run.
+    let t0 = Instant::now();
+    f();
+    let once_ns = t0.elapsed().as_nanos().max(1) as f64;
+    let iters = ((target_ms * 1e6 / once_ns) as usize).clamp(3, 1000);
+    bench(name, 1, iters, f)
+}
+
+/// A wall-clock stopwatch with named laps (step-time breakdowns).
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+    pub laps: Vec<(String, f64)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Self {
+            start: now,
+            last: now,
+            laps: Vec::new(),
+        }
+    }
+
+    /// Record time since the previous lap under `name`; returns seconds.
+    pub fn lap(&mut self, name: &str) -> f64 {
+        let now = Instant::now();
+        let secs = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.laps.push((name.to_string(), secs));
+        secs
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Sum of laps recorded under `name`.
+    pub fn lap_total(&self, name: &str) -> f64 {
+        self.laps
+            .iter()
+            .filter(|(n, _)| n == name)
+            .map(|(_, s)| s)
+            .sum()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", 2, 16, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(r.iters, 16);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p95_ns + 1.0);
+        assert!(r.min_ns <= r.mean_ns + 1.0);
+        assert!(r.line().contains("noop-ish"));
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+
+    #[test]
+    fn stopwatch_laps_accumulate() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let a = sw.lap("x");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let b = sw.lap("x");
+        assert!(a > 0.0 && b > 0.0);
+        assert!((sw.lap_total("x") - (a + b)).abs() < 1e-9);
+        assert!(sw.total_secs() >= a + b);
+    }
+}

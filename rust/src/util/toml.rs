@@ -1,0 +1,312 @@
+//! Minimal TOML-subset parser for run configuration files.
+//!
+//! Supported: `[section]` and `[section.sub]` headers, `key = value` with
+//! string / integer / float / bool / homogeneous-array values, `#` comments.
+//! This covers everything `configs/*.toml` uses; anything else is a parse
+//! error (fail-fast beats silently mis-reading a training config).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A TOML scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Value::Int(x) => Ok(*x),
+            _ => bail!("expected integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let x = self.as_i64()?;
+        usize::try_from(x).map_err(|_| anyhow!("expected non-negative integer, got {x}"))
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Float(x) => Ok(*x),
+            Value::Int(x) => Ok(*x as f64),
+            _ => bail!("expected float, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Value]> {
+        match self {
+            Value::Arr(v) => Ok(v),
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+}
+
+/// A parsed document: dotted-section-qualified keys → values.
+/// `[a.b]\nc = 1` is stored under key `"a.b.c"`.
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    map: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section header", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| anyhow!("line {}: expected `key = value`", lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            if map.insert(full.clone(), value).is_some() {
+                bail!("line {}: duplicate key {full:?}", lineno + 1);
+            }
+        }
+        Ok(Doc { map })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&Value> {
+        self.get(key).ok_or_else(|| anyhow!("missing config key {key:?}"))
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> Result<String> {
+        match self.get(key) {
+            Some(v) => Ok(v.as_str()?.to_string()),
+            None => Ok(default.to_string()),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.as_usize(),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.as_f64(),
+            None => Ok(default),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            Some(v) => v.as_bool(),
+            None => Ok(default),
+        }
+    }
+
+    /// All keys under `prefix.` (used to enumerate schedule phases).
+    pub fn keys_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        let want = format!("{prefix}.");
+        self.map
+            .keys()
+            .filter(move |k| k.starts_with(&want))
+            .map(|k| k.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = rest
+            .find('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        if !rest[end + 1..].trim().is_empty() {
+            bail!("trailing garbage after string");
+        }
+        return Ok(Value::Str(rest[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array"))?;
+        let mut vals = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                vals.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(vals));
+    }
+    // Number: int if it parses as i64 and has no '.', 'e'.
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(x) = s.replace('_', "").parse::<i64>() {
+            return Ok(Value::Int(x));
+        }
+    }
+    if let Ok(x) = s.replace('_', "").parse::<f64>() {
+        return Ok(Value::Float(x));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+/// Split a flat array body on commas (no nested arrays in our configs).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_document() {
+        let doc = Doc::parse(
+            r#"
+# run config
+name = "exp2"
+steps = 300
+
+[cluster]
+ranks = 8
+grid = [2, 4]
+
+[sched.lr]
+kind = "config_b"
+base = 29.0
+warmup_epochs = 5
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("name").unwrap().as_str().unwrap(), "exp2");
+        assert_eq!(doc.get("steps").unwrap().as_i64().unwrap(), 300);
+        assert_eq!(doc.get("cluster.ranks").unwrap().as_usize().unwrap(), 8);
+        let grid = doc.get("cluster.grid").unwrap().as_arr().unwrap();
+        assert_eq!(grid.len(), 2);
+        assert_eq!(grid[1].as_i64().unwrap(), 4);
+        assert_eq!(doc.get("sched.lr.base").unwrap().as_f64().unwrap(), 29.0);
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let doc = Doc::parse("s = \"a # b\" # real comment\n").unwrap();
+        assert_eq!(doc.get("s").unwrap().as_str().unwrap(), "a # b");
+    }
+
+    #[test]
+    fn int_float_bool() {
+        let doc = Doc::parse("a = 1\nb = 1.5\nc = true\nd = -3\ne = 1e-4\n").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(doc.get("b").unwrap().as_f64().unwrap(), 1.5);
+        assert!(doc.get("c").unwrap().as_bool().unwrap());
+        assert_eq!(doc.get("d").unwrap().as_i64().unwrap(), -3);
+        assert_eq!(doc.get("e").unwrap().as_f64().unwrap(), 1e-4);
+        // ints coerce to f64 on demand
+        assert_eq!(doc.get("a").unwrap().as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(Doc::parse("[unclosed\n").is_err());
+        assert!(Doc::parse("novalue\n").is_err());
+        assert!(Doc::parse("k = \n").is_err());
+        assert!(Doc::parse("k = 1\nk = 2\n").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let doc = Doc::parse("x = 5\n").unwrap();
+        assert_eq!(doc.usize_or("x", 1).unwrap(), 5);
+        assert_eq!(doc.usize_or("y", 7).unwrap(), 7);
+        assert_eq!(doc.f64_or("z", 0.5).unwrap(), 0.5);
+        assert_eq!(doc.str_or("s", "d").unwrap(), "d");
+        assert!(doc.bool_or("b", true).unwrap());
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let doc = Doc::parse("[p]\na = 1\nb = 2\n[q]\nc = 3\n").unwrap();
+        let keys: Vec<&str> = doc.keys_under("p").collect();
+        assert_eq!(keys, vec!["p.a", "p.b"]);
+    }
+}

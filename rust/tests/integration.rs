@@ -1,0 +1,287 @@
+//! Integration tests: the full Trainer stack over real PJRT artifacts.
+//!
+//! These need `make artifacts` to have produced `artifacts/manifest.json`;
+//! when artifacts are missing every test skips with a notice (so `cargo
+//! test` stays usable in a fresh checkout).
+
+use flashsgd::config::TrainConfig;
+use flashsgd::coordinator::Trainer;
+use flashsgd::sched::{BatchSchedule, LrSchedule, Phase};
+
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(ARTIFACTS).join("manifest.json").exists()
+}
+
+fn base_config(name: &str, ranks: usize, steps: usize) -> TrainConfig {
+    TrainConfig {
+        name: name.into(),
+        arch: "tiny".into(),
+        collective: "torus".into(),
+        grad_wire: "fp16".into(),
+        label_smoothing: 0.1,
+        lr: LrSchedule::Const { lr: 4.0, momentum: 0.9 },
+        batch: BatchSchedule::constant(8, ranks, 8),
+        weight_decay: 5e-5,
+        seed: 7,
+        max_steps: steps,
+        eval_every: 0,
+        eval_batches: 4,
+        train_size: 2048,
+    }
+}
+
+#[test]
+fn quickstart_reduces_loss() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let report = Trainer::new(base_config("it-quickstart", 4, 25), ARTIFACTS)
+        .unwrap()
+        .run()
+        .unwrap();
+    let s = &report.summary;
+    assert_eq!(s.steps, 25);
+    assert!(s.first_loss.is_finite() && s.last_loss.is_finite());
+    assert!(
+        s.last_loss < s.first_loss,
+        "loss {:.4} -> {:.4}",
+        s.first_loss,
+        s.last_loss
+    );
+    // loss starts near ln(10) + smoothing offset for 10 classes
+    assert!(s.first_loss > 1.5 && s.first_loss < 4.0, "{}", s.first_loss);
+}
+
+#[test]
+fn batch_size_control_swaps_executables_mid_run() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut config = base_config("it-bsc", 4, 0);
+    // 2048 samples, 8x4=32/step -> 64 steps/epoch; switch at epoch 1.
+    config.batch = BatchSchedule::new(
+        vec![
+            Phase { from_epoch: 0, per_worker: 8, workers: 4 },
+            Phase { from_epoch: 1, per_worker: 16, workers: 4 },
+        ],
+        2,
+    );
+    let report = Trainer::new(config, ARTIFACTS).unwrap().run().unwrap();
+    let batches: Vec<usize> = report.metrics.steps.iter().map(|s| s.global_batch).collect();
+    assert!(batches.contains(&32), "phase 1 batches: {batches:?}");
+    assert!(batches.contains(&64), "phase 2 missing: {batches:?}");
+    // the switch happens exactly once, at the epoch boundary
+    let switches = batches.windows(2).filter(|w| w[0] != w[1]).count();
+    assert_eq!(switches, 1, "{batches:?}");
+    // training continued sanely across the swap
+    assert!(report.summary.last_loss.is_finite());
+    assert!(report.summary.last_loss < report.summary.first_loss);
+}
+
+#[test]
+fn collective_choice_does_not_change_numerics_much() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = |spec: &str| {
+        let mut c = base_config("it-coll", 4, 12);
+        c.collective = spec.into();
+        c.grad_wire = "fp32".into();
+        Trainer::new(c, ARTIFACTS).unwrap().run().unwrap()
+    };
+    let torus = run("torus:2x2");
+    let ring = run("ring");
+    let hier = run("hierarchical:2");
+    // identical data/seed; only reduction order differs (fp32 rounding)
+    let t0 = torus.metrics.steps[0].loss;
+    assert!((t0 - ring.metrics.steps[0].loss).abs() < 1e-5);
+    assert!((t0 - hier.metrics.steps[0].loss).abs() < 1e-5);
+    let tl = torus.summary.last_loss;
+    assert!((tl - ring.summary.last_loss).abs() < 2e-2, "{tl} vs {}", ring.summary.last_loss);
+    assert!((tl - hier.summary.last_loss).abs() < 2e-2);
+}
+
+#[test]
+fn fp16_wire_tracks_fp32_training() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = |wire: &str| {
+        let mut c = base_config("it-wire", 4, 12);
+        c.grad_wire = wire.into();
+        Trainer::new(c, ARTIFACTS).unwrap().run().unwrap()
+    };
+    let h = run("fp16");
+    let f = run("fp32");
+    // same trajectory within fp16 quantisation noise
+    assert!(
+        (h.summary.last_loss - f.summary.last_loss).abs() < 5e-2,
+        "fp16 {:.4} vs fp32 {:.4}",
+        h.summary.last_loss,
+        f.summary.last_loss
+    );
+}
+
+#[test]
+fn eval_beats_chance_after_training() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut config = base_config("it-eval", 4, 60);
+    config.eval_batches = 8;
+    let report = Trainer::new(config, ARTIFACTS).unwrap().run().unwrap();
+    let acc = report.final_eval.expect("final eval").accuracy;
+    // 10 classes: chance = 10%; the synthetic task is easy
+    assert!(acc > 0.15, "top-1 {:.1}% not above chance", acc * 100.0);
+}
+
+#[test]
+fn invalid_grid_is_a_clean_error() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut config = base_config("it-badgrid", 4, 5);
+    config.collective = "torus:3x3".into(); // 9 != 4 ranks
+    let err = Trainer::new(config, ARTIFACTS).unwrap().run().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("torus"), "unexpected error: {msg}");
+}
+
+#[test]
+fn unknown_arch_fails_at_construction() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut config = base_config("it-badarch", 2, 2);
+    config.arch = "resnet9000".into();
+    assert!(Trainer::new(config, ARTIFACTS).is_err());
+}
+
+#[test]
+fn single_rank_degenerate_case_works() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut config = base_config("it-1rank", 1, 8);
+    config.collective = "torus:1x1".into();
+    let report = Trainer::new(config, ARTIFACTS).unwrap().run().unwrap();
+    assert_eq!(report.summary.steps, 8);
+    assert!(report.summary.last_loss.is_finite());
+}
+
+#[test]
+fn determinism_same_seed_same_curve() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = || {
+        Trainer::new(base_config("it-det", 4, 8), ARTIFACTS)
+            .unwrap()
+            .run()
+            .unwrap()
+            .metrics
+            .steps
+            .iter()
+            .map(|s| s.loss)
+            .collect::<Vec<f64>>()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same seed must give a bit-identical loss curve");
+}
+
+#[test]
+fn checkpoint_resume_is_exactly_continuous() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = std::env::temp_dir().join(format!("fsgd-it-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("mid.ckpt");
+
+    // Continuous 16-step run.
+    let continuous = Trainer::new(base_config("it-cont", 4, 16), ARTIFACTS)
+        .unwrap()
+        .run()
+        .unwrap();
+
+    // 8 steps + save, then resume for the remaining 8.
+    Trainer::new(base_config("it-part1", 4, 8), ARTIFACTS)
+        .unwrap()
+        .with_checkpoint(&ckpt)
+        .run()
+        .unwrap();
+    let resumed = Trainer::new(base_config("it-part2", 4, 16), ARTIFACTS)
+        .unwrap()
+        .with_resume(&ckpt)
+        .run()
+        .unwrap();
+
+    // The resumed run must reproduce steps 8..16 bit-for-bit.
+    let cont_tail: Vec<(usize, f64)> = continuous
+        .metrics
+        .steps
+        .iter()
+        .skip(8)
+        .map(|s| (s.step, s.loss))
+        .collect();
+    let res_all: Vec<(usize, f64)> = resumed
+        .metrics
+        .steps
+        .iter()
+        .map(|s| (s.step, s.loss))
+        .collect();
+    assert_eq!(res_all.len(), 8);
+    assert_eq!(cont_tail, res_all);
+
+    // resuming past the end is a clean error
+    let done = dir.join("done.ckpt");
+    Trainer::new(base_config("it-done", 4, 16), ARTIFACTS)
+        .unwrap()
+        .with_checkpoint(&done)
+        .run()
+        .unwrap();
+    let err = Trainer::new(base_config("it-past", 4, 16), ARTIFACTS)
+        .unwrap()
+        .with_resume(&done)
+        .run()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("end of this schedule"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn halving_doubling_collective_trains_too() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut config = base_config("it-hd", 4, 10);
+    config.collective = "halving-doubling".into();
+    let report = Trainer::new(config, ARTIFACTS).unwrap().run().unwrap();
+    assert!(report.summary.last_loss < report.summary.first_loss);
+}
+
+#[test]
+fn config_b_momentum_applied_from_schedule() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut config = base_config("it-cfgb", 4, 6);
+    config.lr = LrSchedule::ConfigB {
+        warmup_epochs: 1.0,
+        warmup_start: 0.1,
+        base_low: 1.0,
+        base_high: 2.0,
+        switch_epoch: 3.0,
+        total_epochs: 8.0,
+    };
+    let report = Trainer::new(config, ARTIFACTS).unwrap().run().unwrap();
+    // global batch 32 << 32K reference -> momentum clamps to 0.0
+    for s in &report.metrics.steps {
+        assert_eq!(s.momentum, 0.0);
+        assert!(s.lr > 0.0 && s.lr < 1.0);
+    }
+}
