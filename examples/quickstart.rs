@@ -1,11 +1,11 @@
 //! Quickstart: the smallest end-to-end run.
 //!
-//! Trains the `tiny` ResNet on 4 workers arranged in the paper's 2×2
+//! Trains the `tiny` net on 4 workers arranged in the paper's 2×2
 //! 2D-torus (Figure 2's example grid) for 30 steps, with label smoothing,
-//! FP16 gradient exchange and the Pallas LARS optimizer — every layer of
-//! the stack in one minute.
+//! FP16 gradient exchange and LARS, on the pure-Rust reference backend —
+//! every layer of the stack, from a clean checkout, in seconds:
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 
 use anyhow::Result;
 use flashsgd::prelude::*;
@@ -19,7 +19,7 @@ fn main() -> Result<()> {
         config.max_steps
     );
 
-    let trainer = Trainer::new(config, flashsgd::artifacts_dir())?;
+    let trainer = Trainer::new(config)?;
     let report = trainer.run()?;
 
     println!("{}", report.format());

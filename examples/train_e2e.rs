@@ -7,9 +7,9 @@
 //! (linearly rescaled from the 54K-batch values), LARS in the Pallas
 //! kernel, FP16 gradient wire, FP32 BN-stat wire.
 //!
-//!     make artifacts && cargo run --release --example train_e2e
+//!     cargo run --release --example train_e2e
 //!
-//! Flags: --arch tiny|resnet20  --ranks N  --epochs E  --csv PATH
+//! Flags: --arch tiny  --ranks N  --epochs E  --csv PATH
 
 use anyhow::Result;
 use flashsgd::prelude::*;
@@ -47,7 +47,7 @@ fn main() -> Result<()> {
         );
     }
 
-    let trainer = Trainer::new(config, flashsgd::artifacts_dir())?;
+    let trainer = Trainer::new(config)?;
     let report = trainer.run()?;
 
     println!("\n{}", report.format());

@@ -48,7 +48,7 @@ fn run_case(name: &str, ls: f32, bsc: bool, ranks: usize) -> Option<(f64, f64)> 
         eval_batches: 8,
         train_size: 4096,
     };
-    let trainer = Trainer::new(config, flashsgd::artifacts_dir()).ok()?;
+    let trainer = Trainer::new(config).ok()?;
     let report = trainer.run().ok()?;
     let acc = report.final_eval.as_ref().map(|e| e.accuracy).unwrap_or(0.0);
     Some((acc, report.summary.last_loss))
@@ -81,7 +81,7 @@ fn main() {
                 );
                 results.push((name, acc));
             }
-            None => eprintln!("{name}: skipped (run `make artifacts` first?)"),
+            None => eprintln!("{name}: skipped (trainer failed)"),
         }
     }
     if results.len() == 4 {

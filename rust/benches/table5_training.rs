@@ -5,7 +5,7 @@
 //! scaled to a thread mesh, synthetic 10-class dataset) and reports final
 //! accuracy next to the paper's, plus the simnet-modelled full-scale time.
 //!
-//! Requires artifacts: `make artifacts` first.
+//! Runs on the pure-Rust reference backend — no artifacts needed.
 //!
 //!     cargo bench --bench table5_training
 //!
@@ -39,7 +39,7 @@ fn main() {
         let mut config = TrainConfig::twin_of(&paper, ranks, &arch, epochs);
         config.train_size = 4096;
         config.eval_batches = 8;
-        let trainer = match Trainer::new(config, flashsgd::artifacts_dir()) {
+        let trainer = match Trainer::new(config) {
             Ok(t) => t,
             Err(e) => {
                 eprintln!("skipping {}: {e:#}", paper.name);

@@ -59,6 +59,9 @@ pub struct Counters {
     pub bytes_sent: AtomicU64,
     pub bytes_received: AtomicU64,
     pub messages: AtomicU64,
+    /// Highest tag any rank has sent with — lets tests verify that a
+    /// collective stays inside its declared `tag_span` window.
+    pub max_tag: AtomicU64,
 }
 
 impl Counters {
@@ -70,10 +73,16 @@ impl Counters {
         )
     }
 
+    /// Highest tag observed on any send since the last reset.
+    pub fn max_tag_seen(&self) -> u64 {
+        self.max_tag.load(Ordering::Relaxed)
+    }
+
     pub fn reset(&self) {
         self.bytes_sent.store(0, Ordering::Relaxed);
         self.bytes_received.store(0, Ordering::Relaxed);
         self.messages.store(0, Ordering::Relaxed);
+        self.max_tag.store(0, Ordering::Relaxed);
     }
 }
 
@@ -150,6 +159,7 @@ impl Endpoint {
             .map_err(|_| anyhow!("rank {dst} hung up (worker thread died?)"))?;
         self.counters.bytes_sent.fetch_add(bytes, Ordering::Relaxed);
         self.counters.messages.fetch_add(1, Ordering::Relaxed);
+        self.counters.max_tag.fetch_max(tag, Ordering::Relaxed);
         Ok(())
     }
 

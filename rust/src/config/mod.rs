@@ -14,7 +14,8 @@ use crate::util::toml::Doc;
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     pub name: String,
-    /// Manifest architecture ("tiny" | "resnet20").
+    /// Manifest architecture ("tiny" on the default reference backend;
+    /// whatever the artifact manifest provides under `--features pjrt`).
     pub arch: String,
     /// Collective spec ("torus" | "torus:<X>x<Y>" | "ring" | "hierarchical:<g>").
     pub collective: String,
@@ -44,7 +45,7 @@ impl TrainConfig {
             collective: "torus:2x2".into(),
             grad_wire: "fp16".into(),
             label_smoothing: 0.1,
-            lr: LrSchedule::Const { lr: 4.0, momentum: 0.9 },
+            lr: LrSchedule::Const { lr: 1.0, momentum: 0.9 },
             batch: BatchSchedule::constant(8, 4, 2),
             weight_decay: 5e-5,
             seed: 42,

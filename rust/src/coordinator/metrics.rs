@@ -1,9 +1,10 @@
 //! Training metrics: loss curve, throughput, step-time breakdown.
 //!
 //! Rank 0 records one [`StepMetric`] per optimizer step (loss is the
-//! cross-worker mean — it rides along in the gradient all-reduce buffer, so
-//! it costs one extra element). `Metrics::summary()` feeds the run report
-//! and EXPERIMENTS.md; `to_csv()` dumps the raw curve.
+//! cross-worker mean — it rides along in the FP32 BN-statistic all-reduce
+//! buffer, so it costs one extra element and is never quantised by the
+//! FP16 gradient wire). `Metrics::summary()` feeds the run report and
+//! EXPERIMENTS.md; `to_csv()` dumps the raw curve.
 
 use crate::util::stats;
 

@@ -1,13 +1,17 @@
 //! The training coordinator (Layer 3 leader).
 //!
-//! [`Trainer`] owns a run end-to-end: it loads the artifact manifest,
-//! starts the PJRT compute service, materialises the initial parameters
-//! (the `init` artifact — same He init as the paper's [10]), then executes
-//! the batch-size schedule phase by phase. Each phase spawns one thread per
-//! simulated GPU over a fresh [`Mesh`]; phase boundaries are where
-//! batch-size control swaps every worker's `grad_step` executable (and,
-//! like the paper's Exp. 2–4, may change the worker count). Parameters are
-//! replicated, so phase handoff is rank 0's state.
+//! [`Trainer`] owns a run end-to-end: it resolves a manifest and a compute
+//! backend (the pure-Rust [`crate::runtime::ReferenceBackend`] by default;
+//! PJRT over AOT artifacts with `--features pjrt`), starts the compute
+//! service, materialises the initial parameters (the `init` entry point —
+//! same He init as the paper's [10]), then executes the batch-size
+//! schedule phase by phase. Each phase spawns one thread per simulated GPU
+//! over a fresh [`Mesh`]; phase boundaries are where batch-size control
+//! swaps every worker's `grad_step` executable (and, like the paper's
+//! Exp. 2–4, may change the worker count). Parameters are replicated, so
+//! phase handoff is rank 0's state — and the coordinator *enforces* the
+//! replication invariant by checking, at every phase boundary, that all
+//! ranks hold bit-identical parameters, momenta and BN statistics.
 //!
 //! Evaluation runs on rank 0's parameters with the *synchronized running
 //! BN statistics* — the "Batch Normalization without Moving Average"
@@ -28,7 +32,7 @@ use crate::cluster::best_grid;
 use crate::collectives::{self, Collective, Mesh, Wire};
 use crate::config::TrainConfig;
 use crate::data::{Augment, Batch, Loader, SynthDataset};
-use crate::runtime::{ComputeClient, ComputeService, HostTensor, Manifest};
+use crate::runtime::{BackendSpec, ComputeClient, ComputeService, HostTensor, Manifest};
 use crate::util::timer::Stopwatch;
 
 use worker::{PhaseCtx, WorkerOutput, WorkerState};
@@ -79,17 +83,40 @@ struct PhasePlan {
 pub struct Trainer {
     config: TrainConfig,
     manifest: Manifest,
+    backend: BackendSpec,
     save_to: Option<std::path::PathBuf>,
     resume_from: Option<std::path::PathBuf>,
 }
 
 impl Trainer {
-    pub fn new(config: TrainConfig, artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+    /// Train on the pure-Rust [`crate::runtime::ReferenceBackend`] with its
+    /// built-in synthesized manifest — the default: no Python, no artifact
+    /// files, no XLA.
+    pub fn new(config: TrainConfig) -> Result<Self> {
+        let manifest = crate::runtime::builtin_manifest();
+        manifest.arch(&config.arch)?; // fail fast on unknown arch
+        Ok(Self {
+            config,
+            manifest,
+            backend: BackendSpec::Reference,
+            save_to: None,
+            resume_from: None,
+        })
+    }
+
+    /// Train on the PJRT backend over AOT artifacts in `artifacts_dir`
+    /// (requires building with `--features pjrt` and the real `xla` crate).
+    #[cfg(feature = "pjrt")]
+    pub fn with_pjrt(
+        config: TrainConfig,
+        artifacts_dir: impl AsRef<std::path::Path>,
+    ) -> Result<Self> {
         let manifest = Manifest::load(artifacts_dir)?;
         manifest.arch(&config.arch)?; // fail fast on unknown arch
         Ok(Self {
             config,
             manifest,
+            backend: BackendSpec::Pjrt,
             save_to: None,
             resume_from: None,
         })
@@ -224,8 +251,13 @@ impl Trainer {
 
         let preload = self.preload_names(&plans)?;
         let preload_refs: Vec<&str> = preload.iter().map(|s| s.as_str()).collect();
-        let svc = ComputeService::start(self.manifest.clone(), &cfg.arch, &preload_refs)
-            .context("starting compute service")?;
+        let svc = ComputeService::start(
+            self.backend,
+            self.manifest.clone(),
+            &cfg.arch,
+            &preload_refs,
+        )
+        .context("starting compute service")?;
         let client = svc.client();
         let mut sw = Stopwatch::new();
 
@@ -291,15 +323,25 @@ impl Trainer {
                 dataset_size: cfg.train_size,
             });
 
-            let outputs = run_phase_on_mesh(&ctx, &client, &dataset, cfg.seed, state)?;
-            // rank 0 carries the canonical state forward
-            let mut rank0 = None;
-            for o in outputs {
-                if o.rank == 0 {
-                    rank0 = Some(o);
+            let mut outputs = run_phase_on_mesh(&ctx, &client, &dataset, cfg.seed, state)?;
+            // Parameters are replicated: identical reduced gradients plus an
+            // identical update must leave every rank with bit-identical
+            // state. Enforce the invariant before carrying rank 0 forward.
+            outputs.sort_by_key(|o| o.rank);
+            for o in &outputs[1..] {
+                if !tensors_bit_identical(&o.state.params, &outputs[0].state.params)
+                    || !tensors_bit_identical(&o.state.momenta, &outputs[0].state.momenta)
+                    || !tensors_bit_identical(&o.state.bn_running, &outputs[0].state.bn_running)
+                {
+                    bail!(
+                        "replicated-parameter invariant violated: rank {} diverged \
+                         from rank 0 after step {}",
+                        o.rank,
+                        plan.first_step + plan.steps
+                    );
                 }
             }
-            let o = rank0.expect("rank 0 output missing");
+            let o = outputs.swap_remove(0);
             all_metrics.merge(o.metrics);
             state = o.state;
 
@@ -382,6 +424,23 @@ impl Trainer {
             accuracy: correct / total as f64,
         })
     }
+}
+
+/// Bitwise equality of two f32 tensor lists. Compares the raw bits rather
+/// than `==`, so a run whose ranks all hold identically-NaN state reports
+/// as a NaN loss downstream instead of a phantom "rank diverged" error.
+fn tensors_bit_identical(a: &[HostTensor], b: &[HostTensor]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.shape() == y.shape()
+                && match (x.as_f32(), y.as_f32()) {
+                    (Ok(xs), Ok(ys)) => {
+                        xs.len() == ys.len()
+                            && xs.iter().zip(ys).all(|(p, q)| p.to_bits() == q.to_bits())
+                    }
+                    _ => x == y,
+                }
+        })
 }
 
 /// Spawn `ctx.workers` rank threads over a fresh mesh and run the phase.

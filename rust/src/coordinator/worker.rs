@@ -2,12 +2,14 @@
 //!
 //! Per step (the paper's data-parallel structure, §2):
 //!   1. load the next local batch (shard of the synthetic set),
-//!   2. `grad_step` artifact → loss, local grads, local BN stats,
+//!   2. `grad_step` executable → loss, local grads, local BN stats,
 //!   3. all-reduce grads via the configured collective, **FP16 wire**,
-//!      with the step loss riding in the same buffer (1 extra element),
 //!   4. all-reduce BN stats, **FP32 wire** (paper §3.2 precision split),
-//!   5. scale by 1/N, `apply_step` artifact (Pallas LARS) with the
-//!      schedule's (lr, momentum) for this step's epoch.
+//!      with the scalar step loss riding in this buffer (1 extra element)
+//!      so the reported `loss_mean` is never quantised by the FP16
+//!      gradient wire,
+//!   5. scale by 1/N, `apply_step` executable (LARS) with the schedule's
+//!      (lr, momentum) for this step's epoch.
 //!
 //! Parameters stay replicated: identical reduced grads + identical update
 //! = identical weights on every rank (asserted in integration tests).
@@ -180,24 +182,26 @@ pub fn run_phase(
             .with_context(|| format!("rank {rank} step {global_step}: grad_step"))?;
         let t_compute = sw.lap("compute");
 
-        // 3. gradient all-reduce (FP16 wire), loss rides along
+        // 3. gradient all-reduce (FP16 wire)
         let loss_local = out[0].scalar()?;
         let grads = &out[1..1 + n_params];
         let bn_stats = &out[1 + n_params..1 + n_params + n_bn];
-        let offsets = flatten_into(grads, &mut grad_flat)?;
-        grad_flat.push(loss_local);
+        flatten_into(grads, &mut grad_flat)?;
         ctx.collective
             .all_reduce(ep, &mut grad_flat, ctx.grad_wire, tag)?;
         tag += ctx.collective.tag_span(ctx.workers);
-        let loss_mean = grad_flat.pop().unwrap() as f64 * inv_n as f64;
         for g in grad_flat.iter_mut() {
             *g *= inv_n;
         }
 
-        // 4. BN-stat all-reduce (FP32 wire, paper §3.2)
+        // 4. BN-stat all-reduce (FP32 wire, paper §3.2). The scalar step
+        // loss rides in this buffer — NOT in the gradient buffer — so the
+        // reported loss is a pure-FP32 reduction even on the FP16 wire.
         flatten_into(bn_stats, &mut bn_flat)?;
+        bn_flat.push(loss_local);
         ctx.collective.all_reduce(ep, &mut bn_flat, Wire::F32, tag)?;
         tag += ctx.collective.tag_span(ctx.workers);
+        let loss_mean = f64::from(bn_flat.pop().unwrap()) / ctx.workers as f64;
         for s in bn_flat.iter_mut() {
             *s *= inv_n;
         }
@@ -221,9 +225,8 @@ pub fn run_phase(
         }
         let t_comm = sw.lap("comm");
 
-        // 5. LARS update (Pallas kernel inside the apply artifact)
+        // 5. LARS update (the backend's apply entry point)
         let mut grads_avg = Vec::with_capacity(n_params);
-        let _ = offsets; // offsets define the same split as the templates
         unflatten_from(&grad_flat, grads, &mut grads_avg)?;
         let mut ap_in =
             Vec::with_capacity(2 * n_params + n_params + 3);

@@ -1,24 +1,34 @@
 //! # flash-sgd
 //!
 //! Reproduction of **"Massively Distributed SGD: ImageNet/ResNet-50
-//! Training in a Flash"** (Mikami et al., Sony, 2018) as a three-layer
-//! Rust + JAX + Pallas system:
+//! Training in a Flash"** (Mikami et al., Sony, 2018) as a Rust system
+//! with pluggable compute backends:
 //!
 //! * **Layer 3 (this crate)** — the distributed-training coordinator:
 //!   2D-Torus / ring / hierarchical all-reduce over an in-memory rank mesh,
 //!   batch-size control, LR/momentum schedules, LARS, data pipeline, and an
 //!   ABCI-scale network simulator that regenerates the paper's tables.
-//! * **Layer 2 (`python/compile/`)** — the ResNet model (BN without moving
-//!   average) lowered once to HLO text via `jax.jit(...).lower(...)`.
-//! * **Layer 1 (`python/compile/kernels/`)** — Pallas kernels for LARS and
-//!   label-smoothed softmax cross-entropy, baked into the same artifacts.
+//! * **Compute backends (`runtime::backend`)** — the coordinator drives a
+//!   [`runtime::ComputeBackend`] through `runtime::ComputeService`:
+//!   * `runtime::ReferenceBackend` (**default**) — a pure-Rust dense
+//!     ResNet-ish forward/backward with label-smoothed softmax CE and the
+//!     LARS update, serving the `init` / `grad_b{B}_ls{S}` / `apply` /
+//!     `eval_b{B}` contract against a synthesized in-memory
+//!     [`runtime::Manifest`]. The whole training stack — multi-phase
+//!     batch-size control, FP16 gradient wire, checkpoint/resume — runs
+//!     and is tested under `cargo test` with no Python, no artifact files,
+//!     no XLA.
+//!   * `runtime::engine` (**`--features pjrt`**) — loads
+//!     `artifacts/*.hlo.txt` lowered by `python/compile/aot.py` (JAX +
+//!     Pallas kernels for LARS and label-smoothed softmax CE) through the
+//!     PJRT C API. The workspace vendors an API stub of the `xla` crate so
+//!     this feature always compiles; swap in the real crate to execute.
 //!
-//! Python never runs at training time: `runtime::Engine` loads
-//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and the
+//! Python never runs at training time under either backend; the
 //! coordinator drives everything from Rust worker threads.
 //!
-//! See `DESIGN.md` for the full inventory and `EXPERIMENTS.md` for the
-//! paper-vs-measured results.
+//! See `README.md` for the build matrix and `DESIGN.md` for the full
+//! inventory.
 
 pub mod cluster;
 pub mod collectives;
@@ -33,8 +43,10 @@ pub mod simnet;
 pub mod util;
 
 /// Locate the AOT artifacts directory: `$FLASHSGD_ARTIFACTS`, then
-/// `./artifacts`, then `<repo>/artifacts` (compile-time fallback so the
-/// examples and benches work from any working directory).
+/// `./artifacts`, then `<crate>/artifacts` (compile-time fallback so the
+/// examples and benches work from any working directory). Only meaningful
+/// for the `pjrt` backend; the default reference backend needs no
+/// artifacts.
 pub fn artifacts_dir() -> std::path::PathBuf {
     if let Ok(dir) = std::env::var("FLASHSGD_ARTIFACTS") {
         return dir.into();
@@ -55,7 +67,9 @@ pub mod prelude {
     pub use crate::config::{paper_run, paper_runs, TrainConfig};
     pub use crate::coordinator::{TrainReport, Trainer};
     pub use crate::data::{Augment, Batch, Loader, SynthDataset};
-    pub use crate::runtime::{Engine, Manifest};
+    #[cfg(feature = "pjrt")]
+    pub use crate::runtime::Engine;
+    pub use crate::runtime::{BackendSpec, ComputeBackend, Manifest, ReferenceBackend};
     pub use crate::sched::{BatchSchedule, LrSchedule, Phase};
     pub use crate::simnet::{Algo, ClusterModel};
 }

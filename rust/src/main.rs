@@ -71,10 +71,34 @@ impl Args {
     }
 }
 
-fn artifacts_dir(args: &Args) -> std::path::PathBuf {
-    args.get("artifacts")
-        .map(std::path::PathBuf::from)
-        .unwrap_or_else(flashsgd::artifacts_dir)
+/// Backend selection: default build trains on the pure-Rust reference
+/// backend; with `--features pjrt`, an artifacts directory (from
+/// `--artifacts` / `$FLASHSGD_ARTIFACTS` / `./artifacts`) switches to PJRT.
+#[cfg(feature = "pjrt")]
+fn make_trainer(config: TrainConfig, args: &Args) -> Result<Trainer> {
+    if let Some(dir) = args.get("artifacts") {
+        // An explicit --artifacts is a request for PJRT: a missing or
+        // invalid manifest is an error, never a silent fallback.
+        return Trainer::with_pjrt(config, dir);
+    }
+    let dir = flashsgd::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Trainer::with_pjrt(config, dir)
+    } else {
+        Trainer::new(config)
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn make_trainer(config: TrainConfig, args: &Args) -> Result<Trainer> {
+    if args.get("artifacts").is_some() {
+        bail!(
+            "--artifacts requires the PJRT backend; rebuild with \
+             `--features pjrt` (the default build trains on the pure-Rust \
+             reference backend)"
+        );
+    }
+    Trainer::new(config)
 }
 
 fn main() -> Result<()> {
@@ -101,9 +125,10 @@ flashsgd — Massively Distributed SGD reproduction (Sony 2018)
 
 USAGE:
   flashsgd train [--preset quickstart | --twin <run> | --config <file>]
-                 [--ranks N] [--epochs E] [--arch tiny|resnet20]
+                 [--ranks N] [--epochs E] [--arch tiny]
                  [--steps N] [--collective torus|ring|hierarchical:<g>|halving-doubling]
-                 [--csv out.csv] [--save ckpt] [--resume ckpt] [--artifacts DIR]
+                 [--csv out.csv] [--save ckpt] [--resume ckpt]
+                 [--artifacts DIR   (pjrt feature only; default backend is pure Rust)]
   flashsgd simulate [--gpus N] [--batch B] [--collective ...]
   flashsgd reproduce --table 1|2|3|4|5|6
   flashsgd demo topology|allreduce [--x X] [--y Y]
@@ -138,7 +163,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         config.batch.max_workers(),
         config.batch.total_epochs
     );
-    let mut trainer = Trainer::new(config, artifacts_dir(args))?;
+    let mut trainer = make_trainer(config, args)?;
     if let Some(path) = args.get("save") {
         trainer = trainer.with_checkpoint(path);
     }

@@ -1,0 +1,68 @@
+//! The compute-backend abstraction: who actually runs `init` / `grad_*` /
+//! `apply` / `eval_*`.
+//!
+//! The coordinator is backend-agnostic: workers submit
+//! `("{arch}/{exec}", host tensors)` calls through
+//! [`super::service::ComputeClient`] and the service thread dispatches them
+//! to whichever [`ComputeBackend`] the run was started with:
+//!
+//! * [`super::reference::ReferenceBackend`] (default) — a pure-Rust dense
+//!   forward/backward for the built-in `tiny` arch. No Python, no
+//!   artifacts, no XLA: the whole training stack runs and is tested from a
+//!   clean checkout.
+//! * `runtime::engine::PjrtBackend` (`--features pjrt`) — compiles AOT HLO
+//!   artifacts through the PJRT C API (`xla` crate) as lowered by
+//!   `python/compile/aot.py`.
+//!
+//! Backends may be thread-confined (PJRT clients are `Rc`-based), so they
+//! are constructed *inside* the service thread from a [`BackendSpec`],
+//! which is the `Send` handle the coordinator passes around.
+
+use anyhow::Result;
+
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+
+/// An executor of manifest-declared executables.
+///
+/// Keys use the `"{arch}/{exec}"` form everywhere (the same naming the
+/// artifact pipeline uses), and implementations validate inputs against the
+/// manifest's tensor specs so a caller bug fails fast with shapes in the
+/// message.
+pub trait ComputeBackend {
+    /// Short backend name for logs and error messages.
+    fn name(&self) -> &'static str;
+
+    /// Make `names` of `arch` executable (compile artifacts, or validate
+    /// that the built-in model serves them). Batch-size control calls this
+    /// lazily when a phase needs a grad variant that was not preloaded.
+    fn load(&mut self, arch: &str, names: &[&str]) -> Result<()>;
+
+    /// Execute `key` with host inputs; returns host outputs.
+    fn run(&mut self, key: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+}
+
+/// Which backend a run should use. `Send`-able recipe; the backend itself
+/// is built on the service thread via [`BackendSpec::instantiate`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendSpec {
+    /// Pure-Rust reference backend (default features).
+    Reference,
+    /// PJRT/XLA over AOT artifacts (requires `--features pjrt`).
+    #[cfg(feature = "pjrt")]
+    Pjrt,
+}
+
+impl BackendSpec {
+    /// Construct the backend over `manifest`. Must run on the thread that
+    /// will own the backend (PJRT clients cannot migrate threads).
+    pub fn instantiate(self, manifest: Manifest) -> Result<Box<dyn ComputeBackend>> {
+        match self {
+            BackendSpec::Reference => Ok(Box::new(super::reference::ReferenceBackend::new(
+                manifest,
+            )?)),
+            #[cfg(feature = "pjrt")]
+            BackendSpec::Pjrt => Ok(Box::new(super::engine::PjrtBackend::new(manifest)?)),
+        }
+    }
+}

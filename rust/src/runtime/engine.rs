@@ -1,5 +1,12 @@
 //! PJRT engine: load AOT HLO-text artifacts, compile, execute.
 //!
+//! Compiled only with `--features pjrt`; the default build uses
+//! `runtime::reference::ReferenceBackend` instead. [`PjrtBackend`] adapts
+//! the engine to the `runtime::backend::ComputeBackend` trait the service
+//! thread dispatches on. Note the workspace vendors an API *stub* of the
+//! `xla` crate, so `--features pjrt` compiles everywhere but only runs
+//! when the real crate is swapped in.
+//!
 //! Follows the reference wiring in /opt/xla-example/load_hlo: HLO *text* →
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `PjRtClient::compile` → `execute`. Every entry point was lowered with
@@ -172,6 +179,38 @@ fn from_literal(lit: &xla::Literal, dtype: Dtype, shape: &[usize]) -> Result<Hos
             lit.to_vec::<i32>().map_err(|e| anyhow!("readback i32: {e}"))?,
         ),
     })
+}
+
+/// [`ComputeBackend`](super::backend::ComputeBackend) adapter over the
+/// PJRT [`Engine`]: owns the engine plus the manifest it compiles from.
+pub struct PjrtBackend {
+    engine: Engine,
+    manifest: Manifest,
+}
+
+impl PjrtBackend {
+    /// Create a CPU PJRT client for `manifest`'s artifacts.
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        Ok(Self {
+            engine: Engine::cpu()?,
+            manifest,
+        })
+    }
+}
+
+impl super::backend::ComputeBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn load(&mut self, arch: &str, names: &[&str]) -> Result<()> {
+        let am = self.manifest.arch(arch)?.clone();
+        self.engine.load_execs(&self.manifest, &am, names)
+    }
+
+    fn run(&mut self, key: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.engine.run(key, inputs)
+    }
 }
 
 fn bytemuck_f32(v: &[f32]) -> &[u8] {

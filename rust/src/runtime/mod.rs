@@ -1,16 +1,26 @@
-//! Runtime layer: AOT artifact loading + PJRT execution.
+//! Runtime layer: pluggable compute backends behind one service API.
 //!
-//! `manifest` parses the shape/layout contract written by `aot.py`;
-//! `engine` compiles HLO text and executes it on the PJRT CPU client;
-//! `service` exposes the (thread-confined) engine to the coordinator's
-//! worker threads; `tensor` is the `Send`-able host-buffer currency.
+//! `manifest` is the shape/layout contract every backend serves (parsed
+//! from `aot.py`'s `manifest.json`, or synthesized in memory by the
+//! reference backend); `backend` defines the [`ComputeBackend`] trait and
+//! the [`BackendSpec`] used to pick an implementation; `reference` is the
+//! default pure-Rust backend; `engine` (behind `--features pjrt`) compiles
+//! HLO text and executes it on the PJRT CPU client; `service` exposes the
+//! (thread-confined) backend to the coordinator's worker threads; `tensor`
+//! is the `Send`-able host-buffer currency.
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
+pub mod reference;
 pub mod service;
 pub mod tensor;
 
-pub use engine::Engine;
+pub use backend::{BackendSpec, ComputeBackend};
+#[cfg(feature = "pjrt")]
+pub use engine::{Engine, PjrtBackend};
 pub use manifest::{ArchManifest, BnLayer, Dtype, ExecSpec, Manifest, ParamSpec, TensorSpec};
+pub use reference::{builtin_manifest, ReferenceBackend};
 pub use service::{ComputeClient, ComputeService};
 pub use tensor::HostTensor;

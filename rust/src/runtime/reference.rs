@@ -1,0 +1,1038 @@
+//! Pure-Rust reference backend: the default [`super::backend::ComputeBackend`].
+//!
+//! Serves the same executable contract the AOT/PJRT pipeline serves —
+//! `init`, `grad_b{B}_ls{S}`, `apply`, `eval_b{B}` — for a built-in "tiny"
+//! architecture, against a synthesized in-memory [`Manifest`]. This is what
+//! lets the full training stack (batch-size control, 2D-torus all-reduce,
+//! FP16 gradient wire, LARS, checkpoint/resume) run and be tested
+//! end-to-end with no Python, no artifact files and no XLA.
+//!
+//! The model is a dense ResNet-ish network over the 16×16×3 synthetic
+//! images: a linear stem, three residual blocks (`linear → BN → ReLU →
+//! linear → BN → +skip → ReLU`), and a linear head, trained with
+//! label-smoothed softmax cross-entropy. Like the paper's ResNet-50
+//! (§3.2), every BN layer exports per-feature `(mean, mean-of-squares)`
+//! batch statistics; training normalises with the *current* batch
+//! statistics and evaluation uses the synchronized running statistics the
+//! coordinator maintains ("BN without moving average"). `apply` is the
+//! exact [`crate::optim::lars_step`] update — the same formula the Pallas
+//! kernel implements — so reference and PJRT backends are interchangeable
+//! from the coordinator's point of view.
+//!
+//! Forward and backward are hand-derived; `tests::finite_difference_check`
+//! verifies the analytic gradients against central differences.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::optim::{lars_step, LarsConfig};
+use crate::util::rng::Pcg32;
+
+use super::backend::ComputeBackend;
+use super::manifest::{ArchManifest, BnLayer, Dtype, ExecSpec, Manifest, ParamSpec, TensorSpec};
+use super::tensor::HostTensor;
+
+/// The one architecture the reference backend implements.
+pub const TINY_ARCH: &str = "tiny";
+
+const IMG: usize = 16;
+const CH: usize = 3;
+const IN: usize = IMG * IMG * CH;
+const HIDDEN: usize = 32;
+const CLASSES: usize = 10;
+const N_BLOCKS: usize = 3;
+const BN_EPS: f32 = 1e-5;
+
+/// Param-table indices (flatten order; grads come back in the same order).
+const P_STEM_W: usize = 0;
+const P_STEM_G: usize = 1;
+const P_STEM_B: usize = 2;
+const P_BLOCK0: usize = 3; // +k*6: w1, bn1/gamma, bn1/beta, w2, bn2/gamma, bn2/beta
+const P_HEAD_W: usize = P_BLOCK0 + N_BLOCKS * 6;
+const P_HEAD_B: usize = P_HEAD_W + 1;
+const N_PARAMS: usize = P_HEAD_B + 1;
+const N_BN: usize = 1 + 2 * N_BLOCKS;
+
+/// Grad variants baked into the synthetic manifest (per-worker batches ×
+/// label-smoothing settings), mirroring what `aot.py` would lower.
+const GRAD_BATCHES: &[usize] = &[1, 2, 4, 8, 16, 32, 64];
+const LS_GRID: &[f32] = &[0.0, 0.1];
+const EVAL_BATCH: usize = 64;
+
+/// The parameter table of the built-in tiny arch.
+fn param_specs() -> Vec<ParamSpec> {
+    let h = HIDDEN;
+    let spec = |name: String, shape: Vec<usize>| {
+        let size = shape.iter().product();
+        ParamSpec { name, shape, size }
+    };
+    let mut v = vec![
+        spec("stem/w".into(), vec![IN, h]),
+        spec("stem/bn/gamma".into(), vec![h]),
+        spec("stem/bn/beta".into(), vec![h]),
+    ];
+    for k in 1..=N_BLOCKS {
+        v.push(spec(format!("block{k}/w1"), vec![h, h]));
+        v.push(spec(format!("block{k}/bn1/gamma"), vec![h]));
+        v.push(spec(format!("block{k}/bn1/beta"), vec![h]));
+        v.push(spec(format!("block{k}/w2"), vec![h, h]));
+        v.push(spec(format!("block{k}/bn2/gamma"), vec![h]));
+        v.push(spec(format!("block{k}/bn2/beta"), vec![h]));
+    }
+    v.push(spec("head/w".into(), vec![h, CLASSES]));
+    v.push(spec("head/b".into(), vec![CLASSES]));
+    debug_assert_eq!(v.len(), N_PARAMS);
+    v
+}
+
+fn bn_layer_specs() -> Vec<BnLayer> {
+    let mut v = vec![BnLayer {
+        name: "stem/bn".into(),
+        width: HIDDEN,
+    }];
+    for k in 1..=N_BLOCKS {
+        for j in 1..=2 {
+            v.push(BnLayer {
+                name: format!("block{k}/bn{j}"),
+                width: HIDDEN,
+            });
+        }
+    }
+    debug_assert_eq!(v.len(), N_BN);
+    v
+}
+
+/// Synthesize the in-memory manifest the reference backend serves. Shape
+/// and naming contracts are identical to `aot.py`'s output, so the
+/// coordinator cannot tell the backends apart.
+pub fn builtin_manifest() -> Manifest {
+    let params = param_specs();
+    let total_params = params.iter().map(|p| p.size).sum();
+    let param_ts: Vec<TensorSpec> = params
+        .iter()
+        .map(|p| TensorSpec {
+            shape: p.shape.clone(),
+            dtype: Dtype::F32,
+        })
+        .collect();
+    let bn_ts: Vec<TensorSpec> = (0..N_BN)
+        .map(|_| TensorSpec {
+            shape: vec![2, HIDDEN],
+            dtype: Dtype::F32,
+        })
+        .collect();
+    let scalar = TensorSpec {
+        shape: vec![],
+        dtype: Dtype::F32,
+    };
+    let images = |b: usize| TensorSpec {
+        shape: vec![b, IMG, IMG, CH],
+        dtype: Dtype::F32,
+    };
+    let labels = |b: usize| TensorSpec {
+        shape: vec![b],
+        dtype: Dtype::I32,
+    };
+
+    let mut executables = BTreeMap::new();
+    executables.insert(
+        "init".to_string(),
+        ExecSpec {
+            name: "init".into(),
+            file: "<builtin>".into(),
+            inputs: vec![TensorSpec {
+                shape: vec![1],
+                dtype: Dtype::I32,
+            }],
+            outputs: param_ts.clone(),
+            batch: None,
+            ls_eps: None,
+        },
+    );
+    let mut apply_in = param_ts.clone();
+    apply_in.extend(param_ts.iter().cloned()); // momenta
+    apply_in.extend(param_ts.iter().cloned()); // grads
+    apply_in.extend([scalar.clone(), scalar.clone(), scalar.clone()]); // lr, momentum, wd
+    let mut apply_out = param_ts.clone();
+    apply_out.extend(param_ts.iter().cloned());
+    executables.insert(
+        "apply".to_string(),
+        ExecSpec {
+            name: "apply".into(),
+            file: "<builtin>".into(),
+            inputs: apply_in,
+            outputs: apply_out,
+            batch: None,
+            ls_eps: None,
+        },
+    );
+    for &b in GRAD_BATCHES {
+        for &ls in LS_GRID {
+            let name = format!("grad_b{b}_ls{}", (ls * 100.0).round() as i64);
+            let mut inputs = param_ts.clone();
+            inputs.push(images(b));
+            inputs.push(labels(b));
+            let mut outputs = vec![scalar.clone()];
+            outputs.extend(param_ts.iter().cloned());
+            outputs.extend(bn_ts.iter().cloned());
+            executables.insert(
+                name.clone(),
+                ExecSpec {
+                    name,
+                    file: "<builtin>".into(),
+                    inputs,
+                    outputs,
+                    batch: Some(b),
+                    ls_eps: Some(f64::from(ls)),
+                },
+            );
+        }
+    }
+    let mut eval_in = param_ts.clone();
+    eval_in.extend(bn_ts.iter().cloned());
+    eval_in.push(images(EVAL_BATCH));
+    eval_in.push(labels(EVAL_BATCH));
+    executables.insert(
+        format!("eval_b{EVAL_BATCH}"),
+        ExecSpec {
+            name: format!("eval_b{EVAL_BATCH}"),
+            file: "<builtin>".into(),
+            inputs: eval_in,
+            outputs: vec![scalar.clone(), scalar],
+            batch: Some(EVAL_BATCH),
+            ls_eps: None,
+        },
+    );
+
+    let arch = ArchManifest {
+        name: TINY_ARCH.to_string(),
+        params,
+        total_params,
+        bn_layers: bn_layer_specs(),
+        num_classes: CLASSES,
+        image_size: IMG,
+        image_channels: CH,
+        executables,
+    };
+    let mut arches = BTreeMap::new();
+    arches.insert(TINY_ARCH.to_string(), arch);
+    Manifest {
+        dir: "<builtin>".into(),
+        arches,
+    }
+}
+
+/// The pure-Rust compute backend.
+pub struct ReferenceBackend {
+    manifest: Manifest,
+}
+
+impl ReferenceBackend {
+    /// Wrap `manifest`; it must describe the built-in tiny architecture
+    /// (use [`builtin_manifest`]).
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let arch = manifest.arch(TINY_ARCH)?;
+        if arch.n_params() != N_PARAMS
+            || arch.n_bn() != N_BN
+            || arch.image_size != IMG
+            || arch.image_channels != CH
+            || arch.num_classes != CLASSES
+        {
+            bail!(
+                "reference backend serves only the built-in {TINY_ARCH:?} architecture \
+                 ({N_PARAMS} params, {N_BN} bn layers); this manifest does not match"
+            );
+        }
+        Ok(Self { manifest })
+    }
+}
+
+impl ComputeBackend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn load(&mut self, arch: &str, names: &[&str]) -> Result<()> {
+        let am = self.manifest.arch(arch)?;
+        for name in names {
+            am.exec(name)?;
+        }
+        Ok(())
+    }
+
+    fn run(&mut self, key: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let (arch_name, exec_name) = key
+            .split_once('/')
+            .with_context(|| format!("reference backend: key {key:?} is not \"arch/exec\""))?;
+        let arch = self.manifest.arch(arch_name)?;
+        let spec = arch.exec(exec_name)?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{key}: wrong input arity {} (want {})",
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            t.check(s).with_context(|| format!("{key}: input #{i}"))?;
+        }
+        if exec_name == "init" {
+            return Ok(run_init(inputs[0].as_i32()?[0]));
+        }
+        if exec_name == "apply" {
+            return run_apply(inputs);
+        }
+        if exec_name.starts_with("grad_") {
+            let batch = spec.batch.with_context(|| format!("{key}: missing batch"))?;
+            let ls = spec.ls_eps.unwrap_or(0.0) as f32;
+            let params = &inputs[..N_PARAMS];
+            let images = inputs[N_PARAMS].as_f32()?;
+            let labels = inputs[N_PARAMS + 1].as_i32()?;
+            return run_grad(params, images, labels, batch, ls);
+        }
+        if exec_name.starts_with("eval_") {
+            let batch = spec.batch.with_context(|| format!("{key}: missing batch"))?;
+            let params = &inputs[..N_PARAMS];
+            let bn_running = &inputs[N_PARAMS..N_PARAMS + N_BN];
+            let images = inputs[N_PARAMS + N_BN].as_f32()?;
+            let labels = inputs[N_PARAMS + N_BN + 1].as_i32()?;
+            return run_eval(params, bn_running, images, labels, batch);
+        }
+        bail!("{key}: reference backend has no such entry point")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dense-math helpers
+
+/// `out[m,n] += a[m,k] @ b[k,n]` (row-major; `out` pre-sized by the caller).
+fn matmul_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for (arow, orow) in a.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
+        for (&av, brow) in arow.iter().zip(b.chunks_exact(n)) {
+            if av != 0.0 {
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// `out[k,n] += a[m,k]ᵀ @ d[m,n]` — weight gradients.
+fn matmul_tn_acc(a: &[f32], d: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(d.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    for (arow, drow) in a.chunks_exact(k).zip(d.chunks_exact(n)) {
+        for (&av, orow) in arow.iter().zip(out.chunks_exact_mut(n)) {
+            if av != 0.0 {
+                for (o, &dv) in orow.iter_mut().zip(drow) {
+                    *o += av * dv;
+                }
+            }
+        }
+    }
+}
+
+/// `out[m,k] += d[m,n] @ w[k,n]ᵀ` — input gradients.
+fn matmul_nt_acc(d: &[f32], w: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(d.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * k);
+    for (drow, orow) in d.chunks_exact(n).zip(out.chunks_exact_mut(k)) {
+        for (o, wrow) in orow.iter_mut().zip(w.chunks_exact(n)) {
+            let mut s = 0.0f32;
+            for (&dv, &wv) in drow.iter().zip(wrow) {
+                s += dv * wv;
+            }
+            *o += s;
+        }
+    }
+}
+
+fn relu(mut v: Vec<f32>) -> Vec<f32> {
+    for x in v.iter_mut() {
+        if *x < 0.0 {
+            *x = 0.0;
+        }
+    }
+    v
+}
+
+/// Zero `d` wherever the forward ReLU output was zero.
+fn relu_backward(d: &mut [f32], fwd_out: &[f32]) {
+    for (dv, &o) in d.iter_mut().zip(fwd_out) {
+        if o <= 0.0 {
+            *dv = 0.0;
+        }
+    }
+}
+
+/// Saved forward state of one BN layer (training mode).
+struct BnCache {
+    /// Normalised input `(z - mean)/std`, `[B*H]`.
+    xh: Vec<f32>,
+    /// `1/sqrt(var + eps)` per feature.
+    inv_std: Vec<f32>,
+    /// Batch mean per feature (exported statistic).
+    mean: Vec<f32>,
+    /// Batch mean of squares per feature (exported statistic).
+    sq: Vec<f32>,
+}
+
+/// Training-mode BN: normalise with the current batch statistics
+/// (paper §3.2, "Batch Normalization without Moving Average").
+fn bn_forward_train(
+    z: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    b: usize,
+    h: usize,
+) -> (Vec<f32>, BnCache) {
+    debug_assert_eq!(z.len(), b * h);
+    let mut mean = vec![0.0f32; h];
+    let mut sq = vec![0.0f32; h];
+    for row in z.chunks_exact(h) {
+        for ((m, s), &v) in mean.iter_mut().zip(sq.iter_mut()).zip(row) {
+            *m += v;
+            *s += v * v;
+        }
+    }
+    let inv_b = 1.0 / b as f32;
+    for (m, s) in mean.iter_mut().zip(sq.iter_mut()) {
+        *m *= inv_b;
+        *s *= inv_b;
+    }
+    let inv_std: Vec<f32> = mean
+        .iter()
+        .zip(&sq)
+        .map(|(&m, &s)| 1.0 / ((s - m * m).max(0.0) + BN_EPS).sqrt())
+        .collect();
+    let mut xh = vec![0.0f32; b * h];
+    let mut y = vec![0.0f32; b * h];
+    for (zrow, (xrow, yrow)) in z
+        .chunks_exact(h)
+        .zip(xh.chunks_exact_mut(h).zip(y.chunks_exact_mut(h)))
+    {
+        for j in 0..h {
+            let xn = (zrow[j] - mean[j]) * inv_std[j];
+            xrow[j] = xn;
+            yrow[j] = gamma[j] * xn + beta[j];
+        }
+    }
+    (
+        y,
+        BnCache {
+            xh,
+            inv_std,
+            mean,
+            sq,
+        },
+    )
+}
+
+/// Exact BN backward: `(dz, dgamma, dbeta)` from `dy`.
+fn bn_backward(
+    dy: &[f32],
+    cache: &BnCache,
+    gamma: &[f32],
+    b: usize,
+    h: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut dgamma = vec![0.0f32; h];
+    let mut dbeta = vec![0.0f32; h];
+    for (dyrow, xrow) in dy.chunks_exact(h).zip(cache.xh.chunks_exact(h)) {
+        for j in 0..h {
+            dgamma[j] += dyrow[j] * xrow[j];
+            dbeta[j] += dyrow[j];
+        }
+    }
+    let bf = b as f32;
+    let mut dz = vec![0.0f32; b * h];
+    for ((dyrow, xrow), dzrow) in dy
+        .chunks_exact(h)
+        .zip(cache.xh.chunks_exact(h))
+        .zip(dz.chunks_exact_mut(h))
+    {
+        for j in 0..h {
+            dzrow[j] = gamma[j] * cache.inv_std[j] / bf
+                * (bf * dyrow[j] - dbeta[j] - xrow[j] * dgamma[j]);
+        }
+    }
+    (dz, dgamma, dbeta)
+}
+
+/// Eval-mode BN: normalise with synchronized running statistics
+/// `running = [mean.., mean-of-squares..]`.
+fn bn_forward_eval(z: &[f32], gamma: &[f32], beta: &[f32], running: &[f32], h: usize) -> Vec<f32> {
+    debug_assert_eq!(running.len(), 2 * h);
+    let (mean, sq) = running.split_at(h);
+    let scale: Vec<f32> = (0..h)
+        .map(|j| gamma[j] / ((sq[j] - mean[j] * mean[j]).max(0.0) + BN_EPS).sqrt())
+        .collect();
+    let mut y = vec![0.0f32; z.len()];
+    for (zrow, yrow) in z.chunks_exact(h).zip(y.chunks_exact_mut(h)) {
+        for j in 0..h {
+            yrow[j] = scale[j] * (zrow[j] - mean[j]) + beta[j];
+        }
+    }
+    y
+}
+
+/// Label-smoothed softmax cross-entropy: `(mean loss, dlogits/B)`.
+fn ls_softmax_grad(
+    logits: &[f32],
+    labels: &[i32],
+    b: usize,
+    c: usize,
+    ls: f32,
+) -> (f32, Vec<f32>) {
+    let mut dlogits = vec![0.0f32; b * c];
+    let mut loss_sum = 0.0f64;
+    let uniform = ls / c as f32;
+    let inv_b = 1.0 / b as f32;
+    for ((row, drow), &label) in logits
+        .chunks_exact(c)
+        .zip(dlogits.chunks_exact_mut(c))
+        .zip(labels)
+    {
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for &z in row {
+            sum += (z - max).exp();
+        }
+        let logsum = max + sum.ln();
+        let y = label as usize;
+        for (j, (&z, d)) in row.iter().zip(drow.iter_mut()).enumerate() {
+            let logp = z - logsum;
+            let q = uniform + if j == y { 1.0 - ls } else { 0.0 };
+            loss_sum -= f64::from(q * logp);
+            *d = (logp.exp() - q) * inv_b;
+        }
+    }
+    ((loss_sum / b as f64) as f32, dlogits)
+}
+
+fn bn_stats_tensor(cache: &BnCache) -> HostTensor {
+    let mut data = cache.mean.clone();
+    data.extend_from_slice(&cache.sq);
+    HostTensor::f32(vec![2, HIDDEN], data)
+}
+
+// ---------------------------------------------------------------------------
+// entry points
+
+/// Deterministic He init: weights ~ N(0, 2/fan_in), gamma = 1, beta/bias = 0.
+fn run_init(seed: i32) -> Vec<HostTensor> {
+    let seed64 = seed as i64 as u64 ^ 0x714_1A2C_11E5_EED5;
+    param_specs()
+        .iter()
+        .enumerate()
+        .map(|(idx, p)| {
+            let data = if p.shape.len() == 2 {
+                let std = (2.0 / p.shape[0] as f32).sqrt();
+                let mut rng = Pcg32::with_stream(seed64, idx as u64);
+                (0..p.size).map(|_| rng.next_normal() * std).collect()
+            } else if p.name.ends_with("gamma") {
+                vec![1.0f32; p.size]
+            } else {
+                vec![0.0f32; p.size]
+            };
+            HostTensor::f32(p.shape.clone(), data)
+        })
+        .collect()
+}
+
+/// Saved activations of one residual block.
+struct BlockFwd {
+    input: Vec<f32>,
+    r1: Vec<f32>,
+    bn1: BnCache,
+    bn2: BnCache,
+    out: Vec<f32>,
+}
+
+/// Forward + backward of the tiny net: `[loss, grads.., bn stats..]`.
+fn run_grad(
+    params: &[HostTensor],
+    images: &[f32],
+    labels: &[i32],
+    b: usize,
+    ls: f32,
+) -> Result<Vec<HostTensor>> {
+    let h = HIDDEN;
+
+    // --- forward ---
+    let w0 = params[P_STEM_W].as_f32()?;
+    let g0 = params[P_STEM_G].as_f32()?;
+    let be0 = params[P_STEM_B].as_f32()?;
+    let mut z0 = vec![0.0f32; b * h];
+    matmul_acc(images, w0, b, IN, h, &mut z0);
+    let (y0, bn0) = bn_forward_train(&z0, g0, be0, b, h);
+    let mut act = relu(y0);
+
+    let mut blocks: Vec<BlockFwd> = Vec::with_capacity(N_BLOCKS);
+    for k in 0..N_BLOCKS {
+        let base = P_BLOCK0 + k * 6;
+        let w1 = params[base].as_f32()?;
+        let g1 = params[base + 1].as_f32()?;
+        let be1 = params[base + 2].as_f32()?;
+        let w2 = params[base + 3].as_f32()?;
+        let g2 = params[base + 4].as_f32()?;
+        let be2 = params[base + 5].as_f32()?;
+        let mut z1 = vec![0.0f32; b * h];
+        matmul_acc(&act, w1, b, h, h, &mut z1);
+        let (y1, bn1) = bn_forward_train(&z1, g1, be1, b, h);
+        let r1 = relu(y1);
+        let mut z2 = vec![0.0f32; b * h];
+        matmul_acc(&r1, w2, b, h, h, &mut z2);
+        let (mut s, bn2) = bn_forward_train(&z2, g2, be2, b, h);
+        for (sv, &av) in s.iter_mut().zip(&act) {
+            *sv += av; // residual add
+        }
+        let out = relu(s);
+        let input = act;
+        act = out.clone();
+        blocks.push(BlockFwd {
+            input,
+            r1,
+            bn1,
+            bn2,
+            out,
+        });
+    }
+
+    let wh = params[P_HEAD_W].as_f32()?;
+    let bh = params[P_HEAD_B].as_f32()?;
+    let mut logits = vec![0.0f32; b * CLASSES];
+    matmul_acc(&act, wh, b, h, CLASSES, &mut logits);
+    for row in logits.chunks_exact_mut(CLASSES) {
+        for (l, &bias) in row.iter_mut().zip(bh) {
+            *l += bias;
+        }
+    }
+    let (loss, dlogits) = ls_softmax_grad(&logits, labels, b, CLASSES, ls);
+
+    // --- backward ---
+    let mut grads: Vec<Vec<f32>> = params.iter().map(|t| vec![0.0f32; t.elems()]).collect();
+    matmul_tn_acc(&act, &dlogits, b, h, CLASSES, &mut grads[P_HEAD_W]);
+    for drow in dlogits.chunks_exact(CLASSES) {
+        for (gb, &d) in grads[P_HEAD_B].iter_mut().zip(drow) {
+            *gb += d;
+        }
+    }
+    let mut dact = vec![0.0f32; b * h];
+    matmul_nt_acc(&dlogits, wh, b, h, CLASSES, &mut dact);
+
+    for k in (0..N_BLOCKS).rev() {
+        let base = P_BLOCK0 + k * 6;
+        let w1 = params[base].as_f32()?;
+        let g1 = params[base + 1].as_f32()?;
+        let w2 = params[base + 3].as_f32()?;
+        let g2 = params[base + 4].as_f32()?;
+        let blk = &blocks[k];
+
+        let mut ds = dact; // gradient at the post-residual ReLU output
+        relu_backward(&mut ds, &blk.out);
+
+        let (dz2, dg2, db2) = bn_backward(&ds, &blk.bn2, g2, b, h);
+        grads[base + 4] = dg2;
+        grads[base + 5] = db2;
+        matmul_tn_acc(&blk.r1, &dz2, b, h, h, &mut grads[base + 3]);
+        let mut dr1 = vec![0.0f32; b * h];
+        matmul_nt_acc(&dz2, w2, b, h, h, &mut dr1);
+        relu_backward(&mut dr1, &blk.r1);
+
+        let (dz1, dg1, db1) = bn_backward(&dr1, &blk.bn1, g1, b, h);
+        grads[base + 1] = dg1;
+        grads[base + 2] = db1;
+        matmul_tn_acc(&blk.input, &dz1, b, h, h, &mut grads[base]);
+
+        // block-input grad: main path + the residual skip (ds).
+        let mut dinput = ds;
+        matmul_nt_acc(&dz1, w1, b, h, h, &mut dinput);
+        dact = dinput;
+    }
+
+    let g0 = params[P_STEM_G].as_f32()?;
+    let mut dy0 = dact;
+    relu_backward(&mut dy0, &blocks[0].input);
+    let (dz0, dg0, db0) = bn_backward(&dy0, &bn0, g0, b, h);
+    grads[P_STEM_G] = dg0;
+    grads[P_STEM_B] = db0;
+    matmul_tn_acc(images, &dz0, b, IN, h, &mut grads[P_STEM_W]);
+
+    // --- outputs: loss, grads (param order), bn stats (layer order) ---
+    let mut out = Vec::with_capacity(1 + N_PARAMS + N_BN);
+    out.push(HostTensor::scalar_f32(loss));
+    for (t, g) in params.iter().zip(grads) {
+        out.push(HostTensor::f32(t.shape().to_vec(), g));
+    }
+    out.push(bn_stats_tensor(&bn0));
+    for blk in &blocks {
+        out.push(bn_stats_tensor(&blk.bn1));
+        out.push(bn_stats_tensor(&blk.bn2));
+    }
+    Ok(out)
+}
+
+/// Eval with synchronized running BN statistics: `[loss sum, #correct]`.
+fn run_eval(
+    params: &[HostTensor],
+    bn_running: &[HostTensor],
+    images: &[f32],
+    labels: &[i32],
+    b: usize,
+) -> Result<Vec<HostTensor>> {
+    let h = HIDDEN;
+    let mut bn_idx = 0usize;
+    let mut next_bn = |gamma: &[f32], beta: &[f32], z: &[f32]| -> Result<Vec<f32>> {
+        let running = bn_running[bn_idx].as_f32()?;
+        bn_idx += 1;
+        Ok(bn_forward_eval(z, gamma, beta, running, h))
+    };
+
+    let w0 = params[P_STEM_W].as_f32()?;
+    let mut z0 = vec![0.0f32; b * h];
+    matmul_acc(images, w0, b, IN, h, &mut z0);
+    let y0 = next_bn(params[P_STEM_G].as_f32()?, params[P_STEM_B].as_f32()?, &z0)?;
+    let mut act = relu(y0);
+
+    for k in 0..N_BLOCKS {
+        let base = P_BLOCK0 + k * 6;
+        let mut z1 = vec![0.0f32; b * h];
+        matmul_acc(&act, params[base].as_f32()?, b, h, h, &mut z1);
+        let y1 = next_bn(
+            params[base + 1].as_f32()?,
+            params[base + 2].as_f32()?,
+            &z1,
+        )?;
+        let r1 = relu(y1);
+        let mut z2 = vec![0.0f32; b * h];
+        matmul_acc(&r1, params[base + 3].as_f32()?, b, h, h, &mut z2);
+        let mut s = next_bn(
+            params[base + 4].as_f32()?,
+            params[base + 5].as_f32()?,
+            &z2,
+        )?;
+        for (sv, &av) in s.iter_mut().zip(&act) {
+            *sv += av;
+        }
+        act = relu(s);
+    }
+
+    let wh = params[P_HEAD_W].as_f32()?;
+    let bh = params[P_HEAD_B].as_f32()?;
+    let mut logits = vec![0.0f32; b * CLASSES];
+    matmul_acc(&act, wh, b, h, CLASSES, &mut logits);
+    for row in logits.chunks_exact_mut(CLASSES) {
+        for (l, &bias) in row.iter_mut().zip(bh) {
+            *l += bias;
+        }
+    }
+
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0.0f32;
+    for (row, &label) in logits.chunks_exact(CLASSES).zip(labels) {
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for &z in row {
+            sum += (z - max).exp();
+        }
+        let logsum = max + sum.ln();
+        let y = label as usize;
+        loss_sum -= f64::from(row[y] - logsum);
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap_or(0);
+        if argmax == y {
+            correct += 1.0;
+        }
+    }
+    Ok(vec![
+        HostTensor::scalar_f32(loss_sum as f32),
+        HostTensor::scalar_f32(correct),
+    ])
+}
+
+/// LARS update, per tensor — the exact formula of the Pallas `apply`
+/// artifact: `[params'.., momenta'..]`.
+fn run_apply(inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    let (params, rest) = inputs.split_at(N_PARAMS);
+    let (momenta, rest) = rest.split_at(N_PARAMS);
+    let (grads, scalars) = rest.split_at(N_PARAMS);
+    let lr = scalars[0].scalar()?;
+    let momentum = scalars[1].scalar()?;
+    let weight_decay = scalars[2].scalar()?;
+    let cfg = LarsConfig {
+        coeff: 0.01,
+        eps: 1e-6,
+        weight_decay,
+    };
+    let mut new_params = Vec::with_capacity(N_PARAMS);
+    let mut new_momenta = Vec::with_capacity(N_PARAMS);
+    for ((p, m), g) in params.iter().zip(momenta).zip(grads) {
+        let mut w = p.as_f32()?.to_vec();
+        let mut v = m.as_f32()?.to_vec();
+        lars_step(&mut w, g.as_f32()?, &mut v, lr, momentum, &cfg);
+        new_params.push(HostTensor::f32(p.shape().to_vec(), w));
+        new_momenta.push(HostTensor::f32(m.shape().to_vec(), v));
+    }
+    let mut out = new_params;
+    out.extend(new_momenta);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthDataset;
+
+    fn backend() -> ReferenceBackend {
+        ReferenceBackend::new(builtin_manifest()).unwrap()
+    }
+
+    fn init_params(seed: i32) -> Vec<HostTensor> {
+        backend()
+            .run("tiny/init", &[HostTensor::i32(vec![1], vec![seed])])
+            .unwrap()
+    }
+
+    fn sample_batch(b: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let ds = SynthDataset::tiny(seed);
+        let mut images = vec![0.0f32; b * ds.pixels()];
+        let mut labels = vec![0i32; b];
+        for i in 0..b {
+            ds.train_image(i, &mut images[i * ds.pixels()..(i + 1) * ds.pixels()]);
+            labels[i] = ds.train_label(i);
+        }
+        (images, labels)
+    }
+
+    fn grad_inputs(params: &[HostTensor], b: usize) -> Vec<HostTensor> {
+        let (images, labels) = sample_batch(b, 3);
+        let mut inputs = params.to_vec();
+        inputs.push(HostTensor::f32(vec![b, IMG, IMG, CH], images));
+        inputs.push(HostTensor::i32(vec![b], labels));
+        inputs
+    }
+
+    #[test]
+    fn builtin_manifest_satisfies_the_artifact_contract() {
+        let m = builtin_manifest();
+        let tiny = m.arch(TINY_ARCH).unwrap();
+        assert!(tiny.total_params > 10_000);
+        assert_eq!(
+            tiny.params.iter().map(|p| p.size).sum::<usize>(),
+            tiny.total_params
+        );
+        for p in &tiny.params {
+            assert_eq!(p.shape.iter().product::<usize>(), p.size, "{}", p.name);
+        }
+        assert!(tiny.n_bn() >= 7);
+        let g = tiny.grad_exec(8, 0.1).unwrap();
+        assert_eq!(g.batch, Some(8));
+        assert_eq!(g.inputs.len(), tiny.n_params() + 2);
+        assert_eq!(g.outputs.len(), 1 + tiny.n_params() + tiny.n_bn());
+        let batches = tiny.grad_batches(0.1);
+        assert!(batches.len() >= 2, "{batches:?}");
+        assert!(batches.windows(2).all(|w| w[0] < w[1]));
+        assert!(tiny.grad_exec(999, 0.1).is_err());
+        assert!(tiny.eval_exec().is_ok());
+    }
+
+    #[test]
+    fn init_is_deterministic_and_seed_sensitive() {
+        let a = init_params(7);
+        let b = init_params(7);
+        let c = init_params(8);
+        assert_eq!(a.len(), N_PARAMS);
+        assert_eq!(a, b);
+        assert_ne!(a[P_STEM_W], c[P_STEM_W]);
+        // gamma ones, beta zeros
+        assert!(a[P_STEM_G].as_f32().unwrap().iter().all(|&x| x == 1.0));
+        assert!(a[P_STEM_B].as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn initial_loss_is_near_ln_classes() {
+        let params = init_params(7);
+        let mut be = backend();
+        let out = be.run("tiny/grad_b8_ls10", &grad_inputs(&params, 8)).unwrap();
+        assert_eq!(out.len(), 1 + N_PARAMS + N_BN);
+        let loss = out[0].scalar().unwrap();
+        // 10 classes: ln(10) ≈ 2.303; BN keeps logits tame at init.
+        assert!(loss.is_finite() && loss > 1.5 && loss < 4.0, "loss {loss}");
+        // every grad is finite and at least one is non-zero
+        let mut norm = 0.0f64;
+        for g in &out[1..1 + N_PARAMS] {
+            for &x in g.as_f32().unwrap() {
+                assert!(x.is_finite());
+                norm += f64::from(x) * f64::from(x);
+            }
+        }
+        assert!(norm > 0.0);
+    }
+
+    #[test]
+    fn bn_stats_are_the_batch_moments() {
+        // stats exported by grad must be the actual per-feature moments:
+        // check the normalisation identity E[x²] ≥ E[x]² and shape.
+        let params = init_params(1);
+        let mut be = backend();
+        let out = be.run("tiny/grad_b8_ls10", &grad_inputs(&params, 8)).unwrap();
+        for stats in &out[1 + N_PARAMS..] {
+            assert_eq!(stats.shape(), &[2, HIDDEN]);
+            let d = stats.as_f32().unwrap();
+            let (mean, sq) = d.split_at(HIDDEN);
+            for (m, s) in mean.iter().zip(sq) {
+                assert!(s + 1e-5 >= m * m, "E[x²]={s} < E[x]²={}", m * m);
+            }
+        }
+    }
+
+    #[test]
+    fn finite_difference_check() {
+        // Central differences against the analytic gradients, at the
+        // largest-|grad| coordinate of a representative tensor per layer
+        // type (weights, gamma, beta, head).
+        let b = 4usize;
+        let params = init_params(11);
+        let inputs = grad_inputs(&params, b);
+        let mut be = backend();
+        let out = be.run("tiny/grad_b4_ls10", &inputs).unwrap();
+
+        let loss_at = |be: &mut ReferenceBackend, tweaked: &[HostTensor]| -> f32 {
+            let mut inp = tweaked.to_vec();
+            inp.extend_from_slice(&inputs[N_PARAMS..]);
+            be.run("tiny/grad_b4_ls10", &inp).unwrap()[0].scalar().unwrap()
+        };
+
+        let mut checked = 0usize;
+        for &pi in &[P_STEM_W, P_BLOCK0, P_BLOCK0 + 4, P_BLOCK0 + 2, P_HEAD_W] {
+            let g = out[1 + pi].as_f32().unwrap();
+            let (ci, gmax) = g
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+                .unwrap();
+            if gmax.abs() < 5e-3 {
+                continue; // too small to resolve in f32 central differences
+            }
+            let h = 1e-3f32;
+            let mut plus = params.clone();
+            let mut minus = params.clone();
+            plus[pi].as_f32_mut().unwrap()[ci] += h;
+            minus[pi].as_f32_mut().unwrap()[ci] -= h;
+            let fd = (loss_at(&mut be, &plus) - loss_at(&mut be, &minus)) / (2.0 * h);
+            assert!(
+                (fd - gmax).abs() <= 0.15 * gmax.abs().max(5e-3),
+                "param {pi} coord {ci}: analytic {gmax} vs finite-diff {fd}"
+            );
+            checked += 1;
+        }
+        assert!(checked >= 3, "only {checked} tensors had resolvable grads");
+    }
+
+    #[test]
+    fn apply_is_the_lars_reference_step() {
+        let params = init_params(5);
+        let mut be = backend();
+        let grad_out = be.run("tiny/grad_b8_ls10", &grad_inputs(&params, 8)).unwrap();
+        let grads = &grad_out[1..1 + N_PARAMS];
+        let momenta: Vec<HostTensor> = params
+            .iter()
+            .map(|p| HostTensor::f32(p.shape().to_vec(), vec![0.0; p.elems()]))
+            .collect();
+        let mut ap_in = params.clone();
+        ap_in.extend(momenta.iter().cloned());
+        ap_in.extend(grads.iter().cloned());
+        ap_in.push(HostTensor::scalar_f32(0.5));
+        ap_in.push(HostTensor::scalar_f32(0.9));
+        ap_in.push(HostTensor::scalar_f32(5e-5));
+        let applied = be.run("tiny/apply", &ap_in).unwrap();
+        assert_eq!(applied.len(), 2 * N_PARAMS);
+        // must agree with a direct lars_step on tensor 0
+        let mut w_ref = params[0].as_f32().unwrap().to_vec();
+        let mut m_ref = vec![0.0f32; w_ref.len()];
+        let cfg = LarsConfig {
+            coeff: 0.01,
+            eps: 1e-6,
+            weight_decay: 5e-5,
+        };
+        lars_step(
+            &mut w_ref,
+            grads[0].as_f32().unwrap(),
+            &mut m_ref,
+            0.5,
+            0.9,
+            &cfg,
+        );
+        assert_eq!(applied[0].as_f32().unwrap(), w_ref.as_slice());
+        assert_ne!(applied[0], params[0], "update must move the weights");
+    }
+
+    #[test]
+    fn descent_direction_reduces_loss() {
+        let b = 8usize;
+        let params = init_params(9);
+        let inputs = grad_inputs(&params, b);
+        let mut be = backend();
+        let out = be.run("tiny/grad_b8_ls10", &inputs).unwrap();
+        let loss0 = out[0].scalar().unwrap();
+        // one small LARS step along the gradients
+        let momenta: Vec<HostTensor> = params
+            .iter()
+            .map(|p| HostTensor::f32(p.shape().to_vec(), vec![0.0; p.elems()]))
+            .collect();
+        let mut ap_in = params.clone();
+        ap_in.extend(momenta);
+        ap_in.extend(out[1..1 + N_PARAMS].iter().cloned());
+        ap_in.push(HostTensor::scalar_f32(0.1));
+        ap_in.push(HostTensor::scalar_f32(0.0));
+        ap_in.push(HostTensor::scalar_f32(0.0));
+        let applied = be.run("tiny/apply", &ap_in).unwrap();
+        let mut inp2 = applied[..N_PARAMS].to_vec();
+        inp2.extend_from_slice(&inputs[N_PARAMS..]);
+        let loss1 = be.run("tiny/grad_b8_ls10", &inp2).unwrap()[0].scalar().unwrap();
+        assert!(loss1 < loss0, "loss {loss0} -> {loss1}");
+    }
+
+    #[test]
+    fn eval_reports_sane_loss_and_accuracy() {
+        let params = init_params(3);
+        let mut be = backend();
+        // bn_running from one grad call's batch statistics
+        let out = be.run("tiny/grad_b64_ls10", &grad_inputs(&params, 64)).unwrap();
+        let stats = &out[1 + N_PARAMS..];
+        let (images, labels) = sample_batch(EVAL_BATCH, 17);
+        let mut ev_in = params.clone();
+        ev_in.extend(stats.iter().cloned());
+        ev_in.push(HostTensor::f32(vec![EVAL_BATCH, IMG, IMG, CH], images));
+        ev_in.push(HostTensor::i32(vec![EVAL_BATCH], labels));
+        let ev = be.run("tiny/eval_b64", &ev_in).unwrap();
+        let loss = ev[0].scalar().unwrap() / EVAL_BATCH as f32;
+        let correct = ev[1].scalar().unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "{loss}");
+        assert!((0.0..=EVAL_BATCH as f32).contains(&correct), "{correct}");
+    }
+
+    #[test]
+    fn wrong_arity_and_shape_fail_fast() {
+        let mut be = backend();
+        assert!(be.run("tiny/init", &[]).is_err());
+        assert!(be
+            .run("tiny/init", &[HostTensor::f32(vec![1], vec![0.0])])
+            .is_err());
+        assert!(be.run("tiny/unknown", &[]).is_err());
+        assert!(be.run("nope/init", &[]).is_err());
+        assert!(be.run("badkey", &[]).is_err());
+    }
+}

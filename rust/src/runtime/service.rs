@@ -1,13 +1,14 @@
-//! Compute service: thread-confined PJRT engine behind a channel API.
+//! Compute service: a thread-confined [`ComputeBackend`] behind a channel
+//! API.
 //!
-//! `PjRtClient` is `Rc`-based and must stay on one thread; worker threads
-//! (one per simulated GPU) instead hold a cloneable [`ComputeClient`] and
-//! submit `(executable key, host tensors)` calls. The service thread owns
-//! the [`Engine`], executes requests in arrival order, and replies through
-//! a per-call channel.
+//! Backends may not be movable across threads (the PJRT client is
+//! `Rc`-based), so the service owns one thread that *constructs* the
+//! backend from a [`BackendSpec`] and then executes `(executable key, host
+//! tensors)` requests in arrival order. Worker threads (one per simulated
+//! GPU) hold a cloneable [`ComputeClient`] and reply channels.
 //!
 //! This mirrors the physical testbed faithfully: the CPU is one shared
-//! device, XLA parallelises *inside* an execution via its own thread pool,
+//! device, the backend parallelises *inside* an execution if it wants to,
 //! and the coordinator's threads contend for it exactly like the paper's
 //! GPUs contend for their own SMs. Throughput accounting at Layer 3 is
 //! unaffected (it counts steps, not device-parallel speedup).
@@ -17,7 +18,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use super::engine::Engine;
+use super::backend::{BackendSpec, ComputeBackend};
 use super::manifest::Manifest;
 use super::tensor::HostTensor;
 
@@ -27,8 +28,8 @@ enum Req {
         inputs: Vec<HostTensor>,
         reply: Sender<Result<Vec<HostTensor>>>,
     },
-    /// Compile additional executables of an arch (batch-size control may
-    /// need a grad variant that was not preloaded).
+    /// Make additional executables of an arch available (batch-size control
+    /// may need a grad variant that was not preloaded).
     Load {
         arch: String,
         names: Vec<String>,
@@ -37,7 +38,7 @@ enum Req {
     Shutdown,
 }
 
-/// Cloneable, `Send` handle to the engine thread.
+/// Cloneable, `Send` handle to the backend thread.
 #[derive(Clone)]
 pub struct ComputeClient {
     tx: Sender<Req>,
@@ -57,7 +58,7 @@ impl ComputeClient {
         rx.recv().map_err(|_| anyhow!("compute service dropped reply"))?
     }
 
-    /// Ensure `names` of `arch` are compiled.
+    /// Ensure `names` of `arch` are available.
     pub fn load(&self, arch: &str, names: &[&str]) -> Result<()> {
         let (reply, rx) = channel();
         self.tx
@@ -71,27 +72,33 @@ impl ComputeClient {
     }
 }
 
-/// The running service (owns the engine thread).
+/// The running service (owns the backend thread).
 pub struct ComputeService {
     tx: Sender<Req>,
     join: Option<JoinHandle<()>>,
 }
 
 impl ComputeService {
-    /// Start the engine thread, compiling `preload` executables of `arch`
-    /// up front. Compilation errors surface here, not at first use.
-    pub fn start(manifest: Manifest, arch: &str, preload: &[&str]) -> Result<Self> {
+    /// Start the backend thread, instantiating `spec` over `manifest` and
+    /// preparing `preload` executables of `arch` up front. Construction and
+    /// preload errors surface here, not at first use.
+    pub fn start(
+        spec: BackendSpec,
+        manifest: Manifest,
+        arch: &str,
+        preload: &[&str],
+    ) -> Result<Self> {
         let (tx, rx) = channel::<Req>();
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         let arch_name = arch.to_string();
         let preload: Vec<String> = preload.iter().map(|s| s.to_string()).collect();
         let join = std::thread::Builder::new()
-            .name("pjrt-engine".into())
-            .spawn(move || engine_thread(manifest, arch_name, preload, rx, ready_tx))
-            .map_err(|e| anyhow!("spawning engine thread: {e}"))?;
+            .name("compute-backend".into())
+            .spawn(move || backend_thread(spec, manifest, arch_name, preload, rx, ready_tx))
+            .map_err(|e| anyhow!("spawning backend thread: {e}"))?;
         ready_rx
             .recv()
-            .map_err(|_| anyhow!("engine thread died during startup"))??;
+            .map_err(|_| anyhow!("backend thread died during startup"))??;
         Ok(Self {
             tx,
             join: Some(join),
@@ -114,25 +121,23 @@ impl Drop for ComputeService {
     }
 }
 
-fn engine_thread(
+fn backend_thread(
+    spec: BackendSpec,
     manifest: Manifest,
     arch: String,
     preload: Vec<String>,
     rx: Receiver<Req>,
     ready: Sender<Result<()>>,
 ) {
-    let mut engine = match Engine::cpu() {
-        Ok(e) => e,
+    let mut backend: Box<dyn ComputeBackend> = match spec.instantiate(manifest) {
+        Ok(b) => b,
         Err(e) => {
             let _ = ready.send(Err(e));
             return;
         }
     };
-    let setup = (|| -> Result<()> {
-        let am = manifest.arch(&arch)?.clone();
-        let names: Vec<&str> = preload.iter().map(|s| s.as_str()).collect();
-        engine.load_execs(&manifest, &am, &names)
-    })();
+    let names: Vec<&str> = preload.iter().map(|s| s.as_str()).collect();
+    let setup = backend.load(&arch, &names);
     let failed = setup.is_err();
     let _ = ready.send(setup);
     if failed {
@@ -142,15 +147,11 @@ fn engine_thread(
     while let Ok(req) = rx.recv() {
         match req {
             Req::Run { key, inputs, reply } => {
-                let _ = reply.send(engine.run(&key, &inputs));
+                let _ = reply.send(backend.run(&key, &inputs));
             }
             Req::Load { arch, names, reply } => {
-                let result = (|| -> Result<()> {
-                    let am = manifest.arch(&arch)?.clone();
-                    let names: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
-                    engine.load_execs(&manifest, &am, &names)
-                })();
-                let _ = reply.send(result);
+                let names: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+                let _ = reply.send(backend.load(&arch, &names));
             }
             Req::Shutdown => break,
         }
@@ -160,16 +161,15 @@ fn engine_thread(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::reference::builtin_manifest;
 
-    const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    fn start(preload: &[&str]) -> Result<ComputeService> {
+        ComputeService::start(BackendSpec::Reference, builtin_manifest(), "tiny", preload)
+    }
 
     #[test]
-    fn multi_threaded_clients_share_the_engine() {
-        let Ok(m) = Manifest::load(ARTIFACTS) else {
-            eprintln!("skipping: run `make artifacts`");
-            return;
-        };
-        let svc = ComputeService::start(m, "tiny", &["init"]).unwrap();
+    fn multi_threaded_clients_share_the_backend() {
+        let svc = start(&["init"]).unwrap();
         let handles: Vec<_> = (0..4)
             .map(|i| {
                 let c = svc.client();
@@ -178,9 +178,15 @@ mod tests {
                         .run("tiny/init", vec![HostTensor::i32(vec![1], vec![i])])
                         .unwrap();
                     // checksum across all params (some tensors are
-                    // zero-init regardless of seed, e.g. biases/beta)
+                    // zero-init regardless of seed, e.g. beta/bias)
                     out.iter()
-                        .map(|t| t.as_f32().unwrap().iter().map(|x| *x as f64).sum::<f64>())
+                        .map(|t| {
+                            t.as_f32()
+                                .unwrap()
+                                .iter()
+                                .map(|x| f64::from(*x))
+                                .sum::<f64>()
+                        })
                         .sum::<f64>()
                 })
             })
@@ -192,8 +198,7 @@ mod tests {
 
     #[test]
     fn lazy_load_after_start() {
-        let Ok(m) = Manifest::load(ARTIFACTS) else { return };
-        let svc = ComputeService::start(m, "tiny", &["init"]).unwrap();
+        let svc = start(&["init"]).unwrap();
         let c = svc.client();
         // grad not preloaded: load on demand, then it runs
         c.load("tiny", &["grad_b8_ls10"]).unwrap();
@@ -210,7 +215,6 @@ mod tests {
 
     #[test]
     fn unknown_preload_fails_at_start() {
-        let Ok(m) = Manifest::load(ARTIFACTS) else { return };
-        assert!(ComputeService::start(m, "tiny", &["nonexistent"]).is_err());
+        assert!(start(&["nonexistent"]).is_err());
     }
 }

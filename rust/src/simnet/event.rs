@@ -7,7 +7,9 @@
 //! captures straggler propagation around heterogeneous rings — the effect
 //! the closed form approximates with its worst-link assumption — and the
 //! two are asserted to agree within tolerance in tests and in the Table 6
-//! bench.
+//! bench. [`simulate_collective_events`] additionally counts each rank's
+//! peer-to-peer hops, which must match `Collective::p2p_steps` exactly
+//! (the functional layer and the simulator describe the same schedules).
 
 use crate::cluster::{Grid, Placement};
 
@@ -17,9 +19,12 @@ use super::cost::{Algo, ClusterModel};
 ///
 /// Every ring advances `steps` times; each hop's cost is the edge's real
 /// link class. `flows` is the concurrent inter-node flow count used for
-/// bandwidth sharing (phase-level, as in the analytic model).
+/// bandwidth sharing (phase-level, as in the analytic model). `hops`
+/// accumulates each participating rank's p2p step count.
+#[allow(clippy::too_many_arguments)]
 fn simulate_phase(
     clocks: &mut [f64],
+    hops: &mut [usize],
     rings: &[Vec<usize>],
     steps: usize,
     bytes_per_step: f64,
@@ -42,6 +47,7 @@ fn simulate_phase(
                 let t_hop = model.lm.hop_time(class, bytes_per_step, flows, nodes);
                 let ready = prev[rank].max(prev[left]);
                 clocks[rank] = clocks[rank].max(ready + t_hop);
+                hops[rank] += 1;
             }
         }
     }
@@ -49,7 +55,22 @@ fn simulate_phase(
 
 /// Event-driven time of one sum-all-reduce of `bytes` under `algo`.
 pub fn simulate_collective(model: &ClusterModel, algo: Algo, n_ranks: usize, bytes: f64) -> f64 {
+    simulate_collective_events(model, algo, n_ranks, bytes).0
+}
+
+/// Event-driven `(finish time, per-rank p2p steps)` of one sum-all-reduce.
+///
+/// The step count is the maximum hops any rank executed; for the uniform
+/// schedules simulated here every participating rank does the same number,
+/// and it must equal the matching `Collective::p2p_steps`.
+pub fn simulate_collective_events(
+    model: &ClusterModel,
+    algo: Algo,
+    n_ranks: usize,
+    bytes: f64,
+) -> (f64, usize) {
     let mut clocks = vec![0.0f64; n_ranks];
+    let mut hops = vec![0usize; n_ranks];
     match algo {
         Algo::Ring => {
             let grid = Grid::new(n_ranks, 1);
@@ -57,6 +78,7 @@ pub fn simulate_collective(model: &ClusterModel, algo: Algo, n_ranks: usize, byt
             let ring: Vec<Vec<usize>> = vec![(0..n_ranks).collect()];
             simulate_phase(
                 &mut clocks,
+                &mut hops,
                 &ring,
                 2 * (n_ranks - 1),
                 bytes / n_ranks as f64,
@@ -78,6 +100,7 @@ pub fn simulate_collective(model: &ClusterModel, algo: Algo, n_ranks: usize, byt
                 .collect();
             simulate_phase(
                 &mut clocks,
+                &mut hops,
                 &intra,
                 group - 1,
                 bytes / group as f64,
@@ -87,6 +110,7 @@ pub fn simulate_collective(model: &ClusterModel, algo: Algo, n_ranks: usize, byt
             );
             simulate_phase(
                 &mut clocks,
+                &mut hops,
                 &inter,
                 2 * (groups - 1),
                 bytes / (group * groups) as f64,
@@ -96,6 +120,7 @@ pub fn simulate_collective(model: &ClusterModel, algo: Algo, n_ranks: usize, byt
             );
             simulate_phase(
                 &mut clocks,
+                &mut hops,
                 &intra,
                 group - 1,
                 bytes / group as f64,
@@ -121,6 +146,7 @@ pub fn simulate_collective(model: &ClusterModel, algo: Algo, n_ranks: usize, byt
                     let class = placement.classify(me, partner);
                     let t = model.lm.hop_time(class, b, model.gpus_per_node, nodes);
                     clocks[me] = prev[me].max(prev[partner]) + t;
+                    hops[me] += 1;
                 }
             }
         }
@@ -137,6 +163,7 @@ pub fn simulate_collective(model: &ClusterModel, algo: Algo, n_ranks: usize, byt
             let v_flows = model.gpus_per_node.min(x);
             simulate_phase(
                 &mut clocks,
+                &mut hops,
                 &rows,
                 x.saturating_sub(1),
                 bytes / x as f64,
@@ -146,6 +173,7 @@ pub fn simulate_collective(model: &ClusterModel, algo: Algo, n_ranks: usize, byt
             );
             simulate_phase(
                 &mut clocks,
+                &mut hops,
                 &cols,
                 2 * y.saturating_sub(1),
                 bytes / (x * y) as f64,
@@ -155,6 +183,7 @@ pub fn simulate_collective(model: &ClusterModel, algo: Algo, n_ranks: usize, byt
             );
             simulate_phase(
                 &mut clocks,
+                &mut hops,
                 &rows,
                 x.saturating_sub(1),
                 bytes / x as f64,
@@ -164,13 +193,19 @@ pub fn simulate_collective(model: &ClusterModel, algo: Algo, n_ranks: usize, byt
             );
         }
     }
-    clocks.iter().cloned().fold(0.0, f64::max)
+    let finish = clocks.iter().cloned().fold(0.0, f64::max);
+    let steps = hops.iter().copied().max().unwrap_or(0);
+    (finish, steps)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collectives::{
+        Collective, HalvingDoubling, HierarchicalAllReduce, RingAllReduce, TorusAllReduce,
+    };
     use crate::simnet::compute::RESNET50_GRAD_BYTES_FP16;
+    use crate::util::quickcheck::prop_seeded;
 
     #[test]
     fn event_sim_close_to_analytic_torus() {
@@ -225,5 +260,86 @@ mod tests {
         let t = simulate_collective(&m, Algo::Ring, 8, bytes);
         let pure_nvlink = 14.0 * m.lm.hop_time(crate::cluster::LinkClass::IntraNode, bytes / 8.0, 1, 2);
         assert!(t > pure_nvlink, "{t} vs {pure_nvlink}");
+    }
+
+    /// Property: for seeded random grids and payloads, the closed-form
+    /// `CollectiveCost::total_secs` matches the discrete-event replay
+    /// within tolerance, and the functional layer's `Collective::p2p_steps`
+    /// matches the simulator's per-rank event count exactly.
+    #[test]
+    fn property_cost_matches_event_and_step_counts() {
+        let m = ClusterModel::abci_v100();
+        // Square-ish torus shapes (the family the paper and the closed
+        // form target — Table 4 grids are all of this kind).
+        let torus_grids: &[(usize, usize)] = &[
+            (2, 2),
+            (2, 4),
+            (4, 2),
+            (4, 4),
+            (4, 8),
+            (8, 8),
+            (8, 16),
+            (16, 16),
+            (32, 32),
+            (64, 32),
+        ];
+        prop_seeded(0xC057_0E0E, 24, |g| {
+            let bytes = f64::from(g.f32_in(0.5..50.0)) * 1.0e6;
+
+            // 2D-torus: time within tolerance, steps exact.
+            let &(x, y) = g.choose(torus_grids);
+            let n = x * y;
+            let algo = Algo::Torus { x, y };
+            let analytic = m.collective_cost(algo, n, bytes).total_secs();
+            let (event, steps) = simulate_collective_events(&m, algo, n, bytes);
+            let rel = (event - analytic).abs() / analytic;
+            assert!(
+                rel < 0.25 && event <= analytic * 1.05,
+                "torus {x}x{y} @ {bytes:.0}B: analytic {analytic:.6} vs event {event:.6}"
+            );
+            assert_eq!(
+                steps,
+                TorusAllReduce::new(x, y).p2p_steps(n),
+                "torus {x}x{y} step count"
+            );
+
+            // Flat ring.
+            let rn = *g.choose(&[8usize, 16, 64, 128, 256]);
+            let analytic = m.collective_cost(Algo::Ring, rn, bytes).total_secs();
+            let (event, steps) = simulate_collective_events(&m, Algo::Ring, rn, bytes);
+            let rel = (event - analytic).abs() / analytic;
+            assert!(
+                rel < 0.25 && event <= analytic * 1.05,
+                "ring n={rn}: analytic {analytic:.6} vs event {event:.6}"
+            );
+            assert_eq!(steps, RingAllReduce.p2p_steps(rn), "ring {rn} step count");
+
+            // Hierarchical with node-sized groups (g=4 matches ABCI).
+            let groups = *g.choose(&[4usize, 8, 16]);
+            let hn = 4 * groups;
+            let algo = Algo::Hierarchical { group: 4 };
+            let analytic = m.collective_cost(algo, hn, bytes).total_secs();
+            let (event, steps) = simulate_collective_events(&m, algo, hn, bytes);
+            let rel = (event - analytic).abs() / analytic;
+            assert!(
+                rel < 0.25 && event <= analytic * 1.05,
+                "hierarchical n={hn}: analytic {analytic:.6} vs event {event:.6}"
+            );
+            assert_eq!(
+                steps,
+                HierarchicalAllReduce::new(4).p2p_steps(hn),
+                "hierarchical {hn} step count"
+            );
+
+            // Halving-doubling: the analytic form prices every round at the
+            // inter-node class while early rounds are physically intra-node,
+            // so only the step count is exact (and the event time bounded).
+            let hd_n = *g.choose(&[8usize, 16, 64, 256]);
+            let algo = Algo::HalvingDoubling;
+            let analytic = m.collective_cost(algo, hd_n, bytes).total_secs();
+            let (event, steps) = simulate_collective_events(&m, algo, hd_n, bytes);
+            assert!(event > 0.0 && event <= analytic * 1.05, "hd n={hd_n}");
+            assert_eq!(steps, HalvingDoubling.p2p_steps(hd_n), "hd {hd_n} step count");
+        });
     }
 }

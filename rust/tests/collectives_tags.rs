@@ -1,0 +1,143 @@
+//! Tag-window conformance: `Collective::tag_span` must really bound the
+//! tags each algorithm puts on the wire, and two back-to-back collectives
+//! offset by exactly `tag_span` on the same mesh must not cross-talk.
+//!
+//! This pins down the hand-derived spans (notably `torus2d`'s
+//! `t_scatter`/`t_vertical`/`t_gather` layout, which was never checked
+//! against actual usage before): if an algorithm ever used a tag at or
+//! beyond its declared span, the window assertion fires; if two adjacent
+//! windows overlapped in practice, the second reduction would consume the
+//! first one's messages and the sums (or the run itself — a mismatched
+//! receive blocks forever) would go wrong.
+
+use std::sync::Arc;
+use std::thread;
+
+use flashsgd::collectives::{by_name, Collective, Mesh, Wire};
+
+/// Deterministic per-rank vector for the first reduction.
+fn vec_a(rank: usize, elems: usize) -> Vec<f32> {
+    (0..elems)
+        .map(|i| ((rank + 1) as f32 * 0.37 + i as f32 * 0.011).sin() * 0.5)
+        .collect()
+}
+
+/// A different deterministic vector for the second reduction, so
+/// cross-talk between the two windows cannot cancel out.
+fn vec_b(rank: usize, elems: usize) -> Vec<f32> {
+    (0..elems)
+        .map(|i| ((rank + 2) as f32 * 0.71 - i as f32 * 0.023).cos() * 0.25 + 1.0)
+        .collect()
+}
+
+fn expected(n: usize, elems: usize, gen: fn(usize, usize) -> Vec<f32>) -> Vec<f32> {
+    let mut acc = vec![0.0f32; elems];
+    for r in 0..n {
+        for (a, v) in acc.iter_mut().zip(gen(r, elems)) {
+            *a += v;
+        }
+    }
+    acc
+}
+
+fn assert_close(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= 1e-3 + w.abs() * 1e-3,
+            "{what}: elem {i}: got {g}, want {w}"
+        );
+    }
+}
+
+/// The algorithms × world sizes under test.
+fn cases() -> Vec<(&'static str, usize)> {
+    vec![
+        ("ring", 4),
+        ("ring", 6),
+        ("halving-doubling", 8),
+        ("hierarchical:2", 8),
+        ("hierarchical:4", 8),
+        ("torus:2x2", 4),
+        ("torus:4x2", 8),
+        ("torus:2x4", 8),
+        ("torus:3x3", 9),
+    ]
+}
+
+#[test]
+fn single_all_reduce_stays_inside_the_declared_tag_window() {
+    for (spec, n) in cases() {
+        let coll: Arc<dyn Collective> = Arc::from(by_name(spec, n).unwrap());
+        let span = coll.tag_span(n);
+        assert!(span > 0, "{spec}: span must be positive");
+        let eps = Mesh::new(n);
+        let counters = eps[0].counters_arc();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                let coll = coll.clone();
+                thread::spawn(move || {
+                    let mut buf = vec_a(ep.rank(), 97);
+                    coll.all_reduce(&mut ep, &mut buf, Wire::F32, 0).unwrap();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let max = counters.max_tag_seen();
+        assert!(
+            max < span,
+            "{spec} over {n} ranks used tag {max}, but tag_span claims {span}"
+        );
+    }
+}
+
+#[test]
+fn back_to_back_windows_offset_by_tag_span_do_not_cross_talk() {
+    for (spec, n) in cases() {
+        let coll: Arc<dyn Collective> = Arc::from(by_name(spec, n).unwrap());
+        let span = coll.tag_span(n);
+        let elems = 193usize;
+        let eps = Mesh::new(n);
+        let counters = eps[0].counters_arc();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                let coll = coll.clone();
+                thread::spawn(move || {
+                    let rank = ep.rank();
+                    // Two reductions straight after one another — exactly
+                    // how the worker loop spaces its grad and BN windows.
+                    let mut a = vec_a(rank, elems);
+                    coll.all_reduce(&mut ep, &mut a, Wire::F32, 0).unwrap();
+                    let mut b = vec_b(rank, elems);
+                    coll.all_reduce(&mut ep, &mut b, Wire::F32, span).unwrap();
+                    (a, b)
+                })
+            })
+            .collect();
+        let results: Vec<(Vec<f32>, Vec<f32>)> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+        // Both windows fit inside [0, 2*span).
+        let max = counters.max_tag_seen();
+        assert!(
+            max < 2 * span,
+            "{spec}: tag {max} escaped the second window (span {span})"
+        );
+
+        // Both reductions produced the exact sums on every rank.
+        let want_a = expected(n, elems, vec_a);
+        let want_b = expected(n, elems, vec_b);
+        for (rank, (a, b)) in results.iter().enumerate() {
+            assert_close(a, &want_a, &format!("{spec} rank {rank} first reduce"));
+            assert_close(b, &want_b, &format!("{spec} rank {rank} second reduce"));
+        }
+        for (a, b) in &results[1..] {
+            assert_eq!(a, &results[0].0, "{spec}: ranks disagree on first reduce");
+            assert_eq!(b, &results[0].1, "{spec}: ranks disagree on second reduce");
+        }
+    }
+}

@@ -1,18 +1,14 @@
-//! Integration tests: the full Trainer stack over real PJRT artifacts.
+//! Integration tests: the full Trainer stack, end-to-end, on the pure-Rust
+//! [`ReferenceBackend`](flashsgd::runtime::ReferenceBackend).
 //!
-//! These need `make artifacts` to have produced `artifacts/manifest.json`;
-//! when artifacts are missing every test skips with a notice (so `cargo
-//! test` stays usable in a fresh checkout).
+//! No Python, no artifacts, no XLA — a clean `cargo test` exercises the
+//! whole coordination layer the paper is about: multi-rank 2D-torus
+//! all-reduce, batch-size-control phase swaps, the FP16 gradient wire with
+//! the FP32 BN/loss wire, LARS, and checkpoint/resume.
 
 use flashsgd::config::TrainConfig;
 use flashsgd::coordinator::Trainer;
 use flashsgd::sched::{BatchSchedule, LrSchedule, Phase};
-
-const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-
-fn have_artifacts() -> bool {
-    std::path::Path::new(ARTIFACTS).join("manifest.json").exists()
-}
 
 fn base_config(name: &str, ranks: usize, steps: usize) -> TrainConfig {
     TrainConfig {
@@ -21,7 +17,7 @@ fn base_config(name: &str, ranks: usize, steps: usize) -> TrainConfig {
         collective: "torus".into(),
         grad_wire: "fp16".into(),
         label_smoothing: 0.1,
-        lr: LrSchedule::Const { lr: 4.0, momentum: 0.9 },
+        lr: LrSchedule::Const { lr: 0.5, momentum: 0.9 },
         batch: BatchSchedule::constant(8, ranks, 8),
         weight_decay: 5e-5,
         seed: 7,
@@ -34,16 +30,12 @@ fn base_config(name: &str, ranks: usize, steps: usize) -> TrainConfig {
 
 #[test]
 fn quickstart_reduces_loss() {
-    if !have_artifacts() {
-        eprintln!("skipping: run `make artifacts`");
-        return;
-    }
-    let report = Trainer::new(base_config("it-quickstart", 4, 25), ARTIFACTS)
+    let report = Trainer::new(base_config("it-quickstart", 4, 30))
         .unwrap()
         .run()
         .unwrap();
     let s = &report.summary;
-    assert_eq!(s.steps, 25);
+    assert_eq!(s.steps, 30);
     assert!(s.first_loss.is_finite() && s.last_loss.is_finite());
     assert!(
         s.last_loss < s.first_loss,
@@ -51,17 +43,22 @@ fn quickstart_reduces_loss() {
         s.first_loss,
         s.last_loss
     );
-    // loss starts near ln(10) + smoothing offset for 10 classes
+    // loss starts near ln(10) for 10 classes
     assert!(s.first_loss > 1.5 && s.first_loss < 4.0, "{}", s.first_loss);
 }
 
+/// The headline end-to-end guarantee: a 2-phase batch-size schedule on a
+/// 2×2 torus over 4 rank threads, FP16 gradient wire — and every rank
+/// finishes every phase with bit-identical parameters, momenta and BN
+/// state (the coordinator aborts the run otherwise).
 #[test]
-fn batch_size_control_swaps_executables_mid_run() {
-    if !have_artifacts() {
-        return;
-    }
-    let mut config = base_config("it-bsc", 4, 0);
-    // 2048 samples, 8x4=32/step -> 64 steps/epoch; switch at epoch 1.
+fn two_phase_torus_run_keeps_all_ranks_bit_identical() {
+    let mut config = base_config("it-2phase-torus", 4, 0);
+    config.collective = "torus:2x2".into();
+    config.train_size = 1024;
+    // 1024 samples: epoch 0 at 8x4=32/step -> 32 steps; epoch 1 at
+    // 16x4=64/step -> 16 steps. The phase boundary swaps every worker's
+    // grad executable (batch-size control).
     config.batch = BatchSchedule::new(
         vec![
             Phase { from_epoch: 0, per_worker: 8, workers: 4 },
@@ -69,7 +66,11 @@ fn batch_size_control_swaps_executables_mid_run() {
         ],
         2,
     );
-    let report = Trainer::new(config, ARTIFACTS).unwrap().run().unwrap();
+    // `run()` bit-compares every rank's params/momenta/bn state against
+    // rank 0 at each phase boundary and errors on divergence, so this
+    // unwrap IS the bit-identical-replicas assertion.
+    let report = Trainer::new(config).unwrap().run().unwrap();
+    assert_eq!(report.summary.steps, 48);
     let batches: Vec<usize> = report.metrics.steps.iter().map(|s| s.global_batch).collect();
     assert!(batches.contains(&32), "phase 1 batches: {batches:?}");
     assert!(batches.contains(&64), "phase 2 missing: {batches:?}");
@@ -81,16 +82,33 @@ fn batch_size_control_swaps_executables_mid_run() {
     assert!(report.summary.last_loss < report.summary.first_loss);
 }
 
+/// Regression for the loss-precision bug: the scalar step loss must ride
+/// the FP32 BN-stat buffer, so the reported `loss_mean` matches an
+/// FP32-only reduction even when gradients use the FP16 wire.
+#[test]
+fn reported_loss_is_fp32_even_on_the_fp16_wire() {
+    let run = |wire: &str| {
+        let mut c = base_config("it-loss-precision", 4, 1);
+        c.grad_wire = wire.into();
+        Trainer::new(c).unwrap().run().unwrap().metrics.steps[0].loss
+    };
+    let l16 = run("fp16");
+    let l32 = run("fp32");
+    // identical data and params at step 0: only the wire differs, and the
+    // loss never touches it.
+    assert!(
+        (l16 - l32).abs() <= 1e-6,
+        "fp16-wire loss {l16} vs fp32-wire loss {l32}"
+    );
+}
+
 #[test]
 fn collective_choice_does_not_change_numerics_much() {
-    if !have_artifacts() {
-        return;
-    }
     let run = |spec: &str| {
         let mut c = base_config("it-coll", 4, 12);
         c.collective = spec.into();
         c.grad_wire = "fp32".into();
-        Trainer::new(c, ARTIFACTS).unwrap().run().unwrap()
+        Trainer::new(c).unwrap().run().unwrap()
     };
     let torus = run("torus:2x2");
     let ring = run("ring");
@@ -106,19 +124,16 @@ fn collective_choice_does_not_change_numerics_much() {
 
 #[test]
 fn fp16_wire_tracks_fp32_training() {
-    if !have_artifacts() {
-        return;
-    }
     let run = |wire: &str| {
         let mut c = base_config("it-wire", 4, 12);
         c.grad_wire = wire.into();
-        Trainer::new(c, ARTIFACTS).unwrap().run().unwrap()
+        Trainer::new(c).unwrap().run().unwrap()
     };
     let h = run("fp16");
     let f = run("fp32");
     // same trajectory within fp16 quantisation noise
     assert!(
-        (h.summary.last_loss - f.summary.last_loss).abs() < 5e-2,
+        (h.summary.last_loss - f.summary.last_loss).abs() < 1e-1,
         "fp16 {:.4} vs fp32 {:.4}",
         h.summary.last_loss,
         f.summary.last_loss
@@ -127,12 +142,9 @@ fn fp16_wire_tracks_fp32_training() {
 
 #[test]
 fn eval_beats_chance_after_training() {
-    if !have_artifacts() {
-        return;
-    }
     let mut config = base_config("it-eval", 4, 60);
     config.eval_batches = 8;
-    let report = Trainer::new(config, ARTIFACTS).unwrap().run().unwrap();
+    let report = Trainer::new(config).unwrap().run().unwrap();
     let acc = report.final_eval.expect("final eval").accuracy;
     // 10 classes: chance = 10%; the synthetic task is easy
     assert!(acc > 0.15, "top-1 {:.1}% not above chance", acc * 100.0);
@@ -140,45 +152,33 @@ fn eval_beats_chance_after_training() {
 
 #[test]
 fn invalid_grid_is_a_clean_error() {
-    if !have_artifacts() {
-        return;
-    }
     let mut config = base_config("it-badgrid", 4, 5);
     config.collective = "torus:3x3".into(); // 9 != 4 ranks
-    let err = Trainer::new(config, ARTIFACTS).unwrap().run().unwrap_err();
+    let err = Trainer::new(config).unwrap().run().unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("torus"), "unexpected error: {msg}");
 }
 
 #[test]
 fn unknown_arch_fails_at_construction() {
-    if !have_artifacts() {
-        return;
-    }
     let mut config = base_config("it-badarch", 2, 2);
     config.arch = "resnet9000".into();
-    assert!(Trainer::new(config, ARTIFACTS).is_err());
+    assert!(Trainer::new(config).is_err());
 }
 
 #[test]
 fn single_rank_degenerate_case_works() {
-    if !have_artifacts() {
-        return;
-    }
     let mut config = base_config("it-1rank", 1, 8);
     config.collective = "torus:1x1".into();
-    let report = Trainer::new(config, ARTIFACTS).unwrap().run().unwrap();
+    let report = Trainer::new(config).unwrap().run().unwrap();
     assert_eq!(report.summary.steps, 8);
     assert!(report.summary.last_loss.is_finite());
 }
 
 #[test]
 fn determinism_same_seed_same_curve() {
-    if !have_artifacts() {
-        return;
-    }
     let run = || {
-        Trainer::new(base_config("it-det", 4, 8), ARTIFACTS)
+        Trainer::new(base_config("it-det", 4, 8))
             .unwrap()
             .run()
             .unwrap()
@@ -193,39 +193,63 @@ fn determinism_same_seed_same_curve() {
     assert_eq!(a, b, "same seed must give a bit-identical loss curve");
 }
 
+/// Checkpoint/resume determinism across a batch-size-control phase
+/// boundary: train N steps straight vs. train k, checkpoint, resume,
+/// train N−k. The reported losses must agree step for step AND the final
+/// checkpoints must be byte-identical — params, momenta and `bn_running`
+/// bit for bit (this exercises `PhaseCtx::skip_steps` and the loader
+/// fast-forward path).
 #[test]
 fn checkpoint_resume_is_exactly_continuous() {
-    if !have_artifacts() {
-        return;
-    }
     let dir = std::env::temp_dir().join(format!("fsgd-it-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
-    let ckpt = dir.join("mid.ckpt");
+    let mid = dir.join("mid.ckpt");
+    let done_a = dir.join("done_a.ckpt");
+    let done_b = dir.join("done_b.ckpt");
+
+    // Two phases: epoch 0 runs 8 steps at 8/worker (256/32), later epochs
+    // 4 steps at 16/worker. 16 total steps span the phase switch; the
+    // resume point (step 7) sits mid-phase-1, so the resumed run must
+    // fast-forward the loaders and then cross the boundary.
+    let config = |name: &str, steps: usize| {
+        let mut c = base_config(name, 4, steps);
+        c.train_size = 256;
+        c.batch = BatchSchedule::new(
+            vec![
+                Phase { from_epoch: 0, per_worker: 8, workers: 4 },
+                Phase { from_epoch: 1, per_worker: 16, workers: 4 },
+            ],
+            8,
+        );
+        c
+    };
 
     // Continuous 16-step run.
-    let continuous = Trainer::new(base_config("it-cont", 4, 16), ARTIFACTS)
+    let continuous = Trainer::new(config("it-cont", 16))
         .unwrap()
+        .with_checkpoint(&done_a)
         .run()
         .unwrap();
 
-    // 8 steps + save, then resume for the remaining 8.
-    Trainer::new(base_config("it-part1", 4, 8), ARTIFACTS)
+    // 7 steps + save, then resume for the remaining 9.
+    Trainer::new(config("it-part1", 7))
         .unwrap()
-        .with_checkpoint(&ckpt)
+        .with_checkpoint(&mid)
         .run()
         .unwrap();
-    let resumed = Trainer::new(base_config("it-part2", 4, 16), ARTIFACTS)
+    let resumed = Trainer::new(config("it-part2", 16))
         .unwrap()
-        .with_resume(&ckpt)
+        .with_resume(&mid)
+        .with_checkpoint(&done_b)
         .run()
         .unwrap();
 
-    // The resumed run must reproduce steps 8..16 bit-for-bit.
+    // The resumed run must reproduce steps 7..16 bit-for-bit.
     let cont_tail: Vec<(usize, f64)> = continuous
         .metrics
         .steps
         .iter()
-        .skip(8)
+        .skip(7)
         .map(|s| (s.step, s.loss))
         .collect();
     let res_all: Vec<(usize, f64)> = resumed
@@ -234,19 +258,23 @@ fn checkpoint_resume_is_exactly_continuous() {
         .iter()
         .map(|s| (s.step, s.loss))
         .collect();
-    assert_eq!(res_all.len(), 8);
+    assert_eq!(res_all.len(), 9);
     assert_eq!(cont_tail, res_all);
 
+    // Final params, momenta and bn_running agree bit for bit: the two
+    // final checkpoints (self-describing tensors + run metadata) are
+    // byte-identical.
+    let bytes_a = std::fs::read(&done_a).unwrap();
+    let bytes_b = std::fs::read(&done_b).unwrap();
+    assert_eq!(
+        bytes_a, bytes_b,
+        "straight vs resumed runs must end in byte-identical checkpoints"
+    );
+
     // resuming past the end is a clean error
-    let done = dir.join("done.ckpt");
-    Trainer::new(base_config("it-done", 4, 16), ARTIFACTS)
+    let err = Trainer::new(config("it-past", 16))
         .unwrap()
-        .with_checkpoint(&done)
-        .run()
-        .unwrap();
-    let err = Trainer::new(base_config("it-past", 4, 16), ARTIFACTS)
-        .unwrap()
-        .with_resume(&done)
+        .with_resume(&done_a)
         .run()
         .unwrap_err();
     assert!(format!("{err:#}").contains("end of this schedule"));
@@ -255,20 +283,14 @@ fn checkpoint_resume_is_exactly_continuous() {
 
 #[test]
 fn halving_doubling_collective_trains_too() {
-    if !have_artifacts() {
-        return;
-    }
     let mut config = base_config("it-hd", 4, 10);
     config.collective = "halving-doubling".into();
-    let report = Trainer::new(config, ARTIFACTS).unwrap().run().unwrap();
+    let report = Trainer::new(config).unwrap().run().unwrap();
     assert!(report.summary.last_loss < report.summary.first_loss);
 }
 
 #[test]
 fn config_b_momentum_applied_from_schedule() {
-    if !have_artifacts() {
-        return;
-    }
     let mut config = base_config("it-cfgb", 4, 6);
     config.lr = LrSchedule::ConfigB {
         warmup_epochs: 1.0,
@@ -278,7 +300,7 @@ fn config_b_momentum_applied_from_schedule() {
         switch_epoch: 3.0,
         total_epochs: 8.0,
     };
-    let report = Trainer::new(config, ARTIFACTS).unwrap().run().unwrap();
+    let report = Trainer::new(config).unwrap().run().unwrap();
     // global batch 32 << 32K reference -> momentum clamps to 0.0
     for s in &report.metrics.steps {
         assert_eq!(s.momentum, 0.0);

@@ -1,0 +1,130 @@
+//! API-compatible stub of the `xla` (PJRT) crate.
+//!
+//! The container building this workspace has no crates.io access and no XLA
+//! toolchain, so the optional `pjrt` feature of `flash-sgd` links against
+//! this stub instead: everything type-checks (so `--features pjrt` still
+//! compiles and the engine code stays honest), but creating a client fails
+//! with a clear message. To run against real PJRT, replace this path
+//! dependency with the real `xla` crate.
+
+use std::fmt;
+
+/// Error type mirroring the real crate's (Display-able) error.
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla::Error({})", self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err() -> Error {
+    Error(
+        "xla stub: this build vendors an API stub of the `xla` crate; \
+         swap in the real crate to use the PJRT backend"
+            .to_string(),
+    )
+}
+
+/// Element types used by the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(stub_err())
+    }
+}
+
+/// XLA computation handle (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Host literal (stub).
+pub struct Literal;
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _shape: &[usize],
+        _bytes: &[u8],
+    ) -> Result<Self> {
+        Err(stub_err())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(stub_err())
+    }
+
+    // The real crate's `to_tuple` consumes the literal; mirror it.
+    #[allow(clippy::wrong_self_convention)]
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(stub_err())
+    }
+}
+
+/// Device buffer (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(stub_err())
+    }
+}
+
+/// Loaded executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err())
+    }
+}
+
+/// PJRT client (stub). `cpu()` always fails, so no other stub method is
+/// reachable at runtime.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(stub_err())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(stub_err())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_creation_fails_with_clear_message() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(format!("{err}").contains("xla stub"));
+    }
+}
