@@ -23,6 +23,12 @@ fn main() -> Result<()> {
     let report = trainer.run()?;
 
     println!("{}", report.format());
+    println!(
+        "compute pool: {} lanes, peak concurrency {} (steps/s: {:.1})",
+        report.lanes,
+        report.max_lane_concurrency,
+        report.summary.steps as f64 / report.summary.wall_secs.max(1e-9)
+    );
     println!("\nloss curve (EMA):");
     for (step, loss) in report.metrics.loss_curve(5) {
         let bar = "#".repeat((loss * 12.0).min(60.0) as usize);

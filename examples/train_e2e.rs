@@ -29,7 +29,7 @@ fn main() -> Result<()> {
     let paper = paper_run("exp2").expect("exp2 preset");
     let mut config = TrainConfig::twin_of(&paper, ranks, &arch, epochs);
     config.train_size = 8192;
-    config.eval_every = 1; // eval at each phase boundary
+    config.eval_every = 32; // one validation pass every 32 optimizer steps
     config.eval_batches = 8;
 
     println!("=== train_e2e: paper Exp. 2 at reduced scale ===");

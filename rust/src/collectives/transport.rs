@@ -12,7 +12,8 @@
 //! collective moves exactly the data volume its cost model claims —
 //! the bridge between the functional path and `simnet`'s analytical path.
 
-use std::collections::HashMap;
+use std::collections::hash_map::Entry;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -122,7 +123,11 @@ pub struct Endpoint {
     n: usize,
     senders: Vec<Sender<Msg>>,
     rx: Receiver<Msg>,
-    pending: HashMap<(usize, u64), Vec<Payload>>,
+    /// Out-of-order arrivals parked per `(src, tag)`. `VecDeque` keeps
+    /// pops O(1) under bursts (a `Vec::remove(0)` here is O(n) per pop —
+    /// quadratic when a peer runs ahead), and entries are removed as soon
+    /// as they drain so the map cannot grow without bound across a run.
+    pending: HashMap<(usize, u64), VecDeque<Payload>>,
     counters: Arc<Counters>,
 }
 
@@ -177,14 +182,16 @@ impl Endpoint {
     /// delivered to their own matching receive later (MPI-style matching).
     pub fn recv(&mut self, src: usize, tag: u64) -> Result<Payload> {
         let key = (src, tag);
-        if let Some(q) = self.pending.get_mut(&key) {
-            if !q.is_empty() {
-                let p = q.remove(0);
-                self.counters
-                    .bytes_received
-                    .fetch_add(p.wire_bytes(), Ordering::Relaxed);
-                return Ok(p);
+        if let Entry::Occupied(mut e) = self.pending.entry(key) {
+            // queues are dropped when drained, so an entry is never empty
+            let p = e.get_mut().pop_front().expect("empty pending queue kept");
+            if e.get().is_empty() {
+                e.remove();
             }
+            self.counters
+                .bytes_received
+                .fetch_add(p.wire_bytes(), Ordering::Relaxed);
+            return Ok(p);
         }
         loop {
             let msg = self
@@ -200,8 +207,14 @@ impl Endpoint {
             self.pending
                 .entry((msg.src, msg.tag))
                 .or_default()
-                .push(msg.payload);
+                .push_back(msg.payload);
         }
+    }
+
+    /// Number of parked out-of-order messages (tests assert this drains to
+    /// zero so the pending map cannot leak across a long run).
+    pub fn pending_messages(&self) -> usize {
+        self.pending.values().map(|q| q.len()).sum()
     }
 
     /// Receive and require an f32 payload (wire-format mismatch is a bug).
@@ -292,6 +305,31 @@ mod tests {
         assert_eq!(sent, recvd);
         assert_eq!(sent, 4 * 10 * 100 * 4); // ranks * steps * elems * 4B
         assert_eq!(msgs, 40);
+    }
+
+    #[test]
+    fn pending_queue_drains_and_entries_are_dropped() {
+        let mut eps = Mesh::new(2);
+        let mut b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        // out-of-order burst: many messages on tags received later
+        for i in 0..50u64 {
+            a.send_f32(1, i % 5, &[i as f32]).unwrap();
+        }
+        a.send_f32(1, 99, &[99.0]).unwrap();
+        // receiving tag 99 first parks all 50 burst messages
+        assert_eq!(b.recv_f32(0, 99).unwrap(), vec![99.0]);
+        assert_eq!(b.pending_messages(), 50);
+        // drain them in FIFO order per tag
+        for i in 0..50u64 {
+            let tag = i % 5;
+            let got = b.recv_f32(0, tag).unwrap();
+            // per-tag order: the k-th receive of `tag` is message 5k+tag
+            assert_eq!(got, vec![(5 * (i / 5) + tag) as f32], "tag {tag}");
+        }
+        // fully drained: no empty queues linger in the map
+        assert_eq!(b.pending_messages(), 0);
+        assert!(b.pending.is_empty(), "empty pending entries leaked");
     }
 
     #[test]

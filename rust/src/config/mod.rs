@@ -28,12 +28,20 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Hard cap on optimizer steps (0 = run the schedule's epochs).
     pub max_steps: usize,
-    /// Evaluate every N steps (0 = only at end).
+    /// Evaluate every N global optimizer steps — a *step interval*, not a
+    /// phase-boundary flag (0 = only the single evaluation at the end of
+    /// the run; the final eval always happens and is never duplicated when
+    /// the interval lands on the last step).
     pub eval_every: usize,
     /// Number of validation batches per evaluation.
     pub eval_batches: usize,
     /// Synthetic dataset size (train split).
     pub train_size: usize,
+    /// Width of the compute pool: lanes (backend threads) executing
+    /// grad/apply concurrently. 0 = auto, one lane per rank of the widest
+    /// phase; 1 = fully serialized (the pre-pool behaviour, bit-identical
+    /// results either way).
+    pub compute_lanes: usize,
 }
 
 impl TrainConfig {
@@ -53,6 +61,7 @@ impl TrainConfig {
             eval_every: 0,
             eval_batches: 4,
             train_size: 4096,
+            compute_lanes: 0,
         }
     }
 
@@ -127,6 +136,7 @@ impl TrainConfig {
             eval_every: 0,
             eval_batches: 8,
             train_size: 4096,
+            compute_lanes: 0,
         }
     }
 
@@ -146,6 +156,7 @@ impl TrainConfig {
         let eval_every = doc.usize_or("eval_every", 0)?;
         let eval_batches = doc.usize_or("eval_batches", 8)?;
         let train_size = doc.usize_or("train_size", 4096)?;
+        let compute_lanes = doc.usize_or("compute_lanes", 0)?;
         let total_epochs = doc.usize_or("epochs", 2)? as u32;
 
         // LR schedule.
@@ -208,6 +219,7 @@ impl TrainConfig {
             eval_every,
             eval_batches,
             train_size,
+            compute_lanes,
         })
     }
 }

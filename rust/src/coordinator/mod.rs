@@ -2,20 +2,27 @@
 //!
 //! [`Trainer`] owns a run end-to-end: it resolves a manifest and a compute
 //! backend (the pure-Rust [`crate::runtime::ReferenceBackend`] by default;
-//! PJRT over AOT artifacts with `--features pjrt`), starts the compute
-//! service, materialises the initial parameters (the `init` entry point —
+//! PJRT over AOT artifacts with `--features pjrt`), starts a **multi-lane
+//! compute pool** (one lane — thread + backend instance — per rank, so
+//! ranks compute concurrently; `compute_lanes` in the config overrides the
+//! width), materialises the initial parameters (the `init` entry point —
 //! same He init as the paper's [10]), then executes the batch-size
 //! schedule phase by phase. Each phase spawns one thread per simulated GPU
-//! over a fresh [`Mesh`]; phase boundaries are where batch-size control
-//! swaps every worker's `grad_step` executable (and, like the paper's
-//! Exp. 2–4, may change the worker count). Parameters are replicated, so
-//! phase handoff is rank 0's state — and the coordinator *enforces* the
-//! replication invariant by checking, at every phase boundary, that all
-//! ranks hold bit-identical parameters, momenta and BN statistics.
+//! over a fresh [`Mesh`]; every rank pins its `(params, momenta)` into its
+//! compute lane for the phase, so steady-state steps ship only batches,
+//! reduced gradients and scalars. Phase boundaries are where batch-size
+//! control swaps every worker's `grad_step` executable (and, like the
+//! paper's Exp. 2–4, may change the worker count); they are also the only
+//! points where state is exported from the lanes — for the replication
+//! invariant the coordinator *enforces* (all ranks bit-identical in
+//! parameters, momenta and BN statistics), for checkpointing, and for the
+//! next phase's import.
 //!
 //! Evaluation runs on rank 0's parameters with the *synchronized running
 //! BN statistics* — the "Batch Normalization without Moving Average"
-//! evaluation path (paper §3.2).
+//! evaluation path (paper §3.2) — every `eval_every` global steps (a step
+//! interval; rank 0 evaluates in-phase through its resident state), plus
+//! once at the end of the run.
 
 pub mod checkpoint;
 pub mod metrics;
@@ -31,7 +38,7 @@ use anyhow::{bail, Context, Result};
 use crate::cluster::best_grid;
 use crate::collectives::{self, Collective, Mesh, Wire};
 use crate::config::TrainConfig;
-use crate::data::{Augment, Batch, Loader, SynthDataset};
+use crate::data::{Augment, Loader, SynthDataset};
 use crate::runtime::{BackendSpec, ComputeClient, ComputeService, HostTensor, Manifest};
 use crate::util::timer::Stopwatch;
 
@@ -45,6 +52,11 @@ pub struct TrainReport {
     pub summary: Summary,
     pub final_eval: Option<EvalMetric>,
     pub wall_secs: f64,
+    /// Width of the compute pool this run used.
+    pub lanes: usize,
+    /// Highest number of compute requests observed executing at the same
+    /// instant across lanes (≥ 2 means ranks genuinely overlapped).
+    pub max_lane_concurrency: usize,
 }
 
 impl TrainReport {
@@ -251,13 +263,22 @@ impl Trainer {
 
         let preload = self.preload_names(&plans)?;
         let preload_refs: Vec<&str> = preload.iter().map(|s| s.as_str()).collect();
-        let svc = ComputeService::start(
+        // One compute lane per rank (the widest phase wins) so every rank's
+        // grad/apply executes concurrently; `compute_lanes` pins the width
+        // explicitly (1 = the old fully-serialized configuration).
+        let lanes = if cfg.compute_lanes > 0 {
+            cfg.compute_lanes
+        } else {
+            plans.iter().map(|p| p.workers).max().unwrap_or(1)
+        };
+        let svc = ComputeService::start_pool(
             self.backend,
             self.manifest.clone(),
             &cfg.arch,
             &preload_refs,
+            lanes,
         )
-        .context("starting compute service")?;
+        .context("starting compute pool")?;
         let client = svc.client();
         let mut sw = Stopwatch::new();
 
@@ -321,6 +342,8 @@ impl Trainer {
                 samples_before: plan.samples_before,
                 skip_steps: plan.skipped,
                 dataset_size: cfg.train_size,
+                eval_every: cfg.eval_every,
+                eval_batches: cfg.eval_batches,
             });
 
             let mut outputs = run_phase_on_mesh(&ctx, &client, &dataset, cfg.seed, state)?;
@@ -344,25 +367,25 @@ impl Trainer {
             let o = outputs.swap_remove(0);
             all_metrics.merge(o.metrics);
             state = o.state;
+        }
 
-            if cfg.eval_every > 0 {
-                let e = self.evaluate(&client, &arch, &dataset, &state, plan.first_step + plan.steps)?;
-                all_metrics.push_eval(e);
+        // Final evaluation at the completed-step count. In-phase interval
+        // evals (rank 0, every `eval_every` steps) already landed in the
+        // metrics; if the last one coincides with the end of the run, reuse
+        // it instead of double-pushing a duplicate step.
+        let total_steps = all_metrics.steps.last().map(|s| s.step + 1).unwrap_or(0);
+        let final_eval = match all_metrics.evals.last() {
+            Some(e) if e.step == total_steps => Some(e.clone()),
+            _ => {
+                let e = self
+                    .evaluate(&client, &arch, &dataset, &state, total_steps)
+                    .ok();
+                if let Some(e) = &e {
+                    all_metrics.push_eval(e.clone());
+                }
+                e
             }
-        }
-
-        let final_eval = self
-            .evaluate(
-                &client,
-                &arch,
-                &dataset,
-                &state,
-                all_metrics.steps.last().map(|s| s.step + 1).unwrap_or(0),
-            )
-            .ok();
-        if let Some(e) = &final_eval {
-            all_metrics.push_eval(e.clone());
-        }
+        };
 
         // Final-state checkpoint.
         if let Some(path) = &self.save_to {
@@ -383,11 +406,16 @@ impl Trainer {
             summary,
             final_eval,
             wall_secs: sw.lap("total"),
+            lanes,
+            max_lane_concurrency: svc.stats().max_concurrent(),
         })
     }
 
     /// Top-1 validation accuracy + loss on `eval_batches` validation
-    /// batches, using the synchronized running BN statistics.
+    /// batches, using the synchronized running BN statistics. Shares the
+    /// batch loop and normalisation with rank 0's in-phase interval evals
+    /// ([`worker::eval_over_val_split`]); only the execution path differs —
+    /// here a stateless `run` with the coordinator-held parameters.
     fn evaluate(
         &self,
         client: &ComputeClient,
@@ -396,33 +424,21 @@ impl Trainer {
         state: &WorkerState,
         step: usize,
     ) -> Result<EvalMetric> {
-        let eval = arch.eval_exec()?;
-        let batch = eval.batch.context("eval exec missing batch")?;
-        let key = format!("{}/{}", arch.name, eval.name);
         let loader = Loader::new(dataset.clone(), Augment::none(), 0, 1);
-        let mut b = Batch::empty();
-        let mut loss_sum = 0.0f64;
-        let mut correct = 0.0f64;
-        let mut total = 0usize;
-        for i in 0..self.config.eval_batches.max(1) {
-            loader.val_batch(i * batch, batch, &mut b);
-            let mut inputs = state.params.clone();
-            inputs.extend(state.bn_running.iter().cloned());
-            inputs.push(HostTensor::f32(
-                vec![batch, arch.image_size, arch.image_size, arch.image_channels],
-                b.images.clone(),
-            ));
-            inputs.push(HostTensor::i32(vec![batch], b.labels.clone()));
-            let out = client.run(&key, inputs)?;
-            loss_sum += out[0].scalar()? as f64;
-            correct += out[1].scalar()? as f64;
-            total += batch;
-        }
-        Ok(EvalMetric {
+        worker::eval_over_val_split(
+            arch,
+            &loader,
+            self.config.eval_batches,
             step,
-            val_loss: loss_sum / total as f64,
-            accuracy: correct / total as f64,
-        })
+            |exec, images, labels| {
+                let key = format!("{}/{exec}", arch.name);
+                let mut inputs = state.params.clone();
+                inputs.extend(state.bn_running.iter().cloned());
+                inputs.push(images);
+                inputs.push(labels);
+                client.run(&key, inputs)
+            },
+        )
     }
 }
 

@@ -1,30 +1,42 @@
 //! Worker rank: one simulated GPU's training loop.
 //!
-//! Per step (the paper's data-parallel structure, §2):
+//! Per phase, the rank pins its `(params, momenta)` into one **lane** of
+//! the compute pool ([`ComputeClient::import_state`]) so the steady-state
+//! step ships only data and gradients — never the model. Per step (the
+//! paper's data-parallel structure, §2):
 //!   1. load the next local batch (shard of the synthetic set),
-//!   2. `grad_step` executable → loss, local grads, local BN stats,
+//!   2. `grad_step` against the lane-resident parameters → loss, local
+//!      grads, local BN stats,
 //!   3. all-reduce grads via the configured collective, **FP16 wire**,
 //!   4. all-reduce BN stats, **FP32 wire** (paper §3.2 precision split),
 //!      with the scalar step loss riding in this buffer (1 extra element)
 //!      so the reported `loss_mean` is never quantised by the FP16
 //!      gradient wire,
-//!   5. scale by 1/N, `apply_step` executable (LARS) with the schedule's
-//!      (lr, momentum) for this step's epoch.
+//!   5. `apply` (LARS) updates the lane-resident state in place with the
+//!      reduced gradient and the schedule's (lr, momentum) for this step's
+//!      epoch.
 //!
 //! Parameters stay replicated: identical reduced grads + identical update
-//! = identical weights on every rank (asserted in integration tests).
+//! = identical weights on every rank. The rank exports its state only at
+//! the phase boundary, where the coordinator asserts the bit-identity
+//! invariant (see `coordinator::Trainer`).
+//!
+//! Rank 0 additionally evaluates every `eval_every` global steps (a step
+//! interval, not a phase-boundary flag) against its resident parameters
+//! and the synchronized running BN statistics; the other ranks simply wait
+//! at the next collective, so no extra synchronisation is needed.
 
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::collectives::{Collective, Endpoint, Wire};
-use crate::data::{Batch, Loader};
-use crate::runtime::{ArchManifest, ComputeClient, HostTensor};
+use crate::data::{Augment, Batch, Loader};
+use crate::runtime::{ApplyParams, ArchManifest, ComputeClient, HostTensor};
 use crate::sched::LrSchedule;
 use crate::util::timer::Stopwatch;
 
-use super::metrics::{Metrics, StepMetric};
+use super::metrics::{EvalMetric, Metrics, StepMetric};
 
 /// Static per-phase context shared by all workers.
 pub struct PhaseCtx {
@@ -45,6 +57,10 @@ pub struct PhaseCtx {
     /// run — the loader fast-forwards past their batches on entry.
     pub skip_steps: usize,
     pub dataset_size: usize,
+    /// Evaluate every N global steps (0 = never inside a phase).
+    pub eval_every: usize,
+    /// Validation batches per evaluation.
+    pub eval_batches: usize,
 }
 
 impl PhaseCtx {
@@ -53,18 +69,32 @@ impl PhaseCtx {
         samples as f64 / self.dataset_size as f64
     }
 
-    pub fn grad_key(&self) -> String {
+    /// Bare grad executable name (the session API addresses executables by
+    /// exec name; the arch was fixed at `import_state`).
+    pub fn grad_exec(&self) -> String {
         format!(
-            "{}/grad_b{}_ls{}",
-            self.arch.name,
+            "grad_b{}_ls{}",
             self.per_worker_batch,
             (self.label_smoothing * 100.0).round() as i64
         )
     }
+}
 
-    pub fn apply_key(&self) -> String {
-        format!("{}/apply", self.arch.name)
-    }
+/// Per-rank sample count at which this phase's stream starts: total
+/// samples consumed by earlier phases (`samples_before`, minus the part of
+/// *this* phase a checkpoint resume already replays via `skip_steps`),
+/// divided evenly over the ranks. Exact when the worker count is unchanged
+/// across the boundary; on a BSC worker-count change it is the new
+/// sharding's even split of the global position (the old sharding no
+/// longer exists to be continued).
+pub fn phase_stream_start(
+    samples_before: u64,
+    skip_steps: usize,
+    per_worker: usize,
+    workers: usize,
+) -> u64 {
+    let phase_start = samples_before - (skip_steps * per_worker * workers) as u64;
+    phase_start / workers as u64
 }
 
 /// Mutable per-rank state threaded through a phase.
@@ -118,7 +148,49 @@ pub fn unflatten_from(
     Ok(())
 }
 
-/// Run one phase on one rank. `ep` is this rank's mesh endpoint.
+/// The one evaluation loop both eval paths share: `eval_batches`
+/// validation batches through `exec_one(eval exec name, images, labels) →
+/// [loss_sum, n_correct]`, normalised into an [`EvalMetric`] at `step`.
+/// Rank 0's in-phase interval evals (session `eval_step` against the
+/// lane-resident parameters) and the coordinator's final eval (stateless
+/// `run` with caller-held parameters) differ only in the closure, so their
+/// metrics can never drift apart numerically.
+pub(crate) fn eval_over_val_split(
+    arch: &ArchManifest,
+    val_loader: &Loader,
+    eval_batches: usize,
+    step: usize,
+    mut exec_one: impl FnMut(&str, HostTensor, HostTensor) -> Result<Vec<HostTensor>>,
+) -> Result<EvalMetric> {
+    let eval = arch.eval_exec()?;
+    let batch = eval.batch.context("eval exec missing batch")?;
+    let mut b = Batch::empty();
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0.0f64;
+    let mut total = 0usize;
+    for i in 0..eval_batches.max(1) {
+        val_loader.val_batch(i * batch, batch, &mut b);
+        let images = HostTensor::f32(
+            vec![batch, arch.image_size, arch.image_size, arch.image_channels],
+            b.images.clone(),
+        );
+        let labels = HostTensor::i32(vec![batch], b.labels.clone());
+        let out = exec_one(&eval.name, images, labels)?;
+        loss_sum += out[0].scalar()? as f64;
+        correct += out[1].scalar()? as f64;
+        total += batch;
+    }
+    Ok(EvalMetric {
+        step,
+        val_loss: loss_sum / total as f64,
+        accuracy: correct / total as f64,
+    })
+}
+
+/// Run one phase on one rank. `ep` is this rank's mesh endpoint. The
+/// rank's `(params, momenta)` are moved into lane `rank % lanes` of the
+/// compute pool for the duration of the phase and exported back into the
+/// returned [`WorkerOutput`] at the end.
 #[allow(clippy::too_many_arguments)]
 pub fn run_phase(
     ctx: &PhaseCtx,
@@ -128,8 +200,7 @@ pub fn run_phase(
     loader: &mut Loader,
     mut state: WorkerState,
 ) -> Result<WorkerOutput> {
-    let grad_key = ctx.grad_key();
-    let apply_key = ctx.apply_key();
+    let grad_exec = ctx.grad_exec();
     let n_params = ctx.arch.n_params();
     let n_bn = ctx.arch.n_bn();
     let inv_n = 1.0f32 / ctx.workers as f32;
@@ -146,12 +217,38 @@ pub fn run_phase(
         ctx.arch.image_channels,
     ];
 
-    // Start this phase's data stream at the schedule's current epoch
-    // (not epoch 0 — a later phase continues the dataset pass), then, on
-    // checkpoint resume, replay past the already-trained steps so the
-    // sample stream continues exactly where the saved run stopped.
-    loader.seek_epoch(ctx.epoch_at(ctx.samples_before -
-        (ctx.skip_steps * ctx.per_worker_batch * ctx.workers) as u64) as u32);
+    // Phase entry: pin this rank's model state into its compute lane. From
+    // here to the export below, the full parameter set never crosses the
+    // channel again — steps ship batches, gradients and three scalars.
+    let lane = rank % compute.lanes();
+    let params = std::mem::take(&mut state.params);
+    let momenta = std::mem::take(&mut state.momenta);
+    let sref = compute
+        .import_state(lane, &ctx.arch.name, params, momenta)
+        .with_context(|| format!("rank {rank}: pinning state to lane {lane}"))?;
+
+    // Rank 0 evaluates mid-phase; it reads validation batches through an
+    // unsharded, unaugmented loader over the same dataset.
+    let val_loader = if rank == 0 && ctx.eval_every > 0 {
+        Some(Loader::new(loader.dataset().clone(), Augment::none(), 0, 1))
+    } else {
+        None
+    };
+    // First in-phase eval failure, surfaced only after the phase completes
+    // (aborting mid-phase would strand peers inside a collective).
+    let mut eval_err: Option<anyhow::Error> = None;
+
+    // Start this phase's data stream at the exact (epoch, intra-epoch
+    // offset) where the previous phase stopped — not the truncated epoch
+    // start — then, on checkpoint resume, replay past the already-trained
+    // steps so the sample stream continues exactly where the saved run
+    // stopped.
+    loader.seek_samples(phase_stream_start(
+        ctx.samples_before,
+        ctx.skip_steps,
+        ctx.per_worker_batch,
+        ctx.workers,
+    ));
     for _ in 0..ctx.skip_steps {
         loader.skip_batch(ctx.per_worker_batch);
     }
@@ -170,15 +267,11 @@ pub fn run_phase(
         let data_epoch = loader.next_batch(ctx.per_worker_batch, &mut batch);
         let t_data = sw.lap("data");
 
-        // 2. local gradients
-        let mut inputs = state.params.clone();
-        inputs.push(HostTensor::f32(img_shape.clone(), batch.images.clone()));
-        inputs.push(HostTensor::i32(
-            vec![ctx.per_worker_batch],
-            batch.labels.clone(),
-        ));
+        // 2. local gradients against the lane-resident parameters
+        let images = HostTensor::f32(img_shape.clone(), batch.images.clone());
+        let labels = HostTensor::i32(vec![ctx.per_worker_batch], batch.labels.clone());
         let out = compute
-            .run(&grad_key, inputs)
+            .grad_step(&sref, &grad_exec, images, labels)
             .with_context(|| format!("rank {rank} step {global_step}: grad_step"))?;
         let t_compute = sw.lap("compute");
 
@@ -225,23 +318,21 @@ pub fn run_phase(
         }
         let t_comm = sw.lap("comm");
 
-        // 5. LARS update (the backend's apply entry point)
+        // 5. LARS update of the lane-resident state, in place: ships the
+        // reduced gradient and three scalars, receives nothing back.
         let mut grads_avg = Vec::with_capacity(n_params);
         unflatten_from(&grad_flat, grads, &mut grads_avg)?;
-        let mut ap_in =
-            Vec::with_capacity(2 * n_params + n_params + 3);
-        ap_in.extend(state.params.iter().cloned());
-        ap_in.extend(state.momenta.iter().cloned());
-        ap_in.extend(grads_avg);
-        ap_in.push(HostTensor::scalar_f32(lr));
-        ap_in.push(HostTensor::scalar_f32(momentum));
-        ap_in.push(HostTensor::scalar_f32(ctx.weight_decay));
-        let applied = compute
-            .run(&apply_key, ap_in)
+        compute
+            .apply(
+                &sref,
+                grads_avg,
+                ApplyParams {
+                    lr,
+                    momentum,
+                    weight_decay: ctx.weight_decay,
+                },
+            )
             .with_context(|| format!("rank {rank} step {global_step}: apply_step"))?;
-        let (new_params, new_momenta) = applied.split_at(n_params);
-        state.params = new_params.to_vec();
-        state.momenta = new_momenta.to_vec();
         let t_apply = sw.lap("apply");
 
         if rank == 0 {
@@ -257,7 +348,51 @@ pub fn run_phase(
                 t_apply,
                 t_data,
             });
+            // `eval_every` is a *step* interval: evaluate after every
+            // N-th completed global step (recorded at the completed-step
+            // count, matching the final eval's convention).
+            if let Some(vl) = &val_loader {
+                let done = global_step + 1;
+                if done % ctx.eval_every == 0 {
+                    let bn_running = &state.bn_running;
+                    // An eval failure must not abort rank 0 mid-phase: the
+                    // other ranks are already blocked in the next
+                    // all-reduce and would strand the mesh (recv has no
+                    // timeout). Finish the phase in lockstep and surface
+                    // the error after the collectives are done.
+                    match eval_over_val_split(
+                        &ctx.arch,
+                        vl,
+                        ctx.eval_batches,
+                        done,
+                        |exec, images, labels| {
+                            compute.eval_step(&sref, exec, bn_running, images, labels)
+                        },
+                    ) {
+                        Ok(e) => metrics.push_eval(e),
+                        Err(e) => {
+                            if eval_err.is_none() {
+                                eval_err =
+                                    Some(e.context(format!("rank 0 eval at step {done}")));
+                            }
+                        }
+                    }
+                }
+            }
         }
+    }
+
+    // Phase exit: move the trained state back out (export consumes the
+    // lane-side state — no copy) for the coordinator's bit-identity check
+    // / checkpoint / next-phase handoff.
+    let (params, momenta) = compute
+        .export_state(sref)
+        .with_context(|| format!("rank {rank}: exporting state from lane {lane}"))?;
+    state.params = params;
+    state.momenta = momenta;
+
+    if let Some(e) = eval_err {
+        return Err(e);
     }
 
     Ok(WorkerOutput {
@@ -300,5 +435,60 @@ mod tests {
         // integration tests; here just the arithmetic:
         let samples = 2500u64;
         assert_eq!(samples as f64 / ctx_dataset as f64, 2.5);
+    }
+
+    /// The phase-handoff stream position must be exact, not truncated to
+    /// an epoch boundary: 32 steps × 8/worker × 4 workers = 1024 samples
+    /// over a 1000-sample set is 256 per rank — 1.024 "epochs", which the
+    /// old `epoch_at(..) as u32` seek collapsed to epoch 1, sample 0.
+    #[test]
+    fn phase_stream_start_is_exact_mid_epoch() {
+        // no resume: position is simply samples_before / workers
+        assert_eq!(phase_stream_start(1024, 0, 16, 4), 256);
+        // checkpoint resume: skip_steps of *this* phase were folded into
+        // samples_before by the planner; the stream start backs them out
+        // (they are replayed batch-by-batch afterwards).
+        assert_eq!(phase_stream_start(1024 + 3 * 64, 3, 16, 4), 256);
+        // phase aligned on an epoch boundary stays aligned
+        assert_eq!(phase_stream_start(2048, 0, 8, 4), 512);
+    }
+
+    /// End-to-end continuation: a second-phase loader seeded by
+    /// `phase_stream_start` + `seek_samples` produces exactly the batches
+    /// an uninterrupted single-phase loader would produce next.
+    #[test]
+    fn cross_phase_stream_matches_single_phase_run() {
+        use crate::data::{Augment, Batch, Loader, SynthDataset};
+        let workers = 4usize;
+        let per_worker = 8usize;
+        let phase1_steps = 32usize; // 1024 samples on a 1000-sample set
+        let samples_before = (phase1_steps * per_worker * workers) as u64;
+        for rank in 0..workers {
+            let make = || {
+                Loader::new(
+                    SynthDataset::new(7, 10, 16, 3, 1000, 256),
+                    Augment::standard(7),
+                    rank,
+                    workers,
+                )
+            };
+            // single-phase: consume phase 1 then keep going
+            let mut single = make();
+            let mut b = Batch::empty();
+            for _ in 0..phase1_steps {
+                single.next_batch(per_worker, &mut b);
+            }
+            // two-phase: fresh loader, seek as run_phase does for phase 2
+            let mut second = make();
+            second.seek_samples(phase_stream_start(samples_before, 0, 16, workers));
+            let mut b1 = Batch::empty();
+            let mut b2 = Batch::empty();
+            for _ in 0..4 {
+                single.next_batch(16, &mut b1);
+                second.next_batch(16, &mut b2);
+                assert_eq!(b1.labels, b2.labels, "rank {rank} stream diverged");
+                assert_eq!(b1.images, b2.images, "rank {rank} stream diverged");
+            }
+        }
     }
 }

@@ -108,6 +108,38 @@ impl Loader {
         self.cursor = 0;
     }
 
+    /// Position the stream exactly as if this rank had already consumed
+    /// `samples` samples from epoch 0 — the exact `(epoch, intra-epoch
+    /// offset)` a continuing phase must resume from. Walks the actual
+    /// per-epoch shard lengths, so it lands on the same `(epoch, cursor)`
+    /// that consuming `samples` samples one batch at a time would reach
+    /// (epochs wrap mid-batch on uneven shard sizes, and this accounts for
+    /// that). Replaces the truncate-to-epoch-start seek that made a phase
+    /// starting mid-epoch replay already-consumed samples.
+    pub fn seek_samples(&mut self, samples: u64) {
+        self.seek_epoch(0);
+        let mut remaining = samples;
+        loop {
+            let len = self.shards.for_rank(self.rank).len() as u64;
+            if len == 0 {
+                // rank has no data at this worker count; nothing to seek
+                return;
+            }
+            if remaining < len {
+                self.cursor = remaining as usize;
+                return;
+            }
+            remaining -= len;
+            self.epoch += 1;
+            self.shards = EpochShards::new(
+                self.dataset.seed,
+                self.epoch,
+                self.dataset.train_size,
+                self.workers,
+            );
+        }
+    }
+
     /// Fast-forward past one batch without materialising it (checkpoint
     /// resume). Mirrors `next_batch`'s cursor/epoch accounting exactly so
     /// a resumed run sees the identical sample sequence.
@@ -236,6 +268,54 @@ mod tests {
         skipped.next_batch(16, &mut b2);
         assert_eq!(b1.labels, b2.labels);
         assert_eq!(b1.images, b2.images);
+    }
+
+    /// Regression for the phase-handoff seek bug: a phase starting
+    /// mid-epoch must continue the sample stream exactly, not rewind to the
+    /// epoch start. train_size=1000, 4 workers ⇒ rank-0 shard is 250
+    /// samples, so 32 steps of 8 (= 256 samples) end at epoch 1, cursor 6 —
+    /// a position the old `seek_epoch(truncated)` could not express.
+    #[test]
+    fn seek_samples_matches_consumed_stream_mid_epoch() {
+        let make = || {
+            Loader::new(
+                SynthDataset::new(11, 10, 16, 3, 1000, 256),
+                Augment::standard(11),
+                0,
+                4,
+            )
+        };
+        // "single-phase" loader: consumes straight through the boundary
+        let mut consumed = make();
+        let mut b = Batch::empty();
+        for _ in 0..32 {
+            consumed.next_batch(8, &mut b);
+        }
+        // "second-phase" loader: seeks to the continuation point
+        let mut sought = make();
+        sought.seek_samples(32 * 8);
+        assert_eq!(consumed.epoch(), sought.epoch());
+        assert_eq!(consumed.epoch(), 1, "boundary must land mid-epoch-1");
+        let mut b1 = Batch::empty();
+        let mut b2 = Batch::empty();
+        for _ in 0..5 {
+            consumed.next_batch(16, &mut b1);
+            sought.next_batch(16, &mut b2);
+            assert_eq!(b1.labels, b2.labels);
+            assert_eq!(b1.images, b2.images);
+        }
+    }
+
+    #[test]
+    fn seek_samples_zero_is_a_fresh_stream() {
+        let mut a = tiny_loader(1, 2);
+        let mut b = tiny_loader(1, 2);
+        b.seek_samples(0);
+        let mut ba = Batch::empty();
+        let mut bb = Batch::empty();
+        a.next_batch(16, &mut ba);
+        b.next_batch(16, &mut bb);
+        assert_eq!(ba.labels, bb.labels);
     }
 
     #[test]

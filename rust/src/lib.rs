@@ -9,7 +9,13 @@
 //!   batch-size control, LR/momentum schedules, LARS, data pipeline, and an
 //!   ABCI-scale network simulator that regenerates the paper's tables.
 //! * **Compute backends (`runtime::backend`)** — the coordinator drives a
-//!   [`runtime::ComputeBackend`] through `runtime::ComputeService`:
+//!   [`runtime::ComputeBackend`] through the `runtime::ComputeService`
+//!   **multi-lane pool**: one backend thread per rank, with each rank's
+//!   `(params, momenta)` *resident* in its lane (`import_state` /
+//!   `grad_step` / `apply` / `export_state`), so ranks compute
+//!   concurrently and the steady-state step ships only batches, reduced
+//!   gradients and scalars — parameters cross the channel only at phase
+//!   boundaries:
 //!   * `runtime::ReferenceBackend` (**default**) — a pure-Rust dense
 //!     ResNet-ish forward/backward with label-smoothed softmax CE and the
 //!     LARS update, serving the `init` / `grad_b{B}_ls{S}` / `apply` /
@@ -69,7 +75,10 @@ pub mod prelude {
     pub use crate::data::{Augment, Batch, Loader, SynthDataset};
     #[cfg(feature = "pjrt")]
     pub use crate::runtime::Engine;
-    pub use crate::runtime::{BackendSpec, ComputeBackend, Manifest, ReferenceBackend};
+    pub use crate::runtime::{
+        ApplyParams, BackendSpec, ComputeBackend, ComputeClient, ComputeService, Manifest,
+        ReferenceBackend, StateRef,
+    };
     pub use crate::sched::{BatchSchedule, LrSchedule, Phase};
     pub use crate::simnet::{Algo, ClusterModel};
 }

@@ -1,10 +1,10 @@
 //! The compute-backend abstraction: who actually runs `init` / `grad_*` /
-//! `apply` / `eval_*`.
+//! `apply` / `eval_*`, and where the training state lives between steps.
 //!
-//! The coordinator is backend-agnostic: workers submit
-//! `("{arch}/{exec}", host tensors)` calls through
-//! [`super::service::ComputeClient`] and the service thread dispatches them
-//! to whichever [`ComputeBackend`] the run was started with:
+//! The coordinator is backend-agnostic: workers drive a lane of the
+//! [`super::service::ComputeService`] pool through
+//! [`super::service::ComputeClient`], and each lane thread dispatches to its
+//! own [`ComputeBackend`] instance:
 //!
 //! * [`super::reference::ReferenceBackend`] (default) — a pure-Rust dense
 //!   forward/backward for the built-in `tiny` arch. No Python, no
@@ -15,20 +15,101 @@
 //!   `python/compile/aot.py`.
 //!
 //! Backends may be thread-confined (PJRT clients are `Rc`-based), so they
-//! are constructed *inside* the service thread from a [`BackendSpec`],
-//! which is the `Send` handle the coordinator passes around.
+//! are constructed *inside* each lane thread from a [`BackendSpec`], which
+//! is the `Send` handle the coordinator passes around.
+//!
+//! ## Resident state
+//!
+//! A backend owns **resident training state**: `(params, momenta)` pairs
+//! registered through [`ComputeBackend::import_state`] (or created fresh
+//! with [`ComputeBackend::create_state`]) and addressed by an opaque
+//! [`StateId`]. The steady-state training step is then
+//! [`ComputeBackend::grad_step`] (ships a batch in, gets loss + grads + BN
+//! stats out) followed by [`ComputeBackend::apply`] (ships the reduced
+//! gradient and three scalars in, updates the resident params/momenta in
+//! place) — the full parameter set never crosses the channel boundary
+//! during a phase. The coordinator pulls state out with
+//! [`ComputeBackend::export_state`] only at phase boundaries (replica
+//! bit-identity check, BSC worker-count changes, checkpointing).
 
-use anyhow::Result;
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
 
 use super::manifest::Manifest;
 use super::tensor::HostTensor;
 
-/// An executor of manifest-declared executables.
+/// Opaque handle to one resident `(params, momenta)` pair inside a backend.
+pub type StateId = u64;
+
+/// The three scalars of the LARS `apply` entry point.
+#[derive(Debug, Clone, Copy)]
+pub struct ApplyParams {
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+}
+
+/// One resident training state (per-rank device state in the simulated
+/// cluster: parameters + optimizer momenta, replicated across ranks).
+#[derive(Debug, Clone)]
+pub struct ResidentState {
+    /// Architecture this state belongs to (validates exec dispatch).
+    pub arch: String,
+    pub params: Vec<HostTensor>,
+    pub momenta: Vec<HostTensor>,
+}
+
+/// Id-keyed table of resident states; shared bookkeeping for backends.
+#[derive(Debug, Default)]
+pub struct StateTable {
+    next: StateId,
+    states: HashMap<StateId, ResidentState>,
+}
+
+impl StateTable {
+    pub fn insert(&mut self, state: ResidentState) -> StateId {
+        let id = self.next;
+        self.next += 1;
+        self.states.insert(id, state);
+        id
+    }
+
+    pub fn get(&self, id: StateId) -> Result<&ResidentState> {
+        self.states
+            .get(&id)
+            .ok_or_else(|| anyhow!("no resident state {id} (dropped or never created?)"))
+    }
+
+    pub fn get_mut(&mut self, id: StateId) -> Result<&mut ResidentState> {
+        self.states
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("no resident state {id} (dropped or never created?)"))
+    }
+
+    pub fn remove(&mut self, id: StateId) -> Result<ResidentState> {
+        self.states
+            .remove(&id)
+            .ok_or_else(|| anyhow!("no resident state {id} (dropped or never created?)"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+}
+
+/// An executor of manifest-declared executables plus resident per-rank
+/// training state.
 ///
 /// Keys use the `"{arch}/{exec}"` form everywhere (the same naming the
 /// artifact pipeline uses), and implementations validate inputs against the
 /// manifest's tensor specs so a caller bug fails fast with shapes in the
-/// message.
+/// message. The session methods take a bare exec name (e.g.
+/// `"grad_b8_ls10"`) — the arch is fixed at state creation.
 pub trait ComputeBackend {
     /// Short backend name for logs and error messages.
     fn name(&self) -> &'static str;
@@ -38,12 +119,107 @@ pub trait ComputeBackend {
     /// lazily when a phase needs a grad variant that was not preloaded.
     fn load(&mut self, arch: &str, names: &[&str]) -> Result<()>;
 
-    /// Execute `key` with host inputs; returns host outputs.
+    /// Execute `key` with host inputs; returns host outputs. Stateless
+    /// entry points (`init`, `eval_*`) and compatibility path for callers
+    /// that keep the state themselves.
     fn run(&mut self, key: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+
+    // --- session/state API -------------------------------------------------
+
+    /// Create a fresh resident state: `init(seed)` parameters, zero
+    /// momenta. Returns its handle.
+    fn create_state(&mut self, arch: &str, seed: i32) -> Result<StateId>;
+
+    /// Register an existing `(params, momenta)` pair as resident state
+    /// (phase handoff, checkpoint resume). Tensors are validated against
+    /// the manifest's parameter table.
+    fn import_state(
+        &mut self,
+        arch: &str,
+        params: Vec<HostTensor>,
+        momenta: Vec<HostTensor>,
+    ) -> Result<StateId>;
+
+    /// **Move** a resident state out: `(params, momenta)`. The handle
+    /// becomes invalid — import the tensors again to continue training (a
+    /// phase boundary does exactly that). By-move keeps the phase-exit
+    /// handoff zero-copy on the backend side, and the round trip is
+    /// bit-exact: `import_state` → `export_state` yields identical bytes.
+    fn export_state(&mut self, state: StateId) -> Result<(Vec<HostTensor>, Vec<HostTensor>)>;
+
+    /// Release a resident state without reading it back.
+    fn drop_state(&mut self, state: StateId) -> Result<()>;
+
+    /// One local gradient computation against the resident parameters:
+    /// returns `[loss, grads.., bn_stats..]` exactly like the stateless
+    /// `grad_b{B}_ls{S}` executable, without shipping the parameters.
+    fn grad_step(
+        &mut self,
+        state: StateId,
+        exec: &str,
+        images: &HostTensor,
+        labels: &HostTensor,
+    ) -> Result<Vec<HostTensor>>;
+
+    /// LARS update of the resident `(params, momenta)` in place from the
+    /// reduced gradients and the step's `(lr, momentum, weight_decay)`.
+    fn apply(&mut self, state: StateId, grads: &[HostTensor], hp: ApplyParams) -> Result<()>;
+
+    /// Evaluation forward pass against the resident parameters with the
+    /// caller's synchronized running BN statistics: returns the `eval_b{B}`
+    /// outputs (`[loss_sum, n_correct]`).
+    fn eval_step(
+        &mut self,
+        state: StateId,
+        exec: &str,
+        bn_running: &[HostTensor],
+        images: &HostTensor,
+        labels: &HostTensor,
+    ) -> Result<Vec<HostTensor>>;
+}
+
+/// Validate an imported `(params, momenta)` pair against `manifest`'s
+/// parameter table for `arch`; shared by backend implementations.
+pub fn check_state_tensors(
+    manifest: &Manifest,
+    arch: &str,
+    params: &[HostTensor],
+    momenta: &[HostTensor],
+) -> Result<()> {
+    let am = manifest.arch(arch)?;
+    if params.len() != am.n_params() || momenta.len() != am.n_params() {
+        bail!(
+            "import_state({arch}): got {} params / {} momenta, manifest says {}",
+            params.len(),
+            momenta.len(),
+            am.n_params()
+        );
+    }
+    for (kind, tensors) in [("param", params), ("momentum", momenta)] {
+        for (i, (t, spec)) in tensors.iter().zip(&am.params).enumerate() {
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "import_state({arch}): {kind} #{i} ({}) has shape {:?}, manifest says {:?}",
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+            // fail fast with the param name here, not steps later inside
+            // grad_step/apply with a bare dtype-conversion error
+            if t.as_f32().is_err() {
+                bail!(
+                    "import_state({arch}): {kind} #{i} ({}) is not an f32 tensor",
+                    spec.name
+                );
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Which backend a run should use. `Send`-able recipe; the backend itself
-/// is built on the service thread via [`BackendSpec::instantiate`].
+/// is built on each lane thread via [`BackendSpec::instantiate`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BackendSpec {
     /// Pure-Rust reference backend (default features).
@@ -64,5 +240,35 @@ impl BackendSpec {
             #[cfg(feature = "pjrt")]
             BackendSpec::Pjrt => Ok(Box::new(super::engine::PjrtBackend::new(manifest)?)),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_table_insert_get_remove() {
+        let mut t = StateTable::default();
+        let a = t.insert(ResidentState {
+            arch: "tiny".into(),
+            params: vec![HostTensor::scalar_f32(1.0)],
+            momenta: vec![HostTensor::scalar_f32(0.0)],
+        });
+        let b = t.insert(ResidentState {
+            arch: "tiny".into(),
+            params: vec![HostTensor::scalar_f32(2.0)],
+            momenta: vec![HostTensor::scalar_f32(0.0)],
+        });
+        assert_ne!(a, b);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.get(a).unwrap().params[0].scalar().unwrap(), 1.0);
+        t.get_mut(b).unwrap().params[0] = HostTensor::scalar_f32(3.0);
+        assert_eq!(t.get(b).unwrap().params[0].scalar().unwrap(), 3.0);
+        let removed = t.remove(a).unwrap();
+        assert_eq!(removed.params[0].scalar().unwrap(), 1.0);
+        assert!(t.get(a).is_err());
+        assert!(t.remove(a).is_err());
+        assert_eq!(t.len(), 1);
     }
 }

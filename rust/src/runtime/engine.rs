@@ -21,6 +21,9 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::backend::{
+    check_state_tensors, ApplyParams, ResidentState, StateId, StateTable,
+};
 use super::manifest::{ArchManifest, Dtype, ExecSpec, Manifest};
 use super::tensor::HostTensor;
 
@@ -183,9 +186,16 @@ fn from_literal(lit: &xla::Literal, dtype: Dtype, shape: &[usize]) -> Result<Hos
 
 /// [`ComputeBackend`](super::backend::ComputeBackend) adapter over the
 /// PJRT [`Engine`]: owns the engine plus the manifest it compiles from.
+///
+/// The session/state API keeps `(params, momenta)` host-side in a
+/// [`StateTable`] and composes the stateless executables — the device
+/// round trip stays inside one lane thread, so the coordinator still never
+/// ships parameters during a phase. (A future device-resident variant
+/// would hold `PjRtBuffer`s here instead.)
 pub struct PjrtBackend {
     engine: Engine,
     manifest: Manifest,
+    states: StateTable,
 }
 
 impl PjrtBackend {
@@ -194,6 +204,7 @@ impl PjrtBackend {
         Ok(Self {
             engine: Engine::cpu()?,
             manifest,
+            states: StateTable::default(),
         })
     }
 }
@@ -210,6 +221,110 @@ impl super::backend::ComputeBackend for PjrtBackend {
 
     fn run(&mut self, key: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         self.engine.run(key, inputs)
+    }
+
+    fn create_state(&mut self, arch: &str, seed: i32) -> Result<StateId> {
+        let am = self.manifest.arch(arch)?.clone();
+        self.load(arch, &["init"])?;
+        let key = format!("{arch}/init");
+        let params = self
+            .engine
+            .run(&key, &[HostTensor::i32(vec![1], vec![seed])])?;
+        if params.len() != am.n_params() {
+            bail!(
+                "{key}: produced {} tensors, manifest says {}",
+                params.len(),
+                am.n_params()
+            );
+        }
+        let momenta: Vec<HostTensor> = params
+            .iter()
+            .map(|p| HostTensor::f32(p.shape().to_vec(), vec![0.0; p.elems()]))
+            .collect();
+        Ok(self.states.insert(ResidentState {
+            arch: arch.to_string(),
+            params,
+            momenta,
+        }))
+    }
+
+    fn import_state(
+        &mut self,
+        arch: &str,
+        params: Vec<HostTensor>,
+        momenta: Vec<HostTensor>,
+    ) -> Result<StateId> {
+        check_state_tensors(&self.manifest, arch, &params, &momenta)?;
+        Ok(self.states.insert(ResidentState {
+            arch: arch.to_string(),
+            params,
+            momenta,
+        }))
+    }
+
+    fn export_state(&mut self, state: StateId) -> Result<(Vec<HostTensor>, Vec<HostTensor>)> {
+        let st = self.states.remove(state)?;
+        Ok((st.params, st.momenta))
+    }
+
+    fn drop_state(&mut self, state: StateId) -> Result<()> {
+        self.states.remove(state).map(|_| ())
+    }
+
+    fn grad_step(
+        &mut self,
+        state: StateId,
+        exec: &str,
+        images: &HostTensor,
+        labels: &HostTensor,
+    ) -> Result<Vec<HostTensor>> {
+        let st = self.states.get(state)?;
+        let key = format!("{}/{exec}", st.arch);
+        let mut inputs = st.params.clone();
+        inputs.push(images.clone());
+        inputs.push(labels.clone());
+        self.engine.run(&key, &inputs)
+    }
+
+    fn apply(&mut self, state: StateId, grads: &[HostTensor], hp: ApplyParams) -> Result<()> {
+        let st = self.states.get(state)?;
+        let n = st.params.len();
+        if grads.len() != n {
+            bail!("apply: {} grads for {n} resident params", grads.len());
+        }
+        let key = format!("{}/apply", st.arch);
+        let mut inputs = Vec::with_capacity(3 * n + 3);
+        inputs.extend(st.params.iter().cloned());
+        inputs.extend(st.momenta.iter().cloned());
+        inputs.extend(grads.iter().cloned());
+        inputs.push(HostTensor::scalar_f32(hp.lr));
+        inputs.push(HostTensor::scalar_f32(hp.momentum));
+        inputs.push(HostTensor::scalar_f32(hp.weight_decay));
+        let out = self.engine.run(&key, &inputs)?;
+        if out.len() != 2 * n {
+            bail!("{key}: output arity {} (want {})", out.len(), 2 * n);
+        }
+        let st = self.states.get_mut(state)?;
+        st.momenta = out[n..].to_vec();
+        st.params = out[..n].to_vec();
+        Ok(())
+    }
+
+    fn eval_step(
+        &mut self,
+        state: StateId,
+        exec: &str,
+        bn_running: &[HostTensor],
+        images: &HostTensor,
+        labels: &HostTensor,
+    ) -> Result<Vec<HostTensor>> {
+        let st = self.states.get(state)?;
+        let key = format!("{}/{exec}", st.arch);
+        let mut inputs = st.params.clone();
+        inputs.extend(bn_running.iter().cloned());
+        inputs.push(images.clone());
+        inputs.push(labels.clone());
+        self.engine.run(&key, &inputs)
     }
 }
 

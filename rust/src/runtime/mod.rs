@@ -1,13 +1,16 @@
-//! Runtime layer: pluggable compute backends behind one service API.
+//! Runtime layer: pluggable compute backends behind one multi-lane pool.
 //!
 //! `manifest` is the shape/layout contract every backend serves (parsed
 //! from `aot.py`'s `manifest.json`, or synthesized in memory by the
-//! reference backend); `backend` defines the [`ComputeBackend`] trait and
-//! the [`BackendSpec`] used to pick an implementation; `reference` is the
-//! default pure-Rust backend; `engine` (behind `--features pjrt`) compiles
-//! HLO text and executes it on the PJRT CPU client; `service` exposes the
-//! (thread-confined) backend to the coordinator's worker threads; `tensor`
-//! is the `Send`-able host-buffer currency.
+//! reference backend); `backend` defines the [`ComputeBackend`] trait —
+//! stateless executables *plus* the resident-state session API
+//! (`create_state` / `import_state` / `grad_step` / `apply` / `eval_step` /
+//! `export_state`) — and the [`BackendSpec`] used to pick an
+//! implementation; `reference` is the default pure-Rust backend; `engine`
+//! (behind `--features pjrt`) compiles HLO text and executes it on the PJRT
+//! CPU client; `service` runs one backend instance per **lane** thread so
+//! ranks compute concurrently, with each rank's `(params, momenta)`
+//! resident in its lane; `tensor` is the `Send`-able host-buffer currency.
 
 pub mod backend;
 #[cfg(feature = "pjrt")]
@@ -17,10 +20,10 @@ pub mod reference;
 pub mod service;
 pub mod tensor;
 
-pub use backend::{BackendSpec, ComputeBackend};
+pub use backend::{ApplyParams, BackendSpec, ComputeBackend, ResidentState, StateId, StateTable};
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, PjrtBackend};
 pub use manifest::{ArchManifest, BnLayer, Dtype, ExecSpec, Manifest, ParamSpec, TensorSpec};
 pub use reference::{builtin_manifest, ReferenceBackend};
-pub use service::{ComputeClient, ComputeService};
+pub use service::{ComputeClient, ComputeService, PoolStats, StateRef};
 pub use tensor::HostTensor;

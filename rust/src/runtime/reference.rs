@@ -29,7 +29,9 @@ use anyhow::{bail, Context, Result};
 use crate::optim::{lars_step, LarsConfig};
 use crate::util::rng::Pcg32;
 
-use super::backend::ComputeBackend;
+use super::backend::{
+    check_state_tensors, ApplyParams, ComputeBackend, ResidentState, StateId, StateTable,
+};
 use super::manifest::{ArchManifest, BnLayer, Dtype, ExecSpec, Manifest, ParamSpec, TensorSpec};
 use super::tensor::HostTensor;
 
@@ -226,6 +228,8 @@ pub fn builtin_manifest() -> Manifest {
 /// The pure-Rust compute backend.
 pub struct ReferenceBackend {
     manifest: Manifest,
+    /// Resident per-rank `(params, momenta)` states (session API).
+    states: StateTable,
 }
 
 impl ReferenceBackend {
@@ -244,7 +248,23 @@ impl ReferenceBackend {
                  ({N_PARAMS} params, {N_BN} bn layers); this manifest does not match"
             );
         }
-        Ok(Self { manifest })
+        Ok(Self {
+            manifest,
+            states: StateTable::default(),
+        })
+    }
+
+    /// Look up `exec` of the resident state's arch; returns `(batch,
+    /// ls_eps)` copied out of the spec so the manifest borrow ends before
+    /// the state is touched mutably.
+    fn exec_meta(&self, state: StateId, exec: &str) -> Result<(usize, f32)> {
+        let st = self.states.get(state)?;
+        let arch = self.manifest.arch(&st.arch)?;
+        let spec = arch.exec(exec)?;
+        let batch = spec
+            .batch
+            .with_context(|| format!("{}/{exec}: missing batch", st.arch))?;
+        Ok((batch, spec.ls_eps.unwrap_or(0.0) as f32))
     }
 }
 
@@ -300,6 +320,157 @@ impl ComputeBackend for ReferenceBackend {
             return run_eval(params, bn_running, images, labels, batch);
         }
         bail!("{key}: reference backend has no such entry point")
+    }
+
+    // --- session/state API -------------------------------------------------
+
+    fn create_state(&mut self, arch: &str, seed: i32) -> Result<StateId> {
+        self.manifest.arch(arch)?; // only "tiny" exists; fail fast otherwise
+        let params = run_init(seed);
+        let momenta: Vec<HostTensor> = params
+            .iter()
+            .map(|p| HostTensor::f32(p.shape().to_vec(), vec![0.0; p.elems()]))
+            .collect();
+        Ok(self.states.insert(ResidentState {
+            arch: arch.to_string(),
+            params,
+            momenta,
+        }))
+    }
+
+    fn import_state(
+        &mut self,
+        arch: &str,
+        params: Vec<HostTensor>,
+        momenta: Vec<HostTensor>,
+    ) -> Result<StateId> {
+        check_state_tensors(&self.manifest, arch, &params, &momenta)?;
+        Ok(self.states.insert(ResidentState {
+            arch: arch.to_string(),
+            params,
+            momenta,
+        }))
+    }
+
+    fn export_state(&mut self, state: StateId) -> Result<(Vec<HostTensor>, Vec<HostTensor>)> {
+        let st = self.states.remove(state)?;
+        Ok((st.params, st.momenta))
+    }
+
+    fn drop_state(&mut self, state: StateId) -> Result<()> {
+        self.states.remove(state).map(|_| ())
+    }
+
+    fn grad_step(
+        &mut self,
+        state: StateId,
+        exec: &str,
+        images: &HostTensor,
+        labels: &HostTensor,
+    ) -> Result<Vec<HostTensor>> {
+        if !exec.starts_with("grad_") {
+            bail!("grad_step: {exec:?} is not a grad executable");
+        }
+        let (batch, ls) = self.exec_meta(state, exec)?;
+        let want_img = vec![batch, IMG, IMG, CH];
+        if images.shape() != want_img.as_slice() {
+            bail!(
+                "grad_step({exec}): images shape {:?}, want {want_img:?}",
+                images.shape()
+            );
+        }
+        if labels.shape() != [batch] {
+            bail!(
+                "grad_step({exec}): labels shape {:?}, want [{batch}]",
+                labels.shape()
+            );
+        }
+        let st = self.states.get(state)?;
+        run_grad(&st.params, images.as_f32()?, labels.as_i32()?, batch, ls)
+    }
+
+    fn apply(&mut self, state: StateId, grads: &[HostTensor], hp: ApplyParams) -> Result<()> {
+        let st = self.states.get_mut(state)?;
+        if grads.len() != st.params.len() {
+            bail!(
+                "apply: {} grads for {} resident params",
+                grads.len(),
+                st.params.len()
+            );
+        }
+        let cfg = LarsConfig {
+            coeff: 0.01,
+            eps: 1e-6,
+            weight_decay: hp.weight_decay,
+        };
+        for (i, ((p, m), g)) in st
+            .params
+            .iter_mut()
+            .zip(st.momenta.iter_mut())
+            .zip(grads)
+            .enumerate()
+        {
+            if p.shape() != g.shape() {
+                bail!(
+                    "apply: grad #{i} shape {:?} vs param {:?}",
+                    g.shape(),
+                    p.shape()
+                );
+            }
+            lars_step(
+                p.as_f32_mut()?,
+                g.as_f32()?,
+                m.as_f32_mut()?,
+                hp.lr,
+                hp.momentum,
+                &cfg,
+            );
+        }
+        Ok(())
+    }
+
+    fn eval_step(
+        &mut self,
+        state: StateId,
+        exec: &str,
+        bn_running: &[HostTensor],
+        images: &HostTensor,
+        labels: &HostTensor,
+    ) -> Result<Vec<HostTensor>> {
+        if !exec.starts_with("eval_") {
+            bail!("eval_step: {exec:?} is not an eval executable");
+        }
+        let (batch, _) = self.exec_meta(state, exec)?;
+        if bn_running.len() != N_BN {
+            bail!(
+                "eval_step({exec}): {} bn tensors, want {N_BN}",
+                bn_running.len()
+            );
+        }
+        for (i, t) in bn_running.iter().enumerate() {
+            if t.elems() != 2 * HIDDEN {
+                bail!(
+                    "eval_step({exec}): bn tensor #{i} has {} elems, want {}",
+                    t.elems(),
+                    2 * HIDDEN
+                );
+            }
+        }
+        let want_img = vec![batch, IMG, IMG, CH];
+        if images.shape() != want_img.as_slice() {
+            bail!(
+                "eval_step({exec}): images shape {:?}, want {want_img:?}",
+                images.shape()
+            );
+        }
+        if labels.shape() != [batch] {
+            bail!(
+                "eval_step({exec}): labels shape {:?}, want [{batch}]",
+                labels.shape()
+            );
+        }
+        let st = self.states.get(state)?;
+        run_eval(&st.params, bn_running, images.as_f32()?, labels.as_i32()?, batch)
     }
 }
 
@@ -1034,5 +1205,113 @@ mod tests {
         assert!(be.run("tiny/unknown", &[]).is_err());
         assert!(be.run("nope/init", &[]).is_err());
         assert!(be.run("badkey", &[]).is_err());
+    }
+
+    /// The resident-state session path must be bit-identical to the old
+    /// stateless path: k steps of `grad_step` + in-place `apply` end with
+    /// exactly the params/momenta that k steps of the `run`-based
+    /// clone-everything loop produce.
+    #[test]
+    fn session_path_matches_stateless_path_bitwise() {
+        let b = 8usize;
+        let hp = ApplyParams {
+            lr: 0.3,
+            momentum: 0.9,
+            weight_decay: 5e-5,
+        };
+
+        // stateless: params/momenta live caller-side, full clones per step
+        let mut be_a = backend();
+        let mut params = init_params(21);
+        let mut momenta: Vec<HostTensor> = params
+            .iter()
+            .map(|p| HostTensor::f32(p.shape().to_vec(), vec![0.0; p.elems()]))
+            .collect();
+        for step in 0..4u64 {
+            let (images, labels) = sample_batch(b, 100 + step);
+            let mut inputs = params.clone();
+            inputs.push(HostTensor::f32(vec![b, IMG, IMG, CH], images));
+            inputs.push(HostTensor::i32(vec![b], labels));
+            let out = be_a.run("tiny/grad_b8_ls10", &inputs).unwrap();
+            let mut ap_in = params.clone();
+            ap_in.extend(momenta.iter().cloned());
+            ap_in.extend(out[1..1 + N_PARAMS].iter().cloned());
+            ap_in.push(HostTensor::scalar_f32(hp.lr));
+            ap_in.push(HostTensor::scalar_f32(hp.momentum));
+            ap_in.push(HostTensor::scalar_f32(hp.weight_decay));
+            let applied = be_a.run("tiny/apply", &ap_in).unwrap();
+            momenta = applied[N_PARAMS..].to_vec();
+            params = applied[..N_PARAMS].to_vec();
+        }
+
+        // session: params/momenta resident, only batches + grads move
+        let mut be_b = backend();
+        let sid = be_b.create_state("tiny", 21).unwrap();
+        for step in 0..4u64 {
+            let (images, labels) = sample_batch(b, 100 + step);
+            let img = HostTensor::f32(vec![b, IMG, IMG, CH], images);
+            let lab = HostTensor::i32(vec![b], labels);
+            let out = be_b.grad_step(sid, "grad_b8_ls10", &img, &lab).unwrap();
+            be_b.apply(sid, &out[1..1 + N_PARAMS], hp).unwrap();
+        }
+        let (sp, sm) = be_b.export_state(sid).unwrap();
+        assert_eq!(sp, params, "params diverged from the stateless path");
+        assert_eq!(sm, momenta, "momenta diverged from the stateless path");
+    }
+
+    /// export → import (onto a *different* backend instance) → export must
+    /// round-trip byte-identically — the phase-handoff invariant under BSC
+    /// worker-count changes.
+    #[test]
+    fn export_import_round_trips_bitwise() {
+        let mut be_a = backend();
+        let sid = be_a.create_state("tiny", 5).unwrap();
+        let (images, labels) = sample_batch(8, 9);
+        let img = HostTensor::f32(vec![8, IMG, IMG, CH], images);
+        let lab = HostTensor::i32(vec![8], labels);
+        let out = be_a.grad_step(sid, "grad_b8_ls10", &img, &lab).unwrap();
+        be_a.apply(
+            sid,
+            &out[1..1 + N_PARAMS],
+            ApplyParams {
+                lr: 0.5,
+                momentum: 0.9,
+                weight_decay: 5e-5,
+            },
+        )
+        .unwrap();
+        let (p1, m1) = be_a.export_state(sid).unwrap();
+
+        let mut be_b = backend();
+        let sid2 = be_b.import_state("tiny", p1.clone(), m1.clone()).unwrap();
+        let (p2, m2) = be_b.export_state(sid2).unwrap();
+        assert_eq!(p1, p2);
+        assert_eq!(m1, m2);
+
+        // export moves the state out: both handles are now dead
+        assert!(be_a.export_state(sid).is_err());
+        assert!(be_a.drop_state(sid).is_err());
+        assert!(be_b.export_state(sid2).is_err());
+
+        // drop_state releases without reading back
+        let sid3 = be_b.import_state("tiny", p1, m1).unwrap();
+        be_b.drop_state(sid3).unwrap();
+        assert!(be_b.export_state(sid3).is_err());
+    }
+
+    #[test]
+    fn session_rejects_bad_inputs() {
+        let mut be = backend();
+        let sid = be.create_state("tiny", 1).unwrap();
+        let img = HostTensor::f32(vec![8, IMG, IMG, CH], vec![0.0; 8 * IN]);
+        let lab = HostTensor::i32(vec![8], vec![0; 8]);
+        // wrong exec family
+        assert!(be.grad_step(sid, "apply", &img, &lab).is_err());
+        // batch mismatch between exec and tensors
+        assert!(be.grad_step(sid, "grad_b16_ls10", &img, &lab).is_err());
+        // unknown state id
+        assert!(be.grad_step(sid + 999, "grad_b8_ls10", &img, &lab).is_err());
+        // wrong momenta arity on import
+        assert!(be.import_state("tiny", init_params(1), vec![]).is_err());
     }
 }

@@ -25,6 +25,7 @@ fn base_config(name: &str, ranks: usize, steps: usize) -> TrainConfig {
         eval_every: 0,
         eval_batches: 4,
         train_size: 2048,
+        compute_lanes: 0,
     }
 }
 
@@ -148,6 +149,79 @@ fn eval_beats_chance_after_training() {
     let acc = report.final_eval.expect("final eval").accuracy;
     // 10 classes: chance = 10%; the synthetic task is easy
     assert!(acc > 0.15, "top-1 {:.1}% not above chance", acc * 100.0);
+}
+
+/// `eval_every` is a *step interval*: N means one evaluation after every
+/// N-th global optimizer step, plus the final eval — which must not be
+/// duplicated when the interval already landed on the last step.
+#[test]
+fn eval_every_is_a_step_interval() {
+    // 12 steps, eval_every 4 -> evals at steps 4, 8, 12; the step-12 eval
+    // doubles as the final eval (no duplicate).
+    let mut config = base_config("it-evint", 4, 12);
+    config.eval_every = 4;
+    let report = Trainer::new(config).unwrap().run().unwrap();
+    let steps: Vec<usize> = report.metrics.evals.iter().map(|e| e.step).collect();
+    assert_eq!(steps, vec![4, 8, 12], "interval evals wrong: {steps:?}");
+    assert_eq!(report.final_eval.expect("final eval").step, 12);
+
+    // 12 steps, eval_every 5 -> interval evals at 5, 10, then the final
+    // eval at 12 is appended.
+    let mut config = base_config("it-evint5", 4, 12);
+    config.eval_every = 5;
+    let report = Trainer::new(config).unwrap().run().unwrap();
+    let steps: Vec<usize> = report.metrics.evals.iter().map(|e| e.step).collect();
+    assert_eq!(steps, vec![5, 10, 12], "interval+final evals wrong: {steps:?}");
+
+    // eval_every 0 -> only the final eval.
+    let mut config = base_config("it-evint0", 4, 12);
+    config.eval_every = 0;
+    let report = Trainer::new(config).unwrap().run().unwrap();
+    assert_eq!(report.metrics.evals.len(), 1);
+    assert_eq!(report.metrics.evals[0].step, 12);
+}
+
+/// The multi-lane compute pool must not change numerics: the same run
+/// through one serialized lane and through one-lane-per-rank ends with
+/// identical loss curves and byte-identical checkpoints — across a
+/// batch-size-control phase switch that also *changes the worker count*
+/// (exercising export → import of resident state between lane sets).
+#[test]
+fn multi_lane_pool_matches_single_lane_bitwise() {
+    let dir = std::env::temp_dir().join(format!("fsgd-lanes-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let run = |lanes: usize, ckpt: &std::path::Path| {
+        let mut c = base_config("it-lanes", 4, 24);
+        c.train_size = 512;
+        c.batch = BatchSchedule::new(
+            vec![
+                Phase { from_epoch: 0, per_worker: 8, workers: 4 },
+                Phase { from_epoch: 1, per_worker: 16, workers: 2 },
+            ],
+            4,
+        );
+        c.compute_lanes = lanes;
+        Trainer::new(c)
+            .unwrap()
+            .with_checkpoint(ckpt)
+            .run()
+            .unwrap()
+    };
+    let ck_serial = dir.join("serial.ckpt");
+    let ck_pool = dir.join("pool.ckpt");
+    let serial = run(1, &ck_serial);
+    let pooled = run(0, &ck_pool);
+    assert_eq!(serial.lanes, 1);
+    assert_eq!(pooled.lanes, 4, "auto width = widest phase");
+    let a: Vec<f64> = serial.metrics.steps.iter().map(|s| s.loss).collect();
+    let b: Vec<f64> = pooled.metrics.steps.iter().map(|s| s.loss).collect();
+    assert_eq!(a, b, "lane count changed the loss curve");
+    assert_eq!(
+        std::fs::read(&ck_serial).unwrap(),
+        std::fs::read(&ck_pool).unwrap(),
+        "lane count changed the final state bytes"
+    );
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
