@@ -48,6 +48,7 @@ fn run_case(name: &str, ls: f32, bsc: bool, ranks: usize) -> Option<(f64, f64)> 
         eval_batches: 8,
         train_size: 4096,
         compute_lanes: 0,
+        bucket_bytes: 8192,
     };
     let trainer = Trainer::new(config).ok()?;
     let report = trainer.run().ok()?;

@@ -1,0 +1,115 @@
+//! Wall-clock steps/s: monolithic vs bucketed gradient reduction.
+//!
+//! Runs the 4-worker tiny-arch quickstart twice — `bucket_bytes = 0`
+//! (single bucket: the serial grad→reduce→apply schedule) and the default
+//! bucketed pipeline (reduction overlapped with backprop) — and reports
+//! steps/s, peak compute-lane concurrency and the exposed-comm fraction.
+//! Emits `BENCH_pipeline.json` next to the working directory so the repo
+//! accumulates a perf trajectory.
+//!
+//!     cargo bench --bench step_pipeline
+//!
+//! CI only builds this target (`cargo bench --no-run`); record numbers
+//! from a toolchain'd checkout and paste them into the PR description —
+//! see README "Overlapped bucketed reduction".
+
+use std::collections::BTreeMap;
+
+use flashsgd::config::TrainConfig;
+use flashsgd::coordinator::{TrainReport, Trainer};
+use flashsgd::util::json::Json;
+
+struct Case {
+    name: &'static str,
+    bucket_bytes: usize,
+    steps_per_sec: f64,
+    exposed_comm_fraction: f64,
+    hidden_comm_ms: f64,
+    max_lane_concurrency: usize,
+    n_steps: usize,
+}
+
+fn run_case(name: &'static str, bucket_bytes: usize, steps: usize) -> Case {
+    let mut config = TrainConfig::quickstart();
+    config.name = format!("bench-{name}");
+    config.max_steps = steps;
+    config.bucket_bytes = bucket_bytes;
+    let report: TrainReport = Trainer::new(config)
+        .expect("quickstart config must construct")
+        .run()
+        .expect("bench run must complete");
+    let s = &report.summary;
+    Case {
+        name,
+        bucket_bytes,
+        steps_per_sec: s.steps as f64 / s.wall_secs.max(1e-9),
+        exposed_comm_fraction: s.comm_fraction,
+        hidden_comm_ms: s.mean_comm_hidden * 1e3,
+        max_lane_concurrency: report.max_lane_concurrency,
+        n_steps: s.steps,
+    }
+}
+
+fn case_json(c: &Case) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(c.name.to_string()));
+    m.insert("bucket_bytes".to_string(), Json::Num(c.bucket_bytes as f64));
+    m.insert("steps".to_string(), Json::Num(c.n_steps as f64));
+    m.insert("steps_per_sec".to_string(), Json::Num(c.steps_per_sec));
+    m.insert(
+        "exposed_comm_fraction".to_string(),
+        Json::Num(c.exposed_comm_fraction),
+    );
+    m.insert("hidden_comm_ms".to_string(), Json::Num(c.hidden_comm_ms));
+    m.insert(
+        "max_lane_concurrency".to_string(),
+        Json::Num(c.max_lane_concurrency as f64),
+    );
+    Json::Obj(m)
+}
+
+fn main() {
+    let steps = 60usize;
+    println!("=== step pipeline: monolithic vs bucketed reduction (tiny, 2x2 torus) ===\n");
+    // warmup to stabilise thread-pool and allocator state
+    let _ = run_case("warmup", 0, 10);
+
+    let cases = vec![
+        run_case("monolithic", 0, steps),
+        run_case("bucketed-default", TrainConfig::quickstart().bucket_bytes, steps),
+        run_case("bucketed-fine", 2048, steps),
+    ];
+
+    println!(
+        "{:<20} {:>12} {:>10} {:>14} {:>14} {:>10}",
+        "case", "bucket_bytes", "steps/s", "exposed-comm%", "hidden ms", "max-conc"
+    );
+    for c in &cases {
+        println!(
+            "{:<20} {:>12} {:>10.1} {:>13.1}% {:>14.3} {:>10}",
+            c.name,
+            c.bucket_bytes,
+            c.steps_per_sec,
+            c.exposed_comm_fraction * 100.0,
+            c.hidden_comm_ms,
+            c.max_lane_concurrency
+        );
+    }
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("step_pipeline".to_string()));
+    top.insert(
+        "workers".to_string(),
+        Json::Num(TrainConfig::quickstart().batch.max_workers() as f64),
+    );
+    top.insert(
+        "cases".to_string(),
+        Json::Arr(cases.iter().map(case_json).collect()),
+    );
+    let json = Json::Obj(top);
+    let path = "BENCH_pipeline.json";
+    match std::fs::write(path, json.to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

@@ -23,23 +23,27 @@ use crate::util::half;
 #[derive(Debug, Clone, Copy, Default)]
 pub struct HalvingDoubling;
 
-fn send_range(ep: &Endpoint, dst: usize, tag: u64, chunk: &[f32], wire: Wire) -> Result<()> {
+fn send_range(ep: &mut Endpoint, dst: usize, tag: u64, chunk: &[f32], wire: Wire) -> Result<()> {
     match wire {
         Wire::F32 => ep.send_f32(dst, tag, chunk),
         Wire::F16 => {
-            let mut enc = vec![0u16; chunk.len()];
+            let mut enc = ep.alloc_f16(chunk.len());
             half::encode_slice(chunk, &mut enc);
             ep.send_f16(dst, tag, enc)
         }
     }
 }
 
+/// Receive one window as f32. The returned buffer comes from / goes back
+/// to the endpoint freelist (callers recycle it after consuming).
 fn recv_range(ep: &mut Endpoint, src: usize, tag: u64, wire: Wire) -> Result<Vec<f32>> {
     match ep.recv(src, tag)? {
         Payload::F32(v) if wire == Wire::F32 => Ok(v),
         Payload::F16(v) if wire == Wire::F16 => {
-            let mut out = vec![0.0f32; v.len()];
+            let mut out = ep.alloc_f32(v.len());
+            out.resize(v.len(), 0.0);
             half::decode_slice(&v, &mut out);
+            ep.recycle_f16(v);
             Ok(out)
         }
         _ => bail!("wire dtype mismatch"),
@@ -108,6 +112,7 @@ impl Collective for HalvingDoubling {
                     for (d, s) in dst.iter_mut().zip(&incoming) {
                         *d += s;
                     }
+                    ep.recycle_f32(incoming);
                 }
                 Wire::F16 => {
                     let enc = match ep.recv(partner, tag)? {
@@ -116,6 +121,7 @@ impl Collective for HalvingDoubling {
                     };
                     // fused decode+add+requantise (fp16 buffer semantics)
                     half::accumulate_quantized(&mut buf[mine_lo..mine_hi], &enc);
+                    ep.recycle_f16(enc);
                 }
             }
         }
@@ -138,6 +144,7 @@ impl Collective for HalvingDoubling {
                 );
             }
             buf[theirs_lo..theirs_hi].copy_from_slice(&incoming);
+            ep.recycle_f32(incoming);
         }
         Ok(())
     }

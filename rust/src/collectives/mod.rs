@@ -14,7 +14,14 @@
 //! | [`ring::RingAllReduce`] | flat ring (Baidu [14]) | `2(N-1)` |
 //! | [`hierarchical::HierarchicalAllReduce`] | grouped rings (Jia [6]) | `2(g-1) + 2(N/g-1)` |
 //! | [`torus2d::TorusAllReduce`] | **2D-Torus (this paper)** | `2(X-1) + 2(Y-1)` |
+//!
+//! On top of any of them, [`bucketed`] splits the gradient into
+//! tensor-aligned buckets (reverse parameter order — the order backprop
+//! finalises gradients) and reduces each bucket in its own disjoint
+//! `tag_span` window, which is what lets the worker overlap the all-reduce
+//! with the backward pass (paper §2.2's comm/compute overlap).
 
+pub mod bucketed;
 pub mod halving_doubling;
 pub mod hierarchical;
 pub mod primitives;
@@ -22,6 +29,7 @@ pub mod ring;
 pub mod torus2d;
 pub mod transport;
 
+pub use bucketed::{BucketPlan, BucketStaging};
 pub use halving_doubling::HalvingDoubling;
 pub use hierarchical::HierarchicalAllReduce;
 pub use primitives::Wire;

@@ -89,10 +89,13 @@ impl Collective for TorusAllReduce {
         let y_pos = rank / self.x;
 
         // Tag-space layout: the three phases use disjoint tag windows so a
-        // rank's row and column traffic can never be confused.
+        // rank's row and column traffic can never be confused. Windows are
+        // packed back-to-back at their exact widths (`tag_span` is tight),
+        // because the bucketed gradient pipeline stacks one whole span per
+        // bucket per step — slack here multiplies across every bucket.
         let t_scatter = tag_base;
-        let t_vertical = tag_base + self.x as u64;
-        let t_gather = t_vertical + 2 * self.y as u64;
+        let t_vertical = t_scatter + Self::scatter_width(self.x);
+        let t_gather = t_vertical + Self::vertical_width(self.y);
 
         // Phase 1: horizontal reduce-scatter (paper Fig. 2, step 1).
         let owned = ring_reduce_scatter(ep, &row, x_pos, buf, wire, t_scatter)?;
@@ -111,8 +114,33 @@ impl Collective for TorusAllReduce {
         2 * (self.x - 1) + 2 * (self.y - 1)
     }
 
+    /// Exact tag window: horizontal reduce-scatter (`x-1` tags) + vertical
+    /// ring all-reduce (`2y-1` tags when `y > 1`) + horizontal all-gather
+    /// (`x-1` tags) — `2x + 2y - 3` for a non-degenerate grid, previously
+    /// over-reserved as `3x + 2y`. Clamped to 1 so adjacent windows are
+    /// still distinct on a 1×1 grid (which sends nothing).
     fn tag_span(&self, _n_ranks: usize) -> u64 {
-        (self.x + 2 * self.y + 2 * self.x) as u64
+        (2 * Self::scatter_width(self.x) + Self::vertical_width(self.y)).max(1)
+    }
+}
+
+impl TorusAllReduce {
+    /// Tags used by a ring reduce-scatter (or all-gather) over `k` ranks:
+    /// `k - 1` steps, one tag each (none for a singleton ring).
+    fn scatter_width(k: usize) -> u64 {
+        k.saturating_sub(1) as u64
+    }
+
+    /// Tags used by a ring all-reduce over `k` ranks: reduce-scatter at
+    /// offsets `[0, k-2]` plus all-gather at `[k, 2k-2]` (the primitive
+    /// offsets its gather window by `k`), so `2k - 1` tags; none for a
+    /// singleton ring.
+    fn vertical_width(k: usize) -> u64 {
+        if k > 1 {
+            (2 * k - 1) as u64
+        } else {
+            0
+        }
     }
 }
 
@@ -172,6 +200,21 @@ mod tests {
             // always beats the flat ring's 2(N-1) for these shapes
             assert!(t.p2p_steps(n) < 2 * (n - 1));
         }
+    }
+
+    #[test]
+    fn tag_span_is_tight_for_table4_grids() {
+        // The declared window must be the exact packed width
+        // `2(x-1) + (2y-1)` = `2x + 2y - 3` for every non-degenerate grid,
+        // including the paper's Table-4 cluster shapes ((V, H) -> x=H, y=V).
+        for (v, h) in [(32usize, 32usize), (32, 64), (34, 64), (48, 72), (64, 64)] {
+            let t = TorusAllReduce::new(h, v);
+            assert_eq!(t.tag_span(h * v), (2 * h + 2 * v - 3) as u64, "{h}x{v}");
+        }
+        // Degenerate rings contribute no tags at all.
+        assert_eq!(TorusAllReduce::new(1, 4).tag_span(4), 7); // vertical only: 2*4-1
+        assert_eq!(TorusAllReduce::new(4, 1).tag_span(4), 6); // horizontal only: 2*(4-1)
+        assert_eq!(TorusAllReduce::new(1, 1).tag_span(1), 1); // clamp: no traffic
     }
 
     #[test]

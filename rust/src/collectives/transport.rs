@@ -11,6 +11,12 @@
 //! *conservation* (total sent == total received) and to verify each
 //! collective moves exactly the data volume its cost model claims —
 //! the bridge between the functional path and `simnet`'s analytical path.
+//!
+//! Endpoints also keep per-dtype **scratch freelists**: receive paths hand
+//! consumed payload storage back ([`Endpoint::recycle`]) and send paths
+//! draw from it ([`Endpoint::alloc_f16`], and [`Endpoint::send_f32`]
+//! internally), so the bucketed gradient pipeline's much higher message
+//! rate does not translate into per-hop allocation churn.
 
 use std::collections::hash_map::Entry;
 use std::collections::{HashMap, VecDeque};
@@ -112,6 +118,9 @@ impl Mesh {
                 rx,
                 pending: HashMap::new(),
                 counters: counters.clone(),
+                free_f32: Vec::new(),
+                free_f16: Vec::new(),
+                freelist_hits: 0,
             })
             .collect()
     }
@@ -129,7 +138,19 @@ pub struct Endpoint {
     /// as they drain so the map cannot grow without bound across a run.
     pending: HashMap<(usize, u64), VecDeque<Payload>>,
     counters: Arc<Counters>,
+    /// Scratch-buffer freelists. Receive paths recycle consumed payload
+    /// storage here; send paths draw from it instead of allocating per
+    /// hop. In a steady ring schedule each rank receives about as much as
+    /// it sends, so buffers circulate recv → freelist → next send and the
+    /// per-hop allocation rate drops to ~zero after warmup.
+    free_f32: Vec<Vec<f32>>,
+    free_f16: Vec<Vec<u16>>,
+    freelist_hits: u64,
 }
+
+/// Upper bound on parked scratch buffers per dtype (bounds memory when a
+/// caller recycles far more than it sends).
+const FREELIST_CAP: usize = 32;
 
 impl Endpoint {
     pub fn rank(&self) -> usize {
@@ -168,12 +189,75 @@ impl Endpoint {
         Ok(())
     }
 
-    pub fn send_f32(&self, dst: usize, tag: u64, data: &[f32]) -> Result<()> {
-        self.send(dst, tag, Payload::F32(data.to_vec()))
+    /// Copy `data` into a freelist-backed buffer and send it (no per-hop
+    /// allocation once the freelist has warmed up).
+    pub fn send_f32(&mut self, dst: usize, tag: u64, data: &[f32]) -> Result<()> {
+        let mut buf = self.alloc_f32(data.len());
+        buf.extend_from_slice(data);
+        self.send(dst, tag, Payload::F32(buf))
     }
 
     pub fn send_f16(&self, dst: usize, tag: u64, data: Vec<u16>) -> Result<()> {
         self.send(dst, tag, Payload::F16(data))
+    }
+
+    /// Take an **empty** f32 scratch buffer with at least `capacity_hint`
+    /// reserved — from the freelist when one is parked, freshly allocated
+    /// otherwise.
+    pub fn alloc_f32(&mut self, capacity_hint: usize) -> Vec<f32> {
+        match self.free_f32.pop() {
+            Some(mut v) => {
+                self.freelist_hits += 1;
+                v.clear();
+                v.reserve(capacity_hint);
+                v
+            }
+            None => Vec::with_capacity(capacity_hint),
+        }
+    }
+
+    /// Take a zero-filled f16 scratch buffer of exactly `len` elements.
+    /// Recycled buffers are cleared before resizing, so a longer previous
+    /// payload can never leak a stale tail into a shorter message.
+    pub fn alloc_f16(&mut self, len: usize) -> Vec<u16> {
+        let mut v = match self.free_f16.pop() {
+            Some(v) => {
+                self.freelist_hits += 1;
+                v
+            }
+            None => Vec::new(),
+        };
+        v.clear();
+        v.resize(len, 0);
+        v
+    }
+
+    /// Park a consumed f32 buffer for reuse by a later send/receive.
+    pub fn recycle_f32(&mut self, v: Vec<f32>) {
+        if self.free_f32.len() < FREELIST_CAP {
+            self.free_f32.push(v);
+        }
+    }
+
+    /// Park a consumed f16 buffer for reuse by a later send/receive.
+    pub fn recycle_f16(&mut self, v: Vec<u16>) {
+        if self.free_f16.len() < FREELIST_CAP {
+            self.free_f16.push(v);
+        }
+    }
+
+    /// Park a consumed payload's storage whatever its dtype.
+    pub fn recycle(&mut self, p: Payload) {
+        match p {
+            Payload::F32(v) => self.recycle_f32(v),
+            Payload::F16(v) => self.recycle_f16(v),
+        }
+    }
+
+    /// How many scratch buffers were served from the freelist instead of
+    /// the allocator (observability for the reuse tests).
+    pub fn freelist_hits(&self) -> u64 {
+        self.freelist_hits
     }
 
     /// Blocking receive of the message matching `(src, tag)`.
@@ -258,7 +342,7 @@ mod tests {
     fn point_to_point_round_trip() {
         let mut eps = Mesh::new(2);
         let mut b = eps.pop().unwrap();
-        let a = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
         a.send_f32(1, 7, &[1.0, 2.0, 3.0]).unwrap();
         let got = b.recv_f32(0, 7).unwrap();
         assert_eq!(got, vec![1.0, 2.0, 3.0]);
@@ -268,7 +352,7 @@ mod tests {
     fn tag_matching_out_of_order() {
         let mut eps = Mesh::new(2);
         let mut b = eps.pop().unwrap();
-        let a = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
         a.send_f32(1, 1, &[1.0]).unwrap();
         a.send_f32(1, 2, &[2.0]).unwrap();
         a.send_f32(1, 1, &[3.0]).unwrap();
@@ -311,7 +395,7 @@ mod tests {
     fn pending_queue_drains_and_entries_are_dropped() {
         let mut eps = Mesh::new(2);
         let mut b = eps.pop().unwrap();
-        let a = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
         // out-of-order burst: many messages on tags received later
         for i in 0..50u64 {
             a.send_f32(1, i % 5, &[i as f32]).unwrap();
@@ -348,14 +432,50 @@ mod tests {
     fn dtype_mismatch_is_error() {
         let mut eps = Mesh::new(2);
         let mut b = eps.pop().unwrap();
-        let a = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
         a.send_f32(1, 0, &[1.0]).unwrap();
         assert!(b.recv_f16(0, 0).is_err());
     }
 
     #[test]
     fn send_out_of_range_is_error() {
-        let eps = Mesh::new(2);
+        let mut eps = Mesh::new(2);
         assert!(eps[0].send_f32(5, 0, &[1.0]).is_err());
+    }
+
+    /// The freelist must never hand back a stale payload: a recycled long
+    /// buffer reused for a shorter message carries exactly the new bytes —
+    /// no leftover tail, no leftover length.
+    #[test]
+    fn freelist_never_hands_back_stale_payloads() {
+        let mut eps = Mesh::new(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+
+        // f32: long payload recycled on b, then b sends a short one.
+        a.send_f32(1, 0, &[9.0; 64]).unwrap();
+        let long = b.recv_f32(0, 0).unwrap();
+        assert_eq!(long.len(), 64);
+        b.recycle_f32(long);
+        b.send_f32(0, 1, &[1.0, 2.0]).unwrap();
+        assert!(b.freelist_hits() >= 1, "short send must hit the freelist");
+        assert_eq!(a.recv_f32(1, 1).unwrap(), vec![1.0, 2.0]);
+
+        // f16: alloc after recycling a longer buffer is exact-length and
+        // zero-filled, not a truncated view of the old contents.
+        a.send_f16(1, 2, vec![7u16; 50]).unwrap();
+        let enc = b.recv_f16(0, 2).unwrap();
+        b.recycle_f16(enc);
+        let mut short = b.alloc_f16(3);
+        assert_eq!(short, vec![0u16; 3]);
+        short.copy_from_slice(&[1, 2, 3]);
+        b.send_f16(0, 3, short).unwrap();
+        assert_eq!(a.recv_f16(1, 3).unwrap(), vec![1, 2, 3]);
+
+        // the cap bounds parked buffers
+        for _ in 0..100 {
+            b.recycle_f32(vec![0.0; 4]);
+        }
+        assert!(b.free_f32.len() <= FREELIST_CAP);
     }
 }

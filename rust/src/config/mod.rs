@@ -42,7 +42,21 @@ pub struct TrainConfig {
     /// phase; 1 = fully serialized (the pre-pool behaviour, bit-identical
     /// results either way).
     pub compute_lanes: usize,
+    /// Target bytes (f32 accumulator: 4 bytes/element, regardless of the
+    /// wire dtype) per gradient bucket of the backward-overlapped
+    /// reduction. Buckets are tensor-aligned and built in reverse layer
+    /// order, so bucket *k* all-reduces while backprop still produces
+    /// bucket *k+1*. `0` = a single bucket: the fully serial
+    /// grad→reduce→apply schedule, bit-identical to the pre-pipeline
+    /// behaviour. The default (8 KiB) yields ~6–7 buckets on the tiny
+    /// arch.
+    pub bucket_bytes: usize,
 }
+
+/// Default gradient-bucket target: ~6–7 tensor-aligned buckets over the
+/// tiny arch's ~123 KiB gradient, enough for the reduction of early
+/// buckets to hide behind the remaining backward pass.
+pub const DEFAULT_BUCKET_BYTES: usize = 8 * 1024;
 
 impl TrainConfig {
     /// Quick default: tiny arch, 4 workers in a 2×2 torus.
@@ -62,6 +76,7 @@ impl TrainConfig {
             eval_batches: 4,
             train_size: 4096,
             compute_lanes: 0,
+            bucket_bytes: DEFAULT_BUCKET_BYTES,
         }
     }
 
@@ -137,6 +152,7 @@ impl TrainConfig {
             eval_batches: 8,
             train_size: 4096,
             compute_lanes: 0,
+            bucket_bytes: DEFAULT_BUCKET_BYTES,
         }
     }
 
@@ -157,6 +173,7 @@ impl TrainConfig {
         let eval_batches = doc.usize_or("eval_batches", 8)?;
         let train_size = doc.usize_or("train_size", 4096)?;
         let compute_lanes = doc.usize_or("compute_lanes", 0)?;
+        let bucket_bytes = doc.usize_or("bucket_bytes", DEFAULT_BUCKET_BYTES)?;
         let total_epochs = doc.usize_or("epochs", 2)? as u32;
 
         // LR schedule.
@@ -220,6 +237,7 @@ impl TrainConfig {
             eval_batches,
             train_size,
             compute_lanes,
+            bucket_bytes,
         })
     }
 }
@@ -284,6 +302,15 @@ phases = [[0, 8, 4], [2, 16, 4]]
             LrSchedule::ConfigB { base_low, .. } => assert_eq!(base_low, 1.5),
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn bucket_bytes_defaults_and_parses() {
+        assert_eq!(TrainConfig::quickstart().bucket_bytes, DEFAULT_BUCKET_BYTES);
+        let doc = Doc::parse("bucket_bytes = 0\n").unwrap();
+        assert_eq!(TrainConfig::from_toml(&doc).unwrap().bucket_bytes, 0);
+        let doc = Doc::parse("bucket_bytes = 4096\n").unwrap();
+        assert_eq!(TrainConfig::from_toml(&doc).unwrap().bucket_bytes, 4096);
     }
 
     #[test]

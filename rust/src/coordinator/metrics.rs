@@ -17,10 +17,17 @@ pub struct StepMetric {
     pub lr: f64,
     pub momentum: f64,
     pub global_batch: usize,
-    /// Seconds in grad_step (compute).
+    /// Seconds stalled waiting on the backward pass (compute the
+    /// communication could not hide).
     pub t_compute: f64,
-    /// Seconds in the gradient + BN collectives (communication).
+    /// Seconds of **exposed** communication: bucket reductions run after
+    /// backprop had already delivered its last gradient, plus the BN-stat
+    /// all-reduce. This is the part of comm that extends the step.
     pub t_comm: f64,
+    /// Seconds of bucket reductions overlapped with the still-running
+    /// backward pass (hidden comm — the pipeline's win; 0 on the
+    /// single-bucket/serial schedule).
+    pub t_comm_hidden: f64,
     /// Seconds in apply_step (optimizer).
     pub t_apply: f64,
     /// Seconds in data loading.
@@ -29,7 +36,7 @@ pub struct StepMetric {
 
 impl StepMetric {
     pub fn total_secs(&self) -> f64 {
-        self.t_compute + self.t_comm + self.t_apply + self.t_data
+        self.t_compute + self.t_comm + self.t_comm_hidden + self.t_apply + self.t_data
     }
 }
 
@@ -60,10 +67,15 @@ pub struct Summary {
     /// Mean per-step seconds in each bucket.
     pub mean_compute: f64,
     pub mean_comm: f64,
+    /// Mean per-step seconds of comm hidden behind backprop (overlapped
+    /// bucket reductions).
+    pub mean_comm_hidden: f64,
     pub mean_apply: f64,
     pub mean_data: f64,
-    /// Communication share of the step (the paper's scaling-efficiency
-    /// antagonist).
+    /// **Exposed** communication share of the step (the paper's
+    /// scaling-efficiency antagonist). Comm hidden behind the backward
+    /// pass does not count — that is exactly what the bucketed pipeline
+    /// buys.
     pub comm_fraction: f64,
 }
 
@@ -83,9 +95,10 @@ impl Metrics {
         let get = |f: fn(&StepMetric) -> f64| -> Vec<f64> { self.steps.iter().map(f).collect() };
         let comp = stats::mean(&get(|s| s.t_compute));
         let comm = stats::mean(&get(|s| s.t_comm));
+        let hidden = stats::mean(&get(|s| s.t_comm_hidden));
         let apply = stats::mean(&get(|s| s.t_apply));
         let data = stats::mean(&get(|s| s.t_data));
-        let total = comp + comm + apply + data;
+        let total = comp + comm + hidden + apply + data;
         Summary {
             steps: n,
             images,
@@ -95,6 +108,7 @@ impl Metrics {
             last_loss: self.steps.last().map_or(f64::NAN, |s| s.loss),
             mean_compute: comp,
             mean_comm: comm,
+            mean_comm_hidden: hidden,
             mean_apply: apply,
             mean_data: data,
             comm_fraction: if total > 0.0 { comm / total } else { 0.0 },
@@ -116,11 +130,11 @@ impl Metrics {
     /// CSV dump: step curve with timing columns.
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "step,epoch,loss,lr,momentum,global_batch,t_compute,t_comm,t_apply,t_data\n",
+            "step,epoch,loss,lr,momentum,global_batch,t_compute,t_comm,t_comm_hidden,t_apply,t_data\n",
         );
         for s in &self.steps {
             out.push_str(&format!(
-                "{},{},{:.6},{:.6},{:.4},{},{:.6},{:.6},{:.6},{:.6}\n",
+                "{},{},{:.6},{:.6},{:.4},{},{:.6},{:.6},{:.6},{:.6},{:.6}\n",
                 s.step,
                 s.epoch,
                 s.loss,
@@ -129,6 +143,7 @@ impl Metrics {
                 s.global_batch,
                 s.t_compute,
                 s.t_comm,
+                s.t_comm_hidden,
                 s.t_apply,
                 s.t_data
             ));
@@ -155,6 +170,7 @@ impl Metrics {
         summary.insert("first_loss".into(), Json::Num(s.first_loss));
         summary.insert("last_loss".into(), Json::Num(s.last_loss));
         summary.insert("comm_fraction".into(), Json::Num(s.comm_fraction));
+        summary.insert("mean_comm_hidden".into(), Json::Num(s.mean_comm_hidden));
         top.insert("summary".into(), Json::Obj(summary));
         top.insert(
             "loss_curve".into(),
@@ -190,8 +206,8 @@ impl Summary {
     pub fn format(&self) -> String {
         format!(
             "steps {}  imgs {}  {:.1} img/s  loss {:.3}→{:.3}  \
-             step breakdown: compute {:.1}ms comm {:.1}ms apply {:.1}ms data {:.1}ms \
-             (comm {:.1}%)",
+             step breakdown: compute {:.1}ms comm {:.1}ms (+{:.1}ms hidden) \
+             apply {:.1}ms data {:.1}ms (exposed comm {:.1}%)",
             self.steps,
             self.images,
             self.images_per_sec,
@@ -199,6 +215,7 @@ impl Summary {
             self.last_loss,
             self.mean_compute * 1e3,
             self.mean_comm * 1e3,
+            self.mean_comm_hidden * 1e3,
             self.mean_apply * 1e3,
             self.mean_data * 1e3,
             self.comm_fraction * 100.0
@@ -220,6 +237,7 @@ mod tests {
             global_batch: 32,
             t_compute: 0.010,
             t_comm: 0.005,
+            t_comm_hidden: 0.0,
             t_apply: 0.002,
             t_data: 0.003,
         }
@@ -239,6 +257,19 @@ mod tests {
         assert!((s.comm_fraction - 0.25).abs() < 1e-9);
         assert!(s.last_loss < s.first_loss);
         assert!(s.format().contains("img/s"));
+    }
+
+    #[test]
+    fn hidden_comm_is_excluded_from_the_exposed_fraction() {
+        let mut m = Metrics::default();
+        let mut s = step(0, 1.0);
+        s.t_comm_hidden = 0.005;
+        m.push(s);
+        let sum = m.summary();
+        // total 10+5+5+2+3 = 25ms; only the 5ms exposed comm counts
+        assert!((sum.comm_fraction - 0.2).abs() < 1e-9);
+        assert!((sum.mean_comm_hidden - 0.005).abs() < 1e-12);
+        assert!((m.steps[0].total_secs() - 0.025).abs() < 1e-12);
     }
 
     #[test]

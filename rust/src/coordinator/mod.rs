@@ -10,7 +10,11 @@
 //! schedule phase by phase. Each phase spawns one thread per simulated GPU
 //! over a fresh [`Mesh`]; every rank pins its `(params, momenta)` into its
 //! compute lane for the phase, so steady-state steps ship only batches,
-//! reduced gradients and scalars. Phase boundaries are where batch-size
+//! reduced gradients and scalars. Within a step, gradient synchronization
+//! is **overlapped with backprop** (paper §2.2): the lane streams
+//! gradients in reverse layer order and the worker all-reduces
+//! tensor-aligned buckets while later layers are still being computed
+//! (`TrainConfig::bucket_bytes`; 0 = the serial schedule, bit-identical). Phase boundaries are where batch-size
 //! control swaps every worker's `grad_step` executable (and, like the
 //! paper's Exp. 2–4, may change the worker count); they are also the only
 //! points where state is exported from the lanes — for the replication
@@ -344,6 +348,7 @@ impl Trainer {
                 dataset_size: cfg.train_size,
                 eval_every: cfg.eval_every,
                 eval_batches: cfg.eval_batches,
+                bucket_bytes: cfg.bucket_bytes,
             });
 
             let mut outputs = run_phase_on_mesh(&ctx, &client, &dataset, cfg.seed, state)?;

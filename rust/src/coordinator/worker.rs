@@ -3,18 +3,34 @@
 //! Per phase, the rank pins its `(params, momenta)` into one **lane** of
 //! the compute pool ([`ComputeClient::import_state`]) so the steady-state
 //! step ships only data and gradients — never the model. Per step (the
-//! paper's data-parallel structure, §2):
+//! paper's data-parallel structure, §2, with §2.2's comm/compute overlap):
 //!   1. load the next local batch (shard of the synthetic set),
-//!   2. `grad_step` against the lane-resident parameters → loss, local
-//!      grads, local BN stats,
-//!   3. all-reduce grads via the configured collective, **FP16 wire**,
+//!   2. `grad_step_streaming` against the lane-resident parameters: the
+//!      lane pushes each parameter gradient over as soon as backprop
+//!      finalises it (reverse layer order),
+//!   3. as each tensor-aligned **bucket** of gradients completes
+//!      ([`crate::collectives::BucketPlan`], `TrainConfig::bucket_bytes`),
+//!      all-reduce it via the configured collective, **FP16 wire**, in its
+//!      own `tag_span` window — bucket *k* reduces while the lane is still
+//!      producing bucket *k+1* — then queue a per-bucket `apply_partial`
+//!      (LARS is per-tensor, so bucketed apply ≡ whole-model apply
+//!      bitwise). With `bucket_bytes = 0` there is a single bucket and the
+//!      step degenerates to the serial grad→reduce→apply schedule,
+//!      bit-identically,
 //!   4. all-reduce BN stats, **FP32 wire** (paper §3.2 precision split),
 //!      with the scalar step loss riding in this buffer (1 extra element)
 //!      so the reported `loss_mean` is never quantised by the FP16
 //!      gradient wire,
-//!   5. `apply` (LARS) updates the lane-resident state in place with the
-//!      reduced gradient and the schedule's (lr, momentum) for this step's
-//!      epoch.
+//!   5. collect the per-bucket apply replies (the lane executed them in
+//!      FIFO order after the backward pass — they can never race it).
+//!
+//! Timing attribution: `t_compute` is time stalled waiting on the lane's
+//! backward pass, `t_comm_hidden` is bucket reductions that both started
+//! **and** ended while later gradients were still outstanding (comm the
+//! pipeline provably hid — the conservative call, so the exposed fraction
+//! is never flattered), `t_comm` is **exposed** comm — everything else,
+//! plus the BN window. On the serial schedule `t_comm_hidden` is 0 and
+//! the split matches the old compute-then-comm accounting.
 //!
 //! Parameters stay replicated: identical reduced grads + identical update
 //! = identical weights on every rank. The rank exports its state only at
@@ -27,10 +43,11 @@
 //! at the next collective, so no extra synchronisation is needed.
 
 use std::sync::Arc;
+use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::collectives::{Collective, Endpoint, Wire};
+use crate::collectives::{BucketPlan, BucketStaging, Collective, Endpoint, Wire};
 use crate::data::{Augment, Batch, Loader};
 use crate::runtime::{ApplyParams, ArchManifest, ComputeClient, HostTensor};
 use crate::sched::LrSchedule;
@@ -61,6 +78,9 @@ pub struct PhaseCtx {
     pub eval_every: usize,
     /// Validation batches per evaluation.
     pub eval_batches: usize,
+    /// Gradient-bucket target for the backward-overlapped reduction
+    /// (`TrainConfig::bucket_bytes`; 0 = one bucket, the serial schedule).
+    pub bucket_bytes: usize,
 }
 
 impl PhaseCtx {
@@ -129,14 +149,31 @@ pub fn flatten_into(tensors: &[HostTensor], flat: &mut Vec<f32>) -> Result<Vec<u
     Ok(offsets)
 }
 
-/// Scatter `flat` back into tensors shaped like `templates`.
+/// Scatter `flat` back into tensors shaped like `templates`. When `out`
+/// already holds matching f32 tensors (the steady state of a step loop),
+/// their storage is reused — no per-step allocation; otherwise the output
+/// vector is rebuilt.
 pub fn unflatten_from(
     flat: &[f32],
     templates: &[HostTensor],
     out: &mut Vec<HostTensor>,
 ) -> Result<()> {
-    out.clear();
+    let reusable = out.len() == templates.len()
+        && out
+            .iter()
+            .zip(templates)
+            .all(|(o, t)| o.shape() == t.shape() && matches!(o, HostTensor::F32 { .. }));
     let mut off = 0;
+    if reusable {
+        for o in out.iter_mut() {
+            let dst = o.as_f32_mut()?;
+            let n = dst.len();
+            dst.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        return Ok(());
+    }
+    out.clear();
     for t in templates {
         let n = t.elems();
         out.push(HostTensor::f32(
@@ -201,14 +238,20 @@ pub fn run_phase(
     mut state: WorkerState,
 ) -> Result<WorkerOutput> {
     let grad_exec = ctx.grad_exec();
-    let n_params = ctx.arch.n_params();
     let n_bn = ctx.arch.n_bn();
     let inv_n = 1.0f32 / ctx.workers as f32;
     let mut metrics = Metrics::default();
     let mut batch = Batch::empty();
-    let mut grad_flat: Vec<f32> = Vec::new();
     let mut bn_flat: Vec<f32> = Vec::new();
     let mut tag: u64 = 0;
+    let span = ctx.collective.tag_span(ctx.workers);
+
+    // Bucket schedule: tensor-aligned, reverse layer order (the gradient
+    // emission order), rebuilt per phase (shapes are phase-constant). The
+    // staging's flat buffers and received tensors are reused every step.
+    let elem_counts: Vec<usize> = ctx.arch.params.iter().map(|p| p.size).collect();
+    let plan = BucketPlan::new(&elem_counts, ctx.bucket_bytes);
+    let mut staging = BucketStaging::new(&plan);
 
     let img_shape = vec![
         ctx.per_worker_batch,
@@ -267,37 +310,118 @@ pub fn run_phase(
         let data_epoch = loader.next_batch(ctx.per_worker_batch, &mut batch);
         let t_data = sw.lap("data");
 
-        // 2. local gradients against the lane-resident parameters
-        let images = HostTensor::f32(img_shape.clone(), batch.images.clone());
-        let labels = HostTensor::i32(vec![ctx.per_worker_batch], batch.labels.clone());
-        let out = compute
-            .grad_step(&sref, &grad_exec, images, labels)
-            .with_context(|| format!("rank {rank} step {global_step}: grad_step"))?;
-        let t_compute = sw.lap("compute");
+        // 2+3. streaming gradients with bucket-pipelined all-reduce. The
+        // batch vectors move into the tensors (no clone); the lane hands
+        // them back in the terminal reply so their storage is reused next
+        // step.
+        let images = HostTensor::f32(img_shape.clone(), std::mem::take(&mut batch.images));
+        let labels = HostTensor::i32(
+            vec![ctx.per_worker_batch],
+            std::mem::take(&mut batch.labels),
+        );
+        let stream = compute
+            .grad_step_streaming(&sref, &grad_exec, images, labels)
+            .with_context(|| format!("rank {rank} step {global_step}: grad_step_streaming"))?;
 
-        // 3. gradient all-reduce (FP16 wire)
-        let loss_local = out[0].scalar()?;
-        let grads = &out[1..1 + n_params];
-        let bn_stats = &out[1 + n_params..1 + n_params + n_bn];
-        flatten_into(grads, &mut grad_flat)?;
-        ctx.collective
-            .all_reduce(ep, &mut grad_flat, ctx.grad_wire, tag)?;
-        tag += ctx.collective.tag_span(ctx.workers);
-        for g in grad_flat.iter_mut() {
-            *g *= inv_n;
+        let hp = ApplyParams {
+            lr,
+            momentum,
+            weight_decay: ctx.weight_decay,
+        };
+        staging.begin();
+        let mut pending_applies = Vec::with_capacity(plan.len());
+        let mut t_compute = 0.0f64; // stalled on the backward pass
+        let mut t_comm = 0.0f64; // exposed communication
+        let mut t_comm_hidden = 0.0f64; // reductions overlapped with backprop
+        'buckets: for k in 0..plan.len() {
+            // Wait for this bucket's gradients (reverse layer order means
+            // buckets complete strictly in plan order). Time spent blocked
+            // here is compute the pipeline could not hide.
+            let wait0 = Instant::now();
+            while !staging.bucket_ready(&plan, k) {
+                let Some((idx, t)) = stream.recv_grad() else {
+                    // stream ended early: the terminal reply below carries
+                    // the backend's actual error
+                    break 'buckets;
+                };
+                staging
+                    .place(&plan, idx, t)
+                    .with_context(|| format!("rank {rank} step {global_step}: grad stream"))?;
+            }
+            // Drain whatever else backprop already produced, so the
+            // hidden/exposed split below reflects the backend's progress.
+            while let Some((idx, t)) = stream.try_recv_grad() {
+                staging
+                    .place(&plan, idx, t)
+                    .with_context(|| format!("rank {rank} step {global_step}: grad stream"))?;
+            }
+            t_compute += wait0.elapsed().as_secs_f64();
+
+            // Reduce bucket k in its own tag window while the lane keeps
+            // producing buckets k+1.. (hidden comm), then queue its LARS
+            // update behind the stream.
+            let hidden_before = !staging.all_placed(&plan);
+            let red0 = Instant::now();
+            let flat = staging.flat_mut(k);
+            ctx.collective
+                .all_reduce(ep, flat, ctx.grad_wire, tag)
+                .with_context(|| format!("rank {rank} step {global_step}: bucket {k}"))?;
+            tag += span;
+            for g in flat.iter_mut() {
+                *g *= inv_n;
+            }
+            let reduce_secs = red0.elapsed().as_secs_f64();
+            let grads = staging.take_bucket(&plan, k)?;
+            // Conservative attribution: a reduction counts as hidden only
+            // if backprop was still streaming when it *ended* too (drain
+            // first so the check sees the backend's real progress). A
+            // reduction the stream outran mid-flight books as exposed —
+            // the headline exposed-comm fraction can only be overstated,
+            // never flattered.
+            while let Some((idx, t)) = stream.try_recv_grad() {
+                staging
+                    .place(&plan, idx, t)
+                    .with_context(|| format!("rank {rank} step {global_step}: grad stream"))?;
+            }
+            if hidden_before && !staging.all_placed(&plan) {
+                t_comm_hidden += reduce_secs;
+            } else {
+                t_comm += reduce_secs;
+            }
+            pending_applies.push(compute.apply_partial_async(
+                &sref,
+                plan.bucket(k).params.start,
+                grads,
+                hp,
+            )?);
         }
+
+        // Terminal reply: [loss, bn stats..] + the batch tensors back.
+        let (outs, img_back, lab_back) = stream
+            .finish()
+            .with_context(|| format!("rank {rank} step {global_step}: grad_step_streaming"))?;
+        if !staging.all_placed(&plan) {
+            bail!("rank {rank} step {global_step}: gradient stream ended early");
+        }
+        batch.images = img_back.into_f32()?;
+        batch.labels = lab_back.into_i32()?;
+        let loss_local = outs[0].scalar()?;
+        let bn_stats = &outs[1..1 + n_bn];
 
         // 4. BN-stat all-reduce (FP32 wire, paper §3.2). The scalar step
         // loss rides in this buffer — NOT in the gradient buffer — so the
         // reported loss is a pure-FP32 reduction even on the FP16 wire.
+        // Nothing is left to hide behind, so this window is exposed comm.
+        let bn0 = Instant::now();
         flatten_into(bn_stats, &mut bn_flat)?;
         bn_flat.push(loss_local);
         ctx.collective.all_reduce(ep, &mut bn_flat, Wire::F32, tag)?;
-        tag += ctx.collective.tag_span(ctx.workers);
+        tag += span;
         let loss_mean = f64::from(bn_flat.pop().unwrap()) / ctx.workers as f64;
         for s in bn_flat.iter_mut() {
             *s *= inv_n;
         }
+        t_comm += bn0.elapsed().as_secs_f64();
         // Synced-stat aggregate for the eval path. The paper's "BN without
         // moving average" uses *current* statistics; for evaluation we keep
         // a recent-weighted EMA of the cross-worker synced stats (early-
@@ -316,24 +440,17 @@ pub fn run_phase(
             }
             state.bn_steps += 1;
         }
-        let t_comm = sw.lap("comm");
 
-        // 5. LARS update of the lane-resident state, in place: ships the
-        // reduced gradient and three scalars, receives nothing back.
-        let mut grads_avg = Vec::with_capacity(n_params);
-        unflatten_from(&grad_flat, grads, &mut grads_avg)?;
-        compute
-            .apply(
-                &sref,
-                grads_avg,
-                ApplyParams {
-                    lr,
-                    momentum,
-                    weight_decay: ctx.weight_decay,
-                },
-            )
-            .with_context(|| format!("rank {rank} step {global_step}: apply_step"))?;
-        let t_apply = sw.lap("apply");
+        // 5. Collect the per-bucket LARS applies. They were queued behind
+        // the gradient stream, so the lane ran them strictly after the
+        // backward pass finished; waiting here surfaces any error and
+        // fences the step (eval/export must see the updated state).
+        let apply0 = Instant::now();
+        for p in pending_applies {
+            p.wait()
+                .with_context(|| format!("rank {rank} step {global_step}: apply_step"))?;
+        }
+        let t_apply = apply0.elapsed().as_secs_f64();
 
         if rank == 0 {
             metrics.push(StepMetric {
@@ -345,6 +462,7 @@ pub fn run_phase(
                 global_batch: total_batch,
                 t_compute,
                 t_comm,
+                t_comm_hidden,
                 t_apply,
                 t_data,
             });
@@ -419,6 +537,33 @@ mod tests {
         let mut back = Vec::new();
         unflatten_from(&flat, &ts, &mut back).unwrap();
         assert_eq!(back, ts);
+    }
+
+    /// `unflatten_from` must reuse the output tensors' storage across
+    /// calls (the step-loop steady state) instead of allocating fresh
+    /// `Vec`s — observable as a stable data pointer.
+    #[test]
+    fn unflatten_reuses_existing_storage() {
+        let ts = vec![
+            HostTensor::f32(vec![2], vec![1.0, 2.0]),
+            HostTensor::f32(vec![1], vec![3.0]),
+        ];
+        let mut out = Vec::new();
+        unflatten_from(&[4.0, 5.0, 6.0], &ts, &mut out).unwrap();
+        let p0 = out[0].as_f32().unwrap().as_ptr();
+        unflatten_from(&[7.0, 8.0, 9.0], &ts, &mut out).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[7.0, 8.0]);
+        assert_eq!(out[1].as_f32().unwrap(), &[9.0]);
+        assert_eq!(
+            out[0].as_f32().unwrap().as_ptr(),
+            p0,
+            "second unflatten must reuse the existing storage"
+        );
+        // shape change falls back to a rebuild
+        let ts2 = vec![HostTensor::f32(vec![3], vec![0.0; 3])];
+        unflatten_from(&[1.0, 2.0, 3.0], &ts2, &mut out).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].as_f32().unwrap(), &[1.0, 2.0, 3.0]);
     }
 
     #[test]

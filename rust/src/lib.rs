@@ -8,6 +8,13 @@
 //!   2D-Torus / ring / hierarchical all-reduce over an in-memory rank mesh,
 //!   batch-size control, LR/momentum schedules, LARS, data pipeline, and an
 //!   ABCI-scale network simulator that regenerates the paper's tables.
+//!   Gradient synchronization is **overlapped with backprop** (paper §2.2):
+//!   the backend streams gradients in reverse layer order
+//!   (`runtime::ComputeBackend::grad_step_streaming`), the worker
+//!   all-reduces tensor-aligned buckets (`collectives::bucketed`,
+//!   `TrainConfig::bucket_bytes`) while later layers are still being
+//!   computed, and applies each bucket's LARS update independently —
+//!   bit-identical to the serial schedule when `bucket_bytes = 0`.
 //! * **Compute backends (`runtime::backend`)** — the coordinator drives a
 //!   [`runtime::ComputeBackend`] through the `runtime::ComputeService`
 //!   **multi-lane pool**: one backend thread per rank, with each rank's
@@ -68,7 +75,7 @@ pub fn artifacts_dir() -> std::path::PathBuf {
 pub mod prelude {
     pub use crate::cluster::{best_grid, Grid, Placement};
     pub use crate::collectives::{
-        Collective, HierarchicalAllReduce, Mesh, RingAllReduce, TorusAllReduce, Wire,
+        BucketPlan, Collective, HierarchicalAllReduce, Mesh, RingAllReduce, TorusAllReduce, Wire,
     };
     pub use crate::config::{paper_run, paper_runs, TrainConfig};
     pub use crate::coordinator::{TrainReport, Trainer};

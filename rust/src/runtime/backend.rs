@@ -161,9 +161,45 @@ pub trait ComputeBackend {
         labels: &HostTensor,
     ) -> Result<Vec<HostTensor>>;
 
+    /// Streaming variant of [`Self::grad_step`]: identical numerics, but
+    /// each parameter gradient is handed to `emit(param_index, grad)` the
+    /// moment the backward pass finalises it — **strictly decreasing
+    /// parameter index**, i.e. reverse layer order, exactly once per
+    /// parameter — and only `[loss, bn_stats..]` comes back in the return
+    /// value. This is what lets the caller all-reduce early buckets while
+    /// the backend is still producing later ones (paper §2.2 overlap).
+    ///
+    /// Backends that execute a monolithic grad program (the AOT/PJRT
+    /// path) may run it whole and emit post-hoc in the same order; the
+    /// contract is only about ordering and exactly-once delivery.
+    fn grad_step_streaming(
+        &mut self,
+        state: StateId,
+        exec: &str,
+        images: &HostTensor,
+        labels: &HostTensor,
+        emit: &mut dyn FnMut(usize, HostTensor),
+    ) -> Result<Vec<HostTensor>>;
+
     /// LARS update of the resident `(params, momenta)` in place from the
     /// reduced gradients and the step's `(lr, momentum, weight_decay)`.
     fn apply(&mut self, state: StateId, grads: &[HostTensor], hp: ApplyParams) -> Result<()>;
+
+    /// LARS update of a **contiguous slice** of the resident parameters:
+    /// `grads[i]` updates parameter `first_param + i`. LARS trust ratios
+    /// are per-tensor, so applying the model bucket by bucket (in any
+    /// bucket order, each parameter exactly once per step with the same
+    /// `hp`) is bit-identical to one whole-model [`Self::apply`] — the
+    /// per-bucket leg of the overlapped reduction pipeline. Takes the
+    /// gradients by value so backends that must stage buckets (the
+    /// whole-model AOT apply path) can keep them without cloning.
+    fn apply_partial(
+        &mut self,
+        state: StateId,
+        first_param: usize,
+        grads: Vec<HostTensor>,
+        hp: ApplyParams,
+    ) -> Result<()>;
 
     /// Evaluation forward pass against the resident parameters with the
     /// caller's synchronized running BN statistics: returns the `eval_b{B}`

@@ -196,6 +196,11 @@ pub struct PjrtBackend {
     engine: Engine,
     manifest: Manifest,
     states: StateTable,
+    /// Per-state staging for `apply_partial`: the AOT `apply` executable
+    /// is whole-model, so bucket updates are coalesced here and the real
+    /// apply runs once the last bucket lands — bit-identical to a single
+    /// whole-model apply (the buckets partition the parameter table).
+    partial: HashMap<StateId, Vec<Option<HostTensor>>>,
 }
 
 impl PjrtBackend {
@@ -205,6 +210,7 @@ impl PjrtBackend {
             engine: Engine::cpu()?,
             manifest,
             states: StateTable::default(),
+            partial: HashMap::new(),
         })
     }
 }
@@ -264,10 +270,12 @@ impl super::backend::ComputeBackend for PjrtBackend {
 
     fn export_state(&mut self, state: StateId) -> Result<(Vec<HostTensor>, Vec<HostTensor>)> {
         let st = self.states.remove(state)?;
+        self.partial.remove(&state); // drop any half-delivered bucket set
         Ok((st.params, st.momenta))
     }
 
     fn drop_state(&mut self, state: StateId) -> Result<()> {
+        self.partial.remove(&state);
         self.states.remove(state).map(|_| ())
     }
 
@@ -284,6 +292,83 @@ impl super::backend::ComputeBackend for PjrtBackend {
         inputs.push(images.clone());
         inputs.push(labels.clone());
         self.engine.run(&key, &inputs)
+    }
+
+    fn grad_step_streaming(
+        &mut self,
+        state: StateId,
+        exec: &str,
+        images: &HostTensor,
+        labels: &HostTensor,
+        emit: &mut dyn FnMut(usize, HostTensor),
+    ) -> Result<Vec<HostTensor>> {
+        // The AOT grad program is monolithic, so this backend cannot
+        // interleave emission with the backward pass; it satisfies the
+        // streaming contract (strictly decreasing parameter index, exactly
+        // once each) by running the program whole and emitting post-hoc.
+        // A device-resident engine would hook per-layer donation here.
+        let out = self.grad_step(state, exec, images, labels)?;
+        let n = self.states.get(state)?.params.len();
+        if out.len() < 1 + n {
+            bail!(
+                "grad_step_streaming({exec}): {} outputs for {n} params",
+                out.len()
+            );
+        }
+        let mut iter = out.into_iter();
+        let loss = iter.next().expect("checked arity above");
+        let mut grads: Vec<HostTensor> = iter.by_ref().take(n).collect();
+        let rest: Vec<HostTensor> = iter.collect();
+        for idx in (0..n).rev() {
+            emit(idx, grads.pop().expect("one grad per param"));
+        }
+        let mut res = Vec::with_capacity(1 + rest.len());
+        res.push(loss);
+        res.extend(rest);
+        Ok(res)
+    }
+
+    fn apply_partial(
+        &mut self,
+        state: StateId,
+        first_param: usize,
+        grads: Vec<HostTensor>,
+        hp: ApplyParams,
+    ) -> Result<()> {
+        let n = self.states.get(state)?.params.len();
+        if first_param + grads.len() > n {
+            bail!(
+                "apply_partial: params [{first_param}, {}) out of range (model has {n})",
+                first_param + grads.len()
+            );
+        }
+        let slots = self
+            .partial
+            .entry(state)
+            .or_insert_with(|| vec![None; n]);
+        for (i, g) in grads.into_iter().enumerate() {
+            let slot = &mut slots[first_param + i];
+            if slot.is_some() {
+                bail!(
+                    "apply_partial: param #{} delivered twice before the model completed",
+                    first_param + i
+                );
+            }
+            *slot = Some(g);
+        }
+        if slots.iter().all(|s| s.is_some()) {
+            let full: Vec<HostTensor> = self
+                .partial
+                .remove(&state)
+                .expect("entry exists")
+                .into_iter()
+                .map(|s| s.expect("all slots checked"))
+                .collect();
+            // All buckets of the step share one `hp`, so running the
+            // whole-model executable now is the same update.
+            self.apply(state, &full, hp)?;
+        }
+        Ok(())
     }
 
     fn apply(&mut self, state: StateId, grads: &[HostTensor], hp: ApplyParams) -> Result<()> {

@@ -25,5 +25,5 @@ pub use backend::{ApplyParams, BackendSpec, ComputeBackend, ResidentState, State
 pub use engine::{Engine, PjrtBackend};
 pub use manifest::{ArchManifest, BnLayer, Dtype, ExecSpec, Manifest, ParamSpec, TensorSpec};
 pub use reference::{builtin_manifest, ReferenceBackend};
-pub use service::{ComputeClient, ComputeService, PoolStats, StateRef};
+pub use service::{ComputeClient, ComputeService, GradStream, Pending, PoolStats, StateRef};
 pub use tensor::HostTensor;

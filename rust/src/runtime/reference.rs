@@ -266,6 +266,37 @@ impl ReferenceBackend {
             .with_context(|| format!("{}/{exec}: missing batch", st.arch))?;
         Ok((batch, spec.ls_eps.unwrap_or(0.0) as f32))
     }
+
+    /// Shared input validation of the monolithic and streaming grad entry
+    /// points (`what` only flavours the error messages): checks the exec
+    /// family and the batch tensors' shapes, returns `(batch, ls_eps)`.
+    fn check_grad_inputs(
+        &self,
+        what: &str,
+        state: StateId,
+        exec: &str,
+        images: &HostTensor,
+        labels: &HostTensor,
+    ) -> Result<(usize, f32)> {
+        if !exec.starts_with("grad_") {
+            bail!("{what}: {exec:?} is not a grad executable");
+        }
+        let (batch, ls) = self.exec_meta(state, exec)?;
+        let want_img = vec![batch, IMG, IMG, CH];
+        if images.shape() != want_img.as_slice() {
+            bail!(
+                "{what}({exec}): images shape {:?}, want {want_img:?}",
+                images.shape()
+            );
+        }
+        if labels.shape() != [batch] {
+            bail!(
+                "{what}({exec}): labels shape {:?}, want [{batch}]",
+                labels.shape()
+            );
+        }
+        Ok((batch, ls))
+    }
 }
 
 impl ComputeBackend for ReferenceBackend {
@@ -368,25 +399,83 @@ impl ComputeBackend for ReferenceBackend {
         images: &HostTensor,
         labels: &HostTensor,
     ) -> Result<Vec<HostTensor>> {
-        if !exec.starts_with("grad_") {
-            bail!("grad_step: {exec:?} is not a grad executable");
-        }
-        let (batch, ls) = self.exec_meta(state, exec)?;
-        let want_img = vec![batch, IMG, IMG, CH];
-        if images.shape() != want_img.as_slice() {
-            bail!(
-                "grad_step({exec}): images shape {:?}, want {want_img:?}",
-                images.shape()
-            );
-        }
-        if labels.shape() != [batch] {
-            bail!(
-                "grad_step({exec}): labels shape {:?}, want [{batch}]",
-                labels.shape()
-            );
-        }
+        let (batch, ls) = self.check_grad_inputs("grad_step", state, exec, images, labels)?;
         let st = self.states.get(state)?;
         run_grad(&st.params, images.as_f32()?, labels.as_i32()?, batch, ls)
+    }
+
+    fn grad_step_streaming(
+        &mut self,
+        state: StateId,
+        exec: &str,
+        images: &HostTensor,
+        labels: &HostTensor,
+        emit: &mut dyn FnMut(usize, HostTensor),
+    ) -> Result<Vec<HostTensor>> {
+        let (batch, ls) =
+            self.check_grad_inputs("grad_step_streaming", state, exec, images, labels)?;
+        let st = self.states.get(state)?;
+        // Genuinely interleaved: `emit` fires from inside the backward
+        // pass, layer by layer, so a caller on another thread reduces
+        // bucket k while this thread is still producing bucket k+1.
+        let (loss, bn) = run_grad_core(
+            &st.params,
+            images.as_f32()?,
+            labels.as_i32()?,
+            batch,
+            ls,
+            emit,
+        )?;
+        let mut out = Vec::with_capacity(1 + N_BN);
+        out.push(HostTensor::scalar_f32(loss));
+        out.extend(bn);
+        Ok(out)
+    }
+
+    fn apply_partial(
+        &mut self,
+        state: StateId,
+        first_param: usize,
+        grads: Vec<HostTensor>,
+        hp: ApplyParams,
+    ) -> Result<()> {
+        let st = self.states.get_mut(state)?;
+        let n = st.params.len();
+        if first_param + grads.len() > n {
+            bail!(
+                "apply_partial: params [{first_param}, {}) out of range (model has {n})",
+                first_param + grads.len()
+            );
+        }
+        let cfg = LarsConfig {
+            coeff: 0.01,
+            eps: 1e-6,
+            weight_decay: hp.weight_decay,
+        };
+        let params = &mut st.params[first_param..first_param + grads.len()];
+        let momenta = &mut st.momenta[first_param..first_param + grads.len()];
+        for (i, ((p, m), g)) in params.iter_mut().zip(momenta.iter_mut()).zip(&grads).enumerate() {
+            if p.shape() != g.shape() {
+                bail!(
+                    "apply_partial: grad #{} shape {:?} vs param {:?}",
+                    first_param + i,
+                    g.shape(),
+                    p.shape()
+                );
+            }
+            // Per-tensor LARS: identical arithmetic to `apply`, so a
+            // bucket-partitioned update is bit-identical to the whole-model
+            // one.
+            lars_step(
+                p.as_f32_mut()?,
+                g.as_f32()?,
+                m.as_f32_mut()?,
+                hp.lr,
+                hp.momentum,
+                &cfg,
+            );
+        }
+        Ok(())
     }
 
     fn apply(&mut self, state: StateId, grads: &[HostTensor], hp: ApplyParams) -> Result<()> {
@@ -728,6 +817,10 @@ struct BlockFwd {
 }
 
 /// Forward + backward of the tiny net: `[loss, grads.., bn stats..]`.
+/// Thin wrapper over [`run_grad_core`] that collects the streamed
+/// gradients back into parameter order — the monolithic and streaming
+/// entry points share every arithmetic operation, so they are bit-identical
+/// by construction.
 fn run_grad(
     params: &[HostTensor],
     images: &[f32],
@@ -735,6 +828,32 @@ fn run_grad(
     b: usize,
     ls: f32,
 ) -> Result<Vec<HostTensor>> {
+    let mut slots: Vec<Option<HostTensor>> = (0..N_PARAMS).map(|_| None).collect();
+    let (loss, bn) = run_grad_core(params, images, labels, b, ls, &mut |idx, t| {
+        slots[idx] = Some(t);
+    })?;
+    let mut out = Vec::with_capacity(1 + N_PARAMS + N_BN);
+    out.push(HostTensor::scalar_f32(loss));
+    for s in slots {
+        out.push(s.expect("run_grad_core emits every parameter gradient"));
+    }
+    out.extend(bn);
+    Ok(out)
+}
+
+/// The shared forward + backward. Each parameter gradient is passed to
+/// `emit(param_index, grad)` as soon as the backward pass finalises it —
+/// in **strictly decreasing parameter index** (reverse layer order:
+/// head, block N..1, stem), exactly once each. Returns
+/// `(loss, bn_stats)`.
+fn run_grad_core(
+    params: &[HostTensor],
+    images: &[f32],
+    labels: &[i32],
+    b: usize,
+    ls: f32,
+    emit: &mut dyn FnMut(usize, HostTensor),
+) -> Result<(f32, Vec<HostTensor>)> {
     let h = HIDDEN;
 
     // --- forward ---
@@ -788,14 +907,21 @@ fn run_grad(
     }
     let (loss, dlogits) = ls_softmax_grad(&logits, labels, b, CLASSES, ls);
 
-    // --- backward ---
-    let mut grads: Vec<Vec<f32>> = params.iter().map(|t| vec![0.0f32; t.elems()]).collect();
-    matmul_tn_acc(&act, &dlogits, b, h, CLASSES, &mut grads[P_HEAD_W]);
+    // --- backward (each layer's gradients emitted as soon as they are
+    // final; nothing downstream ever touches an emitted gradient again,
+    // which is what makes the streaming overlap sound) ---
+    let shape = |idx: usize| params[idx].shape().to_vec();
+
+    let mut g_head_w = vec![0.0f32; h * CLASSES];
+    matmul_tn_acc(&act, &dlogits, b, h, CLASSES, &mut g_head_w);
+    let mut g_head_b = vec![0.0f32; CLASSES];
     for drow in dlogits.chunks_exact(CLASSES) {
-        for (gb, &d) in grads[P_HEAD_B].iter_mut().zip(drow) {
+        for (gb, &d) in g_head_b.iter_mut().zip(drow) {
             *gb += d;
         }
     }
+    emit(P_HEAD_B, HostTensor::f32(shape(P_HEAD_B), g_head_b));
+    emit(P_HEAD_W, HostTensor::f32(shape(P_HEAD_W), g_head_w));
     let mut dact = vec![0.0f32; b * h];
     matmul_nt_acc(&dlogits, wh, b, h, CLASSES, &mut dact);
 
@@ -811,17 +937,22 @@ fn run_grad(
         relu_backward(&mut ds, &blk.out);
 
         let (dz2, dg2, db2) = bn_backward(&ds, &blk.bn2, g2, b, h);
-        grads[base + 4] = dg2;
-        grads[base + 5] = db2;
-        matmul_tn_acc(&blk.r1, &dz2, b, h, h, &mut grads[base + 3]);
+        let mut gw2 = vec![0.0f32; h * h];
+        matmul_tn_acc(&blk.r1, &dz2, b, h, h, &mut gw2);
         let mut dr1 = vec![0.0f32; b * h];
         matmul_nt_acc(&dz2, w2, b, h, h, &mut dr1);
         relu_backward(&mut dr1, &blk.r1);
 
         let (dz1, dg1, db1) = bn_backward(&dr1, &blk.bn1, g1, b, h);
-        grads[base + 1] = dg1;
-        grads[base + 2] = db1;
-        matmul_tn_acc(&blk.input, &dz1, b, h, h, &mut grads[base]);
+        let mut gw1 = vec![0.0f32; h * h];
+        matmul_tn_acc(&blk.input, &dz1, b, h, h, &mut gw1);
+
+        emit(base + 5, HostTensor::f32(shape(base + 5), db2));
+        emit(base + 4, HostTensor::f32(shape(base + 4), dg2));
+        emit(base + 3, HostTensor::f32(shape(base + 3), gw2));
+        emit(base + 2, HostTensor::f32(shape(base + 2), db1));
+        emit(base + 1, HostTensor::f32(shape(base + 1), dg1));
+        emit(base, HostTensor::f32(shape(base), gw1));
 
         // block-input grad: main path + the residual skip (ds).
         let mut dinput = ds;
@@ -833,22 +964,20 @@ fn run_grad(
     let mut dy0 = dact;
     relu_backward(&mut dy0, &blocks[0].input);
     let (dz0, dg0, db0) = bn_backward(&dy0, &bn0, g0, b, h);
-    grads[P_STEM_G] = dg0;
-    grads[P_STEM_B] = db0;
-    matmul_tn_acc(images, &dz0, b, IN, h, &mut grads[P_STEM_W]);
+    let mut g_stem_w = vec![0.0f32; IN * h];
+    matmul_tn_acc(images, &dz0, b, IN, h, &mut g_stem_w);
+    emit(P_STEM_B, HostTensor::f32(shape(P_STEM_B), db0));
+    emit(P_STEM_G, HostTensor::f32(shape(P_STEM_G), dg0));
+    emit(P_STEM_W, HostTensor::f32(shape(P_STEM_W), g_stem_w));
 
-    // --- outputs: loss, grads (param order), bn stats (layer order) ---
-    let mut out = Vec::with_capacity(1 + N_PARAMS + N_BN);
-    out.push(HostTensor::scalar_f32(loss));
-    for (t, g) in params.iter().zip(grads) {
-        out.push(HostTensor::f32(t.shape().to_vec(), g));
-    }
-    out.push(bn_stats_tensor(&bn0));
+    // --- bn stats (layer order) ---
+    let mut bn = Vec::with_capacity(N_BN);
+    bn.push(bn_stats_tensor(&bn0));
     for blk in &blocks {
-        out.push(bn_stats_tensor(&blk.bn1));
-        out.push(bn_stats_tensor(&blk.bn2));
+        bn.push(bn_stats_tensor(&blk.bn1));
+        bn.push(bn_stats_tensor(&blk.bn2));
     }
-    Ok(out)
+    Ok((loss, bn))
 }
 
 /// Eval with synchronized running BN statistics: `[loss sum, #correct]`.
@@ -1313,5 +1442,77 @@ mod tests {
         assert!(be.grad_step(sid + 999, "grad_b8_ls10", &img, &lab).is_err());
         // wrong momenta arity on import
         assert!(be.import_state("tiny", init_params(1), vec![]).is_err());
+    }
+
+    /// The streaming grad path must match the monolithic one bit for bit:
+    /// same loss, same BN stats, every gradient identical — delivered in
+    /// strictly decreasing parameter order, exactly once each.
+    #[test]
+    fn streaming_grad_matches_monolithic_bitwise() {
+        let mut be = backend();
+        let sid = be.create_state("tiny", 3).unwrap();
+        let (images, labels) = sample_batch(8, 17);
+        let img = HostTensor::f32(vec![8, IMG, IMG, CH], images);
+        let lab = HostTensor::i32(vec![8], labels);
+
+        let full = be.grad_step(sid, "grad_b8_ls10", &img, &lab).unwrap();
+        let mut emitted: Vec<(usize, HostTensor)> = Vec::new();
+        let outs = be
+            .grad_step_streaming(sid, "grad_b8_ls10", &img, &lab, &mut |i, t| {
+                emitted.push((i, t))
+            })
+            .unwrap();
+
+        assert_eq!(outs.len(), 1 + N_BN, "streaming returns [loss, bn..] only");
+        assert_eq!(outs[0], full[0], "loss must match");
+        assert_eq!(&outs[1..], &full[1 + N_PARAMS..], "bn stats must match");
+        assert_eq!(emitted.len(), N_PARAMS);
+        assert!(
+            emitted.windows(2).all(|w| w[0].0 > w[1].0),
+            "emission order must be strictly decreasing param index: {:?}",
+            emitted.iter().map(|(i, _)| *i).collect::<Vec<_>>()
+        );
+        for (i, t) in &emitted {
+            assert_eq!(t, &full[1 + i], "gradient #{i} diverged");
+        }
+    }
+
+    /// Per-bucket `apply_partial` (any contiguous partition, any bucket
+    /// order) must be bit-identical to one whole-model `apply` — the LARS
+    /// trust ratio is per-tensor, so the partition cannot change numerics.
+    #[test]
+    fn apply_partial_matches_whole_model_apply_bitwise() {
+        let hp = ApplyParams {
+            lr: 0.4,
+            momentum: 0.9,
+            weight_decay: 5e-5,
+        };
+        let mut be = backend();
+        let s_full = be.create_state("tiny", 6).unwrap();
+        let s_part = be.create_state("tiny", 6).unwrap();
+        let (images, labels) = sample_batch(8, 23);
+        let img = HostTensor::f32(vec![8, IMG, IMG, CH], images);
+        let lab = HostTensor::i32(vec![8], labels);
+        let out = be.grad_step(s_full, "grad_b8_ls10", &img, &lab).unwrap();
+        let grads = &out[1..1 + N_PARAMS];
+
+        be.apply(s_full, grads, hp).unwrap();
+        // uneven tensor-aligned partition, applied out of order
+        let cuts = [0usize, 2, 7, 20, N_PARAMS];
+        for w in cuts.windows(2).rev() {
+            be.apply_partial(s_part, w[0], grads[w[0]..w[1]].to_vec(), hp)
+                .unwrap();
+        }
+
+        let (pf, mf) = be.export_state(s_full).unwrap();
+        let (pp, mp) = be.export_state(s_part).unwrap();
+        assert_eq!(pf, pp, "bucketed apply changed the parameters");
+        assert_eq!(mf, mp, "bucketed apply changed the momenta");
+
+        // out-of-range slice is rejected
+        let s = be.create_state("tiny", 1).unwrap();
+        assert!(be
+            .apply_partial(s, N_PARAMS - 1, grads[..2].to_vec(), hp)
+            .is_err());
     }
 }

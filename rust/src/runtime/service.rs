@@ -17,6 +17,13 @@
 //! phase boundaries via [`ComputeClient::import_state`] /
 //! [`ComputeClient::export_state`].
 //!
+//! The **overlapped** step uses [`ComputeClient::grad_step_streaming`]
+//! instead: the lane pushes each parameter gradient down a channel in
+//! reverse layer order while its backward pass is still running, the
+//! worker all-reduces completed buckets concurrently, and queues
+//! per-bucket [`ComputeClient::apply_partial_async`] updates behind the
+//! stream (lane FIFO order makes that race-free by construction).
+//!
 //! Stateless calls (`init`, `eval_*` with caller-held params) go through
 //! [`ComputeClient::run`] on lane 0; [`ComputeClient::load`] broadcasts to
 //! every lane so batch-size control can lazily materialise a grad variant
@@ -76,8 +83,29 @@ enum Req {
         labels: HostTensor,
         reply: Sender<Result<Vec<HostTensor>>>,
     },
+    /// Streaming grad: each parameter gradient is pushed down `grads` in
+    /// reverse layer order as the backward pass produces it; the terminal
+    /// reply carries `[loss, bn_stats..]` plus the batch tensors handed
+    /// back so the caller can reuse their storage next step.
+    GradStepStreaming {
+        state: StateId,
+        exec: String,
+        images: HostTensor,
+        labels: HostTensor,
+        grads: Sender<(usize, HostTensor)>,
+        reply: Sender<Result<(Vec<HostTensor>, HostTensor, HostTensor)>>,
+    },
     Apply {
         state: StateId,
+        grads: Vec<HostTensor>,
+        hp: ApplyParams,
+        reply: Sender<Result<()>>,
+    },
+    /// LARS update of params `[first_param, first_param + grads.len())`
+    /// only — one bucket of the overlapped reduction pipeline.
+    ApplyPartial {
+        state: StateId,
+        first_param: usize,
         grads: Vec<HostTensor>,
         hp: ApplyParams,
         reply: Sender<Result<()>>,
@@ -150,6 +178,57 @@ impl StateRef {
     /// The lane (backend instance) this state is pinned to.
     pub fn lane(&self) -> usize {
         self.lane
+    }
+}
+
+/// A not-yet-collected reply from a lane. Lets the caller queue several
+/// requests (per-bucket applies) and keep working while the lane drains
+/// them; errors surface at [`Pending::wait`].
+#[derive(Debug)]
+pub struct Pending<T> {
+    rx: Receiver<Result<T>>,
+    lane: usize,
+}
+
+impl<T> Pending<T> {
+    /// Block until the lane replies.
+    pub fn wait(self) -> Result<T> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("compute lane {} dropped reply", self.lane))?
+    }
+}
+
+/// One in-flight streaming gradient computation
+/// ([`ComputeClient::grad_step_streaming`]). Gradients arrive on
+/// [`GradStream::recv_grad`] in strictly decreasing parameter order while
+/// the lane's backward pass runs; [`GradStream::finish`] collects the
+/// terminal `[loss, bn_stats..]` reply — plus the batch tensors handed
+/// back for storage reuse — and surfaces any backend error.
+#[derive(Debug)]
+pub struct GradStream {
+    grads: Receiver<(usize, HostTensor)>,
+    reply: Receiver<Result<(Vec<HostTensor>, HostTensor, HostTensor)>>,
+    lane: usize,
+}
+
+impl GradStream {
+    /// Blocking receive of the next gradient. `None` once the backend has
+    /// emitted everything (or failed — `finish` tells which).
+    pub fn recv_grad(&self) -> Option<(usize, HostTensor)> {
+        self.grads.recv().ok()
+    }
+
+    /// Non-blocking receive: whatever the backend has already produced.
+    pub fn try_recv_grad(&self) -> Option<(usize, HostTensor)> {
+        self.grads.try_recv().ok()
+    }
+
+    /// Wait for the terminal reply: `([loss, bn_stats..], images, labels)`.
+    pub fn finish(self) -> Result<(Vec<HostTensor>, HostTensor, HostTensor)> {
+        self.reply
+            .recv()
+            .map_err(|_| anyhow!("compute lane {} dropped streaming reply", self.lane))?
     }
 }
 
@@ -277,6 +356,65 @@ impl ComputeClient {
             reply,
         })
     }
+
+    /// Start a streaming gradient computation: returns immediately with a
+    /// [`GradStream`]; the lane pushes gradients down it in reverse layer
+    /// order as backprop produces them, so the caller can all-reduce early
+    /// buckets while later ones are still being computed.
+    pub fn grad_step_streaming(
+        &self,
+        state: &StateRef,
+        exec: &str,
+        images: HostTensor,
+        labels: HostTensor,
+    ) -> Result<GradStream> {
+        let (gtx, grx) = channel();
+        let (rtx, rrx) = channel();
+        self.lane(state.lane)?
+            .send(Req::GradStepStreaming {
+                state: state.id,
+                exec: exec.to_string(),
+                images,
+                labels,
+                grads: gtx,
+                reply: rtx,
+            })
+            .map_err(|_| anyhow!("compute lane {} is down", state.lane))?;
+        Ok(GradStream {
+            grads: grx,
+            reply: rrx,
+            lane: state.lane,
+        })
+    }
+
+    /// Queue a LARS update of one contiguous parameter slice (a bucket)
+    /// without waiting for it; collect the result via [`Pending::wait`].
+    /// Lane requests execute in FIFO order, so buckets queued behind an
+    /// in-flight streaming grad run only after the backward pass finishes
+    /// — the update can never race the gradient computation.
+    pub fn apply_partial_async(
+        &self,
+        state: &StateRef,
+        first_param: usize,
+        grads: Vec<HostTensor>,
+        hp: ApplyParams,
+    ) -> Result<Pending<()>> {
+        let (rtx, rrx) = channel();
+        self.lane(state.lane)?
+            .send(Req::ApplyPartial {
+                state: state.id,
+                first_param,
+                grads,
+                hp,
+                reply: rtx,
+            })
+            .map_err(|_| anyhow!("compute lane {} is down", state.lane))?;
+        Ok(Pending {
+            rx: rrx,
+            lane: state.lane,
+        })
+    }
+
 
     /// Evaluation forward pass against the resident parameters with the
     /// synchronized running BN statistics: `[loss_sum, n_correct]`.
@@ -433,7 +571,11 @@ fn lane_thread(
         // (every rank imports state simultaneously at phase entry).
         let is_compute = matches!(
             req,
-            Req::GradStep { .. } | Req::Apply { .. } | Req::EvalStep { .. }
+            Req::GradStep { .. }
+                | Req::GradStepStreaming { .. }
+                | Req::Apply { .. }
+                | Req::ApplyPartial { .. }
+                | Req::EvalStep { .. }
         );
         if is_compute {
             stats.enter();
@@ -472,6 +614,25 @@ fn lane_thread(
             } => {
                 let _ = reply.send(backend.grad_step(state, &exec, &images, &labels));
             }
+            Req::GradStepStreaming {
+                state,
+                exec,
+                images,
+                labels,
+                grads,
+                reply,
+            } => {
+                let res = backend.grad_step_streaming(state, &exec, &images, &labels, &mut |i, t| {
+                    // A hung-up receiver just means the worker gave up on
+                    // this step; the terminal reply carries the real error
+                    // state, so drops here are ignored.
+                    let _ = grads.send((i, t));
+                });
+                // Close the gradient stream before the terminal reply so a
+                // draining caller observes: grads end, then the reply.
+                drop(grads);
+                let _ = reply.send(res.map(|outs| (outs, images, labels)));
+            }
             Req::Apply {
                 state,
                 grads,
@@ -479,6 +640,15 @@ fn lane_thread(
                 reply,
             } => {
                 let _ = reply.send(backend.apply(state, &grads, hp));
+            }
+            Req::ApplyPartial {
+                state,
+                first_param,
+                grads,
+                hp,
+                reply,
+            } => {
+                let _ = reply.send(backend.apply_partial(state, first_param, grads, hp));
             }
             Req::EvalStep {
                 state,
@@ -616,6 +786,66 @@ mod tests {
         let s2 = c.import_state(0, "tiny", p0, m0).unwrap();
         c.drop_state(s2).unwrap();
         assert!(c.export_state(s2).is_err());
+    }
+
+    /// Streaming grad + per-bucket async applies through the pool must be
+    /// bit-identical to the blocking grad_step + whole-model apply: same
+    /// gradients (in strictly decreasing param order), same loss, and the
+    /// same resident state afterwards. The batch tensors ride back in the
+    /// terminal reply for storage reuse.
+    #[test]
+    fn streaming_pipeline_matches_blocking_path_bitwise() {
+        let svc = start_pool(&["init", "grad_b8_ls10"], 2).unwrap();
+        let c = svc.client();
+        let s_stream = c.create_state(1, "tiny", 11).unwrap();
+        let s_block = c.create_state(0, "tiny", 11).unwrap();
+
+        let (img, lab) = batch_tensors(8, 0.3);
+        let full = c.grad_step(&s_block, "grad_b8_ls10", img, lab).unwrap();
+        let n_params = full.len() - 1 - 7;
+
+        let (img, lab) = batch_tensors(8, 0.3);
+        let stream = c
+            .grad_step_streaming(&s_stream, "grad_b8_ls10", img, lab)
+            .unwrap();
+        let mut got: Vec<(usize, HostTensor)> = Vec::new();
+        while let Some(g) = stream.recv_grad() {
+            got.push(g);
+        }
+        let (outs, img_back, lab_back) = stream.finish().unwrap();
+        assert_eq!(img_back.elems(), 8 * 16 * 16 * 3, "images handed back");
+        assert_eq!(lab_back.elems(), 8, "labels handed back");
+        assert_eq!(got.len(), n_params);
+        assert!(got.windows(2).all(|w| w[0].0 > w[1].0), "reverse order");
+        for (i, t) in &got {
+            assert_eq!(t, &full[1 + i], "gradient #{i} diverged");
+        }
+        assert_eq!(outs[0], full[0], "loss diverged");
+        assert_eq!(&outs[1..], &full[1 + n_params..], "bn stats diverged");
+
+        // per-bucket async applies == one whole-model apply, bitwise
+        let hp = ApplyParams {
+            lr: 0.3,
+            momentum: 0.9,
+            weight_decay: 5e-5,
+        };
+        got.sort_by_key(|(i, _)| *i);
+        let grads: Vec<HostTensor> = got.into_iter().map(|(_, t)| t).collect();
+        let split = n_params / 2;
+        let p1 = c
+            .apply_partial_async(&s_stream, 0, grads[..split].to_vec(), hp)
+            .unwrap();
+        let p2 = c
+            .apply_partial_async(&s_stream, split, grads[split..].to_vec(), hp)
+            .unwrap();
+        p1.wait().unwrap();
+        p2.wait().unwrap();
+        c.apply(&s_block, grads, hp).unwrap();
+
+        let (ps, ms) = c.export_state(s_stream).unwrap();
+        let (pb, mb) = c.export_state(s_block).unwrap();
+        assert_eq!(ps, pb, "params diverged after bucketed apply");
+        assert_eq!(ms, mb, "momenta diverged after bucketed apply");
     }
 
     #[test]

@@ -76,6 +76,13 @@ impl HostTensor {
         }
     }
 
+    pub fn into_i32(self) -> Result<Vec<i32>> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            HostTensor::F32 { .. } => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             HostTensor::I32 { data, .. } => Ok(data),

@@ -94,6 +94,43 @@ fn single_all_reduce_stays_inside_the_declared_tag_window() {
     }
 }
 
+/// The torus span is not merely an upper bound — it is **tight**: the
+/// highest tag actually used is `span - 1` on every grid shape class
+/// (x>1&y>1, single row, single column, asymmetric both ways). Tightness
+/// matters because the bucketed gradient pipeline stacks one full span
+/// per bucket per step; a slack span would waste tag space on every
+/// bucket. The Table-4 shapes (too many ranks to run as threads) are
+/// covered analytically by `torus2d::tests::tag_span_is_tight_for_table4_grids`
+/// — the same packed-window formula verified here against real traffic.
+#[test]
+fn torus_tag_span_is_tight_on_the_wire() {
+    for (x, y) in [(2usize, 2usize), (4, 2), (2, 4), (3, 3), (1, 4), (4, 1), (3, 5)] {
+        let n = x * y;
+        let coll: Arc<dyn Collective> = Arc::from(by_name(&format!("torus:{x}x{y}"), n).unwrap());
+        let span = coll.tag_span(n);
+        let eps = Mesh::new(n);
+        let counters = eps[0].counters_arc();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                let coll = coll.clone();
+                thread::spawn(move || {
+                    let mut buf = vec_a(ep.rank(), 151);
+                    coll.all_reduce(&mut ep, &mut buf, Wire::F32, 0).unwrap();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(
+            counters.max_tag_seen(),
+            span - 1,
+            "torus:{x}x{y}: declared span {span} is not tight"
+        );
+    }
+}
+
 #[test]
 fn back_to_back_windows_offset_by_tag_span_do_not_cross_talk() {
     for (spec, n) in cases() {

@@ -26,6 +26,10 @@ fn base_config(name: &str, ranks: usize, steps: usize) -> TrainConfig {
         eval_batches: 4,
         train_size: 2048,
         compute_lanes: 0,
+        // Default-on: the whole suite exercises the backward-overlapped
+        // bucketed pipeline; dedicated tests below pin bucket_bytes = 0
+        // (the serial single-bucket schedule) against it.
+        bucket_bytes: 8192,
     }
 }
 
@@ -220,6 +224,71 @@ fn multi_lane_pool_matches_single_lane_bitwise() {
         std::fs::read(&ck_serial).unwrap(),
         std::fs::read(&ck_pool).unwrap(),
         "lane count changed the final state bytes"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The bucketed pipeline is a pure scheduling change: a `bucket_bytes = 0`
+/// (single-bucket, serial) run and the default bucketed run share the same
+/// forward numerics — identical step-0 loss — and track each other's
+/// trajectory within reduction-chunking noise. Both uphold the per-phase
+/// replica bit-identity invariant (`run()` aborts otherwise), which is the
+/// acceptance suite for the overlap refactor.
+#[test]
+fn bucketed_pipeline_tracks_the_single_bucket_schedule() {
+    let run = |bytes: usize| {
+        let mut c = base_config("it-bucket", 4, 20);
+        c.bucket_bytes = bytes;
+        Trainer::new(c).unwrap().run().unwrap()
+    };
+    let serial = run(0);
+    let bucketed = run(8192);
+    assert_eq!(serial.summary.steps, bucketed.summary.steps);
+    // step-0 loss comes out of the forward pass before any reduction —
+    // bucketing cannot change it at all
+    assert_eq!(
+        serial.metrics.steps[0].loss, bucketed.metrics.steps[0].loss,
+        "bucketing changed the forward pass"
+    );
+    // after 20 steps the trajectories differ only by fp16-wire chunking
+    assert!(
+        (serial.summary.last_loss - bucketed.summary.last_loss).abs() < 5e-2,
+        "serial {:.4} vs bucketed {:.4}",
+        serial.summary.last_loss,
+        bucketed.summary.last_loss
+    );
+    // the serial schedule cannot hide comm behind backprop
+    assert_eq!(serial.summary.mean_comm_hidden, 0.0);
+}
+
+/// Single-bucket runs are deterministic and lane-count-invariant down to
+/// the checkpoint bytes — the serial path through the new streaming
+/// machinery behaves exactly like a fixed schedule.
+#[test]
+fn single_bucket_schedule_is_bitwise_reproducible() {
+    let dir = std::env::temp_dir().join(format!("fsgd-bucket0-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let run = |lanes: usize, ckpt: &std::path::Path| {
+        let mut c = base_config("it-bucket0", 4, 12);
+        c.bucket_bytes = 0;
+        c.compute_lanes = lanes;
+        Trainer::new(c)
+            .unwrap()
+            .with_checkpoint(ckpt)
+            .run()
+            .unwrap()
+    };
+    let ck_a = dir.join("a.ckpt");
+    let ck_b = dir.join("b.ckpt");
+    let a = run(1, &ck_a);
+    let b = run(0, &ck_b);
+    let la: Vec<f64> = a.metrics.steps.iter().map(|s| s.loss).collect();
+    let lb: Vec<f64> = b.metrics.steps.iter().map(|s| s.loss).collect();
+    assert_eq!(la, lb, "lane width changed the single-bucket loss curve");
+    assert_eq!(
+        std::fs::read(&ck_a).unwrap(),
+        std::fs::read(&ck_b).unwrap(),
+        "lane width changed the single-bucket checkpoint bytes"
     );
     std::fs::remove_dir_all(&dir).ok();
 }
