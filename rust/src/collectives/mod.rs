@@ -35,7 +35,7 @@ pub use hierarchical::HierarchicalAllReduce;
 pub use primitives::Wire;
 pub use ring::RingAllReduce;
 pub use torus2d::TorusAllReduce;
-pub use transport::{Endpoint, Mesh};
+pub use transport::{Endpoint, Health, Mesh, MeshError};
 
 use anyhow::Result;
 
@@ -94,11 +94,49 @@ pub fn by_name(spec: &str, n_ranks: usize) -> Result<Box<dyn Collective>> {
         return Ok(Box::new(TorusAllReduce::new(x, y)));
     }
     if spec == "torus" {
-        // auto-shape: most-square grid for n_ranks
+        // Auto-shape: most-square grid for n_ranks. A degenerate y == 1
+        // grid (prime n, or n == 1) is a flat ring wearing torus tag and
+        // phase overhead — route it to the real ring instead. Recovery's
+        // re-planning goes through this same path, so an awkward survivor
+        // count gets the same treatment.
         let (x, y) = crate::cluster::grid::best_grid(n_ranks);
+        if y == 1 {
+            debug_assert_eq!(x, n_ranks);
+            return Ok(Box::new(RingAllReduce));
+        }
         return Ok(Box::new(TorusAllReduce::new(x, y)));
     }
     anyhow::bail!("unknown collective {spec:?} (ring | hierarchical:<g> | torus[:<X>x<Y>])")
+}
+
+/// Resolve `spec` for a possibly *degraded* world (mid-run recovery after
+/// rank deaths). A fixed-shape spec that no longer fits the survivor count
+/// — `torus:<X>x<Y>` with `X·Y ≠ n`, `halving-doubling` on a non-power-of-
+/// two world, `hierarchical:<g>` with `g ∤ n` — falls back to the
+/// auto-shaped `"torus"` rule (most-square grid, ring when degenerate)
+/// instead of failing the whole run. With `degraded = false` this is
+/// exactly [`by_name`].
+pub fn by_name_elastic(spec: &str, n_ranks: usize, degraded: bool) -> Result<Box<dyn Collective>> {
+    // `hierarchical:<g>` only validates g | n inside all_reduce; check it
+    // here so a degraded world falls back instead of failing mid-phase.
+    let hier_misfit = spec
+        .strip_prefix("hierarchical:")
+        .and_then(|g| g.parse::<usize>().ok())
+        .is_some_and(|g| g == 0 || n_ranks % g != 0);
+    let built = if hier_misfit {
+        Err(anyhow::anyhow!(
+            "hierarchical spec {spec:?} does not divide {n_ranks} ranks"
+        ))
+    } else {
+        by_name(spec, n_ranks)
+    };
+    match built {
+        Ok(c) => Ok(c),
+        Err(e) if degraded => {
+            by_name("torus", n_ranks).map_err(|_| e) // torus auto never fails
+        }
+        Err(e) => Err(e),
+    }
 }
 
 /// Shared helpers for collective tests (compiled into unit + integration

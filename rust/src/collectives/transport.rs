@@ -17,14 +17,160 @@
 //! draw from it ([`Endpoint::alloc_f16`], and [`Endpoint::send_f32`]
 //! internally), so the bucketed gradient pipeline's much higher message
 //! rate does not translate into per-hop allocation churn.
+//!
+//! **Fault path**: every mesh shares one [`Health`] table. A rank (or the
+//! coordinator's heartbeat monitor) can [`Health::mark_dead`] a peer; that
+//! raises a mesh-wide abort flag, and every blocked `recv` — which waits in
+//! bounded ticks, never indefinitely — unwinds with a typed [`MeshError`]
+//! instead of deadlocking. This is what makes a dead rank mid-collective a
+//! recoverable event rather than a process-wide hang.
 
 use std::collections::hash_map::Entry;
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context as _, Result};
+
+/// Typed transport fault. Collectives propagate these through their normal
+/// `Result` paths, so a worker can distinguish *being* the failure (a real
+/// local error) from being a **victim** of a peer's death / a phase abort
+/// (`anyhow`'s `downcast_ref::<MeshError>` finds it through any context
+/// chain).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MeshError {
+    /// The peer this rank was waiting on (or sending to) is marked dead.
+    PeerDead { rank: usize },
+    /// The mesh-wide abort flag is up; `origin` is the first rank marked
+    /// dead (the death that triggered the abort).
+    Aborted { origin: usize },
+}
+
+impl std::fmt::Display for MeshError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MeshError::PeerDead { rank } => write!(f, "peer rank {rank} is dead"),
+            MeshError::Aborted { origin } => {
+                write!(f, "collective aborted (first dead rank: {origin})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MeshError {}
+
+/// Wait granularity of the bounded `recv` loop: how often a blocked
+/// receive re-checks the health table (and ticks its own heartbeat).
+const RECV_TICK: Duration = Duration::from_millis(1);
+
+/// Shared per-mesh health table: heartbeats, per-rank liveness, and the
+/// mesh-wide abort flag. One per [`Mesh`]; every [`Endpoint`] holds it, and
+/// the coordinator's heartbeat monitor scans it from outside the mesh.
+#[derive(Debug)]
+pub struct Health {
+    start: Instant,
+    /// Millis-since-`start` of each rank's last heartbeat.
+    beats: Vec<AtomicU64>,
+    /// Ranks whose worker thread has exited — cleanly *or* by
+    /// erroring/panicking out. They stop beating legitimately; the
+    /// heartbeat monitor must not confuse any of them with hung ranks
+    /// (whether an exited rank was a casualty is what `dead` records).
+    done: Vec<AtomicBool>,
+    dead: Vec<AtomicBool>,
+    abort: AtomicBool,
+    /// First rank marked dead (`usize::MAX` = none yet).
+    first_dead: AtomicUsize,
+}
+
+impl Health {
+    fn new(n: usize) -> Self {
+        Self {
+            start: Instant::now(),
+            beats: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            done: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            dead: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            abort: AtomicBool::new(false),
+            first_dead: AtomicUsize::new(usize::MAX),
+        }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.dead.len()
+    }
+
+    /// Record a liveness tick for `rank`.
+    pub fn beat(&self, rank: usize) {
+        let ms = self.start.elapsed().as_millis() as u64;
+        self.beats[rank].store(ms, Ordering::Relaxed);
+    }
+
+    /// Millis since `rank`'s last heartbeat.
+    pub fn millis_since_beat(&self, rank: usize) -> u64 {
+        let now = self.start.elapsed().as_millis() as u64;
+        now.saturating_sub(self.beats[rank].load(Ordering::Relaxed))
+    }
+
+    /// Mark `rank`'s worker thread as exited (cleanly or not): the monitor
+    /// stops expecting heartbeats from it.
+    pub fn mark_done(&self, rank: usize) {
+        self.done[rank].store(true, Ordering::Release);
+    }
+
+    pub fn is_done(&self, rank: usize) -> bool {
+        self.done[rank].load(Ordering::Acquire)
+    }
+
+    /// Declare `rank` dead. Raises the mesh-wide abort flag, so every
+    /// in-flight `recv` on every surviving rank unwinds within one
+    /// [`RECV_TICK`] instead of waiting on a message that will never come.
+    pub fn mark_dead(&self, rank: usize) {
+        self.dead[rank].store(true, Ordering::Release);
+        let _ = self.first_dead.compare_exchange(
+            usize::MAX,
+            rank,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        );
+        self.abort.store(true, Ordering::Release);
+    }
+
+    pub fn is_dead(&self, rank: usize) -> bool {
+        self.dead[rank].load(Ordering::Acquire)
+    }
+
+    pub fn aborted(&self) -> bool {
+        self.abort.load(Ordering::Acquire)
+    }
+
+    /// The rank whose death triggered the abort, if any.
+    pub fn first_dead(&self) -> Option<usize> {
+        match self.first_dead.load(Ordering::Acquire) {
+            usize::MAX => None,
+            r => Some(r),
+        }
+    }
+
+    /// All ranks currently marked dead.
+    pub fn dead_ranks(&self) -> Vec<usize> {
+        (0..self.dead.len()).filter(|&r| self.is_dead(r)).collect()
+    }
+
+    /// Fault check on the `src → this rank` edge: errors once `src` is
+    /// dead or the mesh is aborting.
+    fn check_edge(&self, src: usize) -> Result<(), MeshError> {
+        if self.is_dead(src) {
+            return Err(MeshError::PeerDead { rank: src });
+        }
+        if self.aborted() {
+            return Err(MeshError::Aborted {
+                origin: self.first_dead().unwrap_or(usize::MAX),
+            });
+        }
+        Ok(())
+    }
+}
 
 /// Wire payload. FP32 is the paper's BN-stat path; FP16 the gradient path.
 #[derive(Debug, Clone)]
@@ -97,10 +243,11 @@ impl Counters {
 pub struct Mesh;
 
 impl Mesh {
-    /// Build `n` endpoints sharing one counter block.
+    /// Build `n` endpoints sharing one counter block and one health table.
     pub fn new(n: usize) -> Vec<Endpoint> {
         assert!(n > 0, "mesh needs at least one rank");
         let counters = Arc::new(Counters::default());
+        let health = Arc::new(Health::new(n));
         let mut senders: Vec<Sender<Msg>> = Vec::with_capacity(n);
         let mut receivers: Vec<Receiver<Msg>> = Vec::with_capacity(n);
         for _ in 0..n {
@@ -118,6 +265,8 @@ impl Mesh {
                 rx,
                 pending: HashMap::new(),
                 counters: counters.clone(),
+                health: health.clone(),
+                recv_deadline: None,
                 free_f32: Vec::new(),
                 free_f16: Vec::new(),
                 freelist_hits: 0,
@@ -138,6 +287,15 @@ pub struct Endpoint {
     /// as they drain so the map cannot grow without bound across a run.
     pending: HashMap<(usize, u64), VecDeque<Payload>>,
     counters: Arc<Counters>,
+    /// Shared health/abort table (see [`Health`]). `recv` consults it every
+    /// [`RECV_TICK`] while blocked, so a dead peer or a phase abort unwinds
+    /// the collective instead of hanging it.
+    health: Arc<Health>,
+    /// Hard per-`recv` wait bound. `None` (the default) means wait until
+    /// the health table says otherwise; the coordinator sets it to the
+    /// fault config's `rank_timeout` as a belt-and-braces bound against
+    /// undetected hangs.
+    recv_deadline: Option<Duration>,
     /// Scratch-buffer freelists. Receive paths recycle consumed payload
     /// storage here; send paths draw from it instead of allocating per
     /// hop. In a steady ring schedule each rank receives about as much as
@@ -171,8 +329,43 @@ impl Endpoint {
         self.counters.clone()
     }
 
-    /// Send `payload` to `dst` under `tag`. Never blocks.
+    /// Shared health table of this endpoint's mesh (the coordinator's
+    /// heartbeat monitor scans it; tests use it to kill ranks).
+    pub fn health(&self) -> &Health {
+        &self.health
+    }
+
+    pub fn health_arc(&self) -> Arc<Health> {
+        self.health.clone()
+    }
+
+    /// Tick this rank's heartbeat (also ticked automatically while blocked
+    /// in `recv` — call it once per step so compute-heavy gaps still beat).
+    pub fn heartbeat(&self) {
+        self.health.beat(self.rank);
+    }
+
+    /// Declare a peer (or this rank itself) dead; aborts the whole mesh.
+    pub fn mark_dead(&self, rank: usize) {
+        self.health.mark_dead(rank);
+    }
+
+    /// Bound every subsequent blocking `recv` to `d` of wall-clock wait;
+    /// on expiry the awaited peer is marked dead and the receive fails
+    /// with [`MeshError::PeerDead`]. `None` removes the bound.
+    pub fn set_recv_deadline(&mut self, d: Option<Duration>) {
+        self.recv_deadline = d;
+    }
+
+    /// Send `payload` to `dst` under `tag`. Never blocks; fails fast when
+    /// `dst` is already marked dead or the mesh is aborting.
     pub fn send(&self, dst: usize, tag: u64, payload: Payload) -> Result<()> {
+        if dst < self.n {
+            self.health
+                .check_edge(dst)
+                .map_err(anyhow::Error::new)
+                .with_context(|| format!("rank {} send to {dst}", self.rank))?;
+        }
         let bytes = payload.wire_bytes();
         self.senders
             .get(dst)
@@ -260,11 +453,19 @@ impl Endpoint {
         self.freelist_hits
     }
 
-    /// Blocking receive of the message matching `(src, tag)`.
+    /// Blocking receive of the message matching `(src, tag)` — but never
+    /// an *unbounded* block: the wait runs in [`RECV_TICK`] slices, each of
+    /// which re-checks the shared health table (and ticks this rank's own
+    /// heartbeat), so a dead peer or a mesh abort surfaces as a typed
+    /// [`MeshError`] within one tick instead of deadlocking the collective.
     ///
     /// Messages from other (src, tag) pairs arriving first are parked and
     /// delivered to their own matching receive later (MPI-style matching).
     pub fn recv(&mut self, src: usize, tag: u64) -> Result<Payload> {
+        self.health
+            .check_edge(src)
+            .map_err(anyhow::Error::new)
+            .with_context(|| format!("rank {} recv from {src} tag {tag}", self.rank))?;
         let key = (src, tag);
         if let Entry::Occupied(mut e) = self.pending.entry(key) {
             // queues are dropped when drained, so an entry is never empty
@@ -277,21 +478,52 @@ impl Endpoint {
                 .fetch_add(p.wire_bytes(), Ordering::Relaxed);
             return Ok(p);
         }
+        let deadline = self.recv_deadline.map(|d| Instant::now() + d);
         loop {
-            let msg = self
-                .rx
-                .recv()
-                .map_err(|_| anyhow!("rank {}: all peers hung up", self.rank))?;
-            if msg.src == src && msg.tag == tag {
-                self.counters
-                    .bytes_received
-                    .fetch_add(msg.payload.wire_bytes(), Ordering::Relaxed);
-                return Ok(msg.payload);
+            match self.rx.recv_timeout(RECV_TICK) {
+                Ok(msg) => {
+                    if msg.src == src && msg.tag == tag {
+                        self.counters
+                            .bytes_received
+                            .fetch_add(msg.payload.wire_bytes(), Ordering::Relaxed);
+                        return Ok(msg.payload);
+                    }
+                    self.pending
+                        .entry((msg.src, msg.tag))
+                        .or_default()
+                        .push_back(msg.payload);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    // Still waiting: we are alive (beat), but is the peer?
+                    self.health.beat(self.rank);
+                    self.health
+                        .check_edge(src)
+                        .map_err(anyhow::Error::new)
+                        .with_context(|| {
+                            format!("rank {} recv from {src} tag {tag}", self.rank)
+                        })?;
+                    if let Some(dl) = deadline {
+                        if Instant::now() >= dl {
+                            // The peer outlasted the hard bound: declare it
+                            // dead so the rest of the mesh unwinds too.
+                            self.health.mark_dead(src);
+                            return Err(anyhow::Error::new(MeshError::PeerDead {
+                                rank: src,
+                            }))
+                            .with_context(|| {
+                                format!(
+                                    "rank {} recv from {src} tag {tag}: deadline \
+                                     {:?} exceeded",
+                                    self.rank, self.recv_deadline
+                                )
+                            });
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(anyhow!("rank {}: all peers hung up", self.rank));
+                }
             }
-            self.pending
-                .entry((msg.src, msg.tag))
-                .or_default()
-                .push_back(msg.payload);
         }
     }
 
@@ -477,5 +709,99 @@ mod tests {
             b.recycle_f32(vec![0.0; 4]);
         }
         assert!(b.free_f32.len() <= FREELIST_CAP);
+    }
+
+    /// The core deadlock fix: a recv blocked on a peer unwinds with
+    /// `PeerDead` as soon as that peer is marked dead — no message needed.
+    #[test]
+    fn recv_unblocks_when_peer_is_marked_dead() {
+        let mut eps = Mesh::new(2);
+        let mut b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        let t0 = Instant::now();
+        let killer = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(20));
+            a.mark_dead(0);
+        });
+        let err = b.recv_f32(0, 0).unwrap_err();
+        killer.join().unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(5), "recv did not unblock fast");
+        assert_eq!(
+            err.downcast_ref::<MeshError>(),
+            Some(&MeshError::PeerDead { rank: 0 })
+        );
+    }
+
+    /// An abort triggered by *any* death unwinds recvs waiting on healthy
+    /// peers too (victim ranks see `Aborted`, not `PeerDead`).
+    #[test]
+    fn abort_unblocks_recv_from_healthy_peer() {
+        let eps = Mesh::new(3);
+        let health = eps[0].health_arc();
+        let mut ep2 = eps.into_iter().nth(2).unwrap();
+        health.mark_dead(1);
+        // rank 2 waits on rank 0 (healthy) — must still unwind via abort
+        let err = ep2.recv_f32(0, 0).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<MeshError>(),
+            Some(&MeshError::Aborted { origin: 1 })
+        );
+        assert_eq!(health.first_dead(), Some(1));
+        assert_eq!(health.dead_ranks(), vec![1]);
+    }
+
+    #[test]
+    fn send_to_dead_rank_fails_fast() {
+        let eps = Mesh::new(2);
+        eps[0].mark_dead(1);
+        let err = eps[0].send_f16(1, 0, vec![1]).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<MeshError>(),
+            Some(&MeshError::PeerDead { rank: 1 })
+        );
+    }
+
+    /// The recv deadline is the belt-and-braces bound: with no one marking
+    /// anyone dead, an absent message still surfaces as `PeerDead` (and
+    /// marks the silent peer dead for the rest of the mesh).
+    #[test]
+    fn recv_deadline_marks_silent_peer_dead() {
+        let mut eps = Mesh::new(2);
+        let mut b = eps.pop().unwrap();
+        b.set_recv_deadline(Some(Duration::from_millis(30)));
+        let t0 = Instant::now();
+        let err = b.recv_f32(0, 7).unwrap_err();
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert_eq!(
+            err.downcast_ref::<MeshError>(),
+            Some(&MeshError::PeerDead { rank: 0 })
+        );
+        assert!(b.health().is_dead(0));
+        assert!(b.health().aborted());
+    }
+
+    /// Heartbeats: blocked receivers keep beating; a completed rank marks
+    /// itself done so a monitor can tell "finished" from "hung".
+    #[test]
+    fn heartbeats_tick_while_blocked_and_done_is_sticky() {
+        let mut eps = Mesh::new(2);
+        let mut b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        let health = a.health_arc();
+        let waiter = thread::spawn(move || {
+            let _ = b.recv_f32(0, 0); // unblocked by the abort below
+        });
+        thread::sleep(Duration::from_millis(50));
+        // rank 1 is blocked in recv, but its recv loop keeps it beating
+        assert!(
+            health.millis_since_beat(1) < 40,
+            "blocked recv must keep beating ({}ms stale)",
+            health.millis_since_beat(1)
+        );
+        health.mark_done(0);
+        assert!(health.is_done(0));
+        health.mark_dead(0);
+        waiter.join().unwrap();
     }
 }

@@ -5,10 +5,100 @@ pub mod presets;
 
 pub use presets::{paper_run, paper_runs, LrConfig, PaperRun};
 
+use std::time::Duration;
+
 use anyhow::{bail, Context, Result};
 
 use crate::sched::{BatchSchedule, LrSchedule, Phase};
 use crate::util::toml::Doc;
+
+/// How a deterministically injected fault manifests in the afflicted
+/// worker (the in-process stand-in for a GPU/node dying mid-run).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The worker returns an error from its step loop.
+    Error,
+    /// The worker thread panics outright.
+    Panic,
+    /// The worker goes silent for `millis` (then errors out) — exercises
+    /// heartbeat-timeout detection rather than fast error propagation.
+    Hang { millis: u64 },
+}
+
+/// A deterministic fault injection: rank `rank` dies at global step
+/// `step`, on the first `attempts` attempts of the afflicted phase (so a
+/// recovered phase does not re-trigger it forever).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectedFault {
+    pub rank: usize,
+    /// Global optimizer step at which the fault fires.
+    pub step: usize,
+    pub kind: FaultKind,
+    /// Number of phase attempts on which to fire (1 = first attempt only).
+    pub attempts: usize,
+}
+
+impl InjectedFault {
+    /// Kill `rank` with an error at global `step` (first attempt only).
+    pub fn error_at(rank: usize, step: usize) -> Self {
+        Self { rank, step, kind: FaultKind::Error, attempts: 1 }
+    }
+
+    pub fn panic_at(rank: usize, step: usize) -> Self {
+        Self { rank, step, kind: FaultKind::Panic, attempts: 1 }
+    }
+
+    pub fn hang_at(rank: usize, step: usize, millis: u64) -> Self {
+        Self { rank, step, kind: FaultKind::Hang { millis }, attempts: 1 }
+    }
+
+    /// Does this injection fire for (`attempt`, `rank`, `global_step`)?
+    pub fn fires(&self, attempt: usize, rank: usize, global_step: usize) -> bool {
+        attempt < self.attempts && rank == self.rank && global_step == self.step
+    }
+}
+
+/// Fault-tolerance knobs: heartbeat failure detection + elastic mid-phase
+/// recovery (ROADMAP item 2). With `enabled = false` the trainer behaves
+/// exactly as before this subsystem existed: no monitor thread, no recv
+/// deadline, no per-phase state retention — and any rank failure aborts
+/// the run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    pub enabled: bool,
+    /// How often the coordinator's monitor scans the heartbeat table.
+    pub heartbeat_interval: Duration,
+    /// A rank whose heartbeat is older than this is declared dead. Must
+    /// comfortably exceed the longest compute gap between collectives
+    /// (rank 0's in-phase eval is the usual worst case).
+    pub rank_timeout: Duration,
+    /// Total phase restarts allowed across the run before a death becomes
+    /// fatal.
+    pub max_restarts: usize,
+    /// Deterministic fault injection (tests / chaos runs); `None` in
+    /// production configs.
+    pub inject: Option<InjectedFault>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            heartbeat_interval: Duration::from_millis(200),
+            rank_timeout: Duration::from_secs(30),
+            max_restarts: 1,
+            inject: None,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Fault tolerance fully off: any rank failure is fatal, exactly the
+    /// pre-fault-tolerance behaviour.
+    pub fn disabled() -> Self {
+        Self { enabled: false, ..Self::default() }
+    }
+}
 
 /// Everything the Trainer needs for one run.
 #[derive(Debug, Clone)]
@@ -51,6 +141,8 @@ pub struct TrainConfig {
     /// behaviour. The default (8 KiB) yields ~6–7 buckets on the tiny
     /// arch.
     pub bucket_bytes: usize,
+    /// Fault tolerance: heartbeat detection + elastic mid-phase recovery.
+    pub fault: FaultConfig,
 }
 
 /// Default gradient-bucket target: ~6–7 tensor-aligned buckets over the
@@ -77,6 +169,7 @@ impl TrainConfig {
             train_size: 4096,
             compute_lanes: 0,
             bucket_bytes: DEFAULT_BUCKET_BYTES,
+            fault: FaultConfig::default(),
         }
     }
 
@@ -153,6 +246,7 @@ impl TrainConfig {
             train_size: 4096,
             compute_lanes: 0,
             bucket_bytes: DEFAULT_BUCKET_BYTES,
+            fault: FaultConfig::default(),
         }
     }
 
@@ -175,6 +269,25 @@ impl TrainConfig {
         let compute_lanes = doc.usize_or("compute_lanes", 0)?;
         let bucket_bytes = doc.usize_or("bucket_bytes", DEFAULT_BUCKET_BYTES)?;
         let total_epochs = doc.usize_or("epochs", 2)? as u32;
+
+        // Fault tolerance ([fault] table; all optional).
+        let fd = FaultConfig::default();
+        let fault = FaultConfig {
+            enabled: doc.bool_or("fault.enabled", fd.enabled)?,
+            heartbeat_interval: Duration::from_millis(doc.usize_or(
+                "fault.heartbeat_interval_ms",
+                fd.heartbeat_interval.as_millis() as usize,
+            )? as u64),
+            rank_timeout: Duration::from_millis(doc.usize_or(
+                "fault.rank_timeout_ms",
+                fd.rank_timeout.as_millis() as usize,
+            )? as u64),
+            max_restarts: doc.usize_or("fault.max_restarts", fd.max_restarts)?,
+            inject: None,
+        };
+        if fault.enabled && fault.rank_timeout.is_zero() {
+            bail!("fault.rank_timeout_ms must be > 0 when fault tolerance is enabled");
+        }
 
         // LR schedule.
         let lr = match doc.str_or("lr.kind", "const")?.as_str() {
@@ -238,6 +351,7 @@ impl TrainConfig {
             train_size,
             compute_lanes,
             bucket_bytes,
+            fault,
         })
     }
 }
@@ -311,6 +425,44 @@ phases = [[0, 8, 4], [2, 16, 4]]
         assert_eq!(TrainConfig::from_toml(&doc).unwrap().bucket_bytes, 0);
         let doc = Doc::parse("bucket_bytes = 4096\n").unwrap();
         assert_eq!(TrainConfig::from_toml(&doc).unwrap().bucket_bytes, 4096);
+    }
+
+    #[test]
+    fn fault_config_defaults_and_parses() {
+        let c = TrainConfig::quickstart();
+        assert!(c.fault.enabled);
+        assert_eq!(c.fault.max_restarts, 1);
+        assert!(c.fault.inject.is_none());
+
+        let doc = Doc::parse(
+            "[fault]\nenabled = false\nheartbeat_interval_ms = 50\n\
+             rank_timeout_ms = 750\nmax_restarts = 3\n",
+        )
+        .unwrap();
+        let c = TrainConfig::from_toml(&doc).unwrap();
+        assert!(!c.fault.enabled);
+        assert_eq!(c.fault.heartbeat_interval, Duration::from_millis(50));
+        assert_eq!(c.fault.rank_timeout, Duration::from_millis(750));
+        assert_eq!(c.fault.max_restarts, 3);
+
+        // zero timeout with fault tolerance on is a config error
+        let doc = Doc::parse("[fault]\nrank_timeout_ms = 0\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+        // ...but fine when the subsystem is off
+        let doc = Doc::parse("[fault]\nenabled = false\nrank_timeout_ms = 0\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_ok());
+    }
+
+    #[test]
+    fn injected_fault_gating() {
+        let inj = InjectedFault::error_at(2, 7);
+        assert!(inj.fires(0, 2, 7));
+        assert!(!inj.fires(1, 2, 7), "attempt 1 must not re-fire");
+        assert!(!inj.fires(0, 1, 7));
+        assert!(!inj.fires(0, 2, 8));
+        let twice = InjectedFault { attempts: 2, ..inj };
+        assert!(twice.fires(1, 2, 7));
+        assert!(!twice.fires(2, 2, 7));
     }
 
     #[test]

@@ -35,15 +35,18 @@ pub mod worker;
 pub use checkpoint::CheckpointMeta;
 pub use metrics::{EvalMetric, Metrics, StepMetric, Summary};
 
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::cluster::best_grid;
-use crate::collectives::{self, Collective, Mesh, Wire};
+use crate::collectives::{self, Collective, Health, Mesh, MeshError, Wire};
 use crate::config::TrainConfig;
 use crate::data::{Augment, Loader, SynthDataset};
-use crate::runtime::{BackendSpec, ComputeClient, ComputeService, HostTensor, Manifest};
+use crate::runtime::{
+    ArchManifest, BackendSpec, ComputeClient, ComputeService, HostTensor, Manifest,
+};
 use crate::util::timer::Stopwatch;
 
 use worker::{PhaseCtx, WorkerOutput, WorkerState};
@@ -61,6 +64,28 @@ pub struct TrainReport {
     /// Highest number of compute requests observed executing at the same
     /// instant across lanes (≥ 2 means ranks genuinely overlapped).
     pub max_lane_concurrency: usize,
+    /// Elastic-recovery events: each records a phase attempt that lost
+    /// ranks and was re-planned on the survivors. Empty on a fault-free
+    /// run.
+    pub recoveries: Vec<RecoveryEvent>,
+}
+
+/// One elastic-recovery event: a rank death aborted a phase attempt and
+/// the remaining steps were re-planned on the survivors.
+#[derive(Debug, Clone)]
+pub struct RecoveryEvent {
+    /// Global step index of the afflicted phase's first step (the replay
+    /// resumes from this phase-boundary state).
+    pub phase_first_step: usize,
+    /// Ranks declared dead in the failed attempt (indices local to that
+    /// attempt's mesh).
+    pub dead_ranks: Vec<usize>,
+    /// Worker count of the failed attempt.
+    pub workers_before: usize,
+    /// Worker count the phase was re-planned to (global batch preserved).
+    pub workers_after: usize,
+    /// Per-worker batch after re-planning (`global_batch / workers_after`).
+    pub per_worker_after: usize,
 }
 
 impl TrainReport {
@@ -263,6 +288,23 @@ impl Trainer {
                     meta.step
                 );
             }
+            // Cross-check the recomputed sample position against the
+            // checkpoint's own accounting: `meta.step` under a *different*
+            // batch schedule lands at a different sample count, and
+            // silently resuming there would desync the data stream from
+            // the saved run.
+            let resumed_samples = plans[0].samples_before;
+            if resumed_samples != meta.samples {
+                bail!(
+                    "checkpoint mismatch: checkpoint says step {} = {} samples, but \
+                     this schedule reaches step {} after {} samples — was the \
+                     checkpoint taken under a different batch schedule?",
+                    meta.step,
+                    meta.samples,
+                    meta.step,
+                    resumed_samples
+                );
+            }
         }
 
         let preload = self.preload_names(&plans)?;
@@ -323,55 +365,126 @@ impl Trainer {
         );
 
         let mut all_metrics = Metrics::default();
+        let wire = if cfg.grad_wire == "fp16" { Wire::F16 } else { Wire::F32 };
+        // Elastic-recovery bookkeeping: ranks lost so far shrink every
+        // later phase's worker count (a dead machine stays dead), and the
+        // total restart budget is shared across the run.
+        let mut lost = 0usize;
+        let mut restarts_used = 0usize;
+        let mut recoveries: Vec<RecoveryEvent> = Vec::new();
         for plan in &plans {
-            let collective: Arc<dyn Collective> = match cfg.collective.as_str() {
-                "torus" => {
-                    let (x, y) = best_grid(plan.workers);
-                    Arc::new(crate::collectives::TorusAllReduce::new(x, y))
+            let global_batch = plan.per_worker * plan.workers;
+            let mut attempt = 0usize;
+            loop {
+                let workers = effective_workers(&arch, plan.workers, lost, global_batch, cfg)?;
+                let per_worker = global_batch / workers;
+                let degraded = workers != plan.workers;
+                if degraded {
+                    // The degraded per-worker batch was not in the preload
+                    // set; load its grad executable into every lane now.
+                    let g = arch.grad_exec(per_worker, cfg.label_smoothing)?;
+                    client
+                        .load(&cfg.arch, &[g.name.as_str()])
+                        .context("loading grad executable for the re-planned batch")?;
                 }
-                spec => Arc::from(collectives::by_name(spec, plan.workers)?),
-            };
-            let wire = if cfg.grad_wire == "fp16" { Wire::F16 } else { Wire::F32 };
-            let ctx = Arc::new(PhaseCtx {
-                arch: arch.clone(),
-                collective,
-                grad_wire: wire,
-                lr: cfg.lr.clone(),
-                label_smoothing: cfg.label_smoothing,
-                weight_decay: cfg.weight_decay,
-                per_worker_batch: plan.per_worker,
-                workers: plan.workers,
-                steps: plan.steps,
-                first_step: plan.first_step,
-                samples_before: plan.samples_before,
-                skip_steps: plan.skipped,
-                dataset_size: cfg.train_size,
-                eval_every: cfg.eval_every,
-                eval_batches: cfg.eval_batches,
-                bucket_bytes: cfg.bucket_bytes,
-            });
+                // A fixed-shape collective spec that no longer fits the
+                // survivor count falls back to the auto torus/ring rule.
+                let collective: Arc<dyn Collective> =
+                    Arc::from(collectives::by_name_elastic(&cfg.collective, workers, degraded)?);
+                let ctx = Arc::new(PhaseCtx {
+                    arch: arch.clone(),
+                    collective,
+                    grad_wire: wire,
+                    lr: cfg.lr.clone(),
+                    label_smoothing: cfg.label_smoothing,
+                    weight_decay: cfg.weight_decay,
+                    per_worker_batch: per_worker,
+                    workers,
+                    steps: plan.steps,
+                    first_step: plan.first_step,
+                    samples_before: plan.samples_before,
+                    skip_steps: plan.skipped,
+                    dataset_size: cfg.train_size,
+                    eval_every: cfg.eval_every,
+                    eval_batches: cfg.eval_batches,
+                    bucket_bytes: cfg.bucket_bytes,
+                    attempt,
+                    fault: cfg.fault.clone(),
+                });
 
-            let mut outputs = run_phase_on_mesh(&ctx, &client, &dataset, cfg.seed, state)?;
-            // Parameters are replicated: identical reduced gradients plus an
-            // identical update must leave every rank with bit-identical
-            // state. Enforce the invariant before carrying rank 0 forward.
-            outputs.sort_by_key(|o| o.rank);
-            for o in &outputs[1..] {
-                if !tensors_bit_identical(&o.state.params, &outputs[0].state.params)
-                    || !tensors_bit_identical(&o.state.momenta, &outputs[0].state.momenta)
-                    || !tensors_bit_identical(&o.state.bn_running, &outputs[0].state.bn_running)
-                {
-                    bail!(
-                        "replicated-parameter invariant violated: rank {} diverged \
-                         from rank 0 after step {}",
-                        o.rank,
-                        plan.first_step + plan.steps
-                    );
+                match run_phase_on_mesh(&ctx, &client, &dataset, cfg.seed, &state) {
+                    PhaseOutcome::Complete(mut outputs) => {
+                        // Parameters are replicated: identical reduced
+                        // gradients plus an identical update must leave
+                        // every rank with bit-identical state. Enforce the
+                        // invariant (on the survivors, after a recovery)
+                        // before carrying rank 0 forward.
+                        outputs.sort_by_key(|o| o.rank);
+                        for o in &outputs[1..] {
+                            if !tensors_bit_identical(&o.state.params, &outputs[0].state.params)
+                                || !tensors_bit_identical(
+                                    &o.state.momenta,
+                                    &outputs[0].state.momenta,
+                                )
+                                || !tensors_bit_identical(
+                                    &o.state.bn_running,
+                                    &outputs[0].state.bn_running,
+                                )
+                            {
+                                bail!(
+                                    "replicated-parameter invariant violated: rank {} \
+                                     diverged from rank 0 after step {}",
+                                    o.rank,
+                                    plan.first_step + plan.steps
+                                );
+                            }
+                        }
+                        let o = outputs.swap_remove(0);
+                        all_metrics.merge(o.metrics);
+                        state = o.state;
+                        break;
+                    }
+                    PhaseOutcome::Failed { dead, err } => {
+                        let err = err.context(format!(
+                            "phase at step {} failed (attempt {attempt}, {workers} workers, \
+                             dead ranks {dead:?})",
+                            plan.first_step
+                        ));
+                        if !cfg.fault.enabled {
+                            return Err(err);
+                        }
+                        if dead.is_empty() {
+                            // Nothing was detected dead — this is not a
+                            // rank death, so a retry would just repeat it.
+                            return Err(err);
+                        }
+                        if restarts_used >= cfg.fault.max_restarts {
+                            return Err(err.context(format!(
+                                "fault.max_restarts ({}) exhausted",
+                                cfg.fault.max_restarts
+                            )));
+                        }
+                        lost += dead.len();
+                        restarts_used += 1;
+                        let new_workers =
+                            effective_workers(&arch, plan.workers, lost, global_batch, cfg)
+                                .map_err(|e| e.context(err))?;
+                        recoveries.push(RecoveryEvent {
+                            phase_first_step: plan.first_step,
+                            dead_ranks: dead,
+                            workers_before: workers,
+                            workers_after: new_workers,
+                            per_worker_after: global_batch / new_workers,
+                        });
+                        // `state` still holds the phase-boundary state (the
+                        // workers train on clones): the retry replays the
+                        // whole phase from its start on the survivors, with
+                        // the global batch — and therefore the step count
+                        // and LR/momentum schedule — unchanged.
+                        attempt += 1;
+                    }
                 }
             }
-            let o = outputs.swap_remove(0);
-            all_metrics.merge(o.metrics);
-            state = o.state;
         }
 
         // Final evaluation at the completed-step count. In-phase interval
@@ -413,6 +526,7 @@ impl Trainer {
             wall_secs: sw.lap("total"),
             lanes,
             max_lane_concurrency: svc.stats().max_concurrent(),
+            recoveries,
         })
     }
 
@@ -464,23 +578,104 @@ fn tensors_bit_identical(a: &[HostTensor], b: &[HostTensor]) -> bool {
         })
 }
 
+/// Largest worker count the survivors support for this phase: at most
+/// `planned - lost`, must divide the global batch (preserving it exactly —
+/// and with it the step count and LR/momentum schedule), and the manifest
+/// must have a grad executable for the resulting per-worker batch.
+fn effective_workers(
+    arch: &ArchManifest,
+    planned: usize,
+    lost: usize,
+    global_batch: usize,
+    cfg: &TrainConfig,
+) -> Result<usize> {
+    let cap = planned.saturating_sub(lost);
+    if cap == 0 {
+        bail!("no survivors left: {lost} of {planned} planned ranks are dead");
+    }
+    for s in (1..=cap).rev() {
+        if global_batch % s == 0 && arch.grad_exec(global_batch / s, cfg.label_smoothing).is_ok() {
+            return Ok(s);
+        }
+    }
+    bail!(
+        "cannot re-plan a {global_batch}-sample global batch onto {cap} survivors: \
+         no divisor of the batch has a grad executable in the manifest"
+    )
+}
+
+/// Outcome of one phase attempt across the mesh.
+enum PhaseOutcome {
+    /// Every rank finished; outputs carry the exported states.
+    Complete(Vec<WorkerOutput>),
+    /// At least one rank errored or panicked. `dead` lists the ranks the
+    /// health layer declared dead (genuine casualties — not the victims
+    /// that merely unwound with a [`MeshError`] because a peer died);
+    /// `err` is the most informative error observed.
+    Failed {
+        dead: Vec<usize>,
+        err: anyhow::Error,
+    },
+}
+
 /// Spawn `ctx.workers` rank threads over a fresh mesh and run the phase.
-/// Rank 0 starts from `state`; the other ranks receive clones (parameters
-/// are replicated in data-parallel training).
+/// Rank 0 starts from `state`; every rank receives a clone (parameters are
+/// replicated in data-parallel training), so the caller keeps the
+/// phase-boundary state for a recovery replay.
+///
+/// Failure propagation: a rank that errors or panics is marked dead in the
+/// mesh's shared [`Health`] table, which flips the abort flag — every
+/// other rank's bounded-wait `recv` notices within a tick and unwinds with
+/// a [`MeshError`], so the whole phase fails in bounded time instead of
+/// deadlocking on the dead rank's silent channels. When fault tolerance is
+/// enabled, a heartbeat monitor additionally declares ranks dead whose
+/// heartbeat goes stale (hung, not crashed), and each `recv` carries a
+/// `rank_timeout` deadline as a last line of defence.
 fn run_phase_on_mesh(
     ctx: &Arc<PhaseCtx>,
     client: &ComputeClient,
     dataset: &SynthDataset,
     seed: u64,
-    state: WorkerState,
-) -> Result<Vec<WorkerOutput>> {
+    state: &WorkerState,
+) -> PhaseOutcome {
     let n = ctx.workers;
     let mesh = Mesh::new(n);
+    let health: Arc<Health> = mesh[0].health_arc();
+
+    // Heartbeat monitor: flags ranks whose heartbeat goes stale (a hang —
+    // e.g. stuck compute — never trips the channel-level detection).
+    let monitor_stop = Arc::new(AtomicBool::new(false));
+    let monitor = if ctx.fault.enabled {
+        let health = health.clone();
+        let stop = monitor_stop.clone();
+        let interval = ctx.fault.heartbeat_interval;
+        let timeout_ms = ctx.fault.rank_timeout.as_millis() as u64;
+        Some(std::thread::spawn(move || {
+            while !stop.load(Ordering::Acquire) {
+                for r in 0..health.n_ranks() {
+                    if health.is_done(r) || health.is_dead(r) {
+                        continue;
+                    }
+                    if health.millis_since_beat(r) > timeout_ms {
+                        health.mark_dead(r);
+                    }
+                }
+                std::thread::sleep(interval);
+            }
+        }))
+    } else {
+        None
+    };
+
     let mut handles = Vec::with_capacity(n);
     for (rank, mut ep) in mesh.into_iter().enumerate() {
+        if ctx.fault.enabled {
+            ep.set_recv_deadline(Some(ctx.fault.rank_timeout));
+        }
         let ctx = ctx.clone();
         let client = client.clone();
         let dataset = dataset.clone();
+        let health = health.clone();
         let st = WorkerState {
             params: state.params.clone(),
             momenta: state.momenta.clone(),
@@ -490,28 +685,95 @@ fn run_phase_on_mesh(
         let handle = std::thread::Builder::new()
             .name(format!("rank{rank}"))
             .spawn(move || -> Result<WorkerOutput> {
-                let mut loader = Loader::new(dataset, Augment::standard(seed), rank, ctx.workers);
-                worker::run_phase(&ctx, rank, &mut ep, &client, &mut loader, st)
+                let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    let mut loader =
+                        Loader::new(dataset, Augment::standard(seed), rank, ctx.workers);
+                    worker::run_phase(&ctx, rank, &mut ep, &client, &mut loader, st)
+                }));
+                let out = match result {
+                    Ok(Ok(o)) => Ok(o),
+                    Ok(Err(e)) => {
+                        // A rank that unwound with a MeshError is a
+                        // *victim* of someone else's death — marking it
+                        // dead too would shrink the survivor set for
+                        // nothing. Only genuine local failures count.
+                        if e.downcast_ref::<MeshError>().is_none() {
+                            health.mark_dead(rank);
+                        }
+                        Err(e)
+                    }
+                    Err(payload) => {
+                        health.mark_dead(rank);
+                        let msg = payload
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| payload.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "non-string panic payload".to_string());
+                        Err(anyhow::anyhow!("rank {rank} panicked: {msg}"))
+                    }
+                };
+                // Every exit — clean, victim, or casualty — marks the rank
+                // done (= thread no longer running), so the monitor never
+                // declares an already-exited rank dead for going silent.
+                health.mark_done(rank);
+                out
             })
-            .map_err(|e| anyhow::anyhow!("spawning rank {rank}: {e}"))?;
-        handles.push(handle);
+            .map_err(|e| anyhow::anyhow!("spawning rank {rank}: {e}"));
+        match handle {
+            Ok(h) => handles.push(h),
+            Err(e) => {
+                // Could not even spawn the rank: abort whatever did start.
+                health.mark_dead(rank);
+                for h in handles {
+                    let _ = h.join();
+                }
+                monitor_stop.store(true, Ordering::Release);
+                if let Some(m) = monitor {
+                    let _ = m.join();
+                }
+                return PhaseOutcome::Failed {
+                    dead: health.dead_ranks(),
+                    err: e,
+                };
+            }
+        }
     }
+
+    // Joins are bounded: any failure marks a rank dead, the abort flag
+    // flips, and every blocked recv unwinds within a tick.
     let mut outputs = Vec::with_capacity(n);
-    let mut first_err: Option<anyhow::Error> = None;
+    let mut casualty_err: Option<anyhow::Error> = None;
+    let mut victim_err: Option<anyhow::Error> = None;
     for (rank, h) in handles.into_iter().enumerate() {
         match h.join() {
             Ok(Ok(o)) => outputs.push(o),
             Ok(Err(e)) => {
-                first_err.get_or_insert(e.context(format!("rank {rank} failed")));
+                let e = e.context(format!("rank {rank} failed"));
+                if e.downcast_ref::<MeshError>().is_some() {
+                    victim_err.get_or_insert(e);
+                } else {
+                    casualty_err.get_or_insert(e);
+                }
             }
             Err(_) => {
-                first_err
-                    .get_or_insert_with(|| anyhow::anyhow!("rank {rank} panicked"));
+                // catch_unwind inside the thread converts panics to Err;
+                // reaching here means the thread died outside it.
+                health.mark_dead(rank);
+                casualty_err
+                    .get_or_insert_with(|| anyhow::anyhow!("rank {rank} thread died"));
             }
         }
     }
-    if let Some(e) = first_err {
-        return Err(e);
+    monitor_stop.store(true, Ordering::Release);
+    if let Some(m) = monitor {
+        let _ = m.join();
     }
-    Ok(outputs)
+
+    match casualty_err.or(victim_err) {
+        None => PhaseOutcome::Complete(outputs),
+        Some(err) => PhaseOutcome::Failed {
+            dead: health.dead_ranks(),
+            err,
+        },
+    }
 }

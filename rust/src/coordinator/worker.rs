@@ -43,11 +43,12 @@
 //! at the next collective, so no extra synchronisation is needed.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::collectives::{BucketPlan, BucketStaging, Collective, Endpoint, Wire};
+use crate::config::{FaultConfig, FaultKind};
 use crate::data::{Augment, Batch, Loader};
 use crate::runtime::{ApplyParams, ArchManifest, ComputeClient, HostTensor};
 use crate::sched::LrSchedule;
@@ -81,6 +82,12 @@ pub struct PhaseCtx {
     /// Gradient-bucket target for the backward-overlapped reduction
     /// (`TrainConfig::bucket_bytes`; 0 = one bucket, the serial schedule).
     pub bucket_bytes: usize,
+    /// Which attempt at this phase this is (0 = first; elastic recovery
+    /// retries bump it). Gates deterministic fault injection.
+    pub attempt: usize,
+    /// Fault-tolerance knobs, including the injection hook for the
+    /// deterministic chaos tests.
+    pub fault: FaultConfig,
 }
 
 impl PhaseCtx {
@@ -281,223 +288,261 @@ pub fn run_phase(
     // (aborting mid-phase would strand peers inside a collective).
     let mut eval_err: Option<anyhow::Error> = None;
 
-    // Start this phase's data stream at the exact (epoch, intra-epoch
-    // offset) where the previous phase stopped — not the truncated epoch
-    // start — then, on checkpoint resume, replay past the already-trained
-    // steps so the sample stream continues exactly where the saved run
-    // stopped.
-    loader.seek_samples(phase_stream_start(
-        ctx.samples_before,
-        ctx.skip_steps,
-        ctx.per_worker_batch,
-        ctx.workers,
-    ));
-    for _ in 0..ctx.skip_steps {
-        loader.skip_batch(ctx.per_worker_batch);
-    }
-
-    for local_step in 0..ctx.steps {
-        let mut sw = Stopwatch::new();
-        let global_step = ctx.first_step + local_step;
-        let samples = ctx.samples_before
-            + (local_step as u64) * (ctx.per_worker_batch * ctx.workers) as u64;
-        let epoch = ctx.epoch_at(samples);
-        let total_batch = ctx.per_worker_batch * ctx.workers;
-        let lr = ctx.lr.lr(epoch) as f32;
-        let momentum = ctx.lr.momentum(epoch, total_batch) as f32;
-
-        // 1. data
-        let data_epoch = loader.next_batch(ctx.per_worker_batch, &mut batch);
-        let t_data = sw.lap("data");
-
-        // 2+3. streaming gradients with bucket-pipelined all-reduce. The
-        // batch vectors move into the tensors (no clone); the lane hands
-        // them back in the terminal reply so their storage is reused next
-        // step.
-        let images = HostTensor::f32(img_shape.clone(), std::mem::take(&mut batch.images));
-        let labels = HostTensor::i32(
-            vec![ctx.per_worker_batch],
-            std::mem::take(&mut batch.labels),
-        );
-        let stream = compute
-            .grad_step_streaming(&sref, &grad_exec, images, labels)
-            .with_context(|| format!("rank {rank} step {global_step}: grad_step_streaming"))?;
-
-        let hp = ApplyParams {
-            lr,
-            momentum,
-            weight_decay: ctx.weight_decay,
-        };
-        staging.begin();
-        let mut pending_applies = Vec::with_capacity(plan.len());
-        let mut t_compute = 0.0f64; // stalled on the backward pass
-        let mut t_comm = 0.0f64; // exposed communication
-        let mut t_comm_hidden = 0.0f64; // reductions overlapped with backprop
-        'buckets: for k in 0..plan.len() {
-            // Wait for this bucket's gradients (reverse layer order means
-            // buckets complete strictly in plan order). Time spent blocked
-            // here is compute the pipeline could not hide.
-            let wait0 = Instant::now();
-            while !staging.bucket_ready(&plan, k) {
-                let Some((idx, t)) = stream.recv_grad() else {
-                    // stream ended early: the terminal reply below carries
-                    // the backend's actual error
-                    break 'buckets;
-                };
-                staging
-                    .place(&plan, idx, t)
-                    .with_context(|| format!("rank {rank} step {global_step}: grad stream"))?;
-            }
-            // Drain whatever else backprop already produced, so the
-            // hidden/exposed split below reflects the backend's progress.
-            while let Some((idx, t)) = stream.try_recv_grad() {
-                staging
-                    .place(&plan, idx, t)
-                    .with_context(|| format!("rank {rank} step {global_step}: grad stream"))?;
-            }
-            t_compute += wait0.elapsed().as_secs_f64();
-
-            // Reduce bucket k in its own tag window while the lane keeps
-            // producing buckets k+1.. (hidden comm), then queue its LARS
-            // update behind the stream.
-            let hidden_before = !staging.all_placed(&plan);
-            let red0 = Instant::now();
-            let flat = staging.flat_mut(k);
-            ctx.collective
-                .all_reduce(ep, flat, ctx.grad_wire, tag)
-                .with_context(|| format!("rank {rank} step {global_step}: bucket {k}"))?;
-            tag += span;
-            for g in flat.iter_mut() {
-                *g *= inv_n;
-            }
-            let reduce_secs = red0.elapsed().as_secs_f64();
-            let grads = staging.take_bucket(&plan, k)?;
-            // Conservative attribution: a reduction counts as hidden only
-            // if backprop was still streaming when it *ended* too (drain
-            // first so the check sees the backend's real progress). A
-            // reduction the stream outran mid-flight books as exposed —
-            // the headline exposed-comm fraction can only be overstated,
-            // never flattered.
-            while let Some((idx, t)) = stream.try_recv_grad() {
-                staging
-                    .place(&plan, idx, t)
-                    .with_context(|| format!("rank {rank} step {global_step}: grad stream"))?;
-            }
-            if hidden_before && !staging.all_placed(&plan) {
-                t_comm_hidden += reduce_secs;
-            } else {
-                t_comm += reduce_secs;
-            }
-            pending_applies.push(compute.apply_partial_async(
-                &sref,
-                plan.bucket(k).params.start,
-                grads,
-                hp,
-            )?);
+    // The step loop can fail mid-collective — a dead peer unwinds every
+    // survivor through a `MeshError`. Run it in a closure so the error
+    // path below can still clean up: queued per-bucket applies and a
+    // still-streaming backward pass reply to dropped handles (the lane
+    // ignores those sends), and the trailing `drop_state` is FIFO-ordered
+    // behind them, leaving the lane clean for a recovery attempt.
+    let steps_result: Result<()> = (|| {
+        // Start this phase's data stream at the exact (epoch, intra-epoch
+        // offset) where the previous phase stopped — not the truncated epoch
+        // start — then, on checkpoint resume, replay past the already-trained
+        // steps so the sample stream continues exactly where the saved run
+        // stopped.
+        loader.seek_samples(phase_stream_start(
+            ctx.samples_before,
+            ctx.skip_steps,
+            ctx.per_worker_batch,
+            ctx.workers,
+        ));
+        for _ in 0..ctx.skip_steps {
+            loader.skip_batch(ctx.per_worker_batch);
         }
 
-        // Terminal reply: [loss, bn stats..] + the batch tensors back.
-        let (outs, img_back, lab_back) = stream
-            .finish()
-            .with_context(|| format!("rank {rank} step {global_step}: grad_step_streaming"))?;
-        if !staging.all_placed(&plan) {
-            bail!("rank {rank} step {global_step}: gradient stream ended early");
-        }
-        batch.images = img_back.into_f32()?;
-        batch.labels = lab_back.into_i32()?;
-        let loss_local = outs[0].scalar()?;
-        let bn_stats = &outs[1..1 + n_bn];
-
-        // 4. BN-stat all-reduce (FP32 wire, paper §3.2). The scalar step
-        // loss rides in this buffer — NOT in the gradient buffer — so the
-        // reported loss is a pure-FP32 reduction even on the FP16 wire.
-        // Nothing is left to hide behind, so this window is exposed comm.
-        let bn0 = Instant::now();
-        flatten_into(bn_stats, &mut bn_flat)?;
-        bn_flat.push(loss_local);
-        ctx.collective.all_reduce(ep, &mut bn_flat, Wire::F32, tag)?;
-        tag += span;
-        let loss_mean = f64::from(bn_flat.pop().unwrap()) / ctx.workers as f64;
-        for s in bn_flat.iter_mut() {
-            *s *= inv_n;
-        }
-        t_comm += bn0.elapsed().as_secs_f64();
-        // Synced-stat aggregate for the eval path. The paper's "BN without
-        // moving average" uses *current* statistics; for evaluation we keep
-        // a recent-weighted EMA of the cross-worker synced stats (early-
-        // training stats are stale — activations rescale as params move, so
-        // a uniform mean underestimates late-run variance and detonates the
-        // eval forward pass).
-        {
-            let alpha: f32 = if state.bn_steps == 0 { 1.0 } else { 0.2 };
-            let mut off = 0;
-            for t in state.bn_running.iter_mut() {
-                let dst = t.as_f32_mut()?;
-                for d in dst.iter_mut() {
-                    *d += alpha * (bn_flat[off] - *d);
-                    off += 1;
+        for local_step in 0..ctx.steps {
+            let mut sw = Stopwatch::new();
+            let global_step = ctx.first_step + local_step;
+            // Per-step liveness tick (recv waits beat on their own; this one
+            // covers the compute-heavy stretch between collectives).
+            ep.heartbeat();
+            // Deterministic fault injection: this rank dies here, this attempt.
+            if let Some(inj) = ctx.fault.inject {
+                if inj.fires(ctx.attempt, rank, global_step) {
+                    match inj.kind {
+                        FaultKind::Panic => {
+                            panic!("injected fault: rank {rank} panics at step {global_step}")
+                        }
+                        FaultKind::Hang { millis } => {
+                            // Go silent long enough for the heartbeat monitor
+                            // to declare this rank dead, then fail out.
+                            std::thread::sleep(Duration::from_millis(millis));
+                            bail!("injected fault: rank {rank} hung at step {global_step}");
+                        }
+                        FaultKind::Error => {
+                            bail!("injected fault: rank {rank} dies at step {global_step}")
+                        }
+                    }
                 }
             }
-            state.bn_steps += 1;
-        }
+            let samples = ctx.samples_before
+                + (local_step as u64) * (ctx.per_worker_batch * ctx.workers) as u64;
+            let epoch = ctx.epoch_at(samples);
+            let total_batch = ctx.per_worker_batch * ctx.workers;
+            let lr = ctx.lr.lr(epoch) as f32;
+            let momentum = ctx.lr.momentum(epoch, total_batch) as f32;
 
-        // 5. Collect the per-bucket LARS applies. They were queued behind
-        // the gradient stream, so the lane ran them strictly after the
-        // backward pass finished; waiting here surfaces any error and
-        // fences the step (eval/export must see the updated state).
-        let apply0 = Instant::now();
-        for p in pending_applies {
-            p.wait()
-                .with_context(|| format!("rank {rank} step {global_step}: apply_step"))?;
-        }
-        let t_apply = apply0.elapsed().as_secs_f64();
+            // 1. data
+            let data_epoch = loader.next_batch(ctx.per_worker_batch, &mut batch);
+            let t_data = sw.lap("data");
 
-        if rank == 0 {
-            metrics.push(StepMetric {
-                step: global_step,
-                epoch: data_epoch,
-                loss: loss_mean,
-                lr: lr as f64,
-                momentum: momentum as f64,
-                global_batch: total_batch,
-                t_compute,
-                t_comm,
-                t_comm_hidden,
-                t_apply,
-                t_data,
-            });
-            // `eval_every` is a *step* interval: evaluate after every
-            // N-th completed global step (recorded at the completed-step
-            // count, matching the final eval's convention).
-            if let Some(vl) = &val_loader {
-                let done = global_step + 1;
-                if done % ctx.eval_every == 0 {
-                    let bn_running = &state.bn_running;
-                    // An eval failure must not abort rank 0 mid-phase: the
-                    // other ranks are already blocked in the next
-                    // all-reduce and would strand the mesh (recv has no
-                    // timeout). Finish the phase in lockstep and surface
-                    // the error after the collectives are done.
-                    match eval_over_val_split(
-                        &ctx.arch,
-                        vl,
-                        ctx.eval_batches,
-                        done,
-                        |exec, images, labels| {
-                            compute.eval_step(&sref, exec, bn_running, images, labels)
-                        },
-                    ) {
-                        Ok(e) => metrics.push_eval(e),
-                        Err(e) => {
-                            if eval_err.is_none() {
-                                eval_err =
-                                    Some(e.context(format!("rank 0 eval at step {done}")));
+            // 2+3. streaming gradients with bucket-pipelined all-reduce. The
+            // batch vectors move into the tensors (no clone); the lane hands
+            // them back in the terminal reply so their storage is reused next
+            // step.
+            let images = HostTensor::f32(img_shape.clone(), std::mem::take(&mut batch.images));
+            let labels = HostTensor::i32(
+                vec![ctx.per_worker_batch],
+                std::mem::take(&mut batch.labels),
+            );
+            let stream = compute
+                .grad_step_streaming(&sref, &grad_exec, images, labels)
+                .with_context(|| format!("rank {rank} step {global_step}: grad_step_streaming"))?;
+
+            let hp = ApplyParams {
+                lr,
+                momentum,
+                weight_decay: ctx.weight_decay,
+            };
+            staging.begin();
+            let mut pending_applies = Vec::with_capacity(plan.len());
+            let mut t_compute = 0.0f64; // stalled on the backward pass
+            let mut t_comm = 0.0f64; // exposed communication
+            let mut t_comm_hidden = 0.0f64; // reductions overlapped with backprop
+            'buckets: for k in 0..plan.len() {
+                // Wait for this bucket's gradients (reverse layer order means
+                // buckets complete strictly in plan order). Time spent blocked
+                // here is compute the pipeline could not hide.
+                let wait0 = Instant::now();
+                while !staging.bucket_ready(&plan, k) {
+                    let Some((idx, t)) = stream.recv_grad() else {
+                        // stream ended early: the terminal reply below carries
+                        // the backend's actual error
+                        break 'buckets;
+                    };
+                    staging
+                        .place(&plan, idx, t)
+                        .with_context(|| format!("rank {rank} step {global_step}: grad stream"))?;
+                }
+                // Drain whatever else backprop already produced, so the
+                // hidden/exposed split below reflects the backend's progress.
+                while let Some((idx, t)) = stream.try_recv_grad() {
+                    staging
+                        .place(&plan, idx, t)
+                        .with_context(|| format!("rank {rank} step {global_step}: grad stream"))?;
+                }
+                t_compute += wait0.elapsed().as_secs_f64();
+
+                // Reduce bucket k in its own tag window while the lane keeps
+                // producing buckets k+1.. (hidden comm), then queue its LARS
+                // update behind the stream.
+                let hidden_before = !staging.all_placed(&plan);
+                let red0 = Instant::now();
+                let flat = staging.flat_mut(k);
+                ctx.collective
+                    .all_reduce(ep, flat, ctx.grad_wire, tag)
+                    .with_context(|| format!("rank {rank} step {global_step}: bucket {k}"))?;
+                tag += span;
+                for g in flat.iter_mut() {
+                    *g *= inv_n;
+                }
+                let reduce_secs = red0.elapsed().as_secs_f64();
+                let grads = staging.take_bucket(&plan, k)?;
+                // Conservative attribution: a reduction counts as hidden only
+                // if backprop was still streaming when it *ended* too (drain
+                // first so the check sees the backend's real progress). A
+                // reduction the stream outran mid-flight books as exposed —
+                // the headline exposed-comm fraction can only be overstated,
+                // never flattered.
+                while let Some((idx, t)) = stream.try_recv_grad() {
+                    staging
+                        .place(&plan, idx, t)
+                        .with_context(|| format!("rank {rank} step {global_step}: grad stream"))?;
+                }
+                if hidden_before && !staging.all_placed(&plan) {
+                    t_comm_hidden += reduce_secs;
+                } else {
+                    t_comm += reduce_secs;
+                }
+                pending_applies.push(compute.apply_partial_async(
+                    &sref,
+                    plan.bucket(k).params.start,
+                    grads,
+                    hp,
+                )?);
+            }
+
+            // Terminal reply: [loss, bn stats..] + the batch tensors back.
+            let (outs, img_back, lab_back) = stream
+                .finish()
+                .with_context(|| format!("rank {rank} step {global_step}: grad_step_streaming"))?;
+            if !staging.all_placed(&plan) {
+                bail!("rank {rank} step {global_step}: gradient stream ended early");
+            }
+            batch.images = img_back.into_f32()?;
+            batch.labels = lab_back.into_i32()?;
+            let loss_local = outs[0].scalar()?;
+            let bn_stats = &outs[1..1 + n_bn];
+
+            // 4. BN-stat all-reduce (FP32 wire, paper §3.2). The scalar step
+            // loss rides in this buffer — NOT in the gradient buffer — so the
+            // reported loss is a pure-FP32 reduction even on the FP16 wire.
+            // Nothing is left to hide behind, so this window is exposed comm.
+            let bn0 = Instant::now();
+            flatten_into(bn_stats, &mut bn_flat)?;
+            bn_flat.push(loss_local);
+            ctx.collective.all_reduce(ep, &mut bn_flat, Wire::F32, tag)?;
+            tag += span;
+            let loss_mean = f64::from(bn_flat.pop().unwrap()) / ctx.workers as f64;
+            for s in bn_flat.iter_mut() {
+                *s *= inv_n;
+            }
+            t_comm += bn0.elapsed().as_secs_f64();
+            // Synced-stat aggregate for the eval path. The paper's "BN without
+            // moving average" uses *current* statistics; for evaluation we keep
+            // a recent-weighted EMA of the cross-worker synced stats (early-
+            // training stats are stale — activations rescale as params move, so
+            // a uniform mean underestimates late-run variance and detonates the
+            // eval forward pass).
+            {
+                let alpha: f32 = if state.bn_steps == 0 { 1.0 } else { 0.2 };
+                let mut off = 0;
+                for t in state.bn_running.iter_mut() {
+                    let dst = t.as_f32_mut()?;
+                    for d in dst.iter_mut() {
+                        *d += alpha * (bn_flat[off] - *d);
+                        off += 1;
+                    }
+                }
+                state.bn_steps += 1;
+            }
+
+            // 5. Collect the per-bucket LARS applies. They were queued behind
+            // the gradient stream, so the lane ran them strictly after the
+            // backward pass finished; waiting here surfaces any error and
+            // fences the step (eval/export must see the updated state).
+            let apply0 = Instant::now();
+            for p in pending_applies {
+                p.wait()
+                    .with_context(|| format!("rank {rank} step {global_step}: apply_step"))?;
+            }
+            let t_apply = apply0.elapsed().as_secs_f64();
+
+            if rank == 0 {
+                metrics.push(StepMetric {
+                    step: global_step,
+                    epoch: data_epoch,
+                    loss: loss_mean,
+                    lr: lr as f64,
+                    momentum: momentum as f64,
+                    global_batch: total_batch,
+                    t_compute,
+                    t_comm,
+                    t_comm_hidden,
+                    t_apply,
+                    t_data,
+                });
+                // `eval_every` is a *step* interval: evaluate after every
+                // N-th completed global step (recorded at the completed-step
+                // count, matching the final eval's convention).
+                if let Some(vl) = &val_loader {
+                    let done = global_step + 1;
+                    if done % ctx.eval_every == 0 {
+                        let bn_running = &state.bn_running;
+                        // An eval failure must not abort rank 0 mid-phase: the
+                        // other ranks are already blocked in the next
+                        // all-reduce and would strand the mesh (recv has no
+                        // timeout). Finish the phase in lockstep and surface
+                        // the error after the collectives are done.
+                        match eval_over_val_split(
+                            &ctx.arch,
+                            vl,
+                            ctx.eval_batches,
+                            done,
+                            |exec, images, labels| {
+                                compute.eval_step(&sref, exec, bn_running, images, labels)
+                            },
+                        ) {
+                            Ok(e) => metrics.push_eval(e),
+                            Err(e) => {
+                                if eval_err.is_none() {
+                                    eval_err =
+                                        Some(e.context(format!("rank 0 eval at step {done}")));
+                                }
                             }
                         }
                     }
                 }
             }
         }
+        Ok(())
+    })();
+    if let Err(e) = steps_result {
+        // Unwind path: release the lane-resident state so the lane holds
+        // nothing of this failed attempt (ignore the result — the lane
+        // itself may be the thing that failed).
+        let _ = compute.drop_state(sref);
+        return Err(e);
     }
 
     // Phase exit: move the trained state back out (export consumes the

@@ -37,6 +37,18 @@
 //!     PJRT C API. The workspace vendors an API stub of the `xla` crate so
 //!     this feature always compiles; swap in the real crate to execute.
 //!
+//! The stack is **fault tolerant**: collectives are abortable (a shared
+//! [`collectives::Health`] table unwinds every blocked `recv` with a typed
+//! [`collectives::MeshError`] when a rank dies), a heartbeat monitor
+//! detects hung or crashed ranks (`config::FaultConfig` —
+//! `heartbeat_interval` / `rank_timeout` / `max_restarts`), and the
+//! coordinator **elastically re-plans a failed phase on the survivors**:
+//! same global batch and LR/momentum schedule, per-worker batch
+//! refactored, collective re-derived (awkward survivor counts fall back
+//! to ring), replayed from the phase-boundary state with the exact sample
+//! stream. `simnet::ClusterModel::recovery_time` prices the
+//! detect + re-plan + replay cost. See `README.md` § Fault tolerance.
+//!
 //! Python never runs at training time under either backend; the
 //! coordinator drives everything from Rust worker threads.
 //!

@@ -239,6 +239,26 @@ impl ClusterModel {
 // `(bytes/group) / groups`. The expression above reduces to exactly that —
 // kept explicit to mirror the derivation in the paper's §2.2 comparison.
 
+/// Wall-clock cost of one elastic-recovery event (rank death mid-phase):
+/// detection latency + re-planning + replaying the aborted phase on the
+/// survivors. See [`ClusterModel::recovery_time`].
+#[derive(Debug, Clone)]
+pub struct RecoveryCost {
+    /// Worst-case failure-detection latency (the heartbeat `rank_timeout`).
+    pub detect_secs: f64,
+    /// Coordinator re-planning plus re-distributing the FP32 training
+    /// state to the survivor mesh.
+    pub replan_secs: f64,
+    /// Re-running the aborted phase's steps on the degraded world.
+    pub replay_secs: f64,
+}
+
+impl RecoveryCost {
+    pub fn total_secs(&self) -> f64 {
+        self.detect_secs + self.replan_secs + self.replay_secs
+    }
+}
+
 /// Per-step time breakdown for a full training step.
 #[derive(Debug, Clone)]
 pub struct StepBreakdown {
@@ -316,6 +336,50 @@ impl ClusterModel {
             bn_comm_secs: bn,
             exposed_comm_secs: (drain - compute).max(0.0) + bn,
             total_secs: drain.max(compute) + bn,
+        }
+    }
+
+    /// Price one elastic-recovery event: the wall-clock a rank death costs
+    /// the run under the coordinator's detect → re-plan → replay sequence.
+    ///
+    /// - **detect**: the heartbeat monitor cannot declare a rank dead
+    ///   before its beat is `rank_timeout` stale (a crashed rank is caught
+    ///   faster via the abort flag, so this is the worst case — a hang).
+    /// - **re-plan**: coordinator control work (a small constant) plus one
+    ///   full-state broadcast-class collective on the survivors: the FP32
+    ///   parameters + momenta the replay attempt re-distributes, priced as
+    ///   an all-reduce of `4 × grad_bytes` (two FP32 tensors vs one FP16).
+    /// - **replay**: the aborted phase re-runs from its boundary state —
+    ///   `replay_steps` full steps on the degraded world.
+    pub fn recovery_time(
+        &self,
+        algo_after: Algo,
+        survivors: usize,
+        per_worker_batch: usize,
+        grad_bytes: f64,
+        bn_bytes: f64,
+        replay_steps: usize,
+        rank_timeout_secs: f64,
+    ) -> RecoveryCost {
+        const REPLAN_CONTROL_SECS: f64 = 0.05;
+        let state_bytes = 4.0 * grad_bytes; // fp32 params + momenta vs fp16 grads
+        let replan_secs = REPLAN_CONTROL_SECS
+            + self
+                .collective_cost(algo_after, survivors, state_bytes)
+                .total_secs();
+        let step = self
+            .step_time(
+                algo_after,
+                survivors,
+                per_worker_batch,
+                grad_bytes,
+                bn_bytes,
+            )
+            .total_secs();
+        RecoveryCost {
+            detect_secs: rank_timeout_secs,
+            replan_secs,
+            replay_secs: replay_steps as f64 * step,
         }
     }
 
@@ -572,6 +636,90 @@ mod tests {
                 o8.total_secs
             );
         }
+    }
+
+    /// Recovery cost decomposes additively and scales with its inputs:
+    /// detection is exactly the timeout, replay is linear in steps, and a
+    /// bigger timeout only moves the detect term.
+    #[test]
+    fn recovery_time_decomposition() {
+        let m = ClusterModel::abci_v100();
+        let algo = torus_at(1023); // degraded world after losing 1 of 1024
+        let r = m.recovery_time(
+            algo,
+            1023,
+            32,
+            RESNET50_GRAD_BYTES_FP16,
+            RESNET50_BN_BYTES_FP32,
+            100,
+            30.0,
+        );
+        assert_eq!(r.detect_secs, 30.0);
+        assert!(
+            (r.total_secs() - (r.detect_secs + r.replan_secs + r.replay_secs)).abs() < 1e-12
+        );
+        // replay = steps × step_time on the degraded world, exactly
+        let step = m
+            .step_time(algo, 1023, 32, RESNET50_GRAD_BYTES_FP16, RESNET50_BN_BYTES_FP32)
+            .total_secs();
+        assert!((r.replay_secs - 100.0 * step).abs() < 1e-9);
+        // re-planning ships fp32 state: strictly pricier than one fp16
+        // gradient all-reduce on the same world
+        let one_grad = m
+            .collective_cost(algo, 1023, RESNET50_GRAD_BYTES_FP16)
+            .total_secs();
+        assert!(r.replan_secs > one_grad);
+        // zero replay steps leaves only detect + replan
+        let r0 = m.recovery_time(
+            algo,
+            1023,
+            32,
+            RESNET50_GRAD_BYTES_FP16,
+            RESNET50_BN_BYTES_FP32,
+            0,
+            30.0,
+        );
+        assert_eq!(r0.replay_secs, 0.0);
+        assert!(r0.total_secs() < r.total_secs());
+    }
+
+    /// A tighter rank_timeout shrinks recovery cost one-for-one; replaying
+    /// a long phase dominates the bill at realistic step counts — the
+    /// quantitative argument for phase-boundary (not end-of-run) recovery.
+    #[test]
+    fn recovery_detect_vs_replay_tradeoff() {
+        let m = ClusterModel::abci_v100();
+        let algo = torus_at(255);
+        let fast = m.recovery_time(
+            algo,
+            255,
+            32,
+            RESNET50_GRAD_BYTES_FP16,
+            RESNET50_BN_BYTES_FP32,
+            50,
+            1.0,
+        );
+        let slow = m.recovery_time(
+            algo,
+            255,
+            32,
+            RESNET50_GRAD_BYTES_FP16,
+            RESNET50_BN_BYTES_FP32,
+            50,
+            30.0,
+        );
+        assert!((slow.total_secs() - fast.total_secs() - 29.0).abs() < 1e-9);
+        // an epoch-scale replay (thousands of steps) dwarfs a 30 s timeout
+        let epoch = m.recovery_time(
+            algo,
+            255,
+            32,
+            RESNET50_GRAD_BYTES_FP16,
+            RESNET50_BN_BYTES_FP32,
+            5000,
+            30.0,
+        );
+        assert!(epoch.replay_secs > epoch.detect_secs + epoch.replan_secs);
     }
 
     #[test]

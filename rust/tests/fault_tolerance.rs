@@ -1,0 +1,380 @@
+//! Fault-tolerance tests: the dead-rank deadlock fix, end to end.
+//!
+//! Three layers are exercised:
+//!   * **transport/collectives** — kill a rank mid-collective under every
+//!     algorithm and assert the survivors unwind with a typed
+//!     [`MeshError`](flashsgd::collectives::MeshError) in bounded time
+//!     (pre-PR: every survivor blocked forever in `recv`),
+//!   * **coordinator** — a rank panic/error/hang mid-phase surfaces as a
+//!     run error (fault tolerance off) or an elastic recovery (fault
+//!     tolerance on): the phase replays from its boundary state on the
+//!     survivors with the global batch — and the LR/momentum schedule —
+//!     unchanged,
+//!   * **no-churn** — with fault tolerance enabled but nothing injected,
+//!     the training output is bit-identical to the subsystem being off.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use flashsgd::collectives::{self, Collective, Mesh, MeshError, Wire};
+use flashsgd::config::{FaultConfig, InjectedFault, TrainConfig};
+use flashsgd::coordinator::Trainer;
+use flashsgd::sched::{BatchSchedule, LrSchedule};
+
+/// Generous wall-clock bound for "unwinds instead of deadlocking". The
+/// actual unwind is one 1 ms health tick; the slack absorbs CI scheduling.
+const UNWIND_BOUND: Duration = Duration::from_secs(30);
+
+fn base_config(name: &str, ranks: usize, steps: usize) -> TrainConfig {
+    TrainConfig {
+        name: name.into(),
+        arch: "tiny".into(),
+        collective: "torus".into(),
+        grad_wire: "fp16".into(),
+        label_smoothing: 0.1,
+        lr: LrSchedule::Const { lr: 0.5, momentum: 0.9 },
+        batch: BatchSchedule::constant(8, ranks, 8),
+        weight_decay: 5e-5,
+        seed: 7,
+        max_steps: steps,
+        eval_every: 0,
+        eval_batches: 4,
+        train_size: 2048,
+        compute_lanes: 0,
+        bucket_bytes: 8192,
+        fault: FaultConfig::default(),
+    }
+}
+
+/// Run `coll` across `n` ranks where rank `victim` never participates:
+/// it waits `delay`, then marks itself dead. Returns each survivor's
+/// result and the total wall time. Pre-PR this deadlocked forever; now
+/// every survivor must unwind with a `MeshError`.
+fn run_with_dead_rank(
+    coll: Box<dyn Collective>,
+    n: usize,
+    victim: usize,
+    delay: Duration,
+) -> (Vec<(usize, anyhow::Error)>, Duration) {
+    let coll: std::sync::Arc<dyn Collective> = std::sync::Arc::from(coll);
+    let eps = Mesh::new(n);
+    let t0 = Instant::now();
+    let (tx, rx) = mpsc::channel();
+    let handles: Vec<_> = eps
+        .into_iter()
+        .map(|mut ep| {
+            let coll = coll.clone();
+            let tx = tx.clone();
+            thread::spawn(move || {
+                let rank = ep.rank();
+                if rank == victim {
+                    // Simulated death: go silent, then get declared dead
+                    // (in production the monitor or a peer's deadline does
+                    // the declaring; here the "corpse" flags itself).
+                    thread::sleep(delay);
+                    ep.mark_dead(rank);
+                    return;
+                }
+                let mut buf: Vec<f32> = (0..256).map(|i| (rank + i) as f32).collect();
+                let res = coll.all_reduce(&mut ep, &mut buf, Wire::F16, 0);
+                tx.send((rank, res)).unwrap();
+            })
+        })
+        .collect();
+    drop(tx);
+    let mut errs = Vec::new();
+    for (rank, res) in rx {
+        let err = res.expect_err(&format!(
+            "rank {rank} must not complete an all-reduce missing rank {victim}"
+        ));
+        errs.push((rank, err));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    (errs, t0.elapsed())
+}
+
+/// Tentpole regression, per algorithm: a dead rank mid-collective unwinds
+/// every survivor with a typed `MeshError` in bounded time.
+#[test]
+fn dead_rank_unwinds_every_algorithm() {
+    let n = 8usize;
+    let cases: Vec<(&str, Box<dyn Collective>)> = vec![
+        ("ring", collectives::by_name("ring", n).unwrap()),
+        ("halving-doubling", collectives::by_name("halving-doubling", n).unwrap()),
+        ("hierarchical:2", collectives::by_name("hierarchical:2", n).unwrap()),
+        ("torus:4x2", collectives::by_name("torus:4x2", n).unwrap()),
+    ];
+    for (spec, coll) in cases {
+        let (errs, elapsed) = run_with_dead_rank(coll, n, 3, Duration::from_millis(20));
+        assert!(
+            elapsed < UNWIND_BOUND,
+            "{spec}: survivors took {elapsed:?} to unwind"
+        );
+        assert_eq!(errs.len(), n - 1, "{spec}: every survivor must error");
+        for (rank, err) in errs {
+            let mesh_err = err.downcast_ref::<MeshError>();
+            assert!(
+                mesh_err.is_some(),
+                "{spec}: rank {rank} error is not a MeshError: {err:#}"
+            );
+            match mesh_err.unwrap() {
+                MeshError::PeerDead { rank: dead } => assert_eq!(*dead, 3, "{spec}"),
+                MeshError::Aborted { origin } => assert_eq!(*origin, 3, "{spec}"),
+            }
+        }
+    }
+}
+
+/// Same regression through the bucketed pipeline schedule (many tag
+/// windows in flight): survivors unwind mid-bucket, cleanly.
+#[test]
+fn dead_rank_unwinds_bucketed_schedule() {
+    let n = 4usize;
+    let coll: std::sync::Arc<dyn Collective> =
+        std::sync::Arc::from(collectives::by_name("torus:2x2", n).unwrap());
+    let eps = Mesh::new(n);
+    let t0 = Instant::now();
+    let handles: Vec<_> = eps
+        .into_iter()
+        .map(|mut ep| {
+            let coll = coll.clone();
+            thread::spawn(move || -> (usize, anyhow::Result<u64>) {
+                let rank = ep.rank();
+                if rank == 1 {
+                    thread::sleep(Duration::from_millis(20));
+                    ep.mark_dead(rank);
+                    return (rank, Ok(0));
+                }
+                let mut bufs: Vec<Vec<f32>> =
+                    (0..6).map(|b| vec![(rank * 10 + b) as f32; 64]).collect();
+                let res =
+                    collectives::bucketed::all_reduce_buckets(&*coll, &mut ep, &mut bufs, Wire::F16, 0);
+                (rank, res)
+            })
+        })
+        .collect();
+    for h in handles {
+        let (rank, res) = h.join().unwrap();
+        if rank != 1 {
+            let err = res.expect_err("survivor must unwind");
+            assert!(
+                err.downcast_ref::<MeshError>().is_some(),
+                "rank {rank}: {err:#}"
+            );
+        }
+    }
+    assert!(t0.elapsed() < UNWIND_BOUND);
+}
+
+/// Satellite 3: a prime worker count under the auto `"torus"` spec routes
+/// to the flat ring — same object, same wire behaviour — instead of a
+/// degenerate 7x1 torus paying phase overhead for nothing.
+#[test]
+fn prime_torus_routes_to_ring_on_the_wire() {
+    let n = 7usize;
+    let auto = collectives::by_name("torus", n).unwrap();
+    assert_eq!(auto.name(), "ring", "prime auto-torus must be the real ring");
+    assert_eq!(auto.p2p_steps(n), collectives::RingAllReduce.p2p_steps(n));
+    assert_eq!(auto.tag_span(n), collectives::RingAllReduce.tag_span(n));
+
+    // On the wire: identical results and identical traffic counters.
+    let run = |coll: std::sync::Arc<dyn Collective>| {
+        let eps = Mesh::new(n);
+        let counters = eps[0].counters_arc();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                let coll = coll.clone();
+                thread::spawn(move || {
+                    let rank = ep.rank();
+                    let mut buf: Vec<f32> =
+                        (0..210).map(|i| ((rank * 31 + i) % 17) as f32).collect();
+                    coll.all_reduce(&mut ep, &mut buf, Wire::F32, 0).unwrap();
+                    buf
+                })
+            })
+            .collect();
+        let results: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        (results, counters.snapshot())
+    };
+    let (r_auto, c_auto) = run(std::sync::Arc::from(auto));
+    let (r_ring, c_ring) = run(std::sync::Arc::new(collectives::RingAllReduce));
+    assert_eq!(r_auto, r_ring, "auto-torus(7) and ring must agree bitwise");
+    assert_eq!(c_auto, c_ring, "auto-torus(7) and ring must move identical bytes");
+
+    // Recovery re-planning uses the same rule, even from a fixed spec.
+    let elastic = collectives::by_name_elastic("torus:4x2", 7, true).unwrap();
+    assert_eq!(elastic.name(), "ring");
+    let elastic = collectives::by_name_elastic("torus:4x2", 6, true).unwrap();
+    assert_eq!(elastic.name(), "torus2d(3x2)");
+    let elastic = collectives::by_name_elastic("hierarchical:4", 6, true).unwrap();
+    assert_eq!(elastic.name(), "torus2d(3x2)");
+    // not degraded -> misfit specs still fail loudly
+    assert!(collectives::by_name_elastic("torus:4x2", 7, false).is_err());
+    assert!(collectives::by_name_elastic("hierarchical:4", 6, false).is_err());
+}
+
+/// Satellite 1 regression: with fault tolerance *off*, a rank panicking
+/// mid-phase surfaces as a run error in bounded time (pre-PR the other
+/// ranks blocked forever in their next collective and `run()` never
+/// returned).
+#[test]
+fn rank_panic_surfaces_as_error_in_bounded_time() {
+    let mut cfg = base_config("ft-panic", 4, 8);
+    cfg.fault = FaultConfig {
+        inject: Some(InjectedFault::panic_at(2, 3)),
+        ..FaultConfig::disabled()
+    };
+    let t0 = Instant::now();
+    let err = Trainer::new(cfg).unwrap().run().unwrap_err();
+    assert!(
+        t0.elapsed() < UNWIND_BOUND,
+        "run took {:?} to fail",
+        t0.elapsed()
+    );
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("rank 2 panicked"),
+        "error must name the panicking rank: {msg}"
+    );
+}
+
+/// The tentpole, end to end: rank 2 dies mid-phase, the coordinator
+/// detects it, re-plans the phase on the survivors (4 workers × batch 8 →
+/// 2 workers × batch 16: global batch preserved, so the step count and
+/// schedule are untouched) and the run completes with the recovery on
+/// record and all survivors still bit-identical.
+#[test]
+fn mid_phase_death_recovers_on_survivors() {
+    let mut cfg = base_config("ft-recover", 4, 12);
+    cfg.fault.inject = Some(InjectedFault::error_at(2, 6));
+    let report = Trainer::new(cfg).unwrap().run().unwrap();
+
+    assert_eq!(report.summary.steps, 12, "recovery must not lose steps");
+    assert_eq!(report.recoveries.len(), 1);
+    let r = &report.recoveries[0];
+    assert_eq!(r.dead_ranks, vec![2]);
+    assert_eq!(r.workers_before, 4);
+    // global batch 32 on ≤3 survivors: 3 ∤ 32, so 2 workers × 16.
+    assert_eq!(r.workers_after, 2);
+    assert_eq!(r.per_worker_after, 16);
+    assert!(report.summary.last_loss.is_finite());
+    // the schedule was preserved: per-step global batch never changed
+    assert!(report.metrics.steps.iter().all(|s| s.global_batch == 32));
+}
+
+/// Hang detection: a rank going *silent* (no error, no panic) is declared
+/// dead by the heartbeat monitor once its beat goes `rank_timeout` stale,
+/// and the run still recovers. This is the failure mode fast error
+/// propagation cannot catch.
+#[test]
+fn hung_rank_is_detected_and_recovered() {
+    let mut cfg = base_config("ft-hang", 4, 10);
+    cfg.fault.heartbeat_interval = Duration::from_millis(50);
+    cfg.fault.rank_timeout = Duration::from_millis(1500);
+    cfg.fault.inject = Some(InjectedFault::hang_at(1, 4, 5000));
+    let t0 = Instant::now();
+    let report = Trainer::new(cfg).unwrap().run().unwrap();
+    assert_eq!(report.summary.steps, 10);
+    assert_eq!(report.recoveries.len(), 1);
+    assert_eq!(report.recoveries[0].dead_ranks, vec![1]);
+    // detection at ~1.5 s + joining the 5 s sleeper bounds the wall time;
+    // the point is it terminates promptly, not after some giant timeout.
+    assert!(t0.elapsed() < Duration::from_secs(60));
+}
+
+/// Exhausted restart budget: a rank that dies on every attempt turns the
+/// death fatal once `max_restarts` is spent, with the budget named in the
+/// error.
+#[test]
+fn max_restarts_exhaustion_is_fatal() {
+    let mut cfg = base_config("ft-budget", 4, 8);
+    cfg.fault.max_restarts = 1;
+    // fires on attempts 0 and 1: the retry dies too (rank 0 survives both
+    // plans, so the injection target exists on the degraded world as well)
+    cfg.fault.inject = Some(InjectedFault {
+        attempts: 2,
+        ..InjectedFault::error_at(0, 3)
+    });
+    let err = Trainer::new(cfg).unwrap().run().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("max_restarts"),
+        "error must name the exhausted budget: {msg}"
+    );
+}
+
+/// No-churn guarantee: with nothing injected, fault tolerance enabled vs
+/// fully disabled produces bit-identical training output — the detection
+/// machinery (heartbeats, bounded-tick recv, monitor thread) must not
+/// perturb numerics anywhere.
+#[test]
+fn fault_tolerance_no_churn_is_bit_identical() {
+    let dir = std::env::temp_dir().join(format!("fsgd-ft-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let run = |name: &str, fault: FaultConfig| {
+        let mut cfg = base_config(name, 4, 10);
+        cfg.fault = fault;
+        let ckpt = dir.join(format!("{name}.ckpt"));
+        let report = Trainer::new(cfg)
+            .unwrap()
+            .with_checkpoint(&ckpt)
+            .run()
+            .unwrap();
+        (report, std::fs::read(&ckpt).unwrap())
+    };
+    let (rep_on, bytes_on) = run("ft-on", FaultConfig::default());
+    let (rep_off, bytes_off) = run("ft-off", FaultConfig::disabled());
+    assert_eq!(
+        bytes_on, bytes_off,
+        "fault tolerance must be a zero-numerics-impact feature"
+    );
+    assert_eq!(rep_on.summary.steps, rep_off.summary.steps);
+    assert_eq!(
+        rep_on.summary.last_loss.to_bits(),
+        rep_off.summary.last_loss.to_bits()
+    );
+    assert!(rep_on.recoveries.is_empty() && rep_off.recoveries.is_empty());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Satellite 2: resuming a checkpoint under a different batch schedule is
+/// caught by the samples cross-check instead of silently desyncing the
+/// data stream.
+#[test]
+fn checkpoint_resume_rejects_mismatched_schedule() {
+    let dir = std::env::temp_dir().join(format!("fsgd-ftck-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("mid.ckpt");
+    // train 4 steps at global batch 32 -> checkpoint says 128 samples
+    Trainer::new(base_config("ft-ck-save", 4, 4))
+        .unwrap()
+        .with_checkpoint(&ckpt)
+        .run()
+        .unwrap();
+    // resume under a *doubled* per-worker batch: step 4 now means 256
+    // samples — the resume must bail, not continue on the wrong stream
+    let mut cfg = base_config("ft-ck-bad", 4, 8);
+    cfg.batch = BatchSchedule::constant(16, 4, 8);
+    let err = Trainer::new(cfg)
+        .unwrap()
+        .with_resume(&ckpt)
+        .run()
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("checkpoint mismatch"),
+        "must flag the schedule mismatch: {msg}"
+    );
+    // sanity: the unchanged schedule still resumes fine
+    let report = Trainer::new(base_config("ft-ck-good", 4, 8))
+        .unwrap()
+        .with_resume(&ckpt)
+        .run()
+        .unwrap();
+    assert_eq!(report.summary.steps, 4); // the remaining 4 of 8
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -30,6 +30,7 @@ fn base_config(name: &str, ranks: usize, steps: usize) -> TrainConfig {
         // bucketed pipeline; dedicated tests below pin bucket_bytes = 0
         // (the serial single-bucket schedule) against it.
         bucket_bytes: 8192,
+        fault: flashsgd::config::FaultConfig::default(),
     }
 }
 

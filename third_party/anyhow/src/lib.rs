@@ -11,18 +11,27 @@
 //! * `?` converts any `std::error::Error + Send + Sync + 'static`,
 //!   preserving its source chain;
 //! * `.context(..)` / `.with_context(..)` wrap errors (and turn `None` into
-//!   an error).
+//!   an error);
+//! * [`Error::new`] keeps the typed error value, and
+//!   [`Error::downcast_ref`] finds it again through any depth of added
+//!   context — callers use this to branch on *typed* failures (e.g. the
+//!   transport's `MeshError`) without string matching.
 //!
 //! [`Error`] deliberately does **not** implement `std::error::Error`, just
 //! like the real `anyhow::Error` — that is what keeps the blanket `From`
 //! impl coherent.
 
+use std::any::Any;
 use std::fmt;
 
 /// A context-carrying error: the outermost message plus the chain of causes.
 pub struct Error {
     msg: String,
     source: Option<Box<Error>>,
+    /// The original typed error value, when constructed from one
+    /// ([`Error::new`] or the `From`/`?` conversion); recovered by
+    /// [`Error::downcast_ref`].
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 /// `Result` defaulting to [`Error`], as in the real crate.
@@ -34,6 +43,17 @@ impl Error {
         Error {
             msg: message.to_string(),
             source: None,
+            payload: None,
+        }
+    }
+
+    /// Build an error from a typed error value, keeping the value so
+    /// [`Error::downcast_ref`] can recover it through later context wraps.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Self {
+        Error {
+            msg: error.to_string(),
+            source: None,
+            payload: Some(Box::new(error)),
         }
     }
 
@@ -42,7 +62,22 @@ impl Error {
         Error {
             msg: context.to_string(),
             source: Some(Box::new(self)),
+            payload: None,
         }
+    }
+
+    /// The typed error value of type `E` anywhere in the chain, if this
+    /// error was built from one (mirrors `anyhow::Error::downcast_ref`,
+    /// which looks through context).
+    pub fn downcast_ref<E: 'static>(&self) -> Option<&E> {
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            if let Some(p) = e.payload.as_ref().and_then(|p| p.downcast_ref::<E>()) {
+                return Some(p);
+            }
+            cur = e.source.as_deref();
+        }
+        None
     }
 
     /// The messages of the chain, outermost first.
@@ -99,6 +134,9 @@ impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
         while let Some(m) = msgs.pop() {
             err = err.context(m);
         }
+        // The outermost node is `e` itself; keep the typed value there so
+        // `downcast_ref::<E>()` works like the real crate's.
+        err.payload = Some(Box::new(e));
         err
     }
 }
@@ -207,6 +245,27 @@ mod tests {
             bail!("stopped at {}", 9);
         }
         assert_eq!(format!("{}", f().unwrap_err()), "stopped at 9");
+    }
+
+    #[test]
+    fn downcast_ref_finds_typed_value_through_context() {
+        let e = Error::new(io_err())
+            .context("while reading config")
+            .context("run failed");
+        let io = e.downcast_ref::<std::io::Error>().expect("typed value lost");
+        assert_eq!(io.kind(), std::io::ErrorKind::NotFound);
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
+
+        // `?` conversion keeps the typed value too
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err().context("outer");
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
+
+        // plain message errors carry no payload
+        assert!(anyhow!("plain").downcast_ref::<std::io::Error>().is_none());
     }
 
     #[test]
