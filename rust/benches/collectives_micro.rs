@@ -12,13 +12,20 @@ use std::thread;
 
 use flashsgd::cluster::best_grid;
 use flashsgd::collectives::{
-    Collective, HierarchicalAllReduce, Mesh, RingAllReduce, TorusAllReduce, Wire,
+    Collective, HierarchicalAllReduce, Mesh, RingAllReduce, TcpMesh, TorusAllReduce, Transport,
+    Wire,
 };
 use flashsgd::util::timer::{bench_adaptive, fmt_ns};
 
-/// One timed all-reduce across a fresh mesh of `n` ranks.
-fn run_once(coll: &Arc<dyn Collective>, n: usize, elems: usize, wire: Wire) -> (f64, u64) {
-    let eps = Mesh::new(n);
+/// One timed all-reduce over a pre-built set of endpoints. The clock
+/// starts *after* the mesh is up, so memory and TCP rows time the same
+/// thing: the reduction itself, not socket setup.
+fn run_once_on<T: Transport + Send + 'static>(
+    eps: Vec<T>,
+    coll: &Arc<dyn Collective>,
+    elems: usize,
+    wire: Wire,
+) -> (f64, u64) {
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = eps
         .into_iter()
@@ -37,6 +44,21 @@ fn run_once(coll: &Arc<dyn Collective>, n: usize, elems: usize, wire: Wire) -> (
         sent = h.join().unwrap();
     }
     (t0.elapsed().as_secs_f64(), sent)
+}
+
+/// One timed all-reduce across a fresh in-memory mesh of `n` ranks.
+fn run_once(coll: &Arc<dyn Collective>, n: usize, elems: usize, wire: Wire) -> (f64, u64) {
+    run_once_on(Mesh::new(n), coll, elems, wire)
+}
+
+/// Same, across a fresh loopback-TCP mesh — real sockets, framed wire.
+fn run_once_tcp(coll: &Arc<dyn Collective>, n: usize, elems: usize, wire: Wire) -> (f64, u64) {
+    run_once_on(
+        TcpMesh::loopback(n).expect("loopback mesh"),
+        coll,
+        elems,
+        wire,
+    )
 }
 
 fn main() {
@@ -105,6 +127,48 @@ fn main() {
                 let _ = run_once(&coll, n, 1 << 20 | 1 << 19, Wire::F16);
             });
             println!("{:<16} {:>7} {:>14} {:>12}", name, n, fmt_ns(r.mean_ns), steps);
+        }
+    }
+
+    // Transport comparison: the identical schedule over the in-memory
+    // mesh and over loopback TCP (framed wire, reader threads). The
+    // delta is the full codec + kernel-socket cost per reduction; byte
+    // counters must agree exactly — both bill logical payload only.
+    println!("\ntransport sweep: memory vs loopback TCP, 8 ranks, fp16 wire:");
+    println!(
+        "{:<16} {:>10} {:>14} {:>14} {:>9}",
+        "algo", "elems", "memory", "tcp", "tcp/mem"
+    );
+    {
+        let n = 8usize;
+        let (x, y) = best_grid(n);
+        let pair: Vec<(&str, Arc<dyn Collective>)> = vec![
+            ("ring", Arc::new(RingAllReduce)),
+            ("torus", Arc::new(TorusAllReduce::new(x, y))),
+        ];
+        for (name, coll) in &pair {
+            for elems in [1usize << 12, 1 << 16, 1 << 20] {
+                let rm = bench_adaptive(&format!("{name}/{elems}/mem"), 250.0, || {
+                    let _ = run_once(coll, n, elems, Wire::F16);
+                });
+                let rt = bench_adaptive(&format!("{name}/{elems}/tcp"), 250.0, || {
+                    let _ = run_once_tcp(coll, n, elems, Wire::F16);
+                });
+                let (_, mem_bytes) = run_once(coll, n, elems, Wire::F16);
+                let (_, tcp_bytes) = run_once_tcp(coll, n, elems, Wire::F16);
+                assert_eq!(
+                    mem_bytes, tcp_bytes,
+                    "{name}: transports disagree on wire bytes"
+                );
+                println!(
+                    "{:<16} {:>10} {:>14} {:>14} {:>8.2}x",
+                    name,
+                    elems,
+                    fmt_ns(rm.mean_ns),
+                    fmt_ns(rt.mean_ns),
+                    rt.mean_secs() / rm.mean_secs()
+                );
+            }
         }
     }
 

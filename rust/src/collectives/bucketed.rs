@@ -24,7 +24,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use super::primitives::Wire;
-use super::transport::Endpoint;
+use super::transport::Transport;
 use super::Collective;
 use crate::runtime::HostTensor;
 
@@ -226,7 +226,7 @@ impl BucketStaging {
 /// first tag after the last window.
 pub fn all_reduce_buckets(
     coll: &dyn Collective,
-    ep: &mut Endpoint,
+    ep: &mut dyn Transport,
     bufs: &mut [Vec<f32>],
     wire: Wire,
     tag_base: u64,

@@ -15,20 +15,25 @@
 use anyhow::{bail, Result};
 
 use super::primitives::Wire;
-use super::transport::{Endpoint, Payload};
+use super::transport::{frame, Payload, Transport};
 use super::Collective;
-use crate::util::half;
 
 /// Recursive halving-doubling all-reduce over the full mesh.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct HalvingDoubling;
 
-fn send_range(ep: &mut Endpoint, dst: usize, tag: u64, chunk: &[f32], wire: Wire) -> Result<()> {
+fn send_range(
+    ep: &mut dyn Transport,
+    dst: usize,
+    tag: u64,
+    chunk: &[f32],
+    wire: Wire,
+) -> Result<()> {
     match wire {
         Wire::F32 => ep.send_f32(dst, tag, chunk),
         Wire::F16 => {
             let mut enc = ep.alloc_f16(chunk.len());
-            half::encode_slice(chunk, &mut enc);
+            frame::encode_f16(chunk, &mut enc);
             ep.send_f16(dst, tag, enc)
         }
     }
@@ -36,13 +41,12 @@ fn send_range(ep: &mut Endpoint, dst: usize, tag: u64, chunk: &[f32], wire: Wire
 
 /// Receive one window as f32. The returned buffer comes from / goes back
 /// to the endpoint freelist (callers recycle it after consuming).
-fn recv_range(ep: &mut Endpoint, src: usize, tag: u64, wire: Wire) -> Result<Vec<f32>> {
+fn recv_range(ep: &mut dyn Transport, src: usize, tag: u64, wire: Wire) -> Result<Vec<f32>> {
     match ep.recv(src, tag)? {
         Payload::F32(v) if wire == Wire::F32 => Ok(v),
         Payload::F16(v) if wire == Wire::F16 => {
             let mut out = ep.alloc_f32(v.len());
-            out.resize(v.len(), 0.0);
-            half::decode_slice(&v, &mut out);
+            frame::decode_f16(&v, &mut out);
             ep.recycle_f16(v);
             Ok(out)
         }
@@ -77,7 +81,7 @@ impl Collective for HalvingDoubling {
 
     fn all_reduce(
         &self,
-        ep: &mut Endpoint,
+        ep: &mut dyn Transport,
         buf: &mut [f32],
         wire: Wire,
         tag_base: u64,
@@ -120,7 +124,7 @@ impl Collective for HalvingDoubling {
                         Payload::F32(_) => bail!("wire dtype mismatch"),
                     };
                     // fused decode+add+requantise (fp16 buffer semantics)
-                    half::accumulate_quantized(&mut buf[mine_lo..mine_hi], &enc);
+                    frame::accumulate_f16(&mut buf[mine_lo..mine_hi], &enc);
                     ep.recycle_f16(enc);
                 }
             }

@@ -18,7 +18,7 @@ use anyhow::{bail, Result};
 use super::primitives::{
     chunk_offsets, ring_all_gather, ring_all_reduce, ring_reduce_scatter, Wire,
 };
-use super::transport::Endpoint;
+use super::transport::Transport;
 use super::Collective;
 
 /// Hierarchical (grouped) ring all-reduce.
@@ -54,7 +54,7 @@ impl Collective for HierarchicalAllReduce {
 
     fn all_reduce(
         &self,
-        ep: &mut Endpoint,
+        ep: &mut dyn Transport,
         buf: &mut [f32],
         wire: Wire,
         tag_base: u64,

@@ -1,11 +1,15 @@
 //! Gradient-synchronisation collectives — the paper's communication layer.
 //!
 //! This module sits where NCCL sits in the paper's stack (§3.1): the
-//! coordinator hands each worker thread an [`transport::Endpoint`] and a
-//! shared [`Collective`]; after every `grad_step` the workers call
-//! [`Collective::all_reduce`] on their flattened gradient buffer (FP16 on
-//! the wire) and on their BN statistics (FP32), then divide by the world
-//! size and run `apply_step`.
+//! coordinator hands each worker thread a [`transport::Transport`]
+//! endpoint (the in-memory [`transport::Endpoint`] by default, a
+//! socket-backed [`transport::TcpEndpoint`] under `[transport] mode =
+//! "tcp"`) and a shared [`Collective`]; after every `grad_step` the
+//! workers call [`Collective::all_reduce`] on their flattened gradient
+//! buffer (FP16 on the wire) and on their BN statistics (FP32), then
+//! divide by the world size and run `apply_step`. The schedules only ever
+//! see the trait, so every algorithm below runs unchanged over either
+//! channel.
 //!
 //! Three algorithms are provided, matching the paper's comparison set:
 //!
@@ -35,7 +39,9 @@ pub use hierarchical::HierarchicalAllReduce;
 pub use primitives::Wire;
 pub use ring::RingAllReduce;
 pub use torus2d::TorusAllReduce;
-pub use transport::{Endpoint, Health, Mesh, MeshError};
+pub use transport::{
+    Counters, Endpoint, Health, Mesh, MeshError, Payload, TcpEndpoint, TcpMesh, Transport,
+};
 
 use anyhow::Result;
 
@@ -53,7 +59,7 @@ pub trait Collective: Send + Sync {
     /// In-place sum across all ranks. Collective: every rank must call it.
     fn all_reduce(
         &self,
-        ep: &mut Endpoint,
+        ep: &mut dyn Transport,
         buf: &mut [f32],
         wire: Wire,
         tag_base: u64,

@@ -15,7 +15,7 @@
 
 use anyhow::Result;
 
-use super::transport::Endpoint;
+use super::transport::{frame, Transport};
 use crate::util::half;
 
 /// Wire precision for a collective (paper §3.2 mixed-precision policy).
@@ -51,20 +51,34 @@ pub fn chunk_offsets(n: usize, k: usize) -> Vec<usize> {
 }
 
 /// Send one chunk. Wire scratch comes from the endpoint's freelist
-/// (`send_f32` internally; `alloc_f16` for the encode buffer here), so a
-/// steady ring schedule allocates nothing per hop after warmup.
-fn send_chunk(ep: &mut Endpoint, dst: usize, tag: u64, chunk: &[f32], wire: Wire) -> Result<()> {
+/// (`send_f32` internally; `alloc_f16` for the encode buffer here) and the
+/// FP16 quantisation goes through the shared [`frame`] codec, so a steady
+/// ring schedule allocates nothing per hop after warmup and both
+/// transports put bit-identical payloads on the wire.
+fn send_chunk(
+    ep: &mut dyn Transport,
+    dst: usize,
+    tag: u64,
+    chunk: &[f32],
+    wire: Wire,
+) -> Result<()> {
     match wire {
         Wire::F32 => ep.send_f32(dst, tag, chunk),
         Wire::F16 => {
             let mut enc = ep.alloc_f16(chunk.len());
-            half::encode_slice(chunk, &mut enc);
+            frame::encode_f16(chunk, &mut enc);
             ep.send_f16(dst, tag, enc)
         }
     }
 }
 
-fn recv_chunk(ep: &mut Endpoint, src: usize, tag: u64, out: &mut Vec<f32>, wire: Wire) -> Result<()> {
+fn recv_chunk(
+    ep: &mut dyn Transport,
+    src: usize,
+    tag: u64,
+    out: &mut Vec<f32>,
+    wire: Wire,
+) -> Result<()> {
     match wire {
         Wire::F32 => {
             // Zero-copy: take the payload as `out` and recycle whatever
@@ -74,8 +88,7 @@ fn recv_chunk(ep: &mut Endpoint, src: usize, tag: u64, out: &mut Vec<f32>, wire:
         }
         Wire::F16 => {
             let enc = ep.recv_f16(src, tag)?;
-            out.resize(enc.len(), 0.0);
-            half::decode_slice(&enc, out);
+            frame::decode_f16(&enc, out);
             ep.recycle_f16(enc);
         }
     }
@@ -87,7 +100,7 @@ fn recv_chunk(ep: &mut Endpoint, src: usize, tag: u64, out: &mut Vec<f32>, wire:
 /// intermediate buffer). The consumed payload's storage is recycled into
 /// the endpoint freelist for the next send.
 fn recv_accumulate(
-    ep: &mut Endpoint,
+    ep: &mut dyn Transport,
     src: usize,
     tag: u64,
     dst: &mut [f32],
@@ -105,7 +118,7 @@ fn recv_accumulate(
         Wire::F16 => {
             let enc = ep.recv_f16(src, tag)?;
             debug_assert_eq!(dst.len(), enc.len());
-            half::accumulate_quantized(dst, &enc);
+            frame::accumulate_f16(dst, &enc);
             ep.recycle_f16(enc);
         }
     }
@@ -119,7 +132,7 @@ fn recv_accumulate(
 /// `(my_pos + 1) % k` — other regions of `buf` hold partial sums and must be
 /// treated as scratch. Returns the owned chunk index.
 pub fn ring_reduce_scatter(
-    ep: &mut Endpoint,
+    ep: &mut dyn Transport,
     group: &[usize],
     my_pos: usize,
     buf: &mut [f32],
@@ -159,7 +172,7 @@ pub fn ring_reduce_scatter(
 /// `(my_pos + 1) % k` (the reduce-scatter ownership convention); after `k-1`
 /// steps every rank holds all final chunks.
 pub fn ring_all_gather(
-    ep: &mut Endpoint,
+    ep: &mut dyn Transport,
     group: &[usize],
     my_pos: usize,
     buf: &mut [f32],
@@ -201,7 +214,7 @@ pub fn ring_all_gather(
 /// `2(k-1)` peer-to-peer steps, each moving `n/k` elements — the baseline
 /// cost model the paper compares against (its ref. [14]).
 pub fn ring_all_reduce(
-    ep: &mut Endpoint,
+    ep: &mut dyn Transport,
     group: &[usize],
     my_pos: usize,
     buf: &mut [f32],
@@ -225,7 +238,7 @@ mod tests {
 
     fn run_group<F>(n: usize, f: F) -> Vec<Vec<f32>>
     where
-        F: Fn(&mut Endpoint, usize) -> Vec<f32> + Send + Sync + 'static,
+        F: Fn(&mut dyn Transport, usize) -> Vec<f32> + Send + Sync + 'static,
     {
         let eps = Mesh::new(n);
         let f = std::sync::Arc::new(f);

@@ -8,7 +8,7 @@
 use anyhow::Result;
 
 use super::primitives::{ring_all_reduce, Wire};
-use super::transport::Endpoint;
+use super::transport::Transport;
 use super::Collective;
 
 /// Flat ring over all ranks in the mesh.
@@ -22,7 +22,7 @@ impl Collective for RingAllReduce {
 
     fn all_reduce(
         &self,
-        ep: &mut Endpoint,
+        ep: &mut dyn Transport,
         buf: &mut [f32],
         wire: Wire,
         tag_base: u64,

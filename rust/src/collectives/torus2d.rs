@@ -26,7 +26,7 @@ use anyhow::{bail, Result};
 use super::primitives::{
     chunk_offsets, ring_all_gather, ring_all_reduce, ring_reduce_scatter, Wire,
 };
-use super::transport::Endpoint;
+use super::transport::Transport;
 use super::Collective;
 
 /// The paper's 2D-Torus all-reduce over an X×Y logical grid.
@@ -68,7 +68,7 @@ impl Collective for TorusAllReduce {
 
     fn all_reduce(
         &self,
-        ep: &mut Endpoint,
+        ep: &mut dyn Transport,
         buf: &mut [f32],
         wire: Wire,
         tag_base: u64,

@@ -1,0 +1,430 @@
+//! Length-prefixed wire codec shared by every socket-backed channel (the
+//! TCP data mesh *and* the coordinator/worker control plane).
+//!
+//! Frame layout, all integers little-endian:
+//!
+//! ```text
+//! [u32 len][u8 kind][u32 src][u32 dst][u64 tag][len-17 body bytes]
+//! ```
+//!
+//! `len` counts everything after the length word (the 17 fixed header
+//! bytes plus the body), so a reader always knows exactly how much to
+//! pull off the socket — no sentinels, no scanning. Kinds:
+//!
+//! * [`KIND_F32`] / [`KIND_F16`] — collective payloads; the body is the
+//!   packed little-endian element array and `(src, dst, tag)` carry the
+//!   mesh addressing, so a data frame is exactly one in-memory
+//!   [`Payload`] message on the wire.
+//! * [`KIND_CONTROL`] — a UTF-8 JSON object (coordinator/worker protocol,
+//!   the mesh `bye` handshake).
+//! * [`KIND_BLOB`] — raw bytes (checkpoint-encoded worker state).
+//!
+//! The FP16↔FP32 **wire conversion** lives here too ([`encode_f16`] /
+//! [`decode_f16`] / [`accumulate_f16`]): the schedules and the codec share
+//! one quantisation path, so an FP16 hop is bit-identical whichever
+//! transport carries it.
+
+use std::io::{ErrorKind, Read, Write};
+
+use anyhow::{bail, Result};
+
+use super::Payload;
+use crate::util::half;
+
+/// Body is a packed `[f32]` array (4 bytes/elem, little-endian).
+pub const KIND_F32: u8 = 0;
+/// Body is a packed `[u16]` binary16 array (2 bytes/elem, little-endian).
+pub const KIND_F16: u8 = 1;
+/// Body is a UTF-8 JSON object (control plane).
+pub const KIND_CONTROL: u8 = 2;
+/// Body is raw bytes (state transfer).
+pub const KIND_BLOB: u8 = 3;
+
+/// Fixed header bytes covered by the length word: kind + src + dst + tag.
+pub const HEADER_BYTES: usize = 1 + 4 + 4 + 8;
+
+/// Default cap on one frame's `len` field — a corrupt or hostile length
+/// word must not translate into an unbounded allocation. 64 MiB clears a
+/// full ResNet-50 FP32 gradient (~102 MB) only when bucketed, which is
+/// how the pipeline ships it anyway; `[transport] max_frame_bytes` tunes
+/// this per deployment.
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Everything a frame says except its body (which the reader leaves in
+/// the caller's scratch buffer to keep per-frame allocations at zero).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub kind: u8,
+    pub src: u32,
+    pub dst: u32,
+    pub tag: u64,
+}
+
+/// Serialize one frame into `buf` (cleared first). The buffer is meant to
+/// be reused across sends, so steady-state framing allocates nothing.
+pub fn encode_frame(buf: &mut Vec<u8>, kind: u8, src: u32, dst: u32, tag: u64, body: &[u8]) {
+    buf.clear();
+    buf.reserve(4 + HEADER_BYTES + body.len());
+    let len = (HEADER_BYTES + body.len()) as u32;
+    buf.extend_from_slice(&len.to_le_bytes());
+    buf.push(kind);
+    buf.extend_from_slice(&src.to_le_bytes());
+    buf.extend_from_slice(&dst.to_le_bytes());
+    buf.extend_from_slice(&tag.to_le_bytes());
+    buf.extend_from_slice(body);
+}
+
+/// Serialize a collective payload frame into `buf` (cleared first),
+/// packing the elements little-endian without an intermediate body copy.
+pub fn encode_payload_frame(buf: &mut Vec<u8>, src: u32, dst: u32, tag: u64, p: &Payload) {
+    let (kind, body_len) = match p {
+        Payload::F32(v) => (KIND_F32, 4 * v.len()),
+        Payload::F16(v) => (KIND_F16, 2 * v.len()),
+    };
+    buf.clear();
+    buf.reserve(4 + HEADER_BYTES + body_len);
+    let len = (HEADER_BYTES + body_len) as u32;
+    buf.extend_from_slice(&len.to_le_bytes());
+    buf.push(kind);
+    buf.extend_from_slice(&src.to_le_bytes());
+    buf.extend_from_slice(&dst.to_le_bytes());
+    buf.extend_from_slice(&tag.to_le_bytes());
+    match p {
+        Payload::F32(v) => {
+            for x in v {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Payload::F16(v) => {
+            for x in v {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+}
+
+/// Decode a payload body (as left in the reader's scratch by
+/// [`read_frame`]) back into a [`Payload`]. `out_*` storage may come from
+/// a freelist; both paths size it exactly, so a reused longer buffer can
+/// never leak a stale tail.
+pub fn decode_payload(
+    kind: u8,
+    body: &[u8],
+    mut out_f32: Vec<f32>,
+    mut out_f16: Vec<u16>,
+) -> Result<Payload> {
+    match kind {
+        KIND_F32 => {
+            if body.len() % 4 != 0 {
+                bail!("f32 frame body of {} bytes is not 4-aligned", body.len());
+            }
+            out_f32.clear();
+            out_f32.reserve(body.len() / 4);
+            for c in body.chunks_exact(4) {
+                out_f32.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            Ok(Payload::F32(out_f32))
+        }
+        KIND_F16 => {
+            if body.len() % 2 != 0 {
+                bail!("f16 frame body of {} bytes is not 2-aligned", body.len());
+            }
+            out_f16.clear();
+            out_f16.reserve(body.len() / 2);
+            for c in body.chunks_exact(2) {
+                out_f16.push(u16::from_le_bytes([c[0], c[1]]));
+            }
+            Ok(Payload::F16(out_f16))
+        }
+        other => bail!("frame kind {other} is not a payload kind"),
+    }
+}
+
+/// Write one already-encoded frame (see [`encode_frame`]) to the socket.
+pub fn write_frame(w: &mut impl Write, encoded: &[u8]) -> Result<()> {
+    w.write_all(encoded)?;
+    Ok(())
+}
+
+/// Convenience: encode a control-plane JSON frame and write it.
+pub fn write_control(w: &mut impl Write, buf: &mut Vec<u8>, json: &str) -> Result<()> {
+    encode_frame(buf, KIND_CONTROL, 0, 0, 0, json.as_bytes());
+    write_frame(w, buf)
+}
+
+/// Convenience: encode a raw-bytes blob frame and write it.
+pub fn write_blob(w: &mut impl Write, buf: &mut Vec<u8>, blob: &[u8]) -> Result<()> {
+    encode_frame(buf, KIND_BLOB, 0, 0, 0, blob);
+    write_frame(w, buf)
+}
+
+/// Read one frame. Returns `Ok(None)` on a clean EOF **at a frame
+/// boundary** (the peer closed between frames); EOF mid-frame is an
+/// error (truncated stream). The body lands in `body` (cleared first),
+/// which the caller reuses across frames.
+pub fn read_frame(
+    r: &mut impl Read,
+    max_frame_bytes: usize,
+    body: &mut Vec<u8>,
+) -> Result<Option<FrameHeader>> {
+    let mut len_word = [0u8; 4];
+    match read_exact_or_eof(r, &mut len_word)? {
+        ReadOutcome::Eof => return Ok(None),
+        ReadOutcome::Full => {}
+    }
+    let len = u32::from_le_bytes(len_word) as usize;
+    if len < HEADER_BYTES {
+        bail!("frame length {len} shorter than the {HEADER_BYTES}-byte header");
+    }
+    if len > max_frame_bytes {
+        bail!("frame length {len} exceeds max_frame_bytes {max_frame_bytes}");
+    }
+    let mut header = [0u8; HEADER_BYTES];
+    r.read_exact(&mut header)?;
+    let kind = header[0];
+    let src = u32::from_le_bytes([header[1], header[2], header[3], header[4]]);
+    let dst = u32::from_le_bytes([header[5], header[6], header[7], header[8]]);
+    let tag = u64::from_le_bytes([
+        header[9], header[10], header[11], header[12], header[13], header[14], header[15],
+        header[16],
+    ]);
+    body.clear();
+    body.resize(len - HEADER_BYTES, 0);
+    r.read_exact(body)?;
+    Ok(Some(FrameHeader { kind, src, dst, tag }))
+}
+
+enum ReadOutcome {
+    Full,
+    Eof,
+}
+
+/// `read_exact`, except a clean EOF *before the first byte* is reported
+/// as [`ReadOutcome::Eof`] instead of an error — that is how a peer
+/// signals it has no more frames.
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> Result<ReadOutcome> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(ReadOutcome::Eof);
+                }
+                bail!("stream truncated mid-frame ({filled} of {} bytes)", buf.len());
+            }
+            Ok(k) => filled += k,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(ReadOutcome::Full)
+}
+
+// ---------------------------------------------------------------------------
+// FP16 ↔ FP32 wire conversion — the codec the schedules quantise through.
+// ---------------------------------------------------------------------------
+
+/// Quantise `src` to binary16 into `out` (resized to match). This is the
+/// send-side half of the FP16 wire; pair with [`decode_f16`] /
+/// [`accumulate_f16`] on the receive side.
+pub fn encode_f16(src: &[f32], out: &mut Vec<u16>) {
+    out.clear();
+    out.resize(src.len(), 0);
+    half::encode_slice(src, out);
+}
+
+/// Widen binary16 `src` into `out` (resized to match).
+pub fn decode_f16(src: &[u16], out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(src.len(), 0.0);
+    half::decode_slice(src, out);
+}
+
+/// Reduce-scatter hop: widen each binary16 element of `src`, add it into
+/// `acc`, and requantise the sum in place — fused, no intermediate
+/// buffer, same numerics as an FP16 NCCL ring.
+pub fn accumulate_f16(acc: &mut [f32], src: &[u16]) {
+    half::accumulate_quantized(acc, src);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::prop_seeded;
+
+    fn round_trip(p: &Payload) -> (FrameHeader, Payload) {
+        let mut buf = Vec::new();
+        encode_payload_frame(&mut buf, 3, 5, 42, p);
+        let mut cursor = &buf[..];
+        let mut body = Vec::new();
+        let h = read_frame(&mut cursor, DEFAULT_MAX_FRAME_BYTES, &mut body)
+            .unwrap()
+            .expect("one frame");
+        assert!(cursor.is_empty(), "frame must consume exactly its bytes");
+        let p = decode_payload(h.kind, &body, Vec::new(), Vec::new()).unwrap();
+        (h, p)
+    }
+
+    #[test]
+    fn header_fields_survive_the_wire() {
+        let (h, _) = round_trip(&Payload::F32(vec![1.0, -2.5]));
+        assert_eq!(
+            h,
+            FrameHeader { kind: KIND_F32, src: 3, dst: 5, tag: 42 }
+        );
+        let (h, _) = round_trip(&Payload::F16(vec![0x3C00]));
+        assert_eq!(h.kind, KIND_F16);
+    }
+
+    #[test]
+    fn empty_payloads_frame_cleanly() {
+        let (h, p) = round_trip(&Payload::F32(vec![]));
+        assert_eq!(h.kind, KIND_F32);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn eof_between_frames_is_none_mid_frame_is_error() {
+        let mut buf = Vec::new();
+        encode_payload_frame(&mut buf, 0, 1, 7, &Payload::F32(vec![1.0, 2.0]));
+        // clean EOF at offset 0
+        let mut empty: &[u8] = &[];
+        let mut body = Vec::new();
+        assert!(read_frame(&mut empty, 1 << 20, &mut body).unwrap().is_none());
+        // every proper prefix of a frame is a truncation error
+        for cut in 1..buf.len() {
+            let mut partial = &buf[..cut];
+            assert!(
+                read_frame(&mut partial, 1 << 20, &mut body).is_err(),
+                "cut at {cut} must be a truncation error"
+            );
+        }
+        // two frames back to back parse independently
+        let mut two = buf.clone();
+        let mut second = Vec::new();
+        encode_payload_frame(&mut second, 1, 0, 8, &Payload::F16(vec![9, 10]));
+        two.extend_from_slice(&second);
+        let mut cursor = &two[..];
+        let a = read_frame(&mut cursor, 1 << 20, &mut body).unwrap().unwrap();
+        assert_eq!((a.kind, a.tag), (KIND_F32, 7));
+        let b = read_frame(&mut cursor, 1 << 20, &mut body).unwrap().unwrap();
+        assert_eq!((b.kind, b.tag), (KIND_F16, 8));
+        assert!(read_frame(&mut cursor, 1 << 20, &mut body).unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_and_undersized_lengths_are_rejected() {
+        // len word below the header size
+        let mut bad = 5u32.to_le_bytes().to_vec();
+        bad.extend_from_slice(&[0u8; 32]);
+        let mut body = Vec::new();
+        assert!(read_frame(&mut &bad[..], 1 << 20, &mut body).is_err());
+        // len word above the cap
+        let mut huge = (1u32 << 30).to_le_bytes().to_vec();
+        huge.extend_from_slice(&[0u8; 32]);
+        assert!(read_frame(&mut &huge[..], 1 << 20, &mut body).is_err());
+    }
+
+    #[test]
+    fn control_frames_round_trip_json() {
+        let mut buf = Vec::new();
+        let mut out: Vec<u8> = Vec::new();
+        write_control(&mut out, &mut buf, r#"{"type":"hello","rank":3}"#).unwrap();
+        let mut body = Vec::new();
+        let h = read_frame(&mut &out[..], 1 << 20, &mut body).unwrap().unwrap();
+        assert_eq!(h.kind, KIND_CONTROL);
+        let j = crate::util::json::Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("type").unwrap().as_str().unwrap(), "hello");
+        assert_eq!(j.get("rank").unwrap().as_usize().unwrap(), 3);
+    }
+
+    /// The satellite property test: random tensors, both wire widths,
+    /// through encode → frame → decode, with the *same* scratch buffers
+    /// reused across frames — a stale byte from an earlier (longer)
+    /// payload must never survive into a later one.
+    #[test]
+    fn property_payload_round_trip_reuses_buffers_without_stale_leaks() {
+        let mut wire = Vec::new(); // frame bytes, reused
+        let mut body = Vec::new(); // reader scratch, reused
+        let mut scratch = super::super::Scratch::default();
+        let mut f16_scratch: Vec<u16> = Vec::new();
+        prop_seeded(0xF2A3_E7E1, 200, |g| {
+            let n = g.usize_in(0..=300);
+            let vals = g.vec_normal(n);
+            if g.bool() {
+                // FP32 path: bytes must survive bit-exactly.
+                let p = Payload::F32(vals.clone());
+                encode_payload_frame(&mut wire, 1, 2, g.u64() % 1000, &p);
+                let h = read_frame(&mut &wire[..], DEFAULT_MAX_FRAME_BYTES, &mut body)
+                    .unwrap()
+                    .unwrap();
+                // decode into freelist storage recycled from earlier cases
+                let out = scratch.alloc_f32(0);
+                let got = decode_payload(h.kind, &body, out, Vec::new()).unwrap();
+                match got {
+                    Payload::F32(v) => {
+                        assert_eq!(v.len(), n, "length leak from a previous frame");
+                        for (a, b) in v.iter().zip(&vals) {
+                            assert_eq!(a.to_bits(), b.to_bits());
+                        }
+                        scratch.recycle_f32(v);
+                    }
+                    _ => panic!("kind flipped"),
+                }
+            } else {
+                // FP16 path: quantise → frame → decode must agree with
+                // quantising directly, element for element.
+                encode_f16(&vals, &mut f16_scratch);
+                let p = Payload::F16(f16_scratch.clone());
+                encode_payload_frame(&mut wire, 2, 1, g.u64() % 1000, &p);
+                let h = read_frame(&mut &wire[..], DEFAULT_MAX_FRAME_BYTES, &mut body)
+                    .unwrap()
+                    .unwrap();
+                let out = scratch.alloc_f16(0);
+                let got = decode_payload(h.kind, &body, Vec::new(), out).unwrap();
+                match got {
+                    Payload::F16(enc) => {
+                        assert_eq!(enc.len(), n, "length leak from a previous frame");
+                        assert_eq!(enc, f16_scratch, "f16 bits changed on the wire");
+                        let mut wide = scratch.alloc_f32(n);
+                        decode_f16(&enc, &mut wide);
+                        for (w, v) in wide.iter().zip(&vals) {
+                            assert_eq!(
+                                w.to_bits(),
+                                half::quantize_f16(*v).to_bits(),
+                                "framed f16 decode must equal direct quantisation"
+                            );
+                        }
+                        scratch.recycle_f32(wide);
+                        scratch.recycle_f16(enc);
+                    }
+                    _ => panic!("kind flipped"),
+                }
+            }
+        });
+        assert!(scratch.hits() > 0, "the property must exercise buffer reuse");
+    }
+
+    /// `accumulate_f16` through the codec matches decode-then-add-then-
+    /// requantise done by hand (the fused hop is a pure refactor of the
+    /// unfused one).
+    #[test]
+    fn property_accumulate_matches_unfused_path() {
+        prop_seeded(0xACC0_F16A, 100, |g| {
+            let n = g.usize_in(1..=64);
+            let base = g.vec_normal(n);
+            let add = g.vec_normal(n);
+            let mut enc = Vec::new();
+            encode_f16(&add, &mut enc);
+
+            let mut fused = base.clone();
+            accumulate_f16(&mut fused, &enc);
+
+            let mut wide = Vec::new();
+            decode_f16(&enc, &mut wide);
+            for (f, (b, w)) in fused.iter().zip(base.iter().zip(&wide)) {
+                assert_eq!(f.to_bits(), half::quantize_f16(b + w).to_bits());
+            }
+        });
+    }
+}

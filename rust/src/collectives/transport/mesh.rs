@@ -1,0 +1,489 @@
+//! The in-memory transport: `n` fully-connected [`Endpoint`]s inside one
+//! process, one condvar [`Inbox`](super::Inbox) per rank.
+//!
+//! This is the **default** transport ([`TrainConfig::transport`]
+//! `mode = "memory"`) and the control implementation for the socket one:
+//! same [`Transport`] surface, same counters, same health semantics, zero
+//! serialization. Sends push straight into the destination inbox and
+//! never block; a blocked `recv` parks on the inbox condvar (no sleep
+//! polling) and is woken by arrivals, peer death, or its deadline.
+//!
+//! [`TrainConfig::transport`]: crate::config::TrainConfig
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::{Core, Counters, Health, Inbox, Msg, Payload, Scratch, Transport};
+
+/// Factory for a fully-connected in-memory mesh of `n` endpoints.
+pub struct Mesh;
+
+impl Mesh {
+    /// Build `n` endpoints sharing one counter block and one health table.
+    pub fn new(n: usize) -> Vec<Endpoint> {
+        assert!(n > 0, "mesh needs at least one rank");
+        let counters = Arc::new(Counters::default());
+        let health = Arc::new(Health::new(n));
+        let inboxes: Vec<Arc<Inbox>> = (0..n).map(|_| Arc::new(Inbox::default())).collect();
+        (0..n)
+            .map(|rank| Endpoint {
+                core: Core::new(
+                    rank,
+                    n,
+                    inboxes[rank].clone(),
+                    counters.clone(),
+                    health.clone(),
+                ),
+                peers: inboxes.clone(),
+            })
+            .collect()
+    }
+}
+
+/// One rank's view of the in-memory mesh (owned by that rank's worker
+/// thread). The inherent methods mirror the [`Transport`] trait so
+/// existing concrete-typed callers keep working without importing it.
+pub struct Endpoint {
+    core: Core,
+    /// Every rank's inbox (including this rank's own, so self-sends work
+    /// like any other edge).
+    peers: Vec<Arc<Inbox>>,
+}
+
+impl Endpoint {
+    pub fn rank(&self) -> usize {
+        self.core.rank
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.core.n
+    }
+
+    pub fn counters(&self) -> &Counters {
+        &self.core.counters
+    }
+
+    /// Shared counter block (snapshot it *after* joining all rank threads —
+    /// per-thread snapshots race with peers still in flight).
+    pub fn counters_arc(&self) -> Arc<Counters> {
+        self.core.counters.clone()
+    }
+
+    /// Shared health table of this endpoint's mesh (the coordinator's
+    /// heartbeat monitor scans it; tests use it to kill ranks).
+    pub fn health(&self) -> &Health {
+        &self.core.health
+    }
+
+    pub fn health_arc(&self) -> Arc<Health> {
+        self.core.health.clone()
+    }
+
+    /// Tick this rank's heartbeat (also ticked automatically while blocked
+    /// in `recv` — call it once per step so compute-heavy gaps still beat).
+    pub fn heartbeat(&self) {
+        self.core.health.beat(self.core.rank);
+    }
+
+    /// Declare a peer (or this rank itself) dead; aborts the whole mesh.
+    pub fn mark_dead(&self, rank: usize) {
+        self.core.health.mark_dead(rank);
+    }
+
+    /// Bound every subsequent blocking `recv` to `d` of wall-clock wait;
+    /// on expiry the awaited peer is marked dead and the receive fails
+    /// with [`MeshError::PeerDead`](super::MeshError::PeerDead). `None`
+    /// removes the bound.
+    pub fn set_recv_deadline(&mut self, d: Option<Duration>) {
+        self.core.recv_deadline = d;
+    }
+
+    /// Send `payload` to `dst` under `tag`. Never blocks (inboxes are
+    /// unbounded); fails fast when `dst` is already marked dead or the
+    /// mesh is aborting.
+    pub fn send(&mut self, dst: usize, tag: u64, payload: Payload) -> Result<()> {
+        self.core.check_send(dst)?;
+        let bytes = payload.wire_bytes();
+        self.peers
+            .get(dst)
+            .ok_or_else(|| anyhow!("send to out-of-range rank {dst} (n={})", self.core.n))?
+            .push(Msg { src: self.core.rank, tag, payload });
+        self.core.note_sent(tag, bytes);
+        Ok(())
+    }
+
+    /// Copy `data` into a freelist-backed buffer and send it (no per-hop
+    /// allocation once the freelist has warmed up).
+    pub fn send_f32(&mut self, dst: usize, tag: u64, data: &[f32]) -> Result<()> {
+        let mut buf = self.core.scratch.alloc_f32(data.len());
+        buf.extend_from_slice(data);
+        self.send(dst, tag, Payload::F32(buf))
+    }
+
+    pub fn send_f16(&mut self, dst: usize, tag: u64, data: Vec<u16>) -> Result<()> {
+        self.send(dst, tag, Payload::F16(data))
+    }
+
+    pub fn alloc_f32(&mut self, capacity_hint: usize) -> Vec<f32> {
+        self.core.scratch.alloc_f32(capacity_hint)
+    }
+
+    pub fn alloc_f16(&mut self, len: usize) -> Vec<u16> {
+        self.core.scratch.alloc_f16(len)
+    }
+
+    pub fn recycle_f32(&mut self, v: Vec<f32>) {
+        self.core.scratch.recycle_f32(v)
+    }
+
+    pub fn recycle_f16(&mut self, v: Vec<u16>) {
+        self.core.scratch.recycle_f16(v)
+    }
+
+    pub fn recycle(&mut self, p: Payload) {
+        self.core.scratch.recycle(p)
+    }
+
+    pub fn freelist_hits(&self) -> u64 {
+        self.core.scratch.hits()
+    }
+
+    /// Blocking receive of the message matching `(src, tag)`; see
+    /// [`Core::recv_match`](super::Core) for the matching, health and
+    /// deadline semantics.
+    pub fn recv(&mut self, src: usize, tag: u64) -> Result<Payload> {
+        self.core.recv_match(src, tag)
+    }
+
+    /// Number of parked out-of-order messages (tests assert this drains to
+    /// zero so the pending map cannot leak across a long run).
+    pub fn pending_messages(&self) -> usize {
+        self.core.pending_messages()
+    }
+
+    /// Receive and require an f32 payload (wire-format mismatch is a bug).
+    pub fn recv_f32(&mut self, src: usize, tag: u64) -> Result<Vec<f32>> {
+        Transport::recv_f32(self, src, tag)
+    }
+
+    /// Receive and require an f16 payload.
+    pub fn recv_f16(&mut self, src: usize, tag: u64) -> Result<Vec<u16>> {
+        Transport::recv_f16(self, src, tag)
+    }
+}
+
+impl Transport for Endpoint {
+    fn rank(&self) -> usize {
+        self.core.rank
+    }
+
+    fn world_size(&self) -> usize {
+        self.core.n
+    }
+
+    fn counters(&self) -> &Counters {
+        &self.core.counters
+    }
+
+    fn counters_arc(&self) -> Arc<Counters> {
+        self.core.counters.clone()
+    }
+
+    fn health(&self) -> &Health {
+        &self.core.health
+    }
+
+    fn health_arc(&self) -> Arc<Health> {
+        self.core.health.clone()
+    }
+
+    fn set_recv_deadline(&mut self, d: Option<Duration>) {
+        self.core.recv_deadline = d;
+    }
+
+    fn send(&mut self, dst: usize, tag: u64, payload: Payload) -> Result<()> {
+        Endpoint::send(self, dst, tag, payload)
+    }
+
+    fn recv(&mut self, src: usize, tag: u64) -> Result<Payload> {
+        self.core.recv_match(src, tag)
+    }
+
+    fn pending_messages(&self) -> usize {
+        self.core.pending_messages()
+    }
+
+    fn scratch(&self) -> &Scratch {
+        &self.core.scratch
+    }
+
+    fn scratch_mut(&mut self) -> &mut Scratch {
+        &mut self.core.scratch
+    }
+}
+
+impl std::fmt::Debug for Endpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Endpoint")
+            .field("rank", &self.core.rank)
+            .field("n", &self.core.n)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{MeshError, FREELIST_CAP};
+    use super::*;
+    use std::thread;
+    use std::time::Instant;
+
+    #[test]
+    fn point_to_point_round_trip() {
+        let mut eps = Mesh::new(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send_f32(1, 7, &[1.0, 2.0, 3.0]).unwrap();
+        let got = b.recv_f32(0, 7).unwrap();
+        assert_eq!(got, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn tag_matching_out_of_order() {
+        let mut eps = Mesh::new(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send_f32(1, 1, &[1.0]).unwrap();
+        a.send_f32(1, 2, &[2.0]).unwrap();
+        a.send_f32(1, 1, &[3.0]).unwrap();
+        // Receive tag 2 first; tag-1 messages must stay queued in order.
+        assert_eq!(b.recv_f32(0, 2).unwrap(), vec![2.0]);
+        assert_eq!(b.recv_f32(0, 1).unwrap(), vec![1.0]);
+        assert_eq!(b.recv_f32(0, 1).unwrap(), vec![3.0]);
+    }
+
+    #[test]
+    fn byte_conservation_across_threads() {
+        let n = 4;
+        let eps = Mesh::new(n);
+        let counters = eps[0].counters_arc();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                thread::spawn(move || {
+                    let me = ep.rank();
+                    let right = (me + 1) % 4;
+                    let left = (me + 3) % 4;
+                    for step in 0..10u64 {
+                        ep.send_f32(right, step, &vec![me as f32; 100]).unwrap();
+                        let got = ep.recv_f32(left, step).unwrap();
+                        assert_eq!(got, vec![left as f32; 100]);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let (sent, recvd, msgs) = counters.snapshot();
+        assert_eq!(sent, recvd);
+        assert_eq!(sent, 4 * 10 * 100 * 4); // ranks * steps * elems * 4B
+        assert_eq!(msgs, 40);
+    }
+
+    #[test]
+    fn pending_queue_drains_and_entries_are_dropped() {
+        let mut eps = Mesh::new(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        // out-of-order burst: many messages on tags received later
+        for i in 0..50u64 {
+            a.send_f32(1, i % 5, &[i as f32]).unwrap();
+        }
+        a.send_f32(1, 99, &[99.0]).unwrap();
+        // receiving tag 99 first parks all 50 burst messages
+        assert_eq!(b.recv_f32(0, 99).unwrap(), vec![99.0]);
+        assert_eq!(b.pending_messages(), 50);
+        // drain them in FIFO order per tag
+        for i in 0..50u64 {
+            let tag = i % 5;
+            let got = b.recv_f32(0, tag).unwrap();
+            // per-tag order: the k-th receive of `tag` is message 5k+tag
+            assert_eq!(got, vec![(5 * (i / 5) + tag) as f32], "tag {tag}");
+        }
+        // fully drained: no empty queues linger in the map
+        assert_eq!(b.pending_messages(), 0);
+        assert!(b.core.pending.is_empty(), "empty pending entries leaked");
+    }
+
+    #[test]
+    fn f16_payload_counts_two_bytes() {
+        let mut eps = Mesh::new(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send_f16(1, 0, vec![0x3C00; 8]).unwrap();
+        let got = b.recv_f16(0, 0).unwrap();
+        assert_eq!(got.len(), 8);
+        let (sent, _, _) = a.counters().snapshot();
+        assert_eq!(sent, 16);
+    }
+
+    #[test]
+    fn dtype_mismatch_is_error() {
+        let mut eps = Mesh::new(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send_f32(1, 0, &[1.0]).unwrap();
+        assert!(b.recv_f16(0, 0).is_err());
+    }
+
+    #[test]
+    fn send_out_of_range_is_error() {
+        let mut eps = Mesh::new(2);
+        assert!(eps[0].send_f32(5, 0, &[1.0]).is_err());
+    }
+
+    /// The freelist must never hand back a stale payload: a recycled long
+    /// buffer reused for a shorter message carries exactly the new bytes —
+    /// no leftover tail, no leftover length.
+    #[test]
+    fn freelist_never_hands_back_stale_payloads() {
+        let mut eps = Mesh::new(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+
+        // f32: long payload recycled on b, then b sends a short one.
+        a.send_f32(1, 0, &[9.0; 64]).unwrap();
+        let long = b.recv_f32(0, 0).unwrap();
+        assert_eq!(long.len(), 64);
+        b.recycle_f32(long);
+        b.send_f32(0, 1, &[1.0, 2.0]).unwrap();
+        assert!(b.freelist_hits() >= 1, "short send must hit the freelist");
+        assert_eq!(a.recv_f32(1, 1).unwrap(), vec![1.0, 2.0]);
+
+        // f16: alloc after recycling a longer buffer is exact-length and
+        // zero-filled, not a truncated view of the old contents.
+        a.send_f16(1, 2, vec![7u16; 50]).unwrap();
+        let enc = b.recv_f16(0, 2).unwrap();
+        b.recycle_f16(enc);
+        let mut short = b.alloc_f16(3);
+        assert_eq!(short, vec![0u16; 3]);
+        short.copy_from_slice(&[1, 2, 3]);
+        b.send_f16(0, 3, short).unwrap();
+        assert_eq!(a.recv_f16(1, 3).unwrap(), vec![1, 2, 3]);
+
+        // the cap bounds parked buffers
+        for _ in 0..100 {
+            b.recycle_f32(vec![0.0; 4]);
+        }
+        assert!(b.core.scratch.parked_f32() <= FREELIST_CAP);
+    }
+
+    /// The core deadlock fix: a recv blocked on a peer unwinds with
+    /// `PeerDead` as soon as that peer is marked dead — no message needed.
+    #[test]
+    fn recv_unblocks_when_peer_is_marked_dead() {
+        let mut eps = Mesh::new(2);
+        let mut b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        let t0 = Instant::now();
+        let killer = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(20));
+            a.mark_dead(0);
+        });
+        let err = b.recv_f32(0, 0).unwrap_err();
+        killer.join().unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(5), "recv did not unblock fast");
+        assert_eq!(
+            err.downcast_ref::<MeshError>(),
+            Some(&MeshError::PeerDead { rank: 0 })
+        );
+    }
+
+    /// An abort triggered by *any* death unwinds recvs waiting on healthy
+    /// peers too (victim ranks see `Aborted`, not `PeerDead`).
+    #[test]
+    fn abort_unblocks_recv_from_healthy_peer() {
+        let eps = Mesh::new(3);
+        let health = eps[0].health_arc();
+        let mut ep2 = eps.into_iter().nth(2).unwrap();
+        health.mark_dead(1);
+        // rank 2 waits on rank 0 (healthy) — must still unwind via abort
+        let err = ep2.recv_f32(0, 0).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<MeshError>(),
+            Some(&MeshError::Aborted { origin: 1 })
+        );
+        assert_eq!(health.first_dead(), Some(1));
+        assert_eq!(health.dead_ranks(), vec![1]);
+    }
+
+    #[test]
+    fn send_to_dead_rank_fails_fast() {
+        let mut eps = Mesh::new(2);
+        eps[0].mark_dead(1);
+        let err = eps[0].send_f16(1, 0, vec![1]).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<MeshError>(),
+            Some(&MeshError::PeerDead { rank: 1 })
+        );
+    }
+
+    /// The recv deadline is the belt-and-braces bound: with no one marking
+    /// anyone dead, an absent message still surfaces as `PeerDead` (and
+    /// marks the silent peer dead for the rest of the mesh).
+    #[test]
+    fn recv_deadline_marks_silent_peer_dead() {
+        let mut eps = Mesh::new(2);
+        let mut b = eps.pop().unwrap();
+        b.set_recv_deadline(Some(Duration::from_millis(30)));
+        let t0 = Instant::now();
+        let err = b.recv_f32(0, 7).unwrap_err();
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert_eq!(
+            err.downcast_ref::<MeshError>(),
+            Some(&MeshError::PeerDead { rank: 0 })
+        );
+        assert!(b.health().is_dead(0));
+        assert!(b.health().aborted());
+    }
+
+    /// Heartbeats: blocked receivers keep beating; a completed rank marks
+    /// itself done so a monitor can tell "finished" from "hung". The
+    /// condvar wait must preserve the old tick-loop guarantee that a
+    /// blocked rank's beat never goes more than ~one wait slice stale.
+    #[test]
+    fn heartbeats_tick_while_blocked_and_done_is_sticky() {
+        let mut eps = Mesh::new(2);
+        let mut b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        let health = a.health_arc();
+        let waiter = thread::spawn(move || {
+            let _ = b.recv_f32(0, 0); // unblocked by the abort below
+        });
+        thread::sleep(Duration::from_millis(50));
+        // rank 1 is blocked in recv, but its wait loop keeps it beating
+        assert!(
+            health.millis_since_beat(1) < 40,
+            "blocked recv must keep beating ({}ms stale)",
+            health.millis_since_beat(1)
+        );
+        health.mark_done(0);
+        assert!(health.is_done(0));
+        health.mark_dead(0);
+        waiter.join().unwrap();
+    }
+
+    /// A self-send loops back through this rank's own inbox like any
+    /// other edge (the TCP transport special-cases this identically).
+    #[test]
+    fn self_send_round_trips() {
+        let mut eps = Mesh::new(2);
+        let mut a = eps.remove(0);
+        a.send_f32(0, 5, &[4.0, 5.0]).unwrap();
+        assert_eq!(a.recv_f32(0, 5).unwrap(), vec![4.0, 5.0]);
+    }
+}

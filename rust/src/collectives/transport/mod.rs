@@ -1,0 +1,627 @@
+//! The transport layer under every collective schedule.
+//!
+//! This sits where NCCL + MPI sit in the paper's stack, split into three
+//! layers so the *schedule* code never sees a concrete channel:
+//!
+//! * **[`Transport`]** — the trait every collective talks to: tagged
+//!   `send`/`recv` of [`Payload`]s between ranks, plus the shared
+//!   [`Counters`] / [`Health`] tables and the per-dtype scratch freelists.
+//! * **[`mesh`]** — the in-memory implementation ([`Mesh::new(n)`] builds
+//!   `n` fully-connected [`Endpoint`]s over condvar-backed inboxes inside
+//!   one process). This is the **default** transport and the bit-identical
+//!   control for everything the TCP path does.
+//! * **[`tcp`]** — the same mesh over `std::net` TCP sockets
+//!   ([`TcpMesh::loopback`] for in-process loopback ranks,
+//!   [`tcp::connect_mesh`] for real worker processes), speaking the
+//!   length-prefixed [`frame`] codec.
+//!
+//! Messages are matched MPI-style on `(src, tag)`: out-of-order arrivals
+//! park in a per-endpoint pending map. Sends never block (in-memory
+//! inboxes are unbounded; TCP writes go to the kernel buffer), so ring
+//! schedules cannot deadlock on send.
+//!
+//! Every mesh shares one [`Counters`] block. Tests use it to check
+//! *conservation* (total sent == total received), to verify each
+//! collective moves exactly the data volume its cost model claims, and —
+//! because both transports count the same logical payload bytes — to
+//! assert the TCP mesh produces byte-identical traffic to the in-memory
+//! control.
+//!
+//! **Fault path**: every mesh shares one [`Health`] table. A rank (or the
+//! coordinator's heartbeat monitor, or a TCP reader seeing its socket
+//! drop) can [`Health::mark_dead`] a peer; that raises a mesh-wide abort
+//! flag, and every blocked `recv` — which waits on a condvar in bounded
+//! slices, never indefinitely — unwinds with a typed [`MeshError`]
+//! instead of deadlocking. This is what makes a dead rank mid-collective
+//! a recoverable event rather than a process-wide hang.
+
+use std::collections::hash_map::Entry;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context as _, Result};
+
+pub mod frame;
+pub mod mesh;
+pub mod tcp;
+
+pub use mesh::{Endpoint, Mesh};
+pub use tcp::{TcpEndpoint, TcpMesh};
+
+/// Typed transport fault. Collectives propagate these through their normal
+/// `Result` paths, so a worker can distinguish *being* the failure (a real
+/// local error) from being a **victim** of a peer's death / a phase abort
+/// (`anyhow`'s `downcast_ref::<MeshError>` finds it through any context
+/// chain).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MeshError {
+    /// The peer this rank was waiting on (or sending to) is marked dead.
+    PeerDead { rank: usize },
+    /// The mesh-wide abort flag is up; `origin` is the first rank marked
+    /// dead (the death that triggered the abort).
+    Aborted { origin: usize },
+}
+
+impl std::fmt::Display for MeshError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MeshError::PeerDead { rank } => write!(f, "peer rank {rank} is dead"),
+            MeshError::Aborted { origin } => {
+                write!(f, "collective aborted (first dead rank: {origin})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MeshError {}
+
+/// Upper bound on one condvar wait in the blocking `recv` loop: how often
+/// a receiver that has seen no traffic re-checks the health table (and
+/// ticks its own heartbeat). Arrivals interrupt the wait immediately —
+/// unlike the old 1 ms sleep-tick poll this burns no CPU while idle — so
+/// the slice only bounds *fault* detection latency, not message latency.
+const WAIT_SLICE: Duration = Duration::from_millis(20);
+
+/// Shared per-mesh health table: heartbeats, per-rank liveness, and the
+/// mesh-wide abort flag. One per mesh; every endpoint holds it, and the
+/// coordinator's heartbeat monitor scans it from outside the mesh.
+#[derive(Debug)]
+pub struct Health {
+    start: Instant,
+    /// Millis-since-`start` of each rank's last heartbeat.
+    beats: Vec<AtomicU64>,
+    /// Ranks whose worker thread has exited — cleanly *or* by
+    /// erroring/panicking out. They stop beating legitimately; the
+    /// heartbeat monitor must not confuse any of them with hung ranks
+    /// (whether an exited rank was a casualty is what `dead` records).
+    done: Vec<AtomicBool>,
+    dead: Vec<AtomicBool>,
+    abort: AtomicBool,
+    /// First rank marked dead (`usize::MAX` = none yet).
+    first_dead: AtomicUsize,
+}
+
+impl Health {
+    pub(crate) fn new(n: usize) -> Self {
+        Self {
+            start: Instant::now(),
+            beats: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            done: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            dead: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            abort: AtomicBool::new(false),
+            first_dead: AtomicUsize::new(usize::MAX),
+        }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.dead.len()
+    }
+
+    /// Record a liveness tick for `rank`.
+    pub fn beat(&self, rank: usize) {
+        let ms = self.start.elapsed().as_millis() as u64;
+        self.beats[rank].store(ms, Ordering::Relaxed);
+    }
+
+    /// Millis since `rank`'s last heartbeat.
+    pub fn millis_since_beat(&self, rank: usize) -> u64 {
+        let now = self.start.elapsed().as_millis() as u64;
+        now.saturating_sub(self.beats[rank].load(Ordering::Relaxed))
+    }
+
+    /// Mark `rank`'s worker thread as exited (cleanly or not): the monitor
+    /// stops expecting heartbeats from it.
+    pub fn mark_done(&self, rank: usize) {
+        self.done[rank].store(true, Ordering::Release);
+    }
+
+    pub fn is_done(&self, rank: usize) -> bool {
+        self.done[rank].load(Ordering::Acquire)
+    }
+
+    /// Declare `rank` dead. Raises the mesh-wide abort flag, so every
+    /// in-flight `recv` on every surviving rank unwinds within one
+    /// [`WAIT_SLICE`] instead of waiting on a message that will never come.
+    pub fn mark_dead(&self, rank: usize) {
+        self.dead[rank].store(true, Ordering::Release);
+        let _ = self.first_dead.compare_exchange(
+            usize::MAX,
+            rank,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        );
+        self.abort.store(true, Ordering::Release);
+    }
+
+    pub fn is_dead(&self, rank: usize) -> bool {
+        self.dead[rank].load(Ordering::Acquire)
+    }
+
+    pub fn aborted(&self) -> bool {
+        self.abort.load(Ordering::Acquire)
+    }
+
+    /// The rank whose death triggered the abort, if any.
+    pub fn first_dead(&self) -> Option<usize> {
+        match self.first_dead.load(Ordering::Acquire) {
+            usize::MAX => None,
+            r => Some(r),
+        }
+    }
+
+    /// All ranks currently marked dead.
+    pub fn dead_ranks(&self) -> Vec<usize> {
+        (0..self.dead.len()).filter(|&r| self.is_dead(r)).collect()
+    }
+
+    /// Fault check on the `src → this rank` edge: errors once `src` is
+    /// dead or the mesh is aborting.
+    fn check_edge(&self, src: usize) -> Result<(), MeshError> {
+        if self.is_dead(src) {
+            return Err(MeshError::PeerDead { rank: src });
+        }
+        if self.aborted() {
+            return Err(MeshError::Aborted {
+                origin: self.first_dead().unwrap_or(usize::MAX),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Wire payload. FP32 is the paper's BN-stat path; FP16 the gradient path.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+}
+
+impl Payload {
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            Payload::F32(v) => 4 * v.len() as u64,
+            Payload::F16(v) => 2 * v.len() as u64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len(),
+            Payload::F16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One tagged message in flight.
+#[derive(Debug)]
+pub(crate) struct Msg {
+    pub(crate) src: usize,
+    pub(crate) tag: u64,
+    pub(crate) payload: Payload,
+}
+
+/// Shared per-mesh traffic counters (lock-free). Both transports count the
+/// same **logical** payload bytes — frame headers and control traffic on
+/// the TCP path are excluded — so a collective's byte volume is
+/// transport-invariant and tests can compare the two directly.
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub bytes_sent: AtomicU64,
+    pub bytes_received: AtomicU64,
+    pub messages: AtomicU64,
+    /// Highest tag any rank has sent with — lets tests verify that a
+    /// collective stays inside its declared `tag_span` window.
+    pub max_tag: AtomicU64,
+}
+
+impl Counters {
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.bytes_sent.load(Ordering::Relaxed),
+            self.bytes_received.load(Ordering::Relaxed),
+            self.messages.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Highest tag observed on any send since the last reset.
+    pub fn max_tag_seen(&self) -> u64 {
+        self.max_tag.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.bytes_sent.store(0, Ordering::Relaxed);
+        self.bytes_received.store(0, Ordering::Relaxed);
+        self.messages.store(0, Ordering::Relaxed);
+        self.max_tag.store(0, Ordering::Relaxed);
+    }
+}
+
+/// One rank's inbox: a condvar-fronted queue. Producers (in-memory peer
+/// sends, TCP reader threads) push and notify; the single consumer (the
+/// rank's `recv` loop) parks on the condvar instead of sleep-polling, so a
+/// blocked rank burns no CPU and wakes the moment a message lands.
+#[derive(Debug, Default)]
+pub(crate) struct Inbox {
+    q: Mutex<VecDeque<Msg>>,
+    cv: Condvar,
+}
+
+impl Inbox {
+    pub(crate) fn push(&self, msg: Msg) {
+        self.q.lock().unwrap().push_back(msg);
+        self.cv.notify_one();
+    }
+
+    /// Pop the oldest message, parking for at most `slice` when empty.
+    /// `None` means the slice elapsed (or a spurious wake found the queue
+    /// still empty) — the caller re-checks health and parks again.
+    pub(crate) fn pop_timeout(&self, slice: Duration) -> Option<Msg> {
+        let mut q = self.q.lock().unwrap();
+        if let Some(m) = q.pop_front() {
+            return Some(m);
+        }
+        let (mut q, _) = self.cv.wait_timeout(q, slice).unwrap();
+        q.pop_front()
+    }
+}
+
+/// Upper bound on parked scratch buffers per dtype (bounds memory when a
+/// caller recycles far more than it sends).
+const FREELIST_CAP: usize = 32;
+
+/// Per-endpoint scratch-buffer freelists. Receive paths recycle consumed
+/// payload storage here; send paths draw from it instead of allocating per
+/// hop. In a steady ring schedule each rank receives about as much as it
+/// sends, so buffers circulate recv → freelist → next send and the
+/// per-hop allocation rate drops to ~zero after warmup.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    free_f32: Vec<Vec<f32>>,
+    free_f16: Vec<Vec<u16>>,
+    hits: u64,
+}
+
+impl Scratch {
+    /// Take an **empty** f32 scratch buffer with at least `capacity_hint`
+    /// reserved — from the freelist when one is parked, freshly allocated
+    /// otherwise.
+    pub fn alloc_f32(&mut self, capacity_hint: usize) -> Vec<f32> {
+        match self.free_f32.pop() {
+            Some(mut v) => {
+                self.hits += 1;
+                v.clear();
+                v.reserve(capacity_hint);
+                v
+            }
+            None => Vec::with_capacity(capacity_hint),
+        }
+    }
+
+    /// Take a zero-filled f16 scratch buffer of exactly `len` elements.
+    /// Recycled buffers are cleared before resizing, so a longer previous
+    /// payload can never leak a stale tail into a shorter message.
+    pub fn alloc_f16(&mut self, len: usize) -> Vec<u16> {
+        let mut v = match self.free_f16.pop() {
+            Some(v) => {
+                self.hits += 1;
+                v
+            }
+            None => Vec::new(),
+        };
+        v.clear();
+        v.resize(len, 0);
+        v
+    }
+
+    /// Park a consumed f32 buffer for reuse by a later send/receive.
+    pub fn recycle_f32(&mut self, v: Vec<f32>) {
+        if self.free_f32.len() < FREELIST_CAP {
+            self.free_f32.push(v);
+        }
+    }
+
+    /// Park a consumed f16 buffer for reuse by a later send/receive.
+    pub fn recycle_f16(&mut self, v: Vec<u16>) {
+        if self.free_f16.len() < FREELIST_CAP {
+            self.free_f16.push(v);
+        }
+    }
+
+    /// Park a consumed payload's storage whatever its dtype.
+    pub fn recycle(&mut self, p: Payload) {
+        match p {
+            Payload::F32(v) => self.recycle_f32(v),
+            Payload::F16(v) => self.recycle_f16(v),
+        }
+    }
+
+    /// How many scratch buffers were served from the freelist instead of
+    /// the allocator (observability for the reuse tests).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    #[cfg(test)]
+    pub(crate) fn parked_f32(&self) -> usize {
+        self.free_f32.len()
+    }
+}
+
+/// The endpoint state both transports share: identity, the condvar inbox,
+/// the MPI-style pending map, counters/health handles, the per-recv
+/// deadline and the scratch freelists. Concrete endpoints embed one and
+/// layer their channel (peer inboxes / TCP sockets) on top.
+#[derive(Debug)]
+pub(crate) struct Core {
+    pub(crate) rank: usize,
+    pub(crate) n: usize,
+    pub(crate) inbox: Arc<Inbox>,
+    /// Out-of-order arrivals parked per `(src, tag)`. `VecDeque` keeps
+    /// pops O(1) under bursts, and entries are removed as soon as they
+    /// drain so the map cannot grow without bound across a run.
+    pub(crate) pending: HashMap<(usize, u64), VecDeque<Payload>>,
+    pub(crate) counters: Arc<Counters>,
+    pub(crate) health: Arc<Health>,
+    /// Hard per-`recv` wait bound. `None` (the default) means wait until
+    /// the health table says otherwise; the coordinator sets it to the
+    /// fault config's `rank_timeout` as a belt-and-braces bound against
+    /// undetected hangs.
+    pub(crate) recv_deadline: Option<Duration>,
+    pub(crate) scratch: Scratch,
+}
+
+impl Core {
+    pub(crate) fn new(
+        rank: usize,
+        n: usize,
+        inbox: Arc<Inbox>,
+        counters: Arc<Counters>,
+        health: Arc<Health>,
+    ) -> Self {
+        Self {
+            rank,
+            n,
+            inbox,
+            pending: HashMap::new(),
+            counters,
+            health,
+            recv_deadline: None,
+            scratch: Scratch::default(),
+        }
+    }
+
+    /// Pre-send fault check + traffic accounting shared by both transports.
+    pub(crate) fn check_send(&self, dst: usize) -> Result<()> {
+        if dst < self.n {
+            self.health
+                .check_edge(dst)
+                .map_err(anyhow::Error::new)
+                .with_context(|| format!("rank {} send to {dst}", self.rank))?;
+        }
+        Ok(())
+    }
+
+    pub(crate) fn note_sent(&self, tag: u64, bytes: u64) {
+        self.counters.bytes_sent.fetch_add(bytes, Ordering::Relaxed);
+        self.counters.messages.fetch_add(1, Ordering::Relaxed);
+        self.counters.max_tag.fetch_max(tag, Ordering::Relaxed);
+    }
+
+    /// Blocking receive of the message matching `(src, tag)` — but never
+    /// an *unbounded* block: the condvar wait runs in [`WAIT_SLICE`]
+    /// bounds, each expiry re-checking the shared health table (and
+    /// ticking this rank's own heartbeat), so a dead peer or a mesh abort
+    /// surfaces as a typed [`MeshError`] within one slice instead of
+    /// deadlocking the collective. Arrivals cut the wait short, so the
+    /// slice adds no latency to the healthy path.
+    ///
+    /// Messages from other (src, tag) pairs arriving first are parked and
+    /// delivered to their own matching receive later (MPI-style matching).
+    pub(crate) fn recv_match(&mut self, src: usize, tag: u64) -> Result<Payload> {
+        self.health
+            .check_edge(src)
+            .map_err(anyhow::Error::new)
+            .with_context(|| format!("rank {} recv from {src} tag {tag}", self.rank))?;
+        if let Entry::Occupied(mut e) = self.pending.entry((src, tag)) {
+            // queues are dropped when drained, so an entry is never empty
+            let p = e.get_mut().pop_front().expect("empty pending queue kept");
+            if e.get().is_empty() {
+                e.remove();
+            }
+            self.counters
+                .bytes_received
+                .fetch_add(p.wire_bytes(), Ordering::Relaxed);
+            return Ok(p);
+        }
+        let deadline = self.recv_deadline.map(|d| Instant::now() + d);
+        loop {
+            match self.inbox.pop_timeout(WAIT_SLICE) {
+                Some(msg) => {
+                    if msg.src == src && msg.tag == tag {
+                        self.counters
+                            .bytes_received
+                            .fetch_add(msg.payload.wire_bytes(), Ordering::Relaxed);
+                        return Ok(msg.payload);
+                    }
+                    self.pending
+                        .entry((msg.src, msg.tag))
+                        .or_default()
+                        .push_back(msg.payload);
+                }
+                None => {
+                    // Still waiting: we are alive (beat), but is the peer?
+                    self.health.beat(self.rank);
+                    self.health
+                        .check_edge(src)
+                        .map_err(anyhow::Error::new)
+                        .with_context(|| {
+                            format!("rank {} recv from {src} tag {tag}", self.rank)
+                        })?;
+                    if let Some(dl) = deadline {
+                        if Instant::now() >= dl {
+                            // The peer outlasted the hard bound: declare it
+                            // dead so the rest of the mesh unwinds too.
+                            self.health.mark_dead(src);
+                            return Err(anyhow::Error::new(MeshError::PeerDead {
+                                rank: src,
+                            }))
+                            .with_context(|| {
+                                format!(
+                                    "rank {} recv from {src} tag {tag}: deadline \
+                                     {:?} exceeded",
+                                    self.rank, self.recv_deadline
+                                )
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    pub(crate) fn pending_messages(&self) -> usize {
+        self.pending.values().map(|q| q.len()).sum()
+    }
+}
+
+/// What a collective schedule needs from a channel: tagged point-to-point
+/// `send`/`recv` of [`Payload`]s inside a fixed-size rank mesh, the shared
+/// [`Counters`] / [`Health`] tables, and the scratch freelists that keep
+/// the bucketed pipeline's message rate from turning into allocation
+/// churn. Every schedule takes `&mut dyn Transport`, so the in-memory
+/// [`Endpoint`] and the socket-backed [`TcpEndpoint`] are interchangeable
+/// under all of them.
+pub trait Transport: Send {
+    fn rank(&self) -> usize;
+
+    fn world_size(&self) -> usize;
+
+    fn counters(&self) -> &Counters;
+
+    /// Shared counter block (snapshot it *after* joining all rank threads —
+    /// per-thread snapshots race with peers still in flight).
+    fn counters_arc(&self) -> Arc<Counters>;
+
+    /// Shared health table of this endpoint's mesh (the coordinator's
+    /// heartbeat monitor scans it; tests use it to kill ranks).
+    fn health(&self) -> &Health;
+
+    fn health_arc(&self) -> Arc<Health>;
+
+    /// Bound every subsequent blocking `recv` to `d` of wall-clock wait;
+    /// on expiry the awaited peer is marked dead and the receive fails
+    /// with [`MeshError::PeerDead`]. `None` removes the bound.
+    fn set_recv_deadline(&mut self, d: Option<Duration>);
+
+    /// Send `payload` to `dst` under `tag`. Never blocks; fails fast when
+    /// `dst` is already marked dead or the mesh is aborting.
+    fn send(&mut self, dst: usize, tag: u64, payload: Payload) -> Result<()>;
+
+    /// Blocking receive of the message matching `(src, tag)`; unwinds with
+    /// a typed [`MeshError`] on peer death / mesh abort instead of
+    /// hanging. See [`Core::recv_match`] for the matching semantics.
+    fn recv(&mut self, src: usize, tag: u64) -> Result<Payload>;
+
+    /// Number of parked out-of-order messages (tests assert this drains to
+    /// zero so the pending map cannot leak across a long run).
+    fn pending_messages(&self) -> usize;
+
+    fn scratch(&self) -> &Scratch;
+
+    fn scratch_mut(&mut self) -> &mut Scratch;
+
+    /// Tick this rank's heartbeat (also ticked automatically while blocked
+    /// in `recv` — call it once per step so compute-heavy gaps still beat).
+    fn heartbeat(&self) {
+        self.health().beat(self.rank());
+    }
+
+    /// Declare a peer (or this rank itself) dead; aborts the whole mesh.
+    fn mark_dead(&self, rank: usize) {
+        self.health().mark_dead(rank);
+    }
+
+    /// Copy `data` into a freelist-backed buffer and send it (no per-hop
+    /// allocation once the freelist has warmed up).
+    fn send_f32(&mut self, dst: usize, tag: u64, data: &[f32]) -> Result<()> {
+        let mut buf = self.scratch_mut().alloc_f32(data.len());
+        buf.extend_from_slice(data);
+        self.send(dst, tag, Payload::F32(buf))
+    }
+
+    fn send_f16(&mut self, dst: usize, tag: u64, data: Vec<u16>) -> Result<()> {
+        self.send(dst, tag, Payload::F16(data))
+    }
+
+    fn alloc_f32(&mut self, capacity_hint: usize) -> Vec<f32> {
+        self.scratch_mut().alloc_f32(capacity_hint)
+    }
+
+    fn alloc_f16(&mut self, len: usize) -> Vec<u16> {
+        self.scratch_mut().alloc_f16(len)
+    }
+
+    fn recycle_f32(&mut self, v: Vec<f32>) {
+        self.scratch_mut().recycle_f32(v)
+    }
+
+    fn recycle_f16(&mut self, v: Vec<u16>) {
+        self.scratch_mut().recycle_f16(v)
+    }
+
+    fn recycle(&mut self, p: Payload) {
+        self.scratch_mut().recycle(p)
+    }
+
+    fn freelist_hits(&self) -> u64 {
+        self.scratch().hits()
+    }
+
+    /// Receive and require an f32 payload (wire-format mismatch is a bug).
+    fn recv_f32(&mut self, src: usize, tag: u64) -> Result<Vec<f32>> {
+        match self.recv(src, tag)? {
+            Payload::F32(v) => Ok(v),
+            Payload::F16(_) => Err(anyhow!(
+                "rank {}: expected f32 wire payload from {src} tag {tag}, got f16",
+                self.rank()
+            )),
+        }
+    }
+
+    /// Receive and require an f16 payload.
+    fn recv_f16(&mut self, src: usize, tag: u64) -> Result<Vec<u16>> {
+        match self.recv(src, tag)? {
+            Payload::F16(v) => Ok(v),
+            Payload::F32(_) => Err(anyhow!(
+                "rank {}: expected f16 wire payload from {src} tag {tag}, got f32",
+                self.rank()
+            )),
+        }
+    }
+}

@@ -1,0 +1,575 @@
+//! The socket transport: the same fully-connected rank mesh over
+//! `std::net` TCP, speaking the length-prefixed [`frame`] codec.
+//!
+//! Topology is a pairwise full mesh: for every pair `(i, j)` with
+//! `i < j`, rank `i` dials rank `j`'s listener and introduces itself with
+//! a `hello` control frame. Each connection is used full-duplex: the
+//! owning endpoint writes its outbound frames, and a dedicated **reader
+//! thread** decodes inbound frames into the endpoint's condvar inbox — so
+//! the `recv` path (matching, health checks, deadlines, counters) is the
+//! exact same [`Core`] code the in-memory mesh runs, and "socket
+//! readable" needs no polling anywhere.
+//!
+//! **Death = a dropped socket.** A reader that hits EOF or a stream error
+//! marks its peer dead in the shared [`Health`] table — unless the close
+//! was *clean*: an endpoint being dropped normally (end of phase, or a
+//! victim unwinding from someone else's failure) first sends a `bye`
+//! control frame to every peer. A rank that knows itself dead
+//! (`health.is_dead(own_rank)`) deliberately skips the `bye`, so its
+//! sockets drop cold and every peer's reader converts that into
+//! `mark_dead` — which is exactly how a killed worker **process** is
+//! detected: the kernel closes its sockets, and the survivors unwind into
+//! the elastic recovery path with no coordinator round-trip needed.
+//!
+//! [`TcpMesh::loopback`] builds all `n` endpoints in-process over
+//! 127.0.0.1 (sharing one [`Counters`]/[`Health`] like the in-memory
+//! mesh — this is what `[transport] mode = "tcp"` runs under `train`, and
+//! what the conformance suite compares against the in-memory control);
+//! [`connect_mesh`] builds one endpoint per OS process for the real
+//! coordinator/worker mode.
+
+use std::io::{ErrorKind, Write as _};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context as _, Result};
+
+use super::frame::{self, DEFAULT_MAX_FRAME_BYTES};
+use super::{Core, Counters, Health, Inbox, MeshError, Msg, Payload, Scratch, Transport};
+
+/// How long [`connect_mesh`] keeps re-dialing a peer whose listener is
+/// not up yet (fresh worker processes race each other to bind).
+const DIAL_RETRY: Duration = Duration::from_millis(100);
+const DIAL_ATTEMPTS: usize = 100;
+
+/// Factory for socket-backed meshes.
+pub struct TcpMesh;
+
+impl TcpMesh {
+    /// Build `n` endpoints connected over loopback TCP inside this
+    /// process, sharing one counter block and one health table — the
+    /// drop-in socket twin of [`Mesh::new`](super::Mesh::new).
+    pub fn loopback(n: usize) -> Result<Vec<TcpEndpoint>> {
+        Self::loopback_with(n, DEFAULT_MAX_FRAME_BYTES)
+    }
+
+    /// [`Self::loopback`] with an explicit frame-size cap.
+    pub fn loopback_with(n: usize, max_frame_bytes: usize) -> Result<Vec<TcpEndpoint>> {
+        assert!(n > 0, "mesh needs at least one rank");
+        let counters = Arc::new(Counters::default());
+        let health = Arc::new(Health::new(n));
+        let listener = TcpListener::bind("127.0.0.1:0").context("binding loopback mesh")?;
+        let addr = listener.local_addr()?;
+        // Pair (i, j): i dials, j accepts. Dials complete through the
+        // listen backlog, so a single thread can connect-then-accept.
+        let mut streams: Vec<Vec<Option<TcpStream>>> =
+            (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let dialer = TcpStream::connect(addr)
+                    .with_context(|| format!("loopback dial for pair ({i},{j})"))?;
+                let (acceptor, _) = listener.accept()?;
+                streams[i][j] = Some(dialer);
+                streams[j][i] = Some(acceptor);
+            }
+        }
+        streams
+            .into_iter()
+            .enumerate()
+            .map(|(rank, links)| {
+                assemble(rank, n, links, counters.clone(), health.clone(), max_frame_bytes)
+            })
+            .collect()
+    }
+}
+
+/// Build one rank's endpoint of a **multi-process** mesh. `peers[r]` is
+/// rank `r`'s data-listener address (`peers[rank]` itself is unused);
+/// `listener` is this rank's own, already bound. Dials every higher rank
+/// (introducing itself with a `hello` control frame, retrying while the
+/// peer's listener comes up) and accepts one connection from every lower
+/// rank. `counters`/`health` are this process's local tables — in
+/// process mode each worker owns its own copy of both.
+///
+/// Both the dial and accept loops watch `health`'s abort flag: if the
+/// coordinator cancels the attempt (another rank died before the mesh
+/// finished forming), the call unwinds with a [`MeshError`] instead of
+/// blocking on a peer that will never connect.
+pub fn connect_mesh(
+    rank: usize,
+    peers: &[String],
+    listener: &TcpListener,
+    counters: Arc<Counters>,
+    health: Arc<Health>,
+    max_frame_bytes: usize,
+) -> Result<TcpEndpoint> {
+    let n = peers.len();
+    assert!(rank < n, "rank {rank} outside mesh of {n}");
+    let mut links: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+    let mut wbuf = Vec::new();
+    // Dial up first: connects land in the peers' listen backlogs, so the
+    // dial/accept order across ranks cannot deadlock.
+    for (j, addr) in peers.iter().enumerate().skip(rank + 1) {
+        let mut s = dial_retry(addr, &health)
+            .with_context(|| format!("rank {rank} dialing rank {j} at {addr}"))?;
+        frame::write_control(
+            &mut s,
+            &mut wbuf,
+            &format!(r#"{{"type":"hello","rank":{rank}}}"#),
+        )
+        .with_context(|| format!("rank {rank} hello to rank {j}"))?;
+        links[j] = Some(s);
+    }
+    // Accept one connection from every lower rank; the hello frame says
+    // which one (accept order is whatever the network delivers). The
+    // listener runs non-blocking so the abort flag is honoured while
+    // waiting.
+    listener.set_nonblocking(true)?;
+    let deadline = Instant::now() + DIAL_RETRY * DIAL_ATTEMPTS as u32;
+    let mut body = Vec::new();
+    for _ in 0..rank {
+        let (mut s, from) = loop {
+            check_abort(&health)?;
+            match listener.accept() {
+                Ok(pair) => break pair,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() > deadline {
+                        bail!("rank {rank} timed out waiting for lower-rank mesh peers");
+                    }
+                    thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(anyhow!(e).context("accepting mesh peer")),
+            }
+        };
+        s.set_nonblocking(false)?;
+        let h = frame::read_frame(&mut s, max_frame_bytes, &mut body)?
+            .ok_or_else(|| anyhow!("mesh peer at {from} closed before hello"))?;
+        if h.kind != frame::KIND_CONTROL {
+            bail!("mesh peer at {from} sent frame kind {} before hello", h.kind);
+        }
+        let j = crate::util::json::Json::parse(std::str::from_utf8(&body)?)?
+            .get("rank")?
+            .as_usize()?;
+        if j >= rank || links[j].is_some() {
+            bail!("mesh hello from unexpected rank {j} (this rank: {rank})");
+        }
+        links[j] = Some(s);
+    }
+    listener.set_nonblocking(false)?;
+    assemble(rank, n, links, counters, health, max_frame_bytes)
+}
+
+fn check_abort(health: &Health) -> Result<()> {
+    if health.aborted() {
+        bail!(MeshError::Aborted {
+            origin: health.first_dead().unwrap_or(0),
+        });
+    }
+    Ok(())
+}
+
+fn dial_retry(addr: &str, health: &Health) -> Result<TcpStream> {
+    let mut last = None;
+    for _ in 0..DIAL_ATTEMPTS {
+        check_abort(health)?;
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                last = Some(e);
+                thread::sleep(DIAL_RETRY);
+            }
+        }
+    }
+    Err(last.expect("at least one dial attempt").into())
+}
+
+/// Wrap pairwise streams into an endpoint: set NODELAY (collective hops
+/// are latency-bound small-to-medium writes), clone each stream for its
+/// reader thread, and start the readers.
+fn assemble(
+    rank: usize,
+    n: usize,
+    links: Vec<Option<TcpStream>>,
+    counters: Arc<Counters>,
+    health: Arc<Health>,
+    max_frame_bytes: usize,
+) -> Result<TcpEndpoint> {
+    let inbox = Arc::new(Inbox::default());
+    let closing = Arc::new(AtomicBool::new(false));
+    let mut writers = Vec::with_capacity(n);
+    let mut readers = Vec::new();
+    for (peer, link) in links.into_iter().enumerate() {
+        match link {
+            Some(s) => {
+                s.set_nodelay(true)?;
+                let reader_stream = s.try_clone()?;
+                readers.push(spawn_reader(
+                    rank,
+                    peer,
+                    reader_stream,
+                    inbox.clone(),
+                    health.clone(),
+                    closing.clone(),
+                    max_frame_bytes,
+                ));
+                writers.push(Some(s));
+            }
+            None => writers.push(None),
+        }
+    }
+    Ok(TcpEndpoint {
+        core: Core::new(rank, n, inbox, counters, health),
+        writers,
+        wbuf: Vec::new(),
+        readers,
+        closing,
+        max_frame_bytes,
+    })
+}
+
+/// One reader thread per peer stream: decode frames into the shared
+/// inbox; translate an unclean close into `mark_dead(peer)`.
+fn spawn_reader(
+    rank: usize,
+    peer: usize,
+    mut stream: TcpStream,
+    inbox: Arc<Inbox>,
+    health: Arc<Health>,
+    closing: Arc<AtomicBool>,
+    max_frame_bytes: usize,
+) -> thread::JoinHandle<()> {
+    thread::Builder::new()
+        .name(format!("tcp-mesh-r{rank}p{peer}"))
+        .spawn(move || {
+            let mut body = Vec::new();
+            // `bye` received: the peer is closing on purpose; the EOF that
+            // follows is not a death.
+            let mut clean = false;
+            loop {
+                match frame::read_frame(&mut stream, max_frame_bytes, &mut body) {
+                    Ok(Some(h)) => match h.kind {
+                        // The only control traffic on an established mesh
+                        // link is the close handshake.
+                        frame::KIND_CONTROL => clean = true,
+                        _ => match frame::decode_payload(h.kind, &body, Vec::new(), Vec::new()) {
+                            Ok(payload) => inbox.push(Msg {
+                                src: h.src as usize,
+                                tag: h.tag,
+                                payload,
+                            }),
+                            // A malformed frame means the stream is out of
+                            // sync — unrecoverable for this link.
+                            Err(_) => break,
+                        },
+                    },
+                    Ok(None) => break, // EOF
+                    Err(_) => break,   // truncated / oversized / io error
+                }
+            }
+            if !clean && !closing.load(Ordering::Acquire) && !health.is_dead(peer) {
+                health.mark_dead(peer);
+            }
+        })
+        .expect("spawning tcp mesh reader")
+}
+
+/// One rank's socket-backed view of the mesh. Same [`Transport`] surface
+/// as the in-memory [`Endpoint`](super::Endpoint): `recv` runs the shared
+/// matching/health/deadline loop over the inbox the reader threads feed,
+/// and `send` frames the payload into the peer's stream (recycling the
+/// payload storage into this endpoint's freelist, so the high-rate
+/// bucketed pipeline reuses buffers on the socket path too).
+pub struct TcpEndpoint {
+    core: Core,
+    /// writers[r] = the stream to rank `r` (`None` for this rank itself).
+    writers: Vec<Option<TcpStream>>,
+    /// Reusable frame-serialization buffer.
+    wbuf: Vec<u8>,
+    readers: Vec<thread::JoinHandle<()>>,
+    /// Tells this endpoint's readers that the sockets are being shut down
+    /// on purpose, so the EOF they see is not a peer death.
+    closing: Arc<AtomicBool>,
+    max_frame_bytes: usize,
+}
+
+impl TcpEndpoint {
+    pub fn rank(&self) -> usize {
+        self.core.rank
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.core.n
+    }
+
+    pub fn counters(&self) -> &Counters {
+        &self.core.counters
+    }
+
+    pub fn counters_arc(&self) -> Arc<Counters> {
+        self.core.counters.clone()
+    }
+
+    pub fn health(&self) -> &Health {
+        &self.core.health
+    }
+
+    pub fn health_arc(&self) -> Arc<Health> {
+        self.core.health.clone()
+    }
+
+    pub fn heartbeat(&self) {
+        self.core.health.beat(self.core.rank);
+    }
+
+    pub fn mark_dead(&self, rank: usize) {
+        self.core.health.mark_dead(rank);
+    }
+
+    pub fn set_recv_deadline(&mut self, d: Option<Duration>) {
+        self.core.recv_deadline = d;
+    }
+
+    fn send_impl(&mut self, dst: usize, tag: u64, payload: Payload) -> Result<()> {
+        self.core.check_send(dst)?;
+        if dst >= self.core.n {
+            bail!("send to out-of-range rank {dst} (n={})", self.core.n);
+        }
+        let bytes = payload.wire_bytes();
+        if dst == self.core.rank {
+            // Self-edge: loop back through the inbox like the in-memory
+            // mesh (no socket exists to ourselves).
+            self.core.inbox.push(Msg { src: dst, tag, payload });
+            self.core.note_sent(tag, bytes);
+            return Ok(());
+        }
+        frame::encode_payload_frame(
+            &mut self.wbuf,
+            self.core.rank as u32,
+            dst as u32,
+            tag,
+            &payload,
+        );
+        if self.wbuf.len() > self.max_frame_bytes + 4 {
+            bail!(
+                "payload of {} wire bytes exceeds max_frame_bytes {} (raise \
+                 [transport] max_frame_bytes or shrink bucket_bytes)",
+                bytes,
+                self.max_frame_bytes
+            );
+        }
+        let stream = self.writers[dst]
+            .as_mut()
+            .expect("pairwise mesh link missing");
+        stream
+            .write_all(&self.wbuf)
+            .with_context(|| format!("rank {} tcp send to {dst} tag {tag}", self.core.rank))?;
+        self.core.note_sent(tag, bytes);
+        // The frame now carries the bytes; the payload storage is free.
+        self.core.scratch.recycle(payload);
+        Ok(())
+    }
+}
+
+impl Transport for TcpEndpoint {
+    fn rank(&self) -> usize {
+        self.core.rank
+    }
+
+    fn world_size(&self) -> usize {
+        self.core.n
+    }
+
+    fn counters(&self) -> &Counters {
+        &self.core.counters
+    }
+
+    fn counters_arc(&self) -> Arc<Counters> {
+        self.core.counters.clone()
+    }
+
+    fn health(&self) -> &Health {
+        &self.core.health
+    }
+
+    fn health_arc(&self) -> Arc<Health> {
+        self.core.health.clone()
+    }
+
+    fn set_recv_deadline(&mut self, d: Option<Duration>) {
+        self.core.recv_deadline = d;
+    }
+
+    fn send(&mut self, dst: usize, tag: u64, payload: Payload) -> Result<()> {
+        self.send_impl(dst, tag, payload)
+    }
+
+    fn recv(&mut self, src: usize, tag: u64) -> Result<Payload> {
+        self.core.recv_match(src, tag)
+    }
+
+    fn pending_messages(&self) -> usize {
+        self.core.pending_messages()
+    }
+
+    fn scratch(&self) -> &Scratch {
+        &self.core.scratch
+    }
+
+    fn scratch_mut(&mut self) -> &mut Scratch {
+        &mut self.core.scratch
+    }
+}
+
+impl Drop for TcpEndpoint {
+    fn drop(&mut self) {
+        self.closing.store(true, Ordering::Release);
+        // A rank that knows itself dead must drop its sockets *cold*: the
+        // missing `bye` is what tells every peer's reader this was a
+        // death, not a clean close.
+        let dying = self.core.health.is_dead(self.core.rank);
+        for (peer, link) in self.writers.iter_mut().enumerate() {
+            if let Some(s) = link {
+                if !dying {
+                    frame::encode_frame(
+                        &mut self.wbuf,
+                        frame::KIND_CONTROL,
+                        self.core.rank as u32,
+                        peer as u32,
+                        0,
+                        br#"{"type":"bye"}"#,
+                    );
+                    let _ = s.write_all(&self.wbuf);
+                }
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for TcpEndpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TcpEndpoint")
+            .field("rank", &self.core.rank)
+            .field("n", &self.core.n)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::MeshError;
+    use super::*;
+    use std::time::Instant;
+
+    fn t<T: Transport>(ep: &mut T) -> &mut dyn Transport {
+        ep
+    }
+
+    #[test]
+    fn loopback_point_to_point_and_tag_matching() {
+        let mut eps = TcpMesh::loopback(2).unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        t(&mut a).send_f32(1, 1, &[1.0]).unwrap();
+        t(&mut a).send_f32(1, 2, &[2.0]).unwrap();
+        t(&mut a).send_f16(1, 1, vec![0x3C00]).unwrap();
+        // out-of-order receive parks the earlier tag-1 messages
+        assert_eq!(t(&mut b).recv_f32(0, 2).unwrap(), vec![2.0]);
+        assert_eq!(t(&mut b).recv_f32(0, 1).unwrap(), vec![1.0]);
+        assert_eq!(t(&mut b).recv_f16(0, 1).unwrap(), vec![0x3C00]);
+        assert_eq!(b.pending_messages(), 0);
+        // logical payload bytes only: 4 + 4 + 2 on each side of the wire
+        let (sent, recvd, msgs) = a.counters().snapshot();
+        assert_eq!((sent, recvd, msgs), (10, 10, 3));
+    }
+
+    #[test]
+    fn loopback_self_send_round_trips() {
+        let mut eps = TcpMesh::loopback(2).unwrap();
+        let mut a = eps.remove(0);
+        t(&mut a).send_f32(0, 5, &[4.0, 5.0]).unwrap();
+        assert_eq!(t(&mut a).recv_f32(0, 5).unwrap(), vec![4.0, 5.0]);
+    }
+
+    /// Two "processes": separate Health/Counters per endpoint, linked by
+    /// `connect_mesh`. A clean drop says `bye`, so no one is marked dead.
+    #[test]
+    fn clean_drop_is_not_a_death() {
+        let (e0, e1) = process_pair();
+        let h1 = e1.health_arc();
+        drop(e0);
+        // e1's reader sees bye + EOF and exits without marking rank 0 dead
+        let t0 = Instant::now();
+        while h1.first_dead().is_none() && t0.elapsed() < Duration::from_millis(300) {
+            thread::sleep(Duration::from_millis(10));
+        }
+        assert!(!h1.is_dead(0), "clean close must not look like a death");
+        drop(e1);
+    }
+
+    /// A socket dropped *without* `bye` — what the kernel does when a
+    /// worker process dies — marks the peer dead and unwinds blocked
+    /// receivers in bounded time.
+    #[test]
+    fn socket_drop_without_bye_marks_peer_dead() {
+        let (e0, mut e1) = process_pair();
+        // Rank 0 "dies": knowing itself dead suppresses the bye.
+        e0.mark_dead(0);
+        let t0 = Instant::now();
+        drop(e0);
+        let err = t(&mut e1).recv_f32(0, 0).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(5), "recv did not unwind fast");
+        assert_eq!(
+            err.downcast_ref::<MeshError>(),
+            Some(&MeshError::PeerDead { rank: 0 })
+        );
+        assert!(e1.health().is_dead(0));
+    }
+
+    #[test]
+    fn oversized_send_is_a_clean_error() {
+        let mut eps = TcpMesh::loopback_with(2, 64).unwrap();
+        let mut a = eps.remove(0);
+        let err = t(&mut a).send_f32(1, 0, &[0.0; 100]).unwrap_err();
+        assert!(format!("{err:#}").contains("max_frame_bytes"), "{err:#}");
+    }
+
+    /// Build a 2-rank mesh the way two worker processes would: one
+    /// listener and one Health/Counters pair per endpoint.
+    fn process_pair() -> (TcpEndpoint, TcpEndpoint) {
+        let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addrs = vec![
+            l0.local_addr().unwrap().to_string(),
+            l1.local_addr().unwrap().to_string(),
+        ];
+        let a0 = addrs.clone();
+        let h = thread::spawn(move || {
+            connect_mesh(
+                0,
+                &a0,
+                &l0,
+                Arc::new(Counters::default()),
+                Arc::new(Health::new(2)),
+                DEFAULT_MAX_FRAME_BYTES,
+            )
+            .unwrap()
+        });
+        let e1 = connect_mesh(
+            1,
+            &addrs,
+            &l1,
+            Arc::new(Counters::default()),
+            Arc::new(Health::new(2)),
+            DEFAULT_MAX_FRAME_BYTES,
+        )
+        .unwrap();
+        (h.join().unwrap(), e1)
+    }
+}

@@ -100,6 +100,38 @@ impl FaultConfig {
     }
 }
 
+/// Transport selection + process-mode addresses (`[transport]` table).
+///
+/// `mode` picks the channel under `train`: `"memory"` (default — the
+/// in-process mesh, bit-identical to the pre-transport-layer behaviour)
+/// or `"tcp"` (the same ranks over loopback TCP sockets, exercising the
+/// frame codec and reader threads in-process). The `coordinator` /
+/// `worker` subcommands always speak TCP; `bind` is the coordinator's
+/// control-socket address (workers join by dialing it), `http` an
+/// optional plain-HTTP status/metrics listener (empty = off), and
+/// `max_frame_bytes` the frame-size cap both sides enforce on the wire.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransportConfig {
+    pub mode: String,
+    /// Coordinator control-socket bind / join address.
+    pub bind: String,
+    /// HTTP status endpoint bind address ("" = disabled).
+    pub http: String,
+    /// Hard cap on one framed message (header + payload).
+    pub max_frame_bytes: usize,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        Self {
+            mode: "memory".into(),
+            bind: "127.0.0.1:7070".into(),
+            http: String::new(),
+            max_frame_bytes: crate::collectives::transport::frame::DEFAULT_MAX_FRAME_BYTES,
+        }
+    }
+}
+
 /// Everything the Trainer needs for one run.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -143,6 +175,8 @@ pub struct TrainConfig {
     pub bucket_bytes: usize,
     /// Fault tolerance: heartbeat detection + elastic mid-phase recovery.
     pub fault: FaultConfig,
+    /// Transport selection (in-memory vs TCP) and process-mode addresses.
+    pub transport: TransportConfig,
 }
 
 /// Default gradient-bucket target: ~6–7 tensor-aligned buckets over the
@@ -170,6 +204,7 @@ impl TrainConfig {
             compute_lanes: 0,
             bucket_bytes: DEFAULT_BUCKET_BYTES,
             fault: FaultConfig::default(),
+            transport: TransportConfig::default(),
         }
     }
 
@@ -247,6 +282,7 @@ impl TrainConfig {
             compute_lanes: 0,
             bucket_bytes: DEFAULT_BUCKET_BYTES,
             fault: FaultConfig::default(),
+            transport: TransportConfig::default(),
         }
     }
 
@@ -287,6 +323,21 @@ impl TrainConfig {
         };
         if fault.enabled && fault.rank_timeout.is_zero() {
             bail!("fault.rank_timeout_ms must be > 0 when fault tolerance is enabled");
+        }
+
+        // Transport ([transport] table; all optional).
+        let td = TransportConfig::default();
+        let transport = TransportConfig {
+            mode: doc.str_or("transport.mode", &td.mode)?,
+            bind: doc.str_or("transport.bind", &td.bind)?,
+            http: doc.str_or("transport.http", &td.http)?,
+            max_frame_bytes: doc.usize_or("transport.max_frame_bytes", td.max_frame_bytes)?,
+        };
+        if transport.mode != "memory" && transport.mode != "tcp" {
+            bail!("transport.mode must be \"memory\" or \"tcp\", got {:?}", transport.mode);
+        }
+        if transport.max_frame_bytes < 64 {
+            bail!("transport.max_frame_bytes of {} cannot fit a frame", transport.max_frame_bytes);
         }
 
         // LR schedule.
@@ -352,6 +403,7 @@ impl TrainConfig {
             compute_lanes,
             bucket_bytes,
             fault,
+            transport,
         })
     }
 }
@@ -468,6 +520,31 @@ phases = [[0, 8, 4], [2, 16, 4]]
     #[test]
     fn toml_rejects_bad_wire() {
         let doc = Doc::parse("grad_wire = \"fp8\"\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn transport_config_defaults_and_parses() {
+        let c = TrainConfig::quickstart();
+        assert_eq!(c.transport.mode, "memory");
+        assert_eq!(c.transport.bind, "127.0.0.1:7070");
+        assert!(c.transport.http.is_empty());
+
+        let doc = Doc::parse(
+            "[transport]\nmode = \"tcp\"\nbind = \"0.0.0.0:9000\"\n\
+             http = \"127.0.0.1:9001\"\nmax_frame_bytes = 1048576\n",
+        )
+        .unwrap();
+        let c = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.transport.mode, "tcp");
+        assert_eq!(c.transport.bind, "0.0.0.0:9000");
+        assert_eq!(c.transport.http, "127.0.0.1:9001");
+        assert_eq!(c.transport.max_frame_bytes, 1 << 20);
+
+        // unknown mode and unusably small frame caps are config errors
+        let doc = Doc::parse("[transport]\nmode = \"carrier-pigeon\"\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+        let doc = Doc::parse("[transport]\nmax_frame_bytes = 16\n").unwrap();
         assert!(TrainConfig::from_toml(&doc).is_err());
     }
 }

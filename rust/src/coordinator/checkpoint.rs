@@ -125,9 +125,12 @@ impl<'a> Reader<'a> {
     }
 }
 
-/// Serialise `state` + `meta` to `path` (atomic: write temp, rename).
-pub fn save(path: impl AsRef<Path>, state: &WorkerState, meta: CheckpointMeta) -> Result<()> {
-    let path = path.as_ref();
+/// Serialise `state` + `meta` into the checkpoint byte format (magic,
+/// version, meta, three tensor sections, trailing fletcher-64). This is
+/// also the wire encoding the process mode uses to ship phase-boundary
+/// state between coordinator and workers — the same self-describing,
+/// checksummed bytes whether they land on disk or on a socket.
+pub fn encode(state: &WorkerState, meta: CheckpointMeta) -> Result<Vec<u8>> {
     let mut w = Writer { buf: Vec::new() };
     w.buf.extend_from_slice(MAGIC);
     w.u32(VERSION);
@@ -140,25 +143,11 @@ pub fn save(path: impl AsRef<Path>, state: &WorkerState, meta: CheckpointMeta) -
     w.section(&state.bn_running)?;
     let sum = fletcher64(&w.buf);
     w.u64(sum);
-
-    let tmp = path.with_extension("tmp");
-    {
-        let mut f = std::fs::File::create(&tmp)
-            .with_context(|| format!("creating {tmp:?}"))?;
-        f.write_all(&w.buf)?;
-        f.sync_all()?;
-    }
-    std::fs::rename(&tmp, path).with_context(|| format!("renaming into {path:?}"))?;
-    Ok(())
+    Ok(w.buf)
 }
 
-/// Load a checkpoint; verifies magic, version and checksum.
-pub fn load(path: impl AsRef<Path>) -> Result<(WorkerState, CheckpointMeta)> {
-    let path = path.as_ref();
-    let mut bytes = Vec::new();
-    std::fs::File::open(path)
-        .with_context(|| format!("opening {path:?}"))?
-        .read_to_end(&mut bytes)?;
+/// Inverse of [`encode`]; verifies magic, version and checksum.
+pub fn decode(bytes: &[u8]) -> Result<(WorkerState, CheckpointMeta)> {
     if bytes.len() < 8 {
         bail!("checkpoint too small");
     }
@@ -208,6 +197,32 @@ pub fn load(path: impl AsRef<Path>) -> Result<(WorkerState, CheckpointMeta)> {
     ))
 }
 
+/// Serialise `state` + `meta` to `path` (atomic: write temp, rename).
+pub fn save(path: impl AsRef<Path>, state: &WorkerState, meta: CheckpointMeta) -> Result<()> {
+    let path = path.as_ref();
+    let bytes = encode(state, meta)?;
+
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {tmp:?}"))?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming into {path:?}"))?;
+    Ok(())
+}
+
+/// Load a checkpoint; verifies magic, version and checksum.
+pub fn load(path: impl AsRef<Path>) -> Result<(WorkerState, CheckpointMeta)> {
+    let path = path.as_ref();
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {path:?}"))?
+        .read_to_end(&mut bytes)?;
+    decode(&bytes)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -242,6 +257,21 @@ mod tests {
         assert_eq!(loaded.bn_running, s.bn_running);
         assert_eq!(loaded.bn_steps, 17);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn encode_decode_round_trip_without_a_file() {
+        // The process mode ships these bytes over a socket instead of
+        // through the filesystem — the codec must stand on its own.
+        let meta = CheckpointMeta { step: 7, samples: 99 };
+        let s = state();
+        let bytes = encode(&s, meta).unwrap();
+        let (loaded, m2) = decode(&bytes).unwrap();
+        assert_eq!(m2, meta);
+        assert_eq!(loaded.params, s.params);
+        assert_eq!(loaded.momenta, s.momenta);
+        assert_eq!(loaded.bn_running, s.bn_running);
+        assert_eq!(loaded.bn_steps, s.bn_steps);
     }
 
     #[test]

@@ -6,6 +6,9 @@
 //! FP16 gradient wire). `Metrics::summary()` feeds the run report and
 //! EXPERIMENTS.md; `to_csv()` dumps the raw curve.
 
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
 use crate::util::stats;
 
 /// One optimizer step as seen by rank 0.
@@ -38,6 +41,41 @@ impl StepMetric {
     pub fn total_secs(&self) -> f64 {
         self.t_compute + self.t_comm + self.t_comm_hidden + self.t_apply + self.t_data
     }
+
+    /// Lossless JSON encoding of one step — the process mode ships rank 0's
+    /// curve over the control socket with this, so every field round-trips
+    /// (unlike [`Metrics::to_json`], which reports a digest).
+    pub fn to_wire(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("step".into(), Json::Num(self.step as f64));
+        m.insert("epoch".into(), Json::Num(self.epoch as f64));
+        m.insert("loss".into(), Json::Num(self.loss));
+        m.insert("lr".into(), Json::Num(self.lr));
+        m.insert("momentum".into(), Json::Num(self.momentum));
+        m.insert("global_batch".into(), Json::Num(self.global_batch as f64));
+        m.insert("t_compute".into(), Json::Num(self.t_compute));
+        m.insert("t_comm".into(), Json::Num(self.t_comm));
+        m.insert("t_comm_hidden".into(), Json::Num(self.t_comm_hidden));
+        m.insert("t_apply".into(), Json::Num(self.t_apply));
+        m.insert("t_data".into(), Json::Num(self.t_data));
+        Json::Obj(m)
+    }
+
+    pub fn from_wire(j: &Json) -> Result<Self> {
+        Ok(Self {
+            step: j.get("step")?.as_usize()?,
+            epoch: j.get("epoch")?.as_usize()? as u32,
+            loss: j.get("loss")?.as_f64()?,
+            lr: j.get("lr")?.as_f64()?,
+            momentum: j.get("momentum")?.as_f64()?,
+            global_batch: j.get("global_batch")?.as_usize()?,
+            t_compute: j.get("t_compute")?.as_f64()?,
+            t_comm: j.get("t_comm")?.as_f64()?,
+            t_comm_hidden: j.get("t_comm_hidden")?.as_f64()?,
+            t_apply: j.get("t_apply")?.as_f64()?,
+            t_data: j.get("t_data")?.as_f64()?,
+        })
+    }
 }
 
 /// One evaluation point.
@@ -46,6 +84,25 @@ pub struct EvalMetric {
     pub step: usize,
     pub val_loss: f64,
     pub accuracy: f64,
+}
+
+impl EvalMetric {
+    /// Lossless JSON encoding (see [`StepMetric::to_wire`]).
+    pub fn to_wire(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("step".into(), Json::Num(self.step as f64));
+        m.insert("val_loss".into(), Json::Num(self.val_loss));
+        m.insert("accuracy".into(), Json::Num(self.accuracy));
+        Json::Obj(m)
+    }
+
+    pub fn from_wire(j: &Json) -> Result<Self> {
+        Ok(Self {
+            step: j.get("step")?.as_usize()?,
+            val_loss: j.get("val_loss")?.as_f64()?,
+            accuracy: j.get("accuracy")?.as_f64()?,
+        })
+    }
 }
 
 /// Accumulated run metrics.
@@ -156,9 +213,42 @@ impl Metrics {
         self.evals.extend(other.evals);
     }
 
+    /// Lossless JSON encoding of the whole curve — the `done` message of
+    /// the process mode carries this, so the coordinator's merged metrics
+    /// are field-for-field what an in-process run would have recorded.
+    pub fn to_wire(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert(
+            "steps".into(),
+            Json::Arr(self.steps.iter().map(|s| s.to_wire()).collect()),
+        );
+        m.insert(
+            "evals".into(),
+            Json::Arr(self.evals.iter().map(|e| e.to_wire()).collect()),
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_wire(j: &Json) -> Result<Self> {
+        let steps = j
+            .get("steps")?
+            .as_arr()?
+            .iter()
+            .enumerate()
+            .map(|(i, s)| StepMetric::from_wire(s).with_context(|| format!("step record #{i}")))
+            .collect::<Result<Vec<_>>>()?;
+        let evals = j
+            .get("evals")?
+            .as_arr()?
+            .iter()
+            .enumerate()
+            .map(|(i, e)| EvalMetric::from_wire(e).with_context(|| format!("eval record #{i}")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { steps, evals })
+    }
+
     /// Structured run report (machine-readable twin of `Summary::format`).
-    pub fn to_json(&self) -> crate::util::json::Json {
-        use crate::util::json::Json;
+    pub fn to_json(&self) -> Json {
         use std::collections::BTreeMap;
         let s = self.summary();
         let mut top = BTreeMap::new();
@@ -292,7 +382,6 @@ mod tests {
 
     #[test]
     fn json_report_round_trips() {
-        use crate::util::json::Json;
         let mut m = Metrics::default();
         for i in 0..4 {
             m.push(step(i, 1.5));
@@ -306,6 +395,40 @@ mod tests {
         );
         assert_eq!(parsed.get("evals").unwrap().as_arr().unwrap().len(), 1);
         assert_eq!(parsed.get("loss_curve").unwrap().as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn wire_codec_round_trips_every_field() {
+        let mut m = Metrics::default();
+        for i in 0..3 {
+            let mut s = step(i, 1.0 + i as f64 * 0.125);
+            s.epoch = 2;
+            s.t_comm_hidden = 0.001 * i as f64;
+            m.push(s);
+        }
+        m.push_eval(EvalMetric { step: 2, val_loss: 0.875, accuracy: 0.3125 });
+        // through text, as the control socket would carry it
+        let text = m.to_wire().to_string();
+        let back = Metrics::from_wire(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.steps.len(), 3);
+        assert_eq!(back.evals.len(), 1);
+        for (a, b) in m.steps.iter().zip(&back.steps) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.epoch, b.epoch);
+            assert_eq!(a.loss, b.loss);
+            assert_eq!(a.lr, b.lr);
+            assert_eq!(a.momentum, b.momentum);
+            assert_eq!(a.global_batch, b.global_batch);
+            assert_eq!(a.t_compute, b.t_compute);
+            assert_eq!(a.t_comm, b.t_comm);
+            assert_eq!(a.t_comm_hidden, b.t_comm_hidden);
+            assert_eq!(a.t_apply, b.t_apply);
+            assert_eq!(a.t_data, b.t_data);
+        }
+        assert_eq!(m.evals[0].val_loss, back.evals[0].val_loss);
+        assert_eq!(m.evals[0].accuracy, back.evals[0].accuracy);
+        // malformed records fail loudly, not with defaults
+        assert!(Metrics::from_wire(&Json::parse("{\"steps\":[{}],\"evals\":[]}").unwrap()).is_err());
     }
 
     #[test]

@@ -8,7 +8,10 @@
 //! width), materialises the initial parameters (the `init` entry point —
 //! same He init as the paper's [10]), then executes the batch-size
 //! schedule phase by phase. Each phase spawns one thread per simulated GPU
-//! over a fresh [`Mesh`]; every rank pins its `(params, momenta)` into its
+//! over a fresh mesh on the configured transport ([`Mesh`] in memory by
+//! default, loopback [`TcpMesh`] with `transport.mode = "tcp"`; the
+//! `coordinator`/`worker` subcommands in [`remote`] stretch the same
+//! phases across processes); every rank pins its `(params, momenta)` into its
 //! compute lane for the phase, so steady-state steps ship only batches,
 //! reduced gradients and scalars. Within a step, gradient synchronization
 //! is **overlapped with backprop** (paper §2.2): the lane streams
@@ -30,6 +33,7 @@
 
 pub mod checkpoint;
 pub mod metrics;
+pub mod remote;
 pub mod worker;
 
 pub use checkpoint::CheckpointMeta;
@@ -41,8 +45,8 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::collectives::{self, Collective, Health, Mesh, MeshError, Wire};
-use crate::config::TrainConfig;
+use crate::collectives::{self, Collective, Health, Mesh, MeshError, TcpMesh, Transport, Wire};
+use crate::config::{TrainConfig, TransportConfig};
 use crate::data::{Augment, Loader, SynthDataset};
 use crate::runtime::{
     ArchManifest, BackendSpec, ComputeClient, ComputeService, HostTensor, Manifest,
@@ -412,7 +416,7 @@ impl Trainer {
                     fault: cfg.fault.clone(),
                 });
 
-                match run_phase_on_mesh(&ctx, &client, &dataset, cfg.seed, &state) {
+                match run_phase_on_mesh(&ctx, &cfg.transport, &client, &dataset, cfg.seed, &state) {
                     PhaseOutcome::Complete(mut outputs) => {
                         // Parameters are replicated: identical reduced
                         // gradients plus an identical update must leave
@@ -618,10 +622,32 @@ enum PhaseOutcome {
     },
 }
 
-/// Spawn `ctx.workers` rank threads over a fresh mesh and run the phase.
-/// Rank 0 starts from `state`; every rank receives a clone (parameters are
-/// replicated in data-parallel training), so the caller keeps the
-/// phase-boundary state for a recovery replay.
+/// Build one endpoint per rank on the configured transport: `"memory"` is
+/// the in-process mesh (the default — bit-identical to the behaviour
+/// before the transport layer existed), `"tcp"` runs the same ranks over
+/// loopback sockets, exercising the frame codec and reader threads under
+/// the full training loop. Either way the phase logic above sees only
+/// `dyn Transport`.
+fn build_endpoints(transport: &TransportConfig, n: usize) -> Result<Vec<Box<dyn Transport>>> {
+    match transport.mode.as_str() {
+        "memory" => Ok(Mesh::new(n)
+            .into_iter()
+            .map(|ep| Box::new(ep) as Box<dyn Transport>)
+            .collect()),
+        "tcp" => Ok(TcpMesh::loopback_with(n, transport.max_frame_bytes)
+            .context("building the loopback TCP mesh")?
+            .into_iter()
+            .map(|ep| Box::new(ep) as Box<dyn Transport>)
+            .collect()),
+        other => bail!("unknown transport.mode {other:?}"),
+    }
+}
+
+/// Spawn `ctx.workers` rank threads over a fresh mesh (in-memory or
+/// loopback TCP, per `transport`) and run the phase. Rank 0 starts from
+/// `state`; every rank receives a clone (parameters are replicated in
+/// data-parallel training), so the caller keeps the phase-boundary state
+/// for a recovery replay.
 ///
 /// Failure propagation: a rank that errors or panics is marked dead in the
 /// mesh's shared [`Health`] table, which flips the abort flag — every
@@ -633,13 +659,21 @@ enum PhaseOutcome {
 /// `rank_timeout` deadline as a last line of defence.
 fn run_phase_on_mesh(
     ctx: &Arc<PhaseCtx>,
+    transport: &TransportConfig,
     client: &ComputeClient,
     dataset: &SynthDataset,
     seed: u64,
     state: &WorkerState,
 ) -> PhaseOutcome {
     let n = ctx.workers;
-    let mesh = Mesh::new(n);
+    let mesh = match build_endpoints(transport, n) {
+        Ok(m) => m,
+        Err(err) => {
+            // No rank ever started: nothing is dead, nothing to recover —
+            // this is an environment failure, not a rank death.
+            return PhaseOutcome::Failed { dead: vec![], err };
+        }
+    };
     let health: Arc<Health> = mesh[0].health_arc();
 
     // Heartbeat monitor: flags ranks whose heartbeat goes stale (a hang —
@@ -688,7 +722,7 @@ fn run_phase_on_mesh(
                 let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
                     let mut loader =
                         Loader::new(dataset, Augment::standard(seed), rank, ctx.workers);
-                    worker::run_phase(&ctx, rank, &mut ep, &client, &mut loader, st)
+                    worker::run_phase(&ctx, rank, &mut *ep, &client, &mut loader, st)
                 }));
                 let out = match result {
                     Ok(Ok(o)) => Ok(o),

@@ -1,0 +1,1241 @@
+//! Process mode: the coordinator and its workers as **separate OS
+//! processes**, joined over a TCP control socket.
+//!
+//! `flashsgd coordinator --config cfg.toml` binds `transport.bind`, waits
+//! for the widest phase's worker count to register, then drives the same
+//! phase schedule as the in-process [`Trainer`](super::Trainer) — except
+//! each rank now lives in a `flashsgd worker --join addr` process. The
+//! control plane speaks the length-prefixed [`frame`] codec used by the
+//! data mesh: JSON control frames plus [`frame::KIND_BLOB`] frames
+//! carrying phase-boundary state in the checkpoint byte format
+//! ([`checkpoint::encode`] — the same self-describing, checksummed bytes
+//! whether they land on disk or on a socket).
+//!
+//! Per phase attempt:
+//!
+//! 1. coordinator → each participant: `prepare` (rank, geometry, schedule
+//!    position, `seq` tag) + a state blob;
+//! 2. each worker binds a fresh data listener and answers `ready {addr}`;
+//! 3. coordinator → all: `start {addrs}`; workers form the rank-to-rank
+//!    data mesh with [`tcp::connect_mesh`] and run the phase, pumping
+//!    `beat` frames so the coordinator can spot hung ranks;
+//! 4. each worker reports `done` (+ state blob; rank 0 attaches the phase
+//!    metrics) or `failed {victim}`.
+//!
+//! The coordinator enforces the replicated-parameter invariant by
+//! comparing every rank's state blob byte-for-byte against rank 0's, then
+//! decodes rank 0's as the next phase-boundary state. Elastic recovery
+//! mirrors the in-process runner: a worker whose control socket drops,
+//! whose heartbeat goes stale, or which reports a non-victim failure is
+//! declared dead ("a dead machine stays dead"), survivors are told to
+//! `abort` so their blocked collectives unwind, and the phase replays on a
+//! re-planned survivor mesh with the global batch preserved. Stale frames
+//! from an aborted attempt are fenced off by the per-attempt `seq` tag.
+//!
+//! With `transport.http` set, a plain-HTTP endpoint serves `GET /status`
+//! (run state) and `GET /metrics` (the merged metrics report) as JSON.
+
+use std::io::{Read as _, Write as _};
+use std::net::{TcpListener, TcpStream};
+use std::panic::AssertUnwindSafe;
+use std::path::Path;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::collectives::transport::{frame, tcp};
+use crate::collectives::{self, Collective, Counters, Health, MeshError, Transport, Wire};
+use crate::config::TrainConfig;
+use crate::data::{Augment, Loader, SynthDataset};
+use crate::runtime::{ArchManifest, BackendSpec, ComputeClient, ComputeService, HostTensor};
+use crate::util::json::Json;
+use crate::util::timer::Stopwatch;
+use crate::util::toml::Doc;
+
+use super::checkpoint::{self, CheckpointMeta};
+use super::metrics::Metrics;
+use super::worker::{self, PhaseCtx, WorkerOutput, WorkerState};
+use super::{effective_workers, RecoveryEvent, TrainReport, Trainer};
+
+/// Frame-size cap on the control plane. Control frames are tiny JSON, but
+/// the same stream ships whole-model state blobs, which dwarf any
+/// data-plane bucket — so the control cap is sized independently of
+/// `transport.max_frame_bytes`.
+const CONTROL_MAX_FRAME: usize = 1 << 30;
+
+/// How long a worker keeps re-dialing a coordinator that is not up yet.
+const JOIN_ATTEMPTS: usize = 120;
+const JOIN_RETRY: Duration = Duration::from_millis(250);
+
+/// One event from a control-socket reader thread. Every socket gets a
+/// blocking reader that feeds this into the owner's mpsc queue; all
+/// *writes* stay on the owner's main thread, so no stream is ever written
+/// from two threads.
+enum Event {
+    /// A JSON control frame from connection `id`.
+    Control(usize, Json),
+    /// A state blob from connection `id`.
+    Blob(usize, Vec<u8>),
+    /// Connection `id` hit EOF or a read error: the process behind it is
+    /// gone (or unreachable, which for a training run is the same thing).
+    Closed(usize),
+}
+
+fn spawn_control_reader(id: usize, mut stream: TcpStream, tx: mpsc::Sender<Event>) {
+    thread::Builder::new()
+        .name(format!("ctl-reader-{id}"))
+        .spawn(move || {
+            let mut body = Vec::new();
+            loop {
+                match frame::read_frame(&mut stream, CONTROL_MAX_FRAME, &mut body) {
+                    Ok(Some(h)) if h.kind == frame::KIND_CONTROL => {
+                        let parsed =
+                            std::str::from_utf8(&body).ok().and_then(|s| Json::parse(s).ok());
+                        match parsed {
+                            Some(j) => {
+                                if tx.send(Event::Control(id, j)).is_err() {
+                                    return;
+                                }
+                            }
+                            None => break,
+                        }
+                    }
+                    Ok(Some(h)) if h.kind == frame::KIND_BLOB => {
+                        if tx.send(Event::Blob(id, std::mem::take(&mut body))).is_err() {
+                            return;
+                        }
+                    }
+                    _ => break,
+                }
+            }
+            let _ = tx.send(Event::Closed(id));
+        })
+        .expect("spawning a control reader thread");
+}
+
+fn num(x: usize) -> Json {
+    Json::Num(x as f64)
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+// ---------------------------------------------------------------------
+// Coordinator
+// ---------------------------------------------------------------------
+
+/// One registered worker process, as the coordinator sees it.
+struct WorkerConn {
+    stream: TcpStream,
+    /// Eligible for future phases. Cleared forever once the worker is
+    /// declared dead (socket drop, stale heartbeat, or non-victim
+    /// failure) — a dead machine stays dead.
+    usable: bool,
+    /// Control socket still writable (a casualty's phase can die while its
+    /// process lives on; it still gets the final `shutdown`).
+    open: bool,
+    /// When the coordinator last heard a `beat` (or handed out a phase).
+    last_beat: Instant,
+    /// Rank-local heartbeat staleness the worker reported with that beat.
+    stale_ms: u64,
+}
+
+fn send_to(conns: &mut [WorkerConn], id: usize, wbuf: &mut Vec<u8>, j: &Json) {
+    let c = &mut conns[id];
+    if c.open && frame::write_control(&mut c.stream, wbuf, &j.to_string()).is_err() {
+        c.open = false;
+        c.usable = false;
+    }
+}
+
+/// Geometry + schedule position of one phase attempt.
+struct AttemptPlan {
+    /// Fencing tag: every frame of this attempt carries it, so stragglers
+    /// from an aborted attempt cannot corrupt the replay.
+    seq: u64,
+    workers: usize,
+    per_worker: usize,
+    steps: usize,
+    first_step: usize,
+    samples_before: u64,
+    skip_steps: usize,
+    attempt: usize,
+    degraded: bool,
+}
+
+enum RemoteOutcome {
+    /// Every rank finished and all state blobs were byte-identical;
+    /// `state` is rank 0's decoded phase-boundary state.
+    Complete { state: WorkerState, metrics: Metrics },
+    /// The attempt lost ranks (indices local to the attempt's mesh).
+    Failed { dead: Vec<usize>, err: anyhow::Error },
+}
+
+/// Mutable tracking state of one phase attempt.
+struct Attempt<'a> {
+    /// Connection id of each rank.
+    participants: &'a [usize],
+    seq: u64,
+    dead: Vec<bool>,
+    /// Ranks that reported `failed` (victim or casualty).
+    failed: Vec<bool>,
+    done_meta: Vec<Option<Metrics>>,
+    blobs: Vec<Option<Vec<u8>>>,
+    addrs: Vec<Option<String>>,
+    started: bool,
+    casualty_err: Option<anyhow::Error>,
+    victim_err: Option<anyhow::Error>,
+    /// Once any failure surfaces, the attempt drains survivors only until
+    /// this deadline — victims unwind in bounded time, and a rank that
+    /// does not is declared dead rather than waited on forever.
+    drain_deadline: Option<Instant>,
+    drain_budget: Duration,
+    wbuf: Vec<u8>,
+}
+
+impl Attempt<'_> {
+    fn rank_of(&self, id: usize) -> Option<usize> {
+        self.participants.iter().position(|&w| w == id)
+    }
+
+    fn resolved(&self, r: usize) -> bool {
+        self.blobs[r].is_some() || self.failed[r] || self.dead[r]
+    }
+
+    fn all_resolved(&self) -> bool {
+        (0..self.dead.len()).all(|r| self.resolved(r))
+    }
+
+    fn note_failure(&mut self) {
+        if self.drain_deadline.is_none() {
+            self.drain_deadline = Some(Instant::now() + self.drain_budget);
+        }
+    }
+
+    /// Declare `rank` dead: record the casualty, drop its worker from the
+    /// registry, and tell the survivors to abort so their blocked
+    /// collectives unwind instead of waiting on a silent peer.
+    fn declare_dead(&mut self, conns: &mut [WorkerConn], rank: usize, err: anyhow::Error) {
+        if self.dead[rank] {
+            return;
+        }
+        eprintln!("[coordinator] rank {rank} declared dead: {err:#}");
+        self.dead[rank] = true;
+        conns[self.participants[rank]].usable = false;
+        self.casualty_err.get_or_insert(err);
+        self.note_failure();
+        let abort = obj(vec![
+            ("type", Json::Str("abort".into())),
+            ("seq", num(self.seq as usize)),
+            ("rank", num(rank)),
+        ]);
+        let parts = self.participants;
+        for (r, &id) in parts.iter().enumerate() {
+            if r != rank {
+                send_to(conns, id, &mut self.wbuf, &abort);
+            }
+        }
+    }
+}
+
+/// Drive one phase attempt across the registered worker processes.
+fn run_phase_remote(
+    conns: &mut [WorkerConn],
+    rx: &mpsc::Receiver<Event>,
+    participants: &[usize],
+    ap: &AttemptPlan,
+    state: &WorkerState,
+    cfg: &TrainConfig,
+) -> Result<RemoteOutcome> {
+    let workers = ap.workers;
+    let state_bytes = checkpoint::encode(
+        state,
+        CheckpointMeta {
+            step: ap.first_step as u64,
+            samples: ap.samples_before,
+        },
+    )?;
+    let mut a = Attempt {
+        participants,
+        seq: ap.seq,
+        dead: vec![false; workers],
+        failed: vec![false; workers],
+        done_meta: (0..workers).map(|_| None).collect(),
+        blobs: (0..workers).map(|_| None).collect(),
+        addrs: (0..workers).map(|_| None).collect(),
+        started: false,
+        casualty_err: None,
+        victim_err: None,
+        drain_deadline: None,
+        drain_budget: if cfg.fault.enabled {
+            cfg.fault.rank_timeout * 2 + Duration::from_secs(10)
+        } else {
+            Duration::from_secs(30)
+        },
+        wbuf: Vec::new(),
+    };
+    let rank_timeout_ms = cfg.fault.rank_timeout.as_millis() as u64;
+
+    // Hand out the attempt: prepare frame + phase-boundary state blob.
+    let mut prep_failures = Vec::new();
+    for (rank, &id) in participants.iter().enumerate() {
+        let prep = obj(vec![
+            ("type", Json::Str("prepare".into())),
+            ("seq", num(ap.seq as usize)),
+            ("rank", num(rank)),
+            ("workers", num(workers)),
+            ("per_worker", num(ap.per_worker)),
+            ("steps", num(ap.steps)),
+            ("first_step", num(ap.first_step)),
+            ("samples_before", Json::Num(ap.samples_before as f64)),
+            ("skip_steps", num(ap.skip_steps)),
+            ("attempt", num(ap.attempt)),
+            ("degraded", Json::Bool(ap.degraded)),
+        ]);
+        let c = &mut conns[id];
+        c.last_beat = Instant::now();
+        c.stale_ms = 0;
+        let sent = c.open
+            && frame::write_control(&mut c.stream, &mut a.wbuf, &prep.to_string()).is_ok()
+            && frame::write_blob(&mut c.stream, &mut a.wbuf, &state_bytes).is_ok();
+        if !sent {
+            c.open = false;
+            c.usable = false;
+            prep_failures.push(rank);
+        }
+    }
+    for rank in prep_failures {
+        a.declare_dead(
+            conns,
+            rank,
+            anyhow!("worker connection lost while preparing rank {rank}"),
+        );
+    }
+
+    let tick = Duration::from_millis(50);
+    while !a.all_resolved() {
+        if let Some(dl) = a.drain_deadline {
+            if Instant::now() > dl {
+                for r in 0..workers {
+                    if !a.resolved(r) {
+                        a.declare_dead(
+                            conns,
+                            r,
+                            anyhow!("rank {r} did not resolve while draining a failed attempt"),
+                        );
+                    }
+                }
+                break;
+            }
+        }
+        let ev = match rx.recv_timeout(tick) {
+            Ok(ev) => ev,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                // A hung worker never closes its socket — only its silence
+                // gives it away. Effective staleness stacks the control-hop
+                // silence on the staleness the last beat itself reported.
+                if cfg.fault.enabled {
+                    for r in 0..workers {
+                        if a.resolved(r) {
+                            continue;
+                        }
+                        let c = &conns[a.participants[r]];
+                        let staleness = c.last_beat.elapsed().as_millis() as u64 + c.stale_ms;
+                        if staleness > rank_timeout_ms {
+                            a.declare_dead(
+                                conns,
+                                r,
+                                anyhow!("rank {r} heartbeat stale for {staleness} ms"),
+                            );
+                        }
+                    }
+                }
+                continue;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => bail!("control event channel closed"),
+        };
+        match ev {
+            Event::Closed(id) => {
+                conns[id].open = false;
+                conns[id].usable = false;
+                if let Some(rank) = a.rank_of(id) {
+                    if !a.resolved(rank) {
+                        a.declare_dead(
+                            conns,
+                            rank,
+                            anyhow!("worker {id} (rank {rank}) dropped its control connection"),
+                        );
+                    }
+                }
+            }
+            Event::Blob(id, bytes) => {
+                // A blob is only meaningful right after its `done` frame
+                // (same ordered stream); anything else is a straggler.
+                if let Some(rank) = a.rank_of(id) {
+                    if a.done_meta[rank].is_some() && a.blobs[rank].is_none() {
+                        a.blobs[rank] = Some(bytes);
+                    }
+                }
+            }
+            Event::Control(id, j) => {
+                let Some(rank) = a.rank_of(id) else { continue };
+                let Ok(ty) = j.get("type").and_then(|t| t.as_str()) else {
+                    continue;
+                };
+                let seq_ok = j.opt("seq").and_then(|s| s.as_usize().ok()) == Some(ap.seq as usize);
+                if !seq_ok {
+                    continue; // straggler from an aborted attempt
+                }
+                match ty {
+                    "ready" => {
+                        if let Ok(addr) = j.get("addr").and_then(|x| x.as_str()) {
+                            a.addrs[rank] = Some(addr.to_string());
+                        }
+                        if !a.started && a.addrs.iter().all(|x| x.is_some()) {
+                            let list: Vec<Json> = a
+                                .addrs
+                                .iter()
+                                .map(|x| Json::Str(x.clone().expect("checked above")))
+                                .collect();
+                            let start = obj(vec![
+                                ("type", Json::Str("start".into())),
+                                ("seq", num(ap.seq as usize)),
+                                ("addrs", Json::Arr(list)),
+                            ]);
+                            let parts = a.participants;
+                            for &pid in parts {
+                                send_to(conns, pid, &mut a.wbuf, &start);
+                            }
+                            a.started = true;
+                        }
+                    }
+                    "beat" => {
+                        conns[id].last_beat = Instant::now();
+                        conns[id].stale_ms =
+                            j.opt("stale_ms").and_then(|s| s.as_f64().ok()).unwrap_or(0.0) as u64;
+                    }
+                    "done" => {
+                        let metrics = match j.opt("metrics") {
+                            Some(m) => Metrics::from_wire(m)
+                                .with_context(|| format!("decoding rank {rank}'s metrics"))?,
+                            None => Metrics::default(),
+                        };
+                        a.done_meta[rank] = Some(metrics);
+                    }
+                    "failed" => {
+                        let victim = matches!(j.opt("victim"), Some(Json::Bool(true)));
+                        let msg = j
+                            .opt("err")
+                            .and_then(|e| e.as_str().ok())
+                            .unwrap_or("unknown error")
+                            .to_string();
+                        a.failed[rank] = true;
+                        a.note_failure();
+                        if victim {
+                            a.victim_err.get_or_insert(anyhow!("rank {rank}: {msg}"));
+                        } else {
+                            a.declare_dead(conns, rank, anyhow!("rank {rank} failed: {msg}"));
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    let dead_list: Vec<usize> = (0..workers).filter(|&r| a.dead[r]).collect();
+    if dead_list.is_empty() && a.casualty_err.is_none() && a.victim_err.is_none() {
+        // Replicated-parameter invariant, process edition: identical
+        // reduced gradients + identical updates must leave every rank's
+        // exported state bit-identical — and the checkpoint encoding is
+        // deterministic, so bit-identical state means byte-identical blobs.
+        if let Some((first, rest)) = a.blobs.split_first() {
+            for (i, b) in rest.iter().enumerate() {
+                if b != first {
+                    bail!(
+                        "replicated-parameter invariant violated: rank {} diverged from \
+                         rank 0 after step {}",
+                        i + 1,
+                        ap.first_step + ap.steps
+                    );
+                }
+            }
+        }
+        let bytes = a.blobs[0].take().expect("complete attempt lost rank 0's blob");
+        let (st, _meta) =
+            checkpoint::decode(&bytes).context("decoding rank 0's phase-boundary state")?;
+        let metrics = a.done_meta[0].take().unwrap_or_default();
+        Ok(RemoteOutcome::Complete { state: st, metrics })
+    } else {
+        let err = a
+            .casualty_err
+            .or(a.victim_err)
+            .unwrap_or_else(|| anyhow!("phase attempt failed with no recorded error"));
+        Ok(RemoteOutcome::Failed { dead: dead_list, err })
+    }
+}
+
+/// Between attempts: fold queued connection deaths into the registry and
+/// drop any stragglers from the attempt that just ended.
+fn drain_idle_events(rx: &mpsc::Receiver<Event>, conns: &mut [WorkerConn]) {
+    while let Ok(ev) = rx.try_recv() {
+        if let Event::Closed(id) = ev {
+            conns[id].open = false;
+            conns[id].usable = false;
+        }
+    }
+}
+
+/// Live run state served over the HTTP endpoint.
+struct StatusBoard {
+    state: String,
+    workers_expected: usize,
+    workers_joined: usize,
+    workers_live: usize,
+    phase: usize,
+    phases_total: usize,
+    step: usize,
+    recoveries: usize,
+    last_loss: f64,
+    /// Pre-rendered `GET /metrics` body (the merged metrics report).
+    metrics_json: String,
+}
+
+impl StatusBoard {
+    fn new(workers_expected: usize, phases_total: usize) -> Self {
+        Self {
+            state: "starting".into(),
+            workers_expected,
+            workers_joined: 0,
+            workers_live: 0,
+            phase: 0,
+            phases_total,
+            step: 0,
+            recoveries: 0,
+            last_loss: f64::NAN,
+            metrics_json: r#"{"steps":[],"evals":[]}"#.into(),
+        }
+    }
+
+    fn status_json(&self) -> String {
+        obj(vec![
+            ("state", Json::Str(self.state.clone())),
+            ("workers_expected", num(self.workers_expected)),
+            ("workers_joined", num(self.workers_joined)),
+            ("workers_live", num(self.workers_live)),
+            ("phase", num(self.phase)),
+            ("phases_total", num(self.phases_total)),
+            ("step", num(self.step)),
+            ("recoveries", num(self.recoveries)),
+            (
+                "last_loss",
+                if self.last_loss.is_finite() {
+                    Json::Num(self.last_loss)
+                } else {
+                    Json::Null
+                },
+            ),
+        ])
+        .to_string()
+    }
+}
+
+/// Serve `GET /status` and `GET /metrics` as JSON over plain HTTP/1.0.
+/// The accept loop runs on a daemon thread for the life of the process.
+fn serve_http(addr: &str, board: Arc<Mutex<StatusBoard>>) -> Result<()> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("binding the http status endpoint on {addr}"))?;
+    let bound = listener.local_addr()?;
+    eprintln!("[coordinator] status endpoint at http://{bound}/status");
+    thread::Builder::new()
+        .name("http-status".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(mut s) = conn else { continue };
+                let _ = s.set_read_timeout(Some(Duration::from_secs(2)));
+                let mut req = [0u8; 1024];
+                let n = s.read(&mut req).unwrap_or(0);
+                let line = String::from_utf8_lossy(&req[..n]);
+                let path = line.split_whitespace().nth(1).unwrap_or("/").to_string();
+                let (code, body) = {
+                    let b = board.lock().unwrap();
+                    match path.as_str() {
+                        "/" | "/status" => ("200 OK", b.status_json()),
+                        "/metrics" => ("200 OK", b.metrics_json.clone()),
+                        _ => ("404 Not Found", r#"{"error":"not found"}"#.to_string()),
+                    }
+                };
+                let _ = write!(
+                    s,
+                    "HTTP/1.0 {code}\r\nContent-Type: application/json\r\n\
+                     Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                    body.len()
+                );
+            }
+        })
+        .context("spawning the http status thread")?;
+    Ok(())
+}
+
+/// Run the coordinator process: wait for workers on `cfg.transport.bind`,
+/// drive the phase schedule across them, and return the same
+/// [`TrainReport`] the in-process trainer produces. `config_text` is the
+/// TOML the config was parsed from — it is shipped verbatim to every
+/// worker, so all processes train the identical configuration.
+pub fn run_coordinator(
+    cfg: &TrainConfig,
+    config_text: &str,
+    save_to: Option<&Path>,
+) -> Result<TrainReport> {
+    let trainer = Trainer::new(cfg.clone())?;
+    let plans = trainer.plan_phases();
+    if plans.is_empty() {
+        bail!("schedule produced zero steps");
+    }
+    let arch = trainer.manifest.arch(&cfg.arch)?.clone();
+    let n_workers = plans.iter().map(|p| p.workers).max().unwrap_or(1);
+
+    let board = Arc::new(Mutex::new(StatusBoard::new(n_workers, plans.len())));
+    if !cfg.transport.http.is_empty() {
+        serve_http(&cfg.transport.http, board.clone())?;
+    }
+
+    // One local compute lane: `init` for the initial parameters, eval for
+    // the final report. All training compute happens in the workers.
+    let eval_name = arch.eval_exec()?.name.clone();
+    let svc = ComputeService::start_pool(
+        BackendSpec::Reference,
+        trainer.manifest.clone(),
+        &cfg.arch,
+        &["init", eval_name.as_str()],
+        1,
+    )
+    .context("starting the coordinator's compute lane")?;
+    let client = svc.client();
+    let mut sw = Stopwatch::new();
+
+    // Deterministic He init (paper init per [10]) — process mode has no
+    // checkpoint-resume path yet; it always starts from the init artifact.
+    let mut state = {
+        let params = client.run(
+            &format!("{}/init", cfg.arch),
+            vec![HostTensor::i32(vec![1], vec![cfg.seed as i32])],
+        )?;
+        let momenta: Vec<HostTensor> = params
+            .iter()
+            .map(|p| HostTensor::f32(p.shape().to_vec(), vec![0.0; p.elems()]))
+            .collect();
+        let bn_running: Vec<HostTensor> = arch
+            .bn_layers
+            .iter()
+            .map(|b| HostTensor::f32(vec![2, b.width], vec![0.0; 2 * b.width]))
+            .collect();
+        WorkerState {
+            params,
+            momenta,
+            bn_running,
+            bn_steps: 0,
+        }
+    };
+
+    // Registration: accept exactly the widest phase's worker count, in
+    // arrival order (arrival order fixes rank order for every phase).
+    let listener = TcpListener::bind(&cfg.transport.bind).with_context(|| {
+        format!(
+            "binding the coordinator control socket on {}",
+            cfg.transport.bind
+        )
+    })?;
+    let bound = listener.local_addr()?;
+    eprintln!("[coordinator] waiting for {n_workers} workers on {bound}");
+    board.lock().unwrap().state = "waiting".into();
+
+    let (tx, rx) = mpsc::channel();
+    let mut conns: Vec<WorkerConn> = Vec::with_capacity(n_workers);
+    let mut wbuf = Vec::new();
+    let mut body = Vec::new();
+    for id in 0..n_workers {
+        let (mut s, from) = listener.accept().context("accepting a worker")?;
+        s.set_nodelay(true).ok();
+        let h = frame::read_frame(&mut s, CONTROL_MAX_FRAME, &mut body)?
+            .ok_or_else(|| anyhow!("worker at {from} closed before hello"))?;
+        if h.kind != frame::KIND_CONTROL {
+            bail!("worker at {from} sent frame kind {} before hello", h.kind);
+        }
+        let hello = Json::parse(std::str::from_utf8(&body)?)?;
+        if hello.get("type")?.as_str()? != "hello" {
+            bail!("worker at {from} sent {:?} before hello", hello.to_string());
+        }
+        let welcome = obj(vec![
+            ("type", Json::Str("welcome".into())),
+            ("worker", num(id)),
+            ("config", Json::Str(config_text.to_string())),
+        ]);
+        frame::write_control(&mut s, &mut wbuf, &welcome.to_string())?;
+        spawn_control_reader(id, s.try_clone()?, tx.clone());
+        conns.push(WorkerConn {
+            stream: s,
+            usable: true,
+            open: true,
+            last_beat: Instant::now(),
+            stale_ms: 0,
+        });
+        eprintln!("[coordinator] worker {id} joined from {from} ({}/{n_workers})", id + 1);
+        board.lock().unwrap().workers_joined = id + 1;
+    }
+
+    let mut all_metrics = Metrics::default();
+    let mut restarts_used = 0usize;
+    let mut recoveries: Vec<RecoveryEvent> = Vec::new();
+    let mut seq: u64 = 0;
+    for (pi, plan) in plans.iter().enumerate() {
+        let global_batch = plan.per_worker * plan.workers;
+        let mut attempt = 0usize;
+        loop {
+            drain_idle_events(&rx, &mut conns);
+            let usable = conns.iter().filter(|c| c.usable).count();
+            let lost = n_workers - usable;
+            let workers = effective_workers(&arch, plan.workers, lost, global_batch, cfg)?;
+            let per_worker = global_batch / workers;
+            let degraded = workers != plan.workers;
+            let participants: Vec<usize> = conns
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| c.usable)
+                .map(|(i, _)| i)
+                .take(workers)
+                .collect();
+            if participants.len() < workers {
+                bail!(
+                    "phase at step {} needs {workers} workers but only {} are alive",
+                    plan.first_step,
+                    participants.len()
+                );
+            }
+            seq += 1;
+            let ap = AttemptPlan {
+                seq,
+                workers,
+                per_worker,
+                steps: plan.steps,
+                first_step: plan.first_step,
+                samples_before: plan.samples_before,
+                skip_steps: plan.skipped,
+                attempt,
+                degraded,
+            };
+            {
+                let mut b = board.lock().unwrap();
+                b.state = "running".into();
+                b.phase = pi + 1;
+                b.step = plan.first_step;
+                b.workers_live = usable;
+            }
+            eprintln!(
+                "[coordinator] phase {}/{}: {} steps × {workers} ranks × {per_worker}/rank \
+                 (attempt {attempt})",
+                pi + 1,
+                plans.len(),
+                plan.steps
+            );
+            match run_phase_remote(&mut conns, &rx, &participants, &ap, &state, cfg)? {
+                RemoteOutcome::Complete { state: st, metrics } => {
+                    all_metrics.merge(metrics);
+                    state = st;
+                    let mut b = board.lock().unwrap();
+                    b.last_loss = all_metrics.steps.last().map(|s| s.loss).unwrap_or(f64::NAN);
+                    b.metrics_json = all_metrics.to_json().to_string();
+                    break;
+                }
+                RemoteOutcome::Failed { dead, err } => {
+                    let err = err.context(format!(
+                        "phase at step {} failed (attempt {attempt}, {workers} workers, \
+                         dead ranks {dead:?})",
+                        plan.first_step
+                    ));
+                    if !cfg.fault.enabled {
+                        return Err(err);
+                    }
+                    if dead.is_empty() {
+                        return Err(err);
+                    }
+                    if restarts_used >= cfg.fault.max_restarts {
+                        return Err(err.context(format!(
+                            "fault.max_restarts ({}) exhausted",
+                            cfg.fault.max_restarts
+                        )));
+                    }
+                    restarts_used += 1;
+                    let usable_now = conns.iter().filter(|c| c.usable).count();
+                    let new_workers = effective_workers(
+                        &arch,
+                        plan.workers,
+                        n_workers - usable_now,
+                        global_batch,
+                        cfg,
+                    )
+                    .map_err(|e| e.context(err))?;
+                    recoveries.push(RecoveryEvent {
+                        phase_first_step: plan.first_step,
+                        dead_ranks: dead,
+                        workers_before: workers,
+                        workers_after: new_workers,
+                        per_worker_after: global_batch / new_workers,
+                    });
+                    board.lock().unwrap().recoveries = recoveries.len();
+                    eprintln!(
+                        "[coordinator] recovery: replaying the phase at step {} on \
+                         {new_workers} ranks",
+                        plan.first_step
+                    );
+                    attempt += 1;
+                }
+            }
+        }
+    }
+
+    // The run is over: release every process that still has a socket.
+    let bye = obj(vec![("type", Json::Str("shutdown".into()))]);
+    for id in 0..conns.len() {
+        send_to(&mut conns, id, &mut wbuf, &bye);
+    }
+
+    // Final evaluation + checkpoint, exactly as the in-process trainer.
+    let dataset = SynthDataset::new(
+        cfg.seed,
+        arch.num_classes,
+        arch.image_size,
+        arch.image_channels,
+        cfg.train_size,
+        (cfg.train_size / 4).max(arch.num_classes),
+    );
+    let total_steps = all_metrics.steps.last().map(|s| s.step + 1).unwrap_or(0);
+    let final_eval = match all_metrics.evals.last() {
+        Some(e) if e.step == total_steps => Some(e.clone()),
+        _ => {
+            let e = trainer
+                .evaluate(&client, &arch, &dataset, &state, total_steps)
+                .ok();
+            if let Some(e) = &e {
+                all_metrics.push_eval(e.clone());
+            }
+            e
+        }
+    };
+    if let Some(path) = save_to {
+        let last = plans.last().unwrap();
+        let meta = CheckpointMeta {
+            step: (last.first_step + last.steps) as u64,
+            samples: last.samples_before + (last.steps * last.per_worker * last.workers) as u64,
+        };
+        checkpoint::save(path, &state, meta)
+            .with_context(|| format!("saving checkpoint to {path:?}"))?;
+    }
+
+    {
+        let mut b = board.lock().unwrap();
+        b.state = "done".into();
+        b.metrics_json = all_metrics.to_json().to_string();
+    }
+    let summary = all_metrics.summary();
+    Ok(TrainReport {
+        config_name: cfg.name.clone(),
+        metrics: all_metrics,
+        summary,
+        final_eval,
+        wall_secs: sw.lap("total"),
+        lanes: 1,
+        max_lane_concurrency: svc.stats().max_concurrent(),
+        recoveries,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Worker
+// ---------------------------------------------------------------------
+
+fn dial_coordinator(addr: &str) -> Result<TcpStream> {
+    let mut last: Option<std::io::Error> = None;
+    for _ in 0..JOIN_ATTEMPTS {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                last = Some(e);
+                thread::sleep(JOIN_RETRY);
+            }
+        }
+    }
+    Err(anyhow!(last.expect("at least one dial attempt"))
+        .context(format!("dialing the coordinator at {addr}")))
+}
+
+fn send_failed(
+    ctl: &mut TcpStream,
+    wbuf: &mut Vec<u8>,
+    seq: u64,
+    rank: usize,
+    victim: bool,
+    err: &str,
+) {
+    let j = obj(vec![
+        ("type", Json::Str("failed".into())),
+        ("seq", num(seq as usize)),
+        ("rank", num(rank)),
+        ("victim", Json::Bool(victim)),
+        ("err", Json::Str(err.to_string())),
+    ]);
+    let _ = frame::write_control(ctl, wbuf, &j.to_string());
+}
+
+/// Run a worker process: join the coordinator at `join`, receive the run
+/// configuration, then serve phase assignments until `shutdown`. Blocks
+/// for the life of the run.
+pub fn run_worker(join: &str) -> Result<()> {
+    let mut ctl = dial_coordinator(join)?;
+    ctl.set_nodelay(true).ok();
+    let mut wbuf = Vec::new();
+    frame::write_control(&mut ctl, &mut wbuf, r#"{"type":"hello"}"#)?;
+    let mut body = Vec::new();
+    let h = frame::read_frame(&mut ctl, CONTROL_MAX_FRAME, &mut body)?
+        .ok_or_else(|| anyhow!("coordinator closed before welcome"))?;
+    if h.kind != frame::KIND_CONTROL {
+        bail!("expected a welcome control frame, got kind {}", h.kind);
+    }
+    let welcome = Json::parse(std::str::from_utf8(&body)?)?;
+    if welcome.get("type")?.as_str()? != "welcome" {
+        bail!("expected welcome, got {:?}", welcome.to_string());
+    }
+    let worker_id = welcome.get("worker")?.as_usize()?;
+    let config_text = welcome.get("config")?.as_str()?.to_string();
+    let cfg = TrainConfig::from_toml(&Doc::parse(&config_text)?)
+        .context("parsing the config shipped by the coordinator")?;
+    eprintln!("[worker {worker_id}] joined {join}, config \"{}\"", cfg.name);
+
+    let manifest = crate::runtime::builtin_manifest();
+    let arch = manifest.arch(&cfg.arch)?.clone();
+    let eval_name = arch.eval_exec()?.name.clone();
+    // Grad executables depend on the (possibly re-planned) per-worker
+    // batch, so they are loaded per-prepare rather than up front.
+    let svc = ComputeService::start_pool(
+        BackendSpec::Reference,
+        manifest,
+        &cfg.arch,
+        &["apply", eval_name.as_str()],
+        1,
+    )
+    .context("starting the worker's compute lane")?;
+    let client = svc.client();
+    let dataset = SynthDataset::new(
+        cfg.seed,
+        arch.num_classes,
+        arch.image_size,
+        arch.image_channels,
+        cfg.train_size,
+        (cfg.train_size / 4).max(arch.num_classes),
+    );
+    let wire = if cfg.grad_wire == "fp16" { Wire::F16 } else { Wire::F32 };
+
+    let (tx, rx) = mpsc::channel();
+    spawn_control_reader(0, ctl.try_clone()?, tx);
+
+    loop {
+        match rx.recv() {
+            Err(_) | Ok(Event::Closed(_)) => bail!("lost the coordinator control connection"),
+            Ok(Event::Blob(..)) => bail!("unexpected state blob outside a phase"),
+            Ok(Event::Control(_, j)) => match j.get("type")?.as_str()? {
+                "shutdown" => {
+                    eprintln!("[worker {worker_id}] shutdown");
+                    return Ok(());
+                }
+                // A straggling abort from an attempt this worker already
+                // reported on — nothing is running, nothing to do.
+                "abort" => {}
+                "prepare" => {
+                    let keep = run_one_phase(
+                        &j, &rx, &mut ctl, &mut wbuf, &cfg, &arch, &client, &dataset, wire,
+                        worker_id,
+                    )?;
+                    if !keep {
+                        return Ok(());
+                    }
+                }
+                other => bail!("unexpected control message {other:?}"),
+            },
+        }
+    }
+}
+
+/// Execute one phase assignment end to end: decode the shipped state, form
+/// the data mesh, run the phase on its own thread (pumping heartbeats and
+/// relaying aborts from this one), and report the outcome. Returns `false`
+/// when the run is over and the process should exit.
+#[allow(clippy::too_many_arguments)]
+fn run_one_phase(
+    prep: &Json,
+    rx: &mpsc::Receiver<Event>,
+    ctl: &mut TcpStream,
+    wbuf: &mut Vec<u8>,
+    cfg: &TrainConfig,
+    arch: &ArchManifest,
+    client: &ComputeClient,
+    dataset: &SynthDataset,
+    wire: Wire,
+    worker_id: usize,
+) -> Result<bool> {
+    let seq = prep.get("seq")?.as_usize()? as u64;
+    let rank = prep.get("rank")?.as_usize()?;
+    let workers = prep.get("workers")?.as_usize()?;
+    let per_worker = prep.get("per_worker")?.as_usize()?;
+    let steps = prep.get("steps")?.as_usize()?;
+    let first_step = prep.get("first_step")?.as_usize()?;
+    let samples_before = prep.get("samples_before")?.as_f64()? as u64;
+    let skip_steps = prep.get("skip_steps")?.as_usize()?;
+    let attempt = prep.get("attempt")?.as_usize()?;
+    let degraded = matches!(prep.opt("degraded"), Some(Json::Bool(true)));
+    eprintln!(
+        "[worker {worker_id}] rank {rank}/{workers}: {steps} steps × {per_worker}/rank \
+         from step {first_step} (attempt {attempt})"
+    );
+
+    // The state blob follows the prepare frame on the same ordered stream.
+    let state = loop {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Event::Blob(_, bytes)) => {
+                break checkpoint::decode(&bytes)
+                    .context("decoding the shipped phase-boundary state")?
+                    .0;
+            }
+            Ok(Event::Control(..)) => continue, // straggler from the previous attempt
+            Ok(Event::Closed(_)) | Err(_) => bail!("lost the coordinator mid-prepare"),
+        }
+    };
+
+    let g = arch.grad_exec(per_worker, cfg.label_smoothing)?;
+    client
+        .load(&cfg.arch, &[g.name.as_str()])
+        .context("loading this phase's grad executable")?;
+    // The collective spec is not on the wire: every process re-resolves it
+    // from the shipped config with the same deterministic elastic rule.
+    let collective: Arc<dyn Collective> =
+        Arc::from(collectives::by_name_elastic(&cfg.collective, workers, degraded)?);
+    let ctx = Arc::new(PhaseCtx {
+        arch: arch.clone(),
+        collective,
+        grad_wire: wire,
+        lr: cfg.lr.clone(),
+        label_smoothing: cfg.label_smoothing,
+        weight_decay: cfg.weight_decay,
+        per_worker_batch: per_worker,
+        workers,
+        steps,
+        first_step,
+        samples_before,
+        skip_steps,
+        dataset_size: cfg.train_size,
+        eval_every: cfg.eval_every,
+        eval_batches: cfg.eval_batches,
+        bucket_bytes: cfg.bucket_bytes,
+        attempt,
+        fault: cfg.fault.clone(),
+    });
+
+    // Bind the data listener on the interface that reaches the coordinator
+    // (loopback under a local coordinator, the LAN address otherwise).
+    let ip = ctl.local_addr()?.ip();
+    let listener = TcpListener::bind((ip, 0)).context("binding the data listener")?;
+    let addr = listener.local_addr()?.to_string();
+    let ready = obj(vec![
+        ("type", Json::Str("ready".into())),
+        ("seq", num(seq as usize)),
+        ("addr", Json::Str(addr)),
+    ]);
+    frame::write_control(ctl, wbuf, &ready.to_string())?;
+
+    let health = Arc::new(Health::new(workers));
+    let counters = Arc::new(Counters::default());
+
+    // Wait for start (all ranks ready) or a pre-start cancellation.
+    let start_deadline = Instant::now() + Duration::from_secs(120);
+    let addrs: Vec<String> = loop {
+        if Instant::now() > start_deadline {
+            bail!("timed out waiting for the start frame");
+        }
+        match rx.recv_timeout(Duration::from_millis(200)) {
+            Ok(Event::Control(_, j)) => {
+                let ty = j.get("type").and_then(|t| t.as_str()).unwrap_or("").to_string();
+                let seq_ok = j.opt("seq").and_then(|s| s.as_usize().ok()) == Some(seq as usize);
+                match ty.as_str() {
+                    "start" if seq_ok => {
+                        break j
+                            .get("addrs")?
+                            .as_arr()?
+                            .iter()
+                            .map(|a| Ok(a.as_str()?.to_string()))
+                            .collect::<Result<Vec<String>>>()?;
+                    }
+                    "abort" if seq_ok => {
+                        // The attempt died before the mesh formed; report
+                        // back as a victim and return to the idle loop.
+                        send_failed(ctl, wbuf, seq, rank, true, "phase cancelled before start");
+                        return Ok(true);
+                    }
+                    "shutdown" => return Ok(false),
+                    _ => {}
+                }
+            }
+            Ok(Event::Blob(..)) => {}
+            Ok(Event::Closed(_)) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                bail!("lost the coordinator while waiting for start");
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+        }
+    };
+
+    // The phase runs on its own thread so this one can pump heartbeats to
+    // the coordinator and relay its abort frames into the local health
+    // table (which is what unwinds a blocked collective).
+    let phase = {
+        let ctx = ctx.clone();
+        let client = client.clone();
+        let dataset = dataset.clone();
+        let health = health.clone();
+        let seed = cfg.seed;
+        let fault_enabled = cfg.fault.enabled;
+        let rank_timeout = cfg.fault.rank_timeout;
+        let max_frame = cfg.transport.max_frame_bytes;
+        thread::Builder::new()
+            .name(format!("rank{rank}"))
+            .spawn(move || -> Result<WorkerOutput> {
+                let result = std::panic::catch_unwind(AssertUnwindSafe(
+                    || -> Result<WorkerOutput> {
+                        let mut ep = tcp::connect_mesh(
+                            rank,
+                            &addrs,
+                            &listener,
+                            counters,
+                            health.clone(),
+                            max_frame,
+                        )?;
+                        if fault_enabled {
+                            ep.set_recv_deadline(Some(rank_timeout));
+                        }
+                        let mut loader =
+                            Loader::new(dataset, Augment::standard(seed), rank, ctx.workers);
+                        worker::run_phase(&ctx, rank, &mut ep, &client, &mut loader, state)
+                    },
+                ));
+                match result {
+                    Ok(Ok(o)) => Ok(o),
+                    Ok(Err(e)) => {
+                        // Casualty vs victim, as in the in-process runner.
+                        // Marking a casualty dead before its endpoint drops
+                        // suppresses the clean `bye`, so peers see an
+                        // unclean close and unwind.
+                        if e.downcast_ref::<MeshError>().is_none() {
+                            health.mark_dead(rank);
+                        }
+                        Err(e)
+                    }
+                    Err(payload) => {
+                        health.mark_dead(rank);
+                        let msg = payload
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| payload.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "non-string panic payload".to_string());
+                        Err(anyhow!("rank {rank} panicked: {msg}"))
+                    }
+                }
+            })
+            .map_err(|e| anyhow!("spawning the phase thread: {e}"))?
+    };
+
+    let beat_every = if cfg.fault.enabled {
+        cfg.fault.heartbeat_interval.max(Duration::from_millis(20))
+    } else {
+        Duration::from_millis(500)
+    };
+    let mut shutdown = false;
+    let mut lost_coordinator = false;
+    while !phase.is_finished() {
+        match rx.recv_timeout(beat_every) {
+            Ok(Event::Control(_, j)) => {
+                let ty = j.get("type").and_then(|t| t.as_str()).unwrap_or("").to_string();
+                let seq_ok = j.opt("seq").and_then(|s| s.as_usize().ok()) == Some(seq as usize);
+                match ty.as_str() {
+                    "abort" if seq_ok => {
+                        if let Some(d) = j.opt("rank").and_then(|r| r.as_usize().ok()) {
+                            if d < workers {
+                                health.mark_dead(d);
+                            }
+                        }
+                    }
+                    // Shutdown mid-phase: unwind our own rank and exit.
+                    "shutdown" => {
+                        shutdown = true;
+                        health.mark_dead(rank);
+                    }
+                    _ => {}
+                }
+            }
+            Ok(Event::Closed(_)) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // Coordinator gone: nobody is left to report to.
+                lost_coordinator = true;
+                health.mark_dead(rank);
+            }
+            Ok(Event::Blob(..)) => {}
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+        }
+        // Forward liveness: the rank beats its local table from inside
+        // compute/recv loops; this relays how stale that is, and the
+        // coordinator stacks its own control-hop silence on top.
+        let beat = obj(vec![
+            ("type", Json::Str("beat".into())),
+            ("seq", num(seq as usize)),
+            ("stale_ms", Json::Num(health.millis_since_beat(rank) as f64)),
+        ]);
+        let _ = frame::write_control(ctl, wbuf, &beat.to_string());
+    }
+
+    match phase.join() {
+        Ok(Ok(out)) => {
+            let meta = CheckpointMeta {
+                step: (first_step + steps) as u64,
+                samples: samples_before + (steps * workers * per_worker) as u64,
+            };
+            let bytes = checkpoint::encode(&out.state, meta)?;
+            let mut pairs = vec![
+                ("type", Json::Str("done".into())),
+                ("seq", num(seq as usize)),
+                ("rank", num(rank)),
+            ];
+            if rank == 0 {
+                pairs.push(("metrics", out.metrics.to_wire()));
+            }
+            let _ = frame::write_control(ctl, wbuf, &obj(pairs).to_string());
+            let _ = frame::write_blob(ctl, wbuf, &bytes);
+            eprintln!(
+                "[worker {worker_id}] rank {rank} finished the phase at step {first_step} \
+                 (+{steps})"
+            );
+        }
+        Ok(Err(e)) => {
+            let victim = e.downcast_ref::<MeshError>().is_some();
+            eprintln!(
+                "[worker {worker_id}] rank {rank} {}: {e:#}",
+                if victim { "aborted (victim)" } else { "failed" }
+            );
+            send_failed(ctl, wbuf, seq, rank, victim, &format!("{e:#}"));
+        }
+        Err(_) => {
+            send_failed(ctl, wbuf, seq, rank, false, "phase thread died outside catch_unwind");
+        }
+    }
+    if lost_coordinator {
+        bail!("lost the coordinator mid-phase");
+    }
+    Ok(!shutdown)
+}

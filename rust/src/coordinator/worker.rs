@@ -47,7 +47,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::collectives::{BucketPlan, BucketStaging, Collective, Endpoint, Wire};
+use crate::collectives::{BucketPlan, BucketStaging, Collective, Transport, Wire};
 use crate::config::{FaultConfig, FaultKind};
 use crate::data::{Augment, Batch, Loader};
 use crate::runtime::{ApplyParams, ArchManifest, ComputeClient, HostTensor};
@@ -231,15 +231,16 @@ pub(crate) fn eval_over_val_split(
     })
 }
 
-/// Run one phase on one rank. `ep` is this rank's mesh endpoint. The
-/// rank's `(params, momenta)` are moved into lane `rank % lanes` of the
-/// compute pool for the duration of the phase and exported back into the
-/// returned [`WorkerOutput`] at the end.
+/// Run one phase on one rank. `ep` is this rank's mesh endpoint (either
+/// transport — the schedule only sees the trait). The rank's `(params,
+/// momenta)` are moved into lane `rank % lanes` of the compute pool for
+/// the duration of the phase and exported back into the returned
+/// [`WorkerOutput`] at the end.
 #[allow(clippy::too_many_arguments)]
 pub fn run_phase(
     ctx: &PhaseCtx,
     rank: usize,
-    ep: &mut Endpoint,
+    ep: &mut dyn Transport,
     compute: &ComputeClient,
     loader: &mut Loader,
     mut state: WorkerState,

@@ -5,9 +5,22 @@
 //! with pluggable compute backends:
 //!
 //! * **Layer 3 (this crate)** — the distributed-training coordinator:
-//!   2D-Torus / ring / hierarchical all-reduce over an in-memory rank mesh,
-//!   batch-size control, LR/momentum schedules, LARS, data pipeline, and an
+//!   2D-Torus / ring / hierarchical all-reduce schedules, batch-size
+//!   control, LR/momentum schedules, LARS, data pipeline, and an
 //!   ABCI-scale network simulator that regenerates the paper's tables.
+//!   The communication stack is split in three (where the paper runs
+//!   NCCL + MPI): collective *schedules* (`collectives::{ring, torus2d,
+//!   hierarchical, halving_doubling, bucketed}`) talk only to the
+//!   [`collectives::Transport`] trait; the *transport* is either the
+//!   in-memory mesh (`collectives::Mesh`, the default — condvar inboxes
+//!   inside one process) or TCP (`collectives::TcpMesh` over loopback,
+//!   `collectives::transport::tcp::connect_mesh` across processes); and
+//!   the *wire codec* (`collectives::transport::frame`) frames every
+//!   payload, control message and state blob with the same
+//!   length-prefixed, FP16/FP32-aware format. `flashsgd coordinator` /
+//!   `flashsgd worker` (`coordinator::remote`) stretch a run across OS
+//!   processes on that codec, with elastic recovery when a worker
+//!   *process* dies mid-phase.
 //!   Gradient synchronization is **overlapped with backprop** (paper §2.2):
 //!   the backend streams gradients in reverse layer order
 //!   (`runtime::ComputeBackend::grad_step_streaming`), the worker
@@ -87,7 +100,8 @@ pub fn artifacts_dir() -> std::path::PathBuf {
 pub mod prelude {
     pub use crate::cluster::{best_grid, Grid, Placement};
     pub use crate::collectives::{
-        BucketPlan, Collective, HierarchicalAllReduce, Mesh, RingAllReduce, TorusAllReduce, Wire,
+        BucketPlan, Collective, HierarchicalAllReduce, Mesh, RingAllReduce, TcpMesh,
+        TorusAllReduce, Transport, Wire,
     };
     pub use crate::config::{paper_run, paper_runs, TrainConfig};
     pub use crate::coordinator::{TrainReport, Trainer};

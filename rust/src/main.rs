@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   train       run a training job (preset, twin, or TOML config)
+//!   coordinator   lead a multi-process run (workers join over TCP)
+//!   worker      join a coordinator and serve phase assignments
 //!   simulate    ABCI-scale step-time / throughput projection
 //!   reproduce   print a paper table (--table 1..6)
 //!   demo        topology / all-reduce walkthroughs (figure 1 & 2)
@@ -11,6 +13,8 @@
 //!   flashsgd train --preset quickstart
 //!   flashsgd train --twin exp2 --ranks 8 --epochs 4 --arch tiny
 //!   flashsgd train --config configs/exp2_twin.toml
+//!   flashsgd coordinator --config configs/smoke.toml --save run.ckpt
+//!   flashsgd worker --join 127.0.0.1:7070
 //!   flashsgd simulate --gpus 1024 --collective torus
 //!   flashsgd reproduce --table 6
 
@@ -105,6 +109,8 @@ fn main() -> Result<()> {
     let args = Args::parse()?;
     match args.cmd.as_str() {
         "train" => cmd_train(&args),
+        "coordinator" => cmd_coordinator(&args),
+        "worker" => cmd_worker(&args),
         "simulate" => cmd_simulate(&args),
         "reproduce" => cmd_reproduce(&args),
         "demo" => cmd_demo(&args),
@@ -129,6 +135,8 @@ USAGE:
                  [--steps N] [--collective torus|ring|hierarchical:<g>|halving-doubling]
                  [--csv out.csv] [--save ckpt] [--resume ckpt]
                  [--artifacts DIR   (pjrt feature only; default backend is pure Rust)]
+  flashsgd coordinator --config <file> [--bind addr] [--http addr] [--save ckpt]
+  flashsgd worker [--join addr   (default 127.0.0.1:7070)]
   flashsgd simulate [--gpus N] [--batch B] [--collective ...]
   flashsgd reproduce --table 1|2|3|4|5|6
   flashsgd demo topology|allreduce [--x X] [--y Y]
@@ -184,6 +192,43 @@ fn cmd_train(args: &Args) -> Result<()> {
         eprintln!("[flashsgd] wrote {path}");
     }
     Ok(())
+}
+
+/// Lead a multi-process run: parse the config, bind the control socket
+/// (`transport.bind`, overridable with `--bind`), wait for the schedule's
+/// worker count to join, and drive the phases. The config TOML text is
+/// shipped verbatim to every worker, so the whole cluster trains one
+/// configuration from one file.
+fn cmd_coordinator(args: &Args) -> Result<()> {
+    let path = args
+        .get("config")
+        .ok_or_else(|| anyhow!("coordinator requires --config <file>"))?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let mut config = TrainConfig::from_toml(&Doc::parse(&text)?)?;
+    if let Some(bind) = args.get("bind") {
+        config.transport.bind = bind.to_string();
+    }
+    if let Some(http) = args.get("http") {
+        config.transport.http = http.to_string();
+    }
+    let save = args.get("save").map(std::path::Path::new);
+    let report = flashsgd::coordinator::remote::run_coordinator(&config, &text, save)?;
+    println!("{}", report.format());
+    for (step, loss) in report.metrics.loss_curve(10) {
+        println!("  step {step:>5}  loss {loss:.4}");
+    }
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, report.metrics.to_csv())?;
+        eprintln!("[flashsgd] wrote {path}");
+    }
+    Ok(())
+}
+
+/// Join a coordinator as one worker process and serve phase assignments
+/// until it says shutdown.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let join = args.get("join").unwrap_or("127.0.0.1:7070");
+    flashsgd::coordinator::remote::run_worker(join)
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {

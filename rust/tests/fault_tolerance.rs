@@ -44,6 +44,7 @@ fn base_config(name: &str, ranks: usize, steps: usize) -> TrainConfig {
         compute_lanes: 0,
         bucket_bytes: 8192,
         fault: FaultConfig::default(),
+        transport: flashsgd::config::TransportConfig::default(),
     }
 }
 

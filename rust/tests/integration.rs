@@ -31,6 +31,7 @@ fn base_config(name: &str, ranks: usize, steps: usize) -> TrainConfig {
         // (the serial single-bucket schedule) against it.
         bucket_bytes: 8192,
         fault: flashsgd::config::FaultConfig::default(),
+        transport: flashsgd::config::TransportConfig::default(),
     }
 }
 

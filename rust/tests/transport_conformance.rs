@@ -1,0 +1,257 @@
+//! Transport conformance: the loopback-TCP mesh must be observationally
+//! identical to the in-memory mesh under every collective schedule.
+//!
+//! "Identical" is strict on three axes:
+//!   * **results** — bit-for-bit equal reduced vectors on every rank
+//!     (the schedules fix the reduction order, so not even the last ULP
+//!     may differ between transports);
+//!   * **traffic** — equal `Counters` snapshots (bytes sent/received,
+//!     message count). Counters bill logical payload bytes only, never
+//!     frame headers, so a divergence means a schedule took a different
+//!     path over one transport;
+//!   * **tags** — equal `max_tag_seen`, pinning the tag windows to the
+//!     same layout on both transports.
+//!
+//! Payload lengths and values come from a seeded xorshift generator so
+//! each (schedule, world) case exercises a different shape, including
+//! lengths that do not divide evenly by the world size.
+
+use std::sync::Arc;
+use std::thread;
+
+use flashsgd::collectives::bucketed::all_reduce_buckets;
+use flashsgd::collectives::{by_name, Collective, Mesh, TcpMesh, Transport, Wire};
+
+/// Deterministic xorshift64* — the tests must not depend on crate-external
+/// randomness, only on reproducible per-case streams.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(2685821657736338717).max(1))
+    }
+
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(2685821657736338717)
+    }
+
+    /// Uniform in `lo..hi`.
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next() as usize) % (hi - lo)
+    }
+
+    /// Small, FP16-exact magnitudes, so the F16 wire cases stay
+    /// bit-comparable without the generator having to know the wire.
+    fn f32(&mut self) -> f32 {
+        let q = (self.next() % 513) as f32 - 256.0;
+        q * 0.03125
+    }
+}
+
+/// Per-rank input vector for one case: every rank derives its slice from
+/// the shared seed so both transports see byte-identical operands.
+fn inputs(seed: u64, n: usize, elems: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|rank| {
+            let mut rng = Rng::new(seed ^ ((rank as u64 + 1) << 32));
+            (0..elems).map(|_| rng.f32()).collect()
+        })
+        .collect()
+}
+
+/// Drive `coll` once over a set of connected endpoints (one thread per
+/// rank, exactly like the worker pool) and report everything the
+/// conformance check compares: per-rank results, the counter snapshot,
+/// and the highest tag seen.
+fn run_schedule<T: Transport + Send + 'static>(
+    eps: Vec<T>,
+    coll: &Arc<dyn Collective>,
+    ins: &[Vec<f32>],
+    wire: Wire,
+) -> (Vec<Vec<f32>>, (u64, u64, u64), u64) {
+    let counters = eps[0].counters_arc();
+    let handles: Vec<_> = eps
+        .into_iter()
+        .map(|mut ep| {
+            let coll = coll.clone();
+            let mut buf = ins[ep.rank()].clone();
+            thread::spawn(move || {
+                coll.all_reduce(&mut ep, &mut buf, wire, 0).unwrap();
+                buf
+            })
+        })
+        .collect();
+    let results: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    (results, counters.snapshot(), counters.max_tag_seen())
+}
+
+/// Same, but through the bucketed streaming pipeline: each rank reduces a
+/// list of per-bucket flats back-to-back, advancing the tag window one
+/// span per bucket — the exact traffic pattern of an overlapped step.
+fn run_buckets<T: Transport + Send + 'static>(
+    eps: Vec<T>,
+    coll: &Arc<dyn Collective>,
+    ins: &[Vec<Vec<f32>>],
+    wire: Wire,
+) -> (Vec<Vec<Vec<f32>>>, (u64, u64, u64), u64, u64) {
+    let counters = eps[0].counters_arc();
+    let handles: Vec<_> = eps
+        .into_iter()
+        .map(|mut ep| {
+            let coll = coll.clone();
+            let mut bufs = ins[ep.rank()].clone();
+            thread::spawn(move || {
+                let next = all_reduce_buckets(&*coll, &mut ep, &mut bufs, wire, 0).unwrap();
+                (bufs, next)
+            })
+        })
+        .collect();
+    let joined: Vec<(Vec<Vec<f32>>, u64)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let next_tag = joined[0].1;
+    let results: Vec<Vec<Vec<f32>>> = joined.into_iter().map(|(bufs, _)| bufs).collect();
+    (results, counters.snapshot(), counters.max_tag_seen(), next_tag)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Every schedule × a world size it supports. Worlds are kept small
+/// enough that the full O(n²) loopback socket mesh stays cheap.
+fn cases() -> Vec<(&'static str, usize)> {
+    vec![
+        ("ring", 4),
+        ("ring", 6),
+        ("halving-doubling", 4),
+        ("halving-doubling", 8),
+        ("hierarchical:2", 8),
+        ("hierarchical:4", 8),
+        ("torus:2x2", 4),
+        ("torus:4x2", 8),
+        ("torus:3x3", 9),
+    ]
+}
+
+#[test]
+fn tcp_matches_memory_bit_for_bit_on_every_schedule() {
+    for (ci, (spec, n)) in cases().into_iter().enumerate() {
+        for wire in [Wire::F32, Wire::F16] {
+            let seed = 0x5EED_0001 + ci as u64 * 131 + matches!(wire, Wire::F16) as u64;
+            let mut rng = Rng::new(seed);
+            // Lengths deliberately include awkward residues: a prime-ish
+            // random size plus one tiny vector shorter than the world.
+            for elems in [rng.range(64, 512) | 1, rng.range(1, n)] {
+                let ins = inputs(seed ^ elems as u64, n, elems);
+                let coll: Arc<dyn Collective> = Arc::from(by_name(spec, n).unwrap());
+
+                let (mem_out, mem_ctr, mem_tag) =
+                    run_schedule(Mesh::new(n), &coll, &ins, wire);
+                let (tcp_out, tcp_ctr, tcp_tag) =
+                    run_schedule(TcpMesh::loopback(n).unwrap(), &coll, &ins, wire);
+
+                let what = format!("{spec} n={n} elems={elems} wire={wire:?}");
+                for (rank, (m, t)) in mem_out.iter().zip(&tcp_out).enumerate() {
+                    assert_eq!(
+                        bits(m),
+                        bits(t),
+                        "{what}: rank {rank} diverges between transports"
+                    );
+                }
+                assert_eq!(
+                    mem_ctr, tcp_ctr,
+                    "{what}: traffic counters differ (memory {mem_ctr:?} vs tcp {tcp_ctr:?})"
+                );
+                assert_eq!(
+                    mem_tag, tcp_tag,
+                    "{what}: max tag differs (memory {mem_tag} vs tcp {tcp_tag})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn bucketed_pipeline_is_transport_invariant() {
+    // One representative world per schedule family; the bucket pipeline
+    // stacks a full tag window per bucket, so this also cross-checks the
+    // per-span tag accounting over real sockets.
+    for (ci, (spec, n)) in [
+        ("ring", 4usize),
+        ("halving-doubling", 4),
+        ("hierarchical:2", 4),
+        ("torus:2x2", 4),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let seed = 0x00B0_C4E7 + ci as u64 * 977;
+        let mut rng = Rng::new(seed);
+        let n_buckets = rng.range(2, 5);
+        let shapes: Vec<usize> = (0..n_buckets).map(|_| rng.range(16, 200)).collect();
+        let ins: Vec<Vec<Vec<f32>>> = (0..n)
+            .map(|rank| {
+                shapes
+                    .iter()
+                    .enumerate()
+                    .map(|(k, &e)| {
+                        let mut r = Rng::new(seed ^ ((rank as u64 + 1) << 24) ^ (k as u64 + 1));
+                        (0..e).map(|_| r.f32()).collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let coll: Arc<dyn Collective> = Arc::from(by_name(spec, n).unwrap());
+
+        let (mem_out, mem_ctr, mem_tag, mem_next) =
+            run_buckets(Mesh::new(n), &coll, &ins, Wire::F16);
+        let (tcp_out, tcp_ctr, tcp_tag, tcp_next) =
+            run_buckets(TcpMesh::loopback(n).unwrap(), &coll, &ins, Wire::F16);
+
+        let what = format!("{spec} n={n} buckets={shapes:?}");
+        for (rank, (m, t)) in mem_out.iter().zip(&tcp_out).enumerate() {
+            for (k, (mb, tb)) in m.iter().zip(t).enumerate() {
+                assert_eq!(
+                    bits(mb),
+                    bits(tb),
+                    "{what}: rank {rank} bucket {k} diverges between transports"
+                );
+            }
+        }
+        assert_eq!(mem_ctr, tcp_ctr, "{what}: traffic counters differ");
+        assert_eq!(mem_tag, tcp_tag, "{what}: max tag differs");
+        assert_eq!(mem_next, tcp_next, "{what}: next-tag watermark differs");
+        assert_eq!(
+            mem_next,
+            coll.tag_span(n) * shapes.len() as u64,
+            "{what}: pipeline must advance exactly one span per bucket"
+        );
+    }
+}
+
+#[test]
+fn tcp_mesh_sums_are_exact_for_integer_payloads() {
+    // Independent of the memory twin: with integer-valued operands the
+    // FP32 sums are exact, so the TCP mesh must produce the closed-form
+    // total on every rank — a correctness floor that doesn't assume the
+    // in-memory mesh is itself right.
+    for (spec, n) in [("ring", 5usize), ("torus:2x3", 6)] {
+        let elems = 113usize;
+        let ins: Vec<Vec<f32>> = (0..n)
+            .map(|rank| (0..elems).map(|i| (rank * elems + i) as f32).collect())
+            .collect();
+        let coll: Arc<dyn Collective> = Arc::from(by_name(spec, n).unwrap());
+        let (out, _, _) = run_schedule(TcpMesh::loopback(n).unwrap(), &coll, &ins, Wire::F32);
+        for (rank, got) in out.iter().enumerate() {
+            for (i, g) in got.iter().enumerate() {
+                let want: f32 = (0..n).map(|r| (r * elems + i) as f32).sum();
+                assert_eq!(*g, want, "{spec} n={n}: rank {rank} elem {i}");
+            }
+        }
+    }
+}
