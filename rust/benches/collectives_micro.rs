@@ -4,9 +4,12 @@
 //! meshes — across algorithms, rank counts and message sizes. Reports
 //! wall time, effective algorithm bandwidth, and the measured per-rank
 //! byte volume (which must match each scheme's analytic formula).
+//! Emits `BENCH_collectives.json` into the working directory so the repo
+//! accumulates a perf trajectory (see `tools/record_baselines.sh`).
 //!
 //!     cargo bench --bench collectives_micro
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::thread;
 
@@ -15,7 +18,29 @@ use flashsgd::collectives::{
     Collective, HierarchicalAllReduce, Mesh, RingAllReduce, TcpMesh, TorusAllReduce, Transport,
     Wire,
 };
+use flashsgd::util::json::Json;
 use flashsgd::util::timer::{bench_adaptive, fmt_ns};
+
+/// One recorded measurement for `BENCH_collectives.json`.
+fn row(
+    sweep: &str,
+    algo: &str,
+    ranks: usize,
+    elems: usize,
+    mean_ns: f64,
+    extra: &[(&str, f64)],
+) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("sweep".to_string(), Json::Str(sweep.to_string()));
+    m.insert("algo".to_string(), Json::Str(algo.to_string()));
+    m.insert("ranks".to_string(), Json::Num(ranks as f64));
+    m.insert("elems".to_string(), Json::Num(elems as f64));
+    m.insert("mean_ns".to_string(), Json::Num(mean_ns));
+    for (k, v) in extra {
+        m.insert((*k).to_string(), Json::Num(*v));
+    }
+    Json::Obj(m)
+}
 
 /// One timed all-reduce over a pre-built set of endpoints. The clock
 /// starts *after* the mesh is up, so memory and TCP rows time the same
@@ -63,6 +88,7 @@ fn run_once_tcp(coll: &Arc<dyn Collective>, n: usize, elems: usize, wire: Wire) 
 
 fn main() {
     println!("=== collectives_micro: functional all-reduce over thread mesh ===\n");
+    let mut rows: Vec<Json> = Vec::new();
 
     // Figure 2 sanity row: the paper's 2x2 worked example.
     {
@@ -105,6 +131,17 @@ fn main() {
                 algbw / 1e9,
                 bytes / n as u64
             );
+            rows.push(row(
+                "algo_x_size",
+                name,
+                n,
+                elems,
+                r.mean_ns,
+                &[
+                    ("algbw_gbps", algbw / 1e9),
+                    ("bytes_per_rank", (bytes / n as u64) as f64),
+                ],
+            ));
         }
     }
 
@@ -127,6 +164,14 @@ fn main() {
                 let _ = run_once(&coll, n, 1 << 20 | 1 << 19, Wire::F16);
             });
             println!("{:<16} {:>7} {:>14} {:>12}", name, n, fmt_ns(r.mean_ns), steps);
+            rows.push(row(
+                "rank_scaling",
+                name,
+                n,
+                1 << 20 | 1 << 19,
+                r.mean_ns,
+                &[("p2p_steps", steps as f64)],
+            ));
         }
     }
 
@@ -168,8 +213,30 @@ fn main() {
                     fmt_ns(rt.mean_ns),
                     rt.mean_secs() / rm.mean_secs()
                 );
+                rows.push(row("transport_mem", name, n, elems, rm.mean_ns, &[]));
+                rows.push(row(
+                    "transport_tcp",
+                    name,
+                    n,
+                    elems,
+                    rt.mean_ns,
+                    &[("tcp_over_mem", rt.mean_secs() / rm.mean_secs())],
+                ));
             }
         }
+    }
+
+    let mut top = BTreeMap::new();
+    top.insert(
+        "bench".to_string(),
+        Json::Str("collectives_micro".to_string()),
+    );
+    top.insert("recorded".to_string(), Json::Bool(true));
+    top.insert("rows".to_string(), Json::Arr(rows));
+    let path = "BENCH_collectives.json";
+    match std::fs::write(path, Json::Obj(top).to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
     }
 
     println!("\n(thread-mesh timings measure the functional path; cluster-scale");

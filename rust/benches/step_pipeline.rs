@@ -98,6 +98,7 @@ fn main() {
 
     let mut top = BTreeMap::new();
     top.insert("bench".to_string(), Json::Str("step_pipeline".to_string()));
+    top.insert("recorded".to_string(), Json::Bool(true));
     top.insert(
         "workers".to_string(),
         Json::Num(TrainConfig::quickstart().batch.max_workers() as f64),

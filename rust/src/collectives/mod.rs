@@ -40,7 +40,8 @@ pub use primitives::Wire;
 pub use ring::RingAllReduce;
 pub use torus2d::TorusAllReduce;
 pub use transport::{
-    Counters, Endpoint, Health, Mesh, MeshError, Payload, TcpEndpoint, TcpMesh, Transport,
+    BackoffConfig, ChaosConfig, ChaosCounters, ChaosTransport, Counters, Endpoint, Health,
+    LinkPolicy, Mesh, MeshError, Payload, TcpEndpoint, TcpMesh, TcpOptions, Transport,
 };
 
 use anyhow::Result;

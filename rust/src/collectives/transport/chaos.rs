@@ -1,0 +1,387 @@
+//! Deterministic network-chaos harness: a [`ChaosTransport`] wrapper that
+//! injects per-link frame delay, loss-as-latency, duplication and
+//! reordering into **any** inner [`Transport`] — seeded, so every injected
+//! event is a pure function of `(seed, src, dst, tag)` and a test can
+//! assert exactly what happened.
+//!
+//! Design constraints that shape the implementation:
+//!
+//! * **Bit-identical results.** Collectives match messages on `(src, tag)`
+//!   and fix the reduction order, so delay and reordering are absorbed by
+//!   the pending map without changing a single ULP. Loss is presented as
+//!   latency (the frame is sent after a penalty sleep — the model of a
+//!   reliable link retransmitting), never as silent data loss.
+//! * **Duplicates must not poison later traffic.** Collectives *reuse*
+//!   tags step after step, so a stray duplicate parked in the pending map
+//!   would be consumed by the *next* step's receive of the same
+//!   `(src, tag)` — corrupting it. The receiver therefore recomputes the
+//!   sender's (deterministic) duplication decision and explicitly consumes
+//!   and recycles the extra copy at the matching `recv`.
+//! * **Reordering must not deadlock.** A reorder holds one outgoing frame
+//!   and releases it *behind* the next send on any link; held frames are
+//!   force-flushed before every receive and on drop, so a schedule that
+//!   stops sending still makes progress.
+//! * **Zero overhead when disabled.** The wrapper is only installed when
+//!   `[fault.chaos] enabled = true`; the disabled path is the unwrapped
+//!   transport, byte for byte.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::{mix64, Counters, Health, Payload, Scratch, Transport};
+
+/// `[fault.chaos]` — seeded fault-injection probabilities, all applied
+/// per *frame* on each `src → dst` send (self-edges are exempt: there is
+/// no wire under them).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosConfig {
+    pub enabled: bool,
+    /// Root seed; every injected event derives from it deterministically.
+    pub seed: u64,
+    /// Probability a frame is delayed before sending.
+    pub delay_prob: f64,
+    /// Upper bound on one injected delay, microseconds (the actual delay
+    /// is hash-derived in `1..=delay_us_max`).
+    pub delay_us_max: u64,
+    /// Probability a frame is "dropped" — charged the retransmit penalty
+    /// below, then sent (reliable-link loss model).
+    pub drop_prob: f64,
+    /// Retransmit penalty per dropped frame, microseconds.
+    pub drop_delay_us: u64,
+    /// Probability a frame is sent twice (the receiver consumes the
+    /// duplicate deterministically).
+    pub dup_prob: f64,
+    /// Probability a frame is held and released behind the next send.
+    pub reorder_prob: f64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            seed: 0x5EED,
+            delay_prob: 0.0,
+            delay_us_max: 500,
+            drop_prob: 0.0,
+            drop_delay_us: 2000,
+            dup_prob: 0.0,
+            reorder_prob: 0.0,
+        }
+    }
+}
+
+/// The injection decisions for one `(src, dst, tag)` frame. Both ends of a
+/// link can compute this independently and agree — that is what lets the
+/// receiver absorb duplicates without any side-channel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkPlan {
+    /// Injected pre-send delay in microseconds (0 = none).
+    pub delay_us: u64,
+    pub drop: bool,
+    pub dup: bool,
+    pub reorder: bool,
+}
+
+/// Map a hash to a uniform float in `[0, 1)`.
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+impl ChaosConfig {
+    /// The deterministic injection plan for one frame. Pure: same inputs,
+    /// same plan, on every rank that computes it.
+    pub fn plan(&self, src: usize, dst: usize, tag: u64) -> LinkPlan {
+        if !self.enabled || src == dst {
+            return LinkPlan { delay_us: 0, drop: false, dup: false, reorder: false };
+        }
+        let key = mix64(
+            self.seed ^ mix64(((src as u64) << 32) | dst as u64) ^ mix64(tag ^ 0xC4A0_5EED),
+        );
+        let delay = unit(mix64(key ^ 1)) < self.delay_prob;
+        let delay_us = if delay && self.delay_us_max > 0 {
+            1 + mix64(key ^ 2) % self.delay_us_max
+        } else {
+            0
+        };
+        LinkPlan {
+            delay_us,
+            drop: unit(mix64(key ^ 3)) < self.drop_prob,
+            dup: unit(mix64(key ^ 4)) < self.dup_prob,
+            reorder: unit(mix64(key ^ 5)) < self.reorder_prob,
+        }
+    }
+}
+
+/// Shared tallies of every event the harness injected — one block per
+/// wrapped mesh, so a test can assert the seed's exact schedule fired.
+#[derive(Debug, Default)]
+pub struct ChaosCounters {
+    pub delays: AtomicU64,
+    pub drops: AtomicU64,
+    pub dups: AtomicU64,
+    pub reorders: AtomicU64,
+}
+
+impl ChaosCounters {
+    /// `(delays, drops, dups, reorders)` injected so far.
+    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
+        (
+            self.delays.load(Ordering::Relaxed),
+            self.drops.load(Ordering::Relaxed),
+            self.dups.load(Ordering::Relaxed),
+            self.reorders.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Total injected events of any kind.
+    pub fn total(&self) -> u64 {
+        let (a, b, c, d) = self.snapshot();
+        a + b + c + d
+    }
+}
+
+/// A [`Transport`] that injects the seeded chaos schedule around an inner
+/// transport. Wrap every endpoint of a mesh with the *same* config and a
+/// shared counter block; unwrapped and wrapped meshes are interchangeable
+/// under every collective.
+pub struct ChaosTransport<T: Transport> {
+    inner: T,
+    cfg: ChaosConfig,
+    counters: Arc<ChaosCounters>,
+    /// At most one reordered frame in flight per endpoint.
+    held: Option<(usize, u64, Payload)>,
+}
+
+impl<T: Transport> ChaosTransport<T> {
+    pub fn new(inner: T, cfg: ChaosConfig, counters: Arc<ChaosCounters>) -> Self {
+        Self { inner, cfg, counters, held: None }
+    }
+
+    /// Wrap a whole mesh's endpoints under one config + one shared counter
+    /// block.
+    pub fn wrap_all(eps: Vec<T>, cfg: &ChaosConfig) -> (Vec<ChaosTransport<T>>, Arc<ChaosCounters>) {
+        let counters = Arc::new(ChaosCounters::default());
+        let wrapped = eps
+            .into_iter()
+            .map(|ep| ChaosTransport::new(ep, cfg.clone(), counters.clone()))
+            .collect();
+        (wrapped, counters)
+    }
+
+    /// The shared injection tallies of this endpoint's mesh.
+    pub fn chaos_counters(&self) -> Arc<ChaosCounters> {
+        self.counters.clone()
+    }
+
+    fn raw_send(&mut self, dst: usize, tag: u64, payload: Payload, dup: bool) -> Result<()> {
+        if dup {
+            self.counters.dups.fetch_add(1, Ordering::Relaxed);
+            let copy = payload.clone();
+            self.inner.send(dst, tag, payload)?;
+            self.inner.send(dst, tag, copy)
+        } else {
+            self.inner.send(dst, tag, payload)
+        }
+    }
+
+    /// Release the held (reordered) frame, if any. Called behind every
+    /// later send, before every receive, and on drop — a held frame can
+    /// outlive at most one send gap, never the endpoint.
+    fn flush_held(&mut self) -> Result<()> {
+        if let Some((dst, tag, payload)) = self.held.take() {
+            let dup = self.cfg.plan(self.inner.rank(), dst, tag).dup;
+            self.raw_send(dst, tag, payload, dup)?;
+        }
+        Ok(())
+    }
+}
+
+impl<T: Transport> Drop for ChaosTransport<T> {
+    fn drop(&mut self) {
+        // Best effort: a send failure while unwinding must not double-panic.
+        let _ = self.flush_held();
+    }
+}
+
+impl<T: Transport> Transport for ChaosTransport<T> {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn world_size(&self) -> usize {
+        self.inner.world_size()
+    }
+
+    fn counters(&self) -> &Counters {
+        self.inner.counters()
+    }
+
+    fn counters_arc(&self) -> Arc<Counters> {
+        self.inner.counters_arc()
+    }
+
+    fn health(&self) -> &Health {
+        self.inner.health()
+    }
+
+    fn health_arc(&self) -> Arc<Health> {
+        self.inner.health_arc()
+    }
+
+    fn set_recv_deadline(&mut self, d: Option<Duration>) {
+        self.inner.set_recv_deadline(d)
+    }
+
+    fn send(&mut self, dst: usize, tag: u64, payload: Payload) -> Result<()> {
+        let plan = self.cfg.plan(self.inner.rank(), dst, tag);
+        if plan.delay_us > 0 {
+            self.counters.delays.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_micros(plan.delay_us));
+        }
+        if plan.drop {
+            // Loss on a reliable link = a retransmit penalty, then delivery.
+            self.counters.drops.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_micros(self.cfg.drop_delay_us));
+        }
+        if plan.reorder && self.held.is_none() {
+            self.counters.reorders.fetch_add(1, Ordering::Relaxed);
+            self.held = Some((dst, tag, payload));
+            return Ok(());
+        }
+        self.raw_send(dst, tag, payload, plan.dup)?;
+        self.flush_held()
+    }
+
+    fn recv(&mut self, src: usize, tag: u64) -> Result<Payload> {
+        // Progress guarantee: nothing may stay held while this rank blocks.
+        self.flush_held()?;
+        let payload = self.inner.recv(src, tag)?;
+        // Mirror the sender's duplication decision and absorb the extra
+        // copy now — parked in pending, it would corrupt the next step's
+        // reuse of this same (src, tag).
+        if self.cfg.plan(src, self.inner.rank(), tag).dup {
+            let dup = self.inner.recv(src, tag)?;
+            self.inner.recycle(dup);
+        }
+        Ok(payload)
+    }
+
+    fn pending_messages(&self) -> usize {
+        self.inner.pending_messages()
+    }
+
+    fn scratch(&self) -> &Scratch {
+        self.inner.scratch()
+    }
+
+    fn scratch_mut(&mut self) -> &mut Scratch {
+        self.inner.scratch_mut()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Mesh;
+    use super::*;
+    use std::thread;
+
+    fn noisy(seed: u64) -> ChaosConfig {
+        ChaosConfig {
+            enabled: true,
+            seed,
+            delay_prob: 0.3,
+            delay_us_max: 50,
+            drop_prob: 0.2,
+            drop_delay_us: 100,
+            dup_prob: 0.2,
+            reorder_prob: 0.3,
+        }
+    }
+
+    #[test]
+    fn plans_are_deterministic_and_symmetric() {
+        let cfg = noisy(42);
+        for (src, dst, tag) in [(0usize, 1usize, 0u64), (1, 0, 7), (2, 3, 1 << 40)] {
+            let a = cfg.plan(src, dst, tag);
+            let b = cfg.plan(src, dst, tag);
+            assert_eq!(a, b, "plan must be a pure function");
+        }
+        // seeds decorrelate the schedule
+        let other = noisy(43);
+        let differs = (0..64u64).any(|t| cfg.plan(0, 1, t) != other.plan(0, 1, t));
+        assert!(differs, "different seeds must give different schedules");
+    }
+
+    #[test]
+    fn disabled_and_self_edges_inject_nothing() {
+        let off = ChaosConfig { enabled: false, ..noisy(1) };
+        let on = noisy(1);
+        for t in 0..256u64 {
+            assert_eq!(
+                off.plan(0, 1, t),
+                LinkPlan { delay_us: 0, drop: false, dup: false, reorder: false }
+            );
+            assert_eq!(
+                on.plan(2, 2, t),
+                LinkPlan { delay_us: 0, drop: false, dup: false, reorder: false }
+            );
+        }
+    }
+
+    #[test]
+    fn probabilities_roughly_hit_their_rates() {
+        let cfg = noisy(0xFEED);
+        let n = 4000u64;
+        let dups = (0..n).filter(|&t| cfg.plan(0, 1, t).dup).count() as f64 / n as f64;
+        let drops = (0..n).filter(|&t| cfg.plan(0, 1, t).drop).count() as f64 / n as f64;
+        assert!((dups - 0.2).abs() < 0.05, "dup rate {dups}");
+        assert!((drops - 0.2).abs() < 0.05, "drop rate {drops}");
+    }
+
+    /// A chaotic in-memory mesh must deliver bit-identical traffic: every
+    /// (src, tag) exchange round-trips the exact payload despite dup /
+    /// reorder / delay, and the pending maps drain to empty (no poisoned
+    /// duplicates left behind for a later tag reuse).
+    #[test]
+    fn chaotic_exchange_is_lossless_and_leaves_no_residue() {
+        let n = 4usize;
+        let (eps, counters) = ChaosTransport::wrap_all(Mesh::new(n), &noisy(7));
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                thread::spawn(move || {
+                    let me = ep.rank();
+                    // Two "steps" reusing the same tags — the dup-absorb
+                    // path is what keeps step 2 clean.
+                    for step in 0..2u64 {
+                        for peer in 0..n {
+                            if peer == me {
+                                continue;
+                            }
+                            let v: Vec<f32> =
+                                (0..8).map(|i| (step * 100 + (me * 10 + i) as u64) as f32).collect();
+                            ep.send_f32(peer, step, &v).unwrap();
+                        }
+                        for peer in 0..n {
+                            if peer == me {
+                                continue;
+                            }
+                            let got = ep.recv_f32(peer, step).unwrap();
+                            let want: Vec<f32> =
+                                (0..8).map(|i| (step * 100 + (peer * 10 + i) as u64) as f32).collect();
+                            assert_eq!(got, want, "rank {me} from {peer} step {step}");
+                        }
+                    }
+                    assert_eq!(ep.pending_messages(), 0, "rank {me}: residue in pending");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(counters.total() > 0, "a noisy seed must inject something");
+    }
+}

@@ -26,9 +26,9 @@
 
 use std::io::{ErrorKind, Read, Write};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context as _, Result};
 
-use super::Payload;
+use super::{MeshError, Payload};
 use crate::util::half;
 
 /// Body is a packed `[f32]` array (4 bytes/elem, little-endian).
@@ -159,9 +159,12 @@ pub fn write_blob(w: &mut impl Write, buf: &mut Vec<u8>, blob: &[u8]) -> Result<
 }
 
 /// Read one frame. Returns `Ok(None)` on a clean EOF **at a frame
-/// boundary** (the peer closed between frames); EOF mid-frame is an
-/// error (truncated stream). The body lands in `body` (cleared first),
-/// which the caller reuses across frames.
+/// boundary** (the peer closed between frames); EOF mid-frame is a typed
+/// [`MeshError::Truncated`], and a length word over `max_frame_bytes` a
+/// typed [`MeshError::FrameTooLarge`] — rejected *before* any body
+/// allocation, so a corrupt or hostile length prefix can neither panic
+/// the reader nor balloon memory. The body lands in `body` (cleared
+/// first), which the caller reuses across frames.
 pub fn read_frame(
     r: &mut impl Read,
     max_frame_bytes: usize,
@@ -174,13 +177,21 @@ pub fn read_frame(
     }
     let len = u32::from_le_bytes(len_word) as usize;
     if len < HEADER_BYTES {
-        bail!("frame length {len} shorter than the {HEADER_BYTES}-byte header");
+        // A frame that cannot even hold its own header is a truncation at
+        // the source, whatever produced it.
+        return Err(anyhow::Error::new(MeshError::Truncated { got: len, want: HEADER_BYTES }))
+            .with_context(|| {
+                format!("frame length {len} shorter than the {HEADER_BYTES}-byte header")
+            });
     }
     if len > max_frame_bytes {
-        bail!("frame length {len} exceeds max_frame_bytes {max_frame_bytes}");
+        return Err(anyhow::Error::new(MeshError::FrameTooLarge { len, max: max_frame_bytes }))
+            .with_context(|| {
+                format!("frame length {len} exceeds max_frame_bytes {max_frame_bytes}")
+            });
     }
     let mut header = [0u8; HEADER_BYTES];
-    r.read_exact(&mut header)?;
+    read_exact_typed(r, &mut header, 0, len)?;
     let kind = header[0];
     let src = u32::from_le_bytes([header[1], header[2], header[3], header[4]]);
     let dst = u32::from_le_bytes([header[5], header[6], header[7], header[8]]);
@@ -190,7 +201,7 @@ pub fn read_frame(
     ]);
     body.clear();
     body.resize(len - HEADER_BYTES, 0);
-    r.read_exact(body)?;
+    read_exact_typed(r, body, HEADER_BYTES, len)?;
     Ok(Some(FrameHeader { kind, src, dst, tag }))
 }
 
@@ -201,7 +212,8 @@ enum ReadOutcome {
 
 /// `read_exact`, except a clean EOF *before the first byte* is reported
 /// as [`ReadOutcome::Eof`] instead of an error — that is how a peer
-/// signals it has no more frames.
+/// signals it has no more frames. EOF after the first byte is a typed
+/// [`MeshError::Truncated`] (a partial length word is already mid-frame).
 fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> Result<ReadOutcome> {
     let mut filled = 0;
     while filled < buf.len() {
@@ -210,7 +222,11 @@ fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> Result<ReadOutcome> {
                 if filled == 0 {
                     return Ok(ReadOutcome::Eof);
                 }
-                bail!("stream truncated mid-frame ({filled} of {} bytes)", buf.len());
+                return Err(anyhow::Error::new(MeshError::Truncated {
+                    got: filled,
+                    want: buf.len(),
+                }))
+                .context("stream truncated inside the frame length word");
             }
             Ok(k) => filled += k,
             Err(e) if e.kind() == ErrorKind::Interrupted => {}
@@ -218,6 +234,34 @@ fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> Result<ReadOutcome> {
         }
     }
     Ok(ReadOutcome::Full)
+}
+
+/// `read_exact` for a region *inside* a frame whose declared post-length
+/// size is `want`: any EOF is a typed [`MeshError::Truncated`] reporting
+/// how much of the frame actually arrived (`got_before` + what this call
+/// managed to read).
+fn read_exact_typed(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    got_before: usize,
+    want: usize,
+) -> Result<()> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(anyhow::Error::new(MeshError::Truncated {
+                    got: got_before + filled,
+                    want,
+                }))
+                .context("stream truncated mid-frame");
+            }
+            Ok(k) => filled += k,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -323,6 +367,49 @@ mod tests {
         let mut huge = (1u32 << 30).to_le_bytes().to_vec();
         huge.extend_from_slice(&[0u8; 32]);
         assert!(read_frame(&mut &huge[..], 1 << 20, &mut body).is_err());
+    }
+
+    /// The codec-hardening satellite: malformed input — an oversized
+    /// length prefix, an impossibly short one, and truncation at every
+    /// mid-prefix byte offset — must surface as *typed* [`MeshError`]s
+    /// (downcastable through the context chain), never a panic, and the
+    /// oversized case must be rejected before any body allocation.
+    #[test]
+    fn malformed_frames_surface_typed_mesh_errors() {
+        let mut body = Vec::new();
+
+        // length word over the cap: FrameTooLarge, body buffer untouched
+        let mut huge = (1u32 << 30).to_le_bytes().to_vec();
+        huge.extend_from_slice(&[0u8; 64]);
+        let err = read_frame(&mut &huge[..], 1 << 20, &mut body).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<MeshError>(),
+            Some(&MeshError::FrameTooLarge { len: 1 << 30, max: 1 << 20 })
+        );
+        assert!(format!("{err:#}").contains("max_frame_bytes"));
+        assert_eq!(body.capacity(), 0, "oversized frame must be rejected before allocating");
+
+        // length word below the header size: a truncation at the source
+        let mut tiny = 5u32.to_le_bytes().to_vec();
+        tiny.extend_from_slice(&[0u8; 32]);
+        let err = read_frame(&mut &tiny[..], 1 << 20, &mut body).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<MeshError>(),
+            Some(&MeshError::Truncated { got: 5, want: HEADER_BYTES })
+        );
+
+        // every proper prefix of a real frame: Truncated with got < want
+        let mut frame = Vec::new();
+        encode_payload_frame(&mut frame, 0, 1, 7, &Payload::F32(vec![1.0, 2.0, 3.0]));
+        for cut in 1..frame.len() {
+            let err = read_frame(&mut &frame[..cut], 1 << 20, &mut body).unwrap_err();
+            match err.downcast_ref::<MeshError>() {
+                Some(&MeshError::Truncated { got, want }) => {
+                    assert!(got < want, "cut {cut}: got {got} !< want {want}")
+                }
+                other => panic!("cut {cut}: expected Truncated, got {other:?}"),
+            }
+        }
     }
 
     #[test]

@@ -43,12 +43,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context as _, Result};
 
+pub mod chaos;
 pub mod frame;
 pub mod mesh;
 pub mod tcp;
 
+pub use chaos::{ChaosConfig, ChaosCounters, ChaosTransport};
 pub use mesh::{Endpoint, Mesh};
-pub use tcp::{TcpEndpoint, TcpMesh};
+pub use tcp::{LinkPolicy, TcpEndpoint, TcpMesh, TcpOptions};
 
 /// Typed transport fault. Collectives propagate these through their normal
 /// `Result` paths, so a worker can distinguish *being* the failure (a real
@@ -62,6 +64,14 @@ pub enum MeshError {
     /// The mesh-wide abort flag is up; `origin` is the first rank marked
     /// dead (the death that triggered the abort).
     Aborted { origin: usize },
+    /// A frame (outgoing or decoded off the wire) exceeds the configured
+    /// `max_frame_bytes` cap. The oversized length is rejected *before*
+    /// any allocation, so a corrupt or hostile length prefix can never
+    /// balloon memory.
+    FrameTooLarge { len: usize, max: usize },
+    /// The stream ended (or the declared length was impossibly short)
+    /// partway through a frame: `got` of `want` bytes were available.
+    Truncated { got: usize, want: usize },
 }
 
 impl std::fmt::Display for MeshError {
@@ -71,11 +81,82 @@ impl std::fmt::Display for MeshError {
             MeshError::Aborted { origin } => {
                 write!(f, "collective aborted (first dead rank: {origin})")
             }
+            MeshError::FrameTooLarge { len, max } => {
+                write!(f, "frame of {len} bytes exceeds max_frame_bytes = {max}")
+            }
+            MeshError::Truncated { got, want } => {
+                write!(f, "truncated frame: got {got} of {want} bytes")
+            }
         }
     }
 }
 
 impl std::error::Error for MeshError {}
+
+/// Jittered exponential backoff for dials and reconnects (the `[transport]`
+/// `retry_*` keys). Delays grow by 1.5× per attempt from `base` up to
+/// `max`, each scaled by a *deterministic* jitter factor in
+/// `[1 − jitter, 1 + jitter]` derived from `(salt, attempt)` — so two
+/// workers restarted together fan out their dials without the transport
+/// depending on ambient randomness, and tests can predict every delay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BackoffConfig {
+    /// First-retry delay.
+    pub base: Duration,
+    /// Per-attempt delay ceiling.
+    pub max: Duration,
+    /// Total attempts before the dial (or reconnect) gives up.
+    pub attempts: u32,
+    /// Jitter fraction in `[0, 1]`: each delay is scaled by a value in
+    /// `[1 − jitter, 1 + jitter]`.
+    pub jitter: f64,
+}
+
+impl Default for BackoffConfig {
+    fn default() -> Self {
+        Self {
+            base: Duration::from_millis(100),
+            max: Duration::from_millis(2000),
+            attempts: 16,
+            jitter: 0.25,
+        }
+    }
+}
+
+impl BackoffConfig {
+    /// The delay to sleep after failed attempt `attempt` (0-based).
+    pub fn delay(&self, attempt: u32, salt: u64) -> Duration {
+        let nominal = (self.base.as_secs_f64() * 1.5f64.powi(attempt.min(64) as i32))
+            .min(self.max.as_secs_f64());
+        let h = mix64(salt ^ ((attempt as u64 + 1) << 40) ^ 0x00B0_FF5E_ED00);
+        let unit = (h >> 11) as f64 / (1u64 << 53) as f64; // uniform [0, 1)
+        let factor = 1.0 + self.jitter * (2.0 * unit - 1.0);
+        Duration::from_secs_f64((nominal * factor).max(0.0))
+    }
+
+    /// Worst-case total wait across all attempts (every delay at max
+    /// jitter) — the deadline a passive accept side should hold out for
+    /// while its peer runs this schedule.
+    pub fn total_budget(&self) -> Duration {
+        let mut total = 0.0f64;
+        for a in 0..self.attempts {
+            let nominal = (self.base.as_secs_f64() * 1.5f64.powi(a.min(64) as i32))
+                .min(self.max.as_secs_f64());
+            total += nominal * (1.0 + self.jitter);
+        }
+        Duration::from_secs_f64(total)
+    }
+}
+
+/// Splitmix64 finalizer: the one-way avalanche behind every deterministic
+/// "random" decision in the transport (backoff jitter, the chaos harness).
+/// A pure function of its input — no ambient RNG anywhere on the wire path.
+pub(crate) fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
 
 /// Upper bound on one condvar wait in the blocking `recv` loop: how often
 /// a receiver that has seen no traffic re-checks the health table (and
@@ -238,6 +319,9 @@ pub struct Counters {
     /// Highest tag any rank has sent with — lets tests verify that a
     /// collective stays inside its declared `tag_span` window.
     pub max_tag: AtomicU64,
+    /// Established connections healed by re-dial + resync instead of a
+    /// death declaration (TCP mesh only; always 0 with reconnect off).
+    pub reconnects: AtomicU64,
 }
 
 impl Counters {
@@ -254,11 +338,17 @@ impl Counters {
         self.max_tag.load(Ordering::Relaxed)
     }
 
+    /// Connections healed by the TCP reconnect path since the last reset.
+    pub fn reconnects_seen(&self) -> u64 {
+        self.reconnects.load(Ordering::Relaxed)
+    }
+
     pub fn reset(&self) {
         self.bytes_sent.store(0, Ordering::Relaxed);
         self.bytes_received.store(0, Ordering::Relaxed);
         self.messages.store(0, Ordering::Relaxed);
         self.max_tag.store(0, Ordering::Relaxed);
+        self.reconnects.store(0, Ordering::Relaxed);
     }
 }
 
@@ -623,5 +713,52 @@ pub trait Transport: Send {
                 self.rank()
             )),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_delays_are_deterministic_bounded_and_grow() {
+        let b = BackoffConfig::default();
+        for attempt in 0..b.attempts {
+            let d = b.delay(attempt, 7);
+            assert_eq!(d, b.delay(attempt, 7), "attempt {attempt} not deterministic");
+            let lo = b.base.as_secs_f64() * (1.0 - b.jitter);
+            let hi = b.max.as_secs_f64() * (1.0 + b.jitter);
+            let s = d.as_secs_f64();
+            assert!(s >= lo - 1e-12 && s <= hi + 1e-12, "attempt {attempt}: {s}");
+        }
+        // different salts de-synchronize the schedule
+        assert_ne!(b.delay(0, 1), b.delay(0, 2));
+        // nominal growth: late attempts sit at the cap, above early ones
+        let early = b.delay(0, 7).as_secs_f64();
+        let late = b.delay(b.attempts - 1, 7).as_secs_f64();
+        assert!(late > early, "late {late} !> early {early}");
+        // the budget covers every possible delay sum
+        let worst: f64 = (0..b.attempts).map(|a| b.delay(a, 7).as_secs_f64()).sum();
+        assert!(b.total_budget().as_secs_f64() >= worst - 1e-9);
+    }
+
+    #[test]
+    fn zero_jitter_is_exactly_exponential() {
+        let b = BackoffConfig {
+            base: Duration::from_millis(100),
+            max: Duration::from_millis(400),
+            attempts: 4,
+            jitter: 0.0,
+        };
+        let ds: Vec<u128> = (0..4).map(|a| b.delay(a, 99).as_millis()).collect();
+        assert_eq!(ds, vec![100, 150, 225, 337]);
+    }
+
+    #[test]
+    fn mesh_error_display_names_the_limit() {
+        let e = MeshError::FrameTooLarge { len: 100, max: 64 };
+        assert!(e.to_string().contains("max_frame_bytes"));
+        let e = MeshError::Truncated { got: 3, want: 17 };
+        assert!(e.to_string().contains("3 of 17"));
     }
 }

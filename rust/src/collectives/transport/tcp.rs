@@ -21,6 +21,27 @@
 //! detected: the kernel closes its sockets, and the survivors unwind into
 //! the elastic recovery path with no coordinator round-trip needed.
 //!
+//! **Reconnect (opt-in).** With `[transport] reconnect_attempts > 0` a
+//! broken established connection is no longer an instant death: the
+//! dialer side of the pair re-dials with the configured backoff and runs
+//! a **seq-fenced resync** handshake before the rank is declared dead.
+//! Every payload frame a sender writes is first pushed into a bounded
+//! replay ring and numbered; every payload frame a receiver delivers to
+//! its inbox bumps a received counter. Because TCP delivers a prefix, the
+//! peer's counter names exactly the undelivered suffix: on reconnect each
+//! side reports its counter and the other replays its ring from there —
+//! no frame is lost, none is duplicated, and a partially-written trailing
+//! frame (never counted by the receiver) is simply resent whole. The
+//! accept side of a re-dial is served by a small **router** thread on the
+//! mesh listener. With `reconnect_attempts = 0` (the default) none of
+//! this machinery is built and the transport path is byte-for-byte the
+//! legacy behaviour.
+//!
+//! Both sides replay their suffixes synchronously while holding their own
+//! link lock; the suffix is bounded by `resync_window` frames, which is
+//! assumed to fit the kernel socket buffers (the window exists precisely
+//! to keep replay small).
+//!
 //! [`TcpMesh::loopback`] builds all `n` endpoints in-process over
 //! 127.0.0.1 (sharing one [`Counters`]/[`Health`] like the in-memory
 //! mesh — this is what `[transport] mode = "tcp"` runs under `train`, and
@@ -28,22 +49,115 @@
 //! [`connect_mesh`] builds one endpoint per OS process for the real
 //! coordinator/worker mode.
 
+use std::collections::{HashMap, VecDeque};
 use std::io::{ErrorKind, Write as _};
 use std::net::{Shutdown, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context as _, Result};
 
 use super::frame::{self, DEFAULT_MAX_FRAME_BYTES};
-use super::{Core, Counters, Health, Inbox, MeshError, Msg, Payload, Scratch, Transport};
+use super::{
+    BackoffConfig, Core, Counters, Health, Inbox, MeshError, Msg, Payload, Scratch, Transport,
+};
 
-/// How long [`connect_mesh`] keeps re-dialing a peer whose listener is
-/// not up yet (fresh worker processes race each other to bind).
-const DIAL_RETRY: Duration = Duration::from_millis(100);
-const DIAL_ATTEMPTS: usize = 100;
+/// Everything a socket mesh can be configured with. `Default` is the
+/// legacy behaviour: default backoff for the initial dials, no reconnect
+/// (a broken established stream is a death), no fault injection.
+#[derive(Debug, Clone)]
+pub struct TcpOptions {
+    /// Reject frames larger than this before allocating for them.
+    pub max_frame_bytes: usize,
+    /// Jittered exponential backoff for initial dials and re-dials.
+    pub backoff: BackoffConfig,
+    /// How many times a broken established connection may heal before the
+    /// peer is declared dead. `0` disables reconnect entirely.
+    pub reconnect_attempts: u32,
+    /// How many outbound frames each link keeps replayable for resync.
+    /// Replay memory is bounded by `resync_window` encoded frames.
+    pub resync_window: usize,
+    /// Deterministic link-fault injection (tests only).
+    pub link_policy: Option<Arc<LinkPolicy>>,
+}
+
+impl Default for TcpOptions {
+    fn default() -> Self {
+        TcpOptions {
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            backoff: BackoffConfig::default(),
+            reconnect_attempts: 0,
+            resync_window: 64,
+            link_policy: None,
+        }
+    }
+}
+
+/// Deterministic TCP-level fault injection, the socket-layer sibling of
+/// [`ChaosTransport`](super::ChaosTransport): connection resets pinned to
+/// an exact (src, dst, frame-sequence) triple, and one-shot partitions
+/// that block the first `n` re-dial attempts of a healing link. Counters
+/// record exactly what fired so tests can assert the injection happened.
+#[derive(Debug, Default)]
+pub struct LinkPolicy {
+    /// `(src, dst, seq)`: shut the src→dst connection down immediately
+    /// before src writes its `seq`-th payload frame. Sequence numbers
+    /// strictly increase, so each entry fires at most once.
+    resets: Vec<(usize, usize, u64)>,
+    /// `(src, dst, n)`: fail src's first `n` re-dial attempts to dst.
+    partitions: Vec<(usize, usize, u32)>,
+    resets_injected: AtomicU64,
+    dials_blocked: AtomicU64,
+}
+
+impl LinkPolicy {
+    pub fn with_reset(mut self, src: usize, dst: usize, seq: u64) -> Self {
+        self.resets.push((src, dst, seq));
+        self
+    }
+
+    pub fn with_partition(mut self, src: usize, dst: usize, dials: u32) -> Self {
+        self.partitions.push((src, dst, dials));
+        self
+    }
+
+    fn reset_now(&self, src: usize, dst: usize, seq: u64) -> bool {
+        if self
+            .resets
+            .iter()
+            .any(|&(s, d, q)| s == src && d == dst && q == seq)
+        {
+            self.resets_injected.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn dial_blocked(&self, src: usize, dst: usize, attempt: u32) -> bool {
+        match self
+            .partitions
+            .iter()
+            .find(|&&(s, d, _)| s == src && d == dst)
+        {
+            Some(&(_, _, n)) if attempt < n => {
+                self.dials_blocked.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// `(resets_injected, dials_blocked)` so far.
+    pub fn snapshot(&self) -> (u64, u64) {
+        (
+            self.resets_injected.load(Ordering::Relaxed),
+            self.dials_blocked.load(Ordering::Relaxed),
+        )
+    }
+}
 
 /// Factory for socket-backed meshes.
 pub struct TcpMesh;
@@ -53,11 +167,23 @@ impl TcpMesh {
     /// process, sharing one counter block and one health table — the
     /// drop-in socket twin of [`Mesh::new`](super::Mesh::new).
     pub fn loopback(n: usize) -> Result<Vec<TcpEndpoint>> {
-        Self::loopback_with(n, DEFAULT_MAX_FRAME_BYTES)
+        Self::loopback_opts(n, TcpOptions::default())
     }
 
     /// [`Self::loopback`] with an explicit frame-size cap.
     pub fn loopback_with(n: usize, max_frame_bytes: usize) -> Result<Vec<TcpEndpoint>> {
+        Self::loopback_opts(
+            n,
+            TcpOptions {
+                max_frame_bytes,
+                ..TcpOptions::default()
+            },
+        )
+    }
+
+    /// [`Self::loopback`] with full [`TcpOptions`] control (reconnect,
+    /// backoff, fault injection).
+    pub fn loopback_opts(n: usize, opts: TcpOptions) -> Result<Vec<TcpEndpoint>> {
         assert!(n > 0, "mesh needs at least one rank");
         let counters = Arc::new(Counters::default());
         let health = Arc::new(Health::new(n));
@@ -76,28 +202,39 @@ impl TcpMesh {
                 streams[j][i] = Some(acceptor);
             }
         }
+        // With reconnect on, the shared listener stays alive inside the
+        // router thread: every in-process rank re-dials the same address.
+        let redial = if opts.reconnect_attempts > 0 {
+            let registry: Registry = Arc::new(Mutex::new(HashMap::new()));
+            let guard = start_router(listener, registry.clone())?;
+            Some(RedialCtx {
+                dial_addrs: vec![addr.to_string(); n],
+                registry,
+                guard,
+            })
+        } else {
+            None
+        };
         streams
             .into_iter()
             .enumerate()
             .map(|(rank, links)| {
-                assemble(rank, n, links, counters.clone(), health.clone(), max_frame_bytes)
+                assemble(
+                    rank,
+                    n,
+                    links,
+                    counters.clone(),
+                    health.clone(),
+                    &opts,
+                    redial.clone(),
+                )
             })
             .collect()
     }
 }
 
-/// Build one rank's endpoint of a **multi-process** mesh. `peers[r]` is
-/// rank `r`'s data-listener address (`peers[rank]` itself is unused);
-/// `listener` is this rank's own, already bound. Dials every higher rank
-/// (introducing itself with a `hello` control frame, retrying while the
-/// peer's listener comes up) and accepts one connection from every lower
-/// rank. `counters`/`health` are this process's local tables — in
-/// process mode each worker owns its own copy of both.
-///
-/// Both the dial and accept loops watch `health`'s abort flag: if the
-/// coordinator cancels the attempt (another rank died before the mesh
-/// finished forming), the call unwinds with a [`MeshError`] instead of
-/// blocking on a peer that will never connect.
+/// Build one rank's endpoint of a **multi-process** mesh with legacy
+/// defaults (no reconnect). See [`connect_mesh_opts`].
 pub fn connect_mesh(
     rank: usize,
     peers: &[String],
@@ -106,6 +243,37 @@ pub fn connect_mesh(
     health: Arc<Health>,
     max_frame_bytes: usize,
 ) -> Result<TcpEndpoint> {
+    let opts = TcpOptions {
+        max_frame_bytes,
+        ..TcpOptions::default()
+    };
+    connect_mesh_opts(rank, peers, listener, counters, health, &opts)
+}
+
+/// Build one rank's endpoint of a **multi-process** mesh. `peers[r]` is
+/// rank `r`'s data-listener address (`peers[rank]` itself is unused);
+/// `listener` is this rank's own, already bound. Dials every higher rank
+/// (introducing itself with a `hello` control frame, retrying with the
+/// configured backoff while the peer's listener comes up) and accepts one
+/// connection from every lower rank. `counters`/`health` are this
+/// process's local tables — in process mode each worker owns its own copy
+/// of both.
+///
+/// Both the dial and accept loops watch `health`'s abort flag: if the
+/// coordinator cancels the attempt (another rank died before the mesh
+/// finished forming), the call unwinds with a [`MeshError`] instead of
+/// blocking on a peer that will never connect.
+///
+/// With `opts.reconnect_attempts > 0` a router thread keeps serving
+/// resync re-dials on a clone of `listener` for the life of the endpoint.
+pub fn connect_mesh_opts(
+    rank: usize,
+    peers: &[String],
+    listener: &TcpListener,
+    counters: Arc<Counters>,
+    health: Arc<Health>,
+    opts: &TcpOptions,
+) -> Result<TcpEndpoint> {
     let n = peers.len();
     assert!(rank < n, "rank {rank} outside mesh of {n}");
     let mut links: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
@@ -113,7 +281,7 @@ pub fn connect_mesh(
     // Dial up first: connects land in the peers' listen backlogs, so the
     // dial/accept order across ranks cannot deadlock.
     for (j, addr) in peers.iter().enumerate().skip(rank + 1) {
-        let mut s = dial_retry(addr, &health)
+        let mut s = dial_retry(addr, &health, &opts.backoff, ((rank as u64) << 32) | j as u64)
             .with_context(|| format!("rank {rank} dialing rank {j} at {addr}"))?;
         frame::write_control(
             &mut s,
@@ -128,7 +296,7 @@ pub fn connect_mesh(
     // listener runs non-blocking so the abort flag is honoured while
     // waiting.
     listener.set_nonblocking(true)?;
-    let deadline = Instant::now() + DIAL_RETRY * DIAL_ATTEMPTS as u32;
+    let deadline = Instant::now() + opts.backoff.total_budget();
     let mut body = Vec::new();
     for _ in 0..rank {
         let (mut s, from) = loop {
@@ -145,7 +313,7 @@ pub fn connect_mesh(
             }
         };
         s.set_nonblocking(false)?;
-        let h = frame::read_frame(&mut s, max_frame_bytes, &mut body)?
+        let h = frame::read_frame(&mut s, opts.max_frame_bytes, &mut body)?
             .ok_or_else(|| anyhow!("mesh peer at {from} closed before hello"))?;
         if h.kind != frame::KIND_CONTROL {
             bail!("mesh peer at {from} sent frame kind {} before hello", h.kind);
@@ -159,7 +327,21 @@ pub fn connect_mesh(
         links[j] = Some(s);
     }
     listener.set_nonblocking(false)?;
-    assemble(rank, n, links, counters, health, max_frame_bytes)
+    let redial = if opts.reconnect_attempts > 0 {
+        let registry: Registry = Arc::new(Mutex::new(HashMap::new()));
+        let guard = start_router(
+            listener.try_clone().context("cloning mesh listener for the resync router")?,
+            registry.clone(),
+        )?;
+        Some(RedialCtx {
+            dial_addrs: peers.to_vec(),
+            registry,
+            guard,
+        })
+    } else {
+        None
+    };
+    assemble(rank, n, links, counters, health, opts, redial)
 }
 
 fn check_abort(health: &Health) -> Result<()> {
@@ -171,51 +353,468 @@ fn check_abort(health: &Health) -> Result<()> {
     Ok(())
 }
 
-fn dial_retry(addr: &str, health: &Health) -> Result<TcpStream> {
+/// Keep re-dialing a peer whose listener is not up yet (fresh worker
+/// processes race each other to bind), sleeping the jittered exponential
+/// backoff between attempts. `salt` decorrelates the jitter across
+/// (rank, peer) pairs so a whole mesh does not retry in lock-step.
+fn dial_retry(addr: &str, health: &Health, backoff: &BackoffConfig, salt: u64) -> Result<TcpStream> {
     let mut last = None;
-    for _ in 0..DIAL_ATTEMPTS {
+    for attempt in 0..backoff.attempts {
         check_abort(health)?;
         match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
             Err(e) => {
                 last = Some(e);
-                thread::sleep(DIAL_RETRY);
+                thread::sleep(backoff.delay(attempt, salt));
             }
         }
     }
     Err(last.expect("at least one dial attempt").into())
 }
 
+// ---------------------------------------------------------------------
+// Healing links: per-pair replay state, the resync handshake, and the
+// router that serves the accept side of a re-dial.
+// ---------------------------------------------------------------------
+
+/// Mutable state of one healing link, guarded by [`LinkShared::state`].
+struct LinkState {
+    /// The live stream, `None` while broken. Writers and the reader
+    /// `try_clone` out of here under the lock.
+    stream: Option<TcpStream>,
+    /// Bumped on every successful (re)install; lets writers and the
+    /// reader tell a heal apart from the stream they already saw break.
+    generation: u64,
+    /// Set once the reader has fully drained the broken stream — the
+    /// received counter is final and a resync handshake may answer.
+    drained: bool,
+    /// Terminal: the link gave up healing.
+    dead: bool,
+    /// Completed heal episodes, bounded by `reconnect_attempts`.
+    heals: u32,
+    /// Payload frames ever sent on this link (frame sequence numbers).
+    sent: u64,
+    /// Payload frames delivered from this link into the inbox. TCP
+    /// delivers a prefix, so this names the next frame we need.
+    rcvd: u64,
+    /// Encoded outbound frames `ring_start..sent`, kept for replay.
+    ring: VecDeque<Vec<u8>>,
+    /// Sequence number of `ring[0]`.
+    ring_start: u64,
+}
+
+struct LinkShared {
+    state: Mutex<LinkState>,
+    cv: Condvar,
+}
+
+impl LinkShared {
+    fn new(stream: TcpStream) -> Self {
+        LinkShared {
+            state: Mutex::new(LinkState {
+                stream: Some(stream),
+                generation: 1,
+                drained: false,
+                dead: false,
+                heals: 0,
+                sent: 0,
+                rcvd: 0,
+                ring: VecDeque::new(),
+                ring_start: 0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+enum DrainEnd {
+    /// The peer said `bye` before the stream ended: a purposeful close.
+    Clean,
+    /// EOF, stream error, or a malformed frame with no `bye` first.
+    Broken,
+}
+
+/// Decode frames off `stream` into the inbox until it ends. The exact
+/// legacy reader loop; `counted` additionally bumps the link's received
+/// counter for every payload frame delivered (the resync fence).
+fn drain_stream(
+    stream: &mut TcpStream,
+    inbox: &Inbox,
+    counted: Option<&LinkShared>,
+    max_frame_bytes: usize,
+) -> DrainEnd {
+    let mut body = Vec::new();
+    // `bye` received: the peer is closing on purpose; the EOF that
+    // follows is not a death.
+    let mut clean = false;
+    loop {
+        match frame::read_frame(stream, max_frame_bytes, &mut body) {
+            Ok(Some(h)) => match h.kind {
+                // The only control traffic on an established mesh link is
+                // the close handshake.
+                frame::KIND_CONTROL => clean = true,
+                _ => match frame::decode_payload(h.kind, &body, Vec::new(), Vec::new()) {
+                    Ok(payload) => {
+                        if let Some(link) = counted {
+                            link.state.lock().unwrap().rcvd += 1;
+                        }
+                        inbox.push(Msg {
+                            src: h.src as usize,
+                            tag: h.tag,
+                            payload,
+                        });
+                    }
+                    // A malformed frame means the stream is out of sync —
+                    // unrecoverable for this connection.
+                    Err(_) => break,
+                },
+            },
+            Ok(None) => break, // EOF
+            Err(_) => break,   // truncated / oversized / io error
+        }
+    }
+    if clean {
+        DrainEnd::Clean
+    } else {
+        DrainEnd::Broken
+    }
+}
+
+/// One heal episode on the dialer side of a broken link: re-dial with
+/// backoff (honouring any injected partition), run the resync handshake,
+/// replay the undelivered suffix, install the new stream. Returns whether
+/// the link healed; on giving up the link is dead and the peer marked.
+fn heal_dial(
+    rank: usize,
+    peer: usize,
+    addr: &str,
+    link: &Arc<LinkShared>,
+    counters: &Counters,
+    health: &Health,
+    closing: &AtomicBool,
+    opts: &TcpOptions,
+) -> bool {
+    let give_up = |link: &Arc<LinkShared>| {
+        let mut st = link.state.lock().unwrap();
+        st.dead = true;
+        drop(st);
+        link.cv.notify_all();
+        if !closing.load(Ordering::Acquire) && !health.aborted() {
+            health.mark_dead(peer);
+        }
+        false
+    };
+    let my_rcvd = {
+        let mut st = link.state.lock().unwrap();
+        if st.heals >= opts.reconnect_attempts {
+            drop(st);
+            return give_up(link);
+        }
+        st.heals += 1;
+        // The reader has fully drained the broken stream before calling
+        // us, so this count is final.
+        st.rcvd
+    };
+    let salt = ((rank as u64) << 32) | (peer as u64) | 0x4EA1_0000_0000_0000;
+    let mut wbuf = Vec::new();
+    for attempt in 0..opts.backoff.attempts {
+        if closing.load(Ordering::Acquire) || health.aborted() || health.is_dead(peer) {
+            return false;
+        }
+        if link.state.lock().unwrap().dead {
+            return give_up(link);
+        }
+        if let Some(p) = &opts.link_policy {
+            if p.dial_blocked(rank, peer, attempt) {
+                thread::sleep(opts.backoff.delay(attempt, salt));
+                continue;
+            }
+        }
+        let mut s = match TcpStream::connect(addr) {
+            Ok(s) => s,
+            Err(_) => {
+                thread::sleep(opts.backoff.delay(attempt, salt));
+                continue;
+            }
+        };
+        if try_resync(rank, peer, my_rcvd, &mut s, &mut wbuf, link).is_ok() {
+            counters.reconnects.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        thread::sleep(opts.backoff.delay(attempt, salt));
+    }
+    give_up(link)
+}
+
+/// The dialer half of the resync handshake over a fresh connection:
+/// report how much we received, learn how much the peer received, replay
+/// our ring from there, and install the stream.
+fn try_resync(
+    rank: usize,
+    peer: usize,
+    my_rcvd: u64,
+    s: &mut TcpStream,
+    wbuf: &mut Vec<u8>,
+    link: &Arc<LinkShared>,
+) -> Result<()> {
+    s.set_nodelay(true)?;
+    frame::write_control(
+        s,
+        wbuf,
+        &format!(r#"{{"type":"resync","rank":{rank},"to":{peer},"rcvd":{my_rcvd}}}"#),
+    )?;
+    s.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut body = Vec::new();
+    let h = frame::read_frame(s, 4096, &mut body)?
+        .ok_or_else(|| anyhow!("peer closed during resync"))?;
+    if h.kind != frame::KIND_CONTROL {
+        bail!("unexpected frame kind {} in resync handshake", h.kind);
+    }
+    let peer_rcvd = crate::util::json::Json::parse(std::str::from_utf8(&body)?)?
+        .get("rcvd")?
+        .as_usize()? as u64;
+    s.set_read_timeout(None)?;
+    let mut st = link.state.lock().unwrap();
+    if peer_rcvd < st.ring_start {
+        // The peer needs frames we already evicted: the gap is
+        // unrecoverable, only a full elastic re-plan can fix it.
+        st.dead = true;
+        drop(st);
+        link.cv.notify_all();
+        bail!("resync gap: peer at {peer_rcvd}, ring starts at evicted frames");
+    }
+    let skip = (peer_rcvd - st.ring_start) as usize;
+    for f in st.ring.iter().skip(skip) {
+        s.write_all(f)?;
+    }
+    st.stream = Some(s.try_clone()?);
+    st.generation += 1;
+    st.drained = false;
+    drop(st);
+    link.cv.notify_all();
+    Ok(())
+}
+
+/// What the resync router needs to serve a re-dial for one accepted link.
+#[derive(Clone)]
+struct RouterEntry {
+    link: Arc<LinkShared>,
+    counters: Arc<Counters>,
+    health: Arc<Health>,
+    /// How long to wait for the old reader to finish draining.
+    budget: Duration,
+}
+
+/// `(owner_rank, dialer_rank)` → the owner's accepted-side link.
+type Registry = Arc<Mutex<HashMap<(usize, usize), RouterEntry>>>;
+
+/// Keeps the resync router thread alive; dropping the last clone stops
+/// it. Held by every endpoint built with reconnect enabled.
+pub(crate) struct RouterGuard {
+    stop: Arc<AtomicBool>,
+}
+
+impl Drop for RouterGuard {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+    }
+}
+
+/// Everything [`assemble`] needs to make links healable: where each peer
+/// can be re-dialed, and the router registry to serve inbound re-dials.
+#[derive(Clone)]
+struct RedialCtx {
+    dial_addrs: Vec<String>,
+    registry: Registry,
+    guard: Arc<RouterGuard>,
+}
+
+/// Start the resync router: accept re-dial connections on `listener` and
+/// hand each to a short-lived handler thread.
+fn start_router(listener: TcpListener, registry: Registry) -> Result<Arc<RouterGuard>> {
+    listener
+        .set_nonblocking(true)
+        .context("setting resync router listener non-blocking")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    thread::Builder::new()
+        .name("tcp-mesh-router".into())
+        .spawn(move || loop {
+            if stop2.load(Ordering::Acquire) {
+                return;
+            }
+            match listener.accept() {
+                Ok((s, _)) => {
+                    let reg = registry.clone();
+                    let _ = thread::Builder::new()
+                        .name("tcp-mesh-resync".into())
+                        .spawn(move || {
+                            let _ = handle_resync(s, reg);
+                        });
+                }
+                Err(_) => thread::sleep(Duration::from_millis(10)),
+            }
+        })
+        .context("spawning resync router")?;
+    Ok(Arc::new(RouterGuard { stop }))
+}
+
+/// The accept half of the resync handshake: wait for the old reader to
+/// drain (so our received count is final), answer it, replay our own
+/// undelivered suffix, and install the new stream on the link.
+fn handle_resync(mut s: TcpStream, registry: Registry) -> Result<()> {
+    s.set_nodelay(true)?;
+    s.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut body = Vec::new();
+    let h = frame::read_frame(&mut s, 4096, &mut body)?
+        .ok_or_else(|| anyhow!("re-dialer closed before resync"))?;
+    if h.kind != frame::KIND_CONTROL {
+        bail!("unexpected frame kind {} from re-dialer", h.kind);
+    }
+    let j = crate::util::json::Json::parse(std::str::from_utf8(&body)?)?;
+    if j.get("type")?.as_str()? != "resync" {
+        bail!("unexpected control message from re-dialer");
+    }
+    let from = j.get("rank")?.as_usize()?;
+    let to = j.get("to")?.as_usize()?;
+    let peer_rcvd = j.get("rcvd")?.as_usize()? as u64;
+    let entry = registry
+        .lock()
+        .unwrap()
+        .get(&(to, from))
+        .cloned()
+        .ok_or_else(|| anyhow!("resync for unknown link ({to},{from})"))?;
+    // Wait for the old reader to finish draining the broken stream; kick
+    // it off a stream that is somehow still readable after 200ms.
+    let t0 = Instant::now();
+    let mut kicked = false;
+    {
+        let mut st = entry.link.state.lock().unwrap();
+        loop {
+            if st.dead {
+                bail!("link ({to},{from}) already dead");
+            }
+            if st.drained {
+                break;
+            }
+            if !kicked && t0.elapsed() > Duration::from_millis(200) {
+                if let Some(old) = &st.stream {
+                    let _ = old.shutdown(Shutdown::Both);
+                }
+                kicked = true;
+            }
+            if t0.elapsed() > entry.budget {
+                bail!("old reader for link ({to},{from}) never drained");
+            }
+            st = entry
+                .link
+                .cv
+                .wait_timeout(st, Duration::from_millis(20))
+                .unwrap()
+                .0;
+        }
+    }
+    let my_rcvd = entry.link.state.lock().unwrap().rcvd;
+    let mut wbuf = Vec::new();
+    frame::write_control(&mut s, &mut wbuf, &format!(r#"{{"type":"resync-ack","rcvd":{my_rcvd}}}"#))?;
+    s.set_read_timeout(None)?;
+    {
+        let mut st = entry.link.state.lock().unwrap();
+        if peer_rcvd < st.ring_start {
+            st.dead = true;
+            drop(st);
+            entry.link.cv.notify_all();
+            entry.health.mark_dead(from);
+            bail!("resync gap: re-dialer at {peer_rcvd}, ring starts past it");
+        }
+        let skip = (peer_rcvd - st.ring_start) as usize;
+        for f in st.ring.iter().skip(skip) {
+            s.write_all(f)?;
+        }
+        st.stream = Some(s.try_clone()?);
+        st.generation += 1;
+        st.drained = false;
+    }
+    entry.link.cv.notify_all();
+    entry.counters.reconnects.fetch_add(1, Ordering::Relaxed);
+    Ok(())
+}
+
 /// Wrap pairwise streams into an endpoint: set NODELAY (collective hops
 /// are latency-bound small-to-medium writes), clone each stream for its
-/// reader thread, and start the readers.
+/// reader thread, and start the readers. With reconnect enabled, links
+/// become healing links instead: accepted-side links register with the
+/// resync router, dialer-side links know where to re-dial.
 fn assemble(
     rank: usize,
     n: usize,
     links: Vec<Option<TcpStream>>,
     counters: Arc<Counters>,
     health: Arc<Health>,
-    max_frame_bytes: usize,
+    opts: &TcpOptions,
+    redial: Option<RedialCtx>,
 ) -> Result<TcpEndpoint> {
     let inbox = Arc::new(Inbox::default());
     let closing = Arc::new(AtomicBool::new(false));
     let mut writers = Vec::with_capacity(n);
     let mut readers = Vec::new();
+    let healing = opts.reconnect_attempts > 0;
     for (peer, link) in links.into_iter().enumerate() {
         match link {
             Some(s) => {
                 s.set_nodelay(true)?;
-                let reader_stream = s.try_clone()?;
-                readers.push(spawn_reader(
-                    rank,
-                    peer,
-                    reader_stream,
-                    inbox.clone(),
-                    health.clone(),
-                    closing.clone(),
-                    max_frame_bytes,
-                ));
-                writers.push(Some(s));
+                if healing {
+                    let ctx = redial
+                        .as_ref()
+                        .expect("reconnect-enabled mesh needs a redial context");
+                    let shared = Arc::new(LinkShared::new(s));
+                    // The lower rank of a pair dialed the original
+                    // connection and re-dials on a break; the higher rank
+                    // accepted it and lets the router re-install.
+                    if peer < rank {
+                        ctx.registry.lock().unwrap().insert(
+                            (rank, peer),
+                            RouterEntry {
+                                link: shared.clone(),
+                                counters: counters.clone(),
+                                health: health.clone(),
+                                budget: opts.backoff.total_budget() + Duration::from_secs(2),
+                            },
+                        );
+                    }
+                    let dial_addr = if peer > rank {
+                        Some(ctx.dial_addrs[peer].clone())
+                    } else {
+                        None
+                    };
+                    readers.push(spawn_healing_reader(
+                        rank,
+                        peer,
+                        shared.clone(),
+                        dial_addr,
+                        inbox.clone(),
+                        counters.clone(),
+                        health.clone(),
+                        closing.clone(),
+                        opts.clone(),
+                    ));
+                    writers.push(Some(PeerLink::Healing {
+                        shared,
+                        cached: None,
+                    }));
+                } else {
+                    let reader_stream = s.try_clone()?;
+                    readers.push(spawn_reader(
+                        rank,
+                        peer,
+                        reader_stream,
+                        inbox.clone(),
+                        health.clone(),
+                        closing.clone(),
+                        opts.max_frame_bytes,
+                    ));
+                    writers.push(Some(PeerLink::Plain(s)));
+                }
             }
             None => writers.push(None),
         }
@@ -226,7 +825,8 @@ fn assemble(
         wbuf: Vec::new(),
         readers,
         closing,
-        max_frame_bytes,
+        opts: opts.clone(),
+        _router: redial.map(|c| c.guard),
     })
 }
 
@@ -244,36 +844,119 @@ fn spawn_reader(
     thread::Builder::new()
         .name(format!("tcp-mesh-r{rank}p{peer}"))
         .spawn(move || {
-            let mut body = Vec::new();
-            // `bye` received: the peer is closing on purpose; the EOF that
-            // follows is not a death.
-            let mut clean = false;
-            loop {
-                match frame::read_frame(&mut stream, max_frame_bytes, &mut body) {
-                    Ok(Some(h)) => match h.kind {
-                        // The only control traffic on an established mesh
-                        // link is the close handshake.
-                        frame::KIND_CONTROL => clean = true,
-                        _ => match frame::decode_payload(h.kind, &body, Vec::new(), Vec::new()) {
-                            Ok(payload) => inbox.push(Msg {
-                                src: h.src as usize,
-                                tag: h.tag,
-                                payload,
-                            }),
-                            // A malformed frame means the stream is out of
-                            // sync — unrecoverable for this link.
-                            Err(_) => break,
-                        },
-                    },
-                    Ok(None) => break, // EOF
-                    Err(_) => break,   // truncated / oversized / io error
-                }
-            }
-            if !clean && !closing.load(Ordering::Acquire) && !health.is_dead(peer) {
+            let end = drain_stream(&mut stream, &inbox, None, max_frame_bytes);
+            if matches!(end, DrainEnd::Broken)
+                && !closing.load(Ordering::Acquire)
+                && !health.is_dead(peer)
+            {
                 health.mark_dead(peer);
             }
         })
         .expect("spawning tcp mesh reader")
+}
+
+/// The reader thread of a healing link: drain the current stream, and on
+/// an unclean break either re-dial (dialer side) or wait for the router
+/// to install the peer's re-dial (acceptor side) — declaring the peer
+/// dead only once the reconnect budget is spent.
+#[allow(clippy::too_many_arguments)]
+fn spawn_healing_reader(
+    rank: usize,
+    peer: usize,
+    link: Arc<LinkShared>,
+    dial_addr: Option<String>,
+    inbox: Arc<Inbox>,
+    counters: Arc<Counters>,
+    health: Arc<Health>,
+    closing: Arc<AtomicBool>,
+    opts: TcpOptions,
+) -> thread::JoinHandle<()> {
+    thread::Builder::new()
+        .name(format!("tcp-mesh-r{rank}p{peer}"))
+        .spawn(move || {
+            let mut last_gen = 0u64;
+            loop {
+                // Obtain the current stream (or give up waiting for one).
+                let wait_start = Instant::now();
+                let repair_deadline = opts.backoff.total_budget() + Duration::from_secs(2);
+                let (mut stream, gen) = {
+                    let mut st = link.state.lock().unwrap();
+                    loop {
+                        if closing.load(Ordering::Acquire) || st.dead || health.is_dead(peer) {
+                            return;
+                        }
+                        if st.generation > last_gen && !st.drained {
+                            if let Some(s) = &st.stream {
+                                match s.try_clone() {
+                                    Ok(c) => break (c, st.generation),
+                                    Err(_) => {
+                                        st.drained = true;
+                                        st.stream = None;
+                                        link.cv.notify_all();
+                                    }
+                                }
+                            }
+                        }
+                        if last_gen > 0 && wait_start.elapsed() > repair_deadline {
+                            st.dead = true;
+                            drop(st);
+                            link.cv.notify_all();
+                            if !closing.load(Ordering::Acquire) && !health.aborted() {
+                                health.mark_dead(peer);
+                            }
+                            return;
+                        }
+                        st = link.cv.wait_timeout(st, Duration::from_millis(50)).unwrap().0;
+                    }
+                };
+                last_gen = gen;
+                let end = drain_stream(&mut stream, &inbox, Some(&link), opts.max_frame_bytes);
+                {
+                    let mut st = link.state.lock().unwrap();
+                    if st.generation == gen {
+                        st.drained = true;
+                        st.stream = None;
+                    }
+                }
+                link.cv.notify_all();
+                match end {
+                    DrainEnd::Clean => return,
+                    DrainEnd::Broken => {
+                        if closing.load(Ordering::Acquire)
+                            || health.aborted()
+                            || health.is_dead(peer)
+                        {
+                            return;
+                        }
+                        if let Some(addr) = &dial_addr {
+                            if !heal_dial(
+                                rank, peer, addr, &link, &counters, &health, &closing, &opts,
+                            ) {
+                                return;
+                            }
+                            // Healed: loop picks up the new generation.
+                        }
+                        // Acceptor side: loop back and wait (bounded by
+                        // `repair_deadline`) for the router to install
+                        // the peer's re-dial.
+                    }
+                }
+            }
+        })
+        .expect("spawning tcp mesh reader")
+}
+
+/// A writer's view of one peer connection.
+enum PeerLink {
+    /// Legacy: the stream is the link; a break is a death.
+    Plain(TcpStream),
+    /// Reconnect-enabled: replayable, seq-fenced, re-dialable. `cached`
+    /// is a generation-stamped clone of the live stream so the hot send
+    /// path does not `try_clone` per frame.
+    Healing {
+        shared: Arc<LinkShared>,
+        cached: Option<(u64, TcpStream)>,
+    },
 }
 
 /// One rank's socket-backed view of the mesh. Same [`Transport`] surface
@@ -284,15 +967,18 @@ fn spawn_reader(
 /// bucketed pipeline reuses buffers on the socket path too).
 pub struct TcpEndpoint {
     core: Core,
-    /// writers[r] = the stream to rank `r` (`None` for this rank itself).
-    writers: Vec<Option<TcpStream>>,
+    /// writers[r] = the link to rank `r` (`None` for this rank itself).
+    writers: Vec<Option<PeerLink>>,
     /// Reusable frame-serialization buffer.
     wbuf: Vec<u8>,
     readers: Vec<thread::JoinHandle<()>>,
     /// Tells this endpoint's readers that the sockets are being shut down
     /// on purpose, so the EOF they see is not a peer death.
     closing: Arc<AtomicBool>,
-    max_frame_bytes: usize,
+    opts: TcpOptions,
+    /// Keeps the resync router alive while any reconnect-enabled
+    /// endpoint lives.
+    _router: Option<Arc<RouterGuard>>,
 }
 
 impl TcpEndpoint {
@@ -352,24 +1038,144 @@ impl TcpEndpoint {
             tag,
             &payload,
         );
-        if self.wbuf.len() > self.max_frame_bytes + 4 {
-            bail!(
-                "payload of {} wire bytes exceeds max_frame_bytes {} (raise \
-                 [transport] max_frame_bytes or shrink bucket_bytes)",
-                bytes,
-                self.max_frame_bytes
-            );
+        if self.wbuf.len() > self.opts.max_frame_bytes + 4 {
+            return Err(anyhow::Error::new(MeshError::FrameTooLarge {
+                len: self.wbuf.len().saturating_sub(4),
+                max: self.opts.max_frame_bytes,
+            }))
+            .with_context(|| {
+                format!(
+                    "payload of {} wire bytes exceeds max_frame_bytes {} (raise \
+                     [transport] max_frame_bytes or shrink bucket_bytes)",
+                    bytes, self.opts.max_frame_bytes
+                )
+            });
         }
-        let stream = self.writers[dst]
-            .as_mut()
-            .expect("pairwise mesh link missing");
-        stream
-            .write_all(&self.wbuf)
-            .with_context(|| format!("rank {} tcp send to {dst} tag {tag}", self.core.rank))?;
+        match self
+            .writers
+            .get_mut(dst)
+            .and_then(|w| w.as_mut())
+            .expect("pairwise mesh link missing")
+        {
+            PeerLink::Plain(stream) => {
+                stream.write_all(&self.wbuf).with_context(|| {
+                    format!("rank {} tcp send to {dst} tag {tag}", self.core.rank)
+                })?;
+            }
+            PeerLink::Healing { shared, cached } => {
+                send_healing(
+                    self.core.rank,
+                    dst,
+                    tag,
+                    shared,
+                    cached,
+                    &self.wbuf,
+                    &self.opts,
+                    &self.core.health,
+                )?;
+            }
+        }
         self.core.note_sent(tag, bytes);
         // The frame now carries the bytes; the payload storage is free.
         self.core.scratch.recycle(payload);
         Ok(())
+    }
+}
+
+/// Send one encoded frame on a healing link. The frame is numbered and
+/// pushed into the replay ring *before* any write: even a write the OS
+/// accepts but the network loses is covered, because replay is driven by
+/// the receiver's delivered count, never by local write success. On a
+/// broken stream the sender parks until the link heals (the replay then
+/// carries this frame) or the reconnect budget runs out.
+#[allow(clippy::too_many_arguments)]
+fn send_healing(
+    rank: usize,
+    dst: usize,
+    tag: u64,
+    shared: &Arc<LinkShared>,
+    cached: &mut Option<(u64, TcpStream)>,
+    wbuf: &[u8],
+    opts: &TcpOptions,
+    health: &Health,
+) -> Result<()> {
+    let peer_dead = |rank: usize, dst: usize, tag: u64| {
+        anyhow::Error::new(MeshError::PeerDead { rank: dst })
+            .context(format!("rank {rank} tcp send to {dst} tag {tag}"))
+    };
+    let gen = {
+        let mut st = shared.state.lock().unwrap();
+        if st.dead {
+            return Err(peer_dead(rank, dst, tag));
+        }
+        let seq = st.sent;
+        if let Some(p) = &opts.link_policy {
+            if p.reset_now(rank, dst, seq) {
+                if let Some(s) = &st.stream {
+                    let _ = s.shutdown(Shutdown::Both);
+                }
+            }
+        }
+        st.ring.push_back(wbuf.to_vec());
+        st.sent += 1;
+        while st.ring.len() > opts.resync_window {
+            st.ring.pop_front();
+            st.ring_start += 1;
+        }
+        // Refresh the cached writer clone under the same lock that read
+        // the generation: a clone taken later could silently be a healed
+        // stream whose replay already carried this frame.
+        let gen = st.generation;
+        if cached.as_ref().map(|(g, _)| *g) != Some(gen) {
+            *cached = match st.stream.as_ref().map(|s| s.try_clone()) {
+                Some(Ok(c)) => Some((gen, c)),
+                _ => None,
+            };
+        }
+        gen
+    };
+    let wrote = match cached {
+        Some((g, s)) if *g == gen => s.write_all(wbuf).is_ok(),
+        _ => false,
+    };
+    if wrote {
+        return Ok(());
+    }
+    // The stream is broken (or mid-heal). Force the reader off it so the
+    // heal can start, then park until the link heals — the frame is in
+    // the ring, so the replay delivers it — or the link dies.
+    {
+        let st = shared.state.lock().unwrap();
+        if st.generation == gen {
+            if let Some(s) = &st.stream {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+    }
+    shared.cv.notify_all();
+    let deadline = Instant::now() + opts.backoff.total_budget() + Duration::from_secs(5);
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.generation > gen && st.stream.is_some() && !st.drained {
+            return Ok(());
+        }
+        if st.dead || health.is_dead(dst) {
+            return Err(peer_dead(rank, dst, tag));
+        }
+        if health.aborted() {
+            return Err(anyhow::Error::new(MeshError::Aborted {
+                origin: health.first_dead().unwrap_or(0),
+            })
+            .context(format!("rank {rank} tcp send to {dst} tag {tag}")));
+        }
+        if Instant::now() > deadline {
+            st.dead = true;
+            drop(st);
+            shared.cv.notify_all();
+            health.mark_dead(dst);
+            return Err(peer_dead(rank, dst, tag));
+        }
+        st = shared.cv.wait_timeout(st, Duration::from_millis(50)).unwrap().0;
     }
 }
 
@@ -431,19 +1237,42 @@ impl Drop for TcpEndpoint {
         // death, not a clean close.
         let dying = self.core.health.is_dead(self.core.rank);
         for (peer, link) in self.writers.iter_mut().enumerate() {
-            if let Some(s) = link {
-                if !dying {
-                    frame::encode_frame(
-                        &mut self.wbuf,
-                        frame::KIND_CONTROL,
-                        self.core.rank as u32,
-                        peer as u32,
-                        0,
-                        br#"{"type":"bye"}"#,
-                    );
-                    let _ = s.write_all(&self.wbuf);
+            match link {
+                Some(PeerLink::Plain(s)) => {
+                    if !dying {
+                        frame::encode_frame(
+                            &mut self.wbuf,
+                            frame::KIND_CONTROL,
+                            self.core.rank as u32,
+                            peer as u32,
+                            0,
+                            br#"{"type":"bye"}"#,
+                        );
+                        let _ = s.write_all(&self.wbuf);
+                    }
+                    let _ = s.shutdown(Shutdown::Both);
                 }
-                let _ = s.shutdown(Shutdown::Both);
+                Some(PeerLink::Healing { shared, .. }) => {
+                    let st = shared.state.lock().unwrap();
+                    if let Some(s) = &st.stream {
+                        if !dying {
+                            frame::encode_frame(
+                                &mut self.wbuf,
+                                frame::KIND_CONTROL,
+                                self.core.rank as u32,
+                                peer as u32,
+                                0,
+                                br#"{"type":"bye"}"#,
+                            );
+                            let mut w: &TcpStream = s;
+                            let _ = w.write_all(&self.wbuf);
+                        }
+                        let _ = s.shutdown(Shutdown::Both);
+                    }
+                    drop(st);
+                    shared.cv.notify_all();
+                }
+                None => {}
             }
         }
         for h in self.readers.drain(..) {
@@ -538,6 +1367,88 @@ mod tests {
         let mut a = eps.remove(0);
         let err = t(&mut a).send_f32(1, 0, &[0.0; 100]).unwrap_err();
         assert!(format!("{err:#}").contains("max_frame_bytes"), "{err:#}");
+        assert!(matches!(
+            err.downcast_ref::<MeshError>(),
+            Some(&MeshError::FrameTooLarge { .. })
+        ));
+    }
+
+    /// An injected connection reset on an established link heals through
+    /// the resync handshake: every frame arrives exactly once and in
+    /// order, nobody is marked dead, and the reconnect counter records
+    /// the repair.
+    #[test]
+    fn injected_reset_heals_without_death_and_counts_reconnect() {
+        let policy = Arc::new(LinkPolicy::default().with_reset(0, 1, 1));
+        let opts = TcpOptions {
+            reconnect_attempts: 2,
+            link_policy: Some(policy.clone()),
+            backoff: BackoffConfig {
+                base: Duration::from_millis(10),
+                max: Duration::from_millis(80),
+                attempts: 8,
+                jitter: 0.0,
+            },
+            ..TcpOptions::default()
+        };
+        let mut eps = TcpMesh::loopback_opts(2, opts).unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        // Frame seq 0 flows normally; seq 1 trips the reset and rides the
+        // replay; seq 2 uses the healed stream.
+        t(&mut a).send_f32(1, 1, &[1.0]).unwrap();
+        t(&mut a).send_f32(1, 2, &[2.0, 3.0]).unwrap();
+        t(&mut a).send_f32(1, 3, &[4.0]).unwrap();
+        t(&mut b).set_recv_deadline(Some(Duration::from_secs(20)));
+        assert_eq!(t(&mut b).recv_f32(0, 1).unwrap(), vec![1.0]);
+        assert_eq!(t(&mut b).recv_f32(0, 2).unwrap(), vec![2.0, 3.0]);
+        assert_eq!(t(&mut b).recv_f32(0, 3).unwrap(), vec![4.0]);
+        assert_eq!(b.pending_messages(), 0);
+        assert!(a.health().first_dead().is_none(), "heal must not kill anyone");
+        assert!(a.counters().reconnects_seen() >= 1);
+        assert_eq!(policy.snapshot().0, 1, "exactly one reset fires");
+        drop(a);
+        drop(b);
+    }
+
+    /// When every re-dial is blocked (a partition that outlives the
+    /// budget), the link gives up in bounded time and surfaces the
+    /// ordinary typed death — reconnect must delay failure, not hide it.
+    #[test]
+    fn reconnect_attempts_exhausted_is_a_death() {
+        let policy = Arc::new(
+            LinkPolicy::default()
+                .with_reset(0, 1, 0)
+                .with_partition(0, 1, u32::MAX),
+        );
+        let opts = TcpOptions {
+            reconnect_attempts: 1,
+            link_policy: Some(policy.clone()),
+            backoff: BackoffConfig {
+                base: Duration::from_millis(5),
+                max: Duration::from_millis(20),
+                attempts: 4,
+                jitter: 0.0,
+            },
+            ..TcpOptions::default()
+        };
+        let mut eps = TcpMesh::loopback_opts(2, opts).unwrap();
+        let _b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let t0 = Instant::now();
+        let err = t(&mut a).send_f32(1, 7, &[1.0]).unwrap_err();
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "exhaustion must be bounded by the backoff budget"
+        );
+        assert!(
+            matches!(
+                err.downcast_ref::<MeshError>(),
+                Some(&MeshError::PeerDead { rank: 1 }) | Some(&MeshError::Aborted { .. })
+            ),
+            "{err:#}"
+        );
+        assert!(policy.snapshot().1 > 0, "the partition blocked re-dials");
     }
 
     /// Build a 2-rank mesh the way two worker processes would: one

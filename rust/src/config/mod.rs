@@ -9,6 +9,8 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use crate::collectives::transport::chaos::ChaosConfig;
+use crate::collectives::transport::BackoffConfig;
 use crate::sched::{BatchSchedule, LrSchedule, Phase};
 use crate::util::toml::Doc;
 
@@ -75,6 +77,18 @@ pub struct FaultConfig {
     /// Total phase restarts allowed across the run before a death becomes
     /// fatal.
     pub max_restarts: usize,
+    /// After a phase fails with dead ranks, how long the coordinator holds
+    /// the re-plan open for the casualties to rejoin (`flashsgd worker
+    /// --join` again). Zero = re-plan immediately on the survivors; a
+    /// rejoiner then has to wait for the *next* boundary. A non-zero grace
+    /// makes a kill-and-restart deterministic: the replacement is admitted
+    /// before the re-plan, so the replay runs at full width and the run
+    /// stays byte-identical to an undisturbed one.
+    pub rejoin_grace: Duration,
+    /// Seeded network-chaos injection (`[fault.chaos]`); disabled by
+    /// default, in which case the transport path is exactly the
+    /// chaos-free code.
+    pub chaos: ChaosConfig,
     /// Deterministic fault injection (tests / chaos runs); `None` in
     /// production configs.
     pub inject: Option<InjectedFault>,
@@ -87,6 +101,8 @@ impl Default for FaultConfig {
             heartbeat_interval: Duration::from_millis(200),
             rank_timeout: Duration::from_secs(30),
             max_restarts: 1,
+            rejoin_grace: Duration::ZERO,
+            chaos: ChaosConfig::default(),
             inject: None,
         }
     }
@@ -110,7 +126,7 @@ impl FaultConfig {
 /// control-socket address (workers join by dialing it), `http` an
 /// optional plain-HTTP status/metrics listener (empty = off), and
 /// `max_frame_bytes` the frame-size cap both sides enforce on the wire.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TransportConfig {
     pub mode: String,
     /// Coordinator control-socket bind / join address.
@@ -119,6 +135,19 @@ pub struct TransportConfig {
     pub http: String,
     /// Hard cap on one framed message (header + payload).
     pub max_frame_bytes: usize,
+    /// Jittered exponential backoff for dials and re-dials (replaces the
+    /// old fixed `DIAL_RETRY`/`JOIN_RETRY` constants): `retry_base_ms`,
+    /// `retry_max_ms`, `retry_attempts`, `retry_jitter` in TOML.
+    pub backoff: BackoffConfig,
+    /// How many times a transient read/write error on an *established*
+    /// data connection may be healed by re-dial + seq-fenced resync before
+    /// the peer is declared dead. 0 (default) = the pre-reconnect
+    /// behaviour: any socket error on an established link kills the peer.
+    pub reconnect_attempts: u32,
+    /// How many recently sent frames each link retains for replay after a
+    /// reconnect. A gap wider than this window makes the link unhealable
+    /// (the peer is declared dead as before).
+    pub resync_window: usize,
 }
 
 impl Default for TransportConfig {
@@ -128,6 +157,9 @@ impl Default for TransportConfig {
             bind: "127.0.0.1:7070".into(),
             http: String::new(),
             max_frame_bytes: crate::collectives::transport::frame::DEFAULT_MAX_FRAME_BYTES,
+            backoff: BackoffConfig::default(),
+            reconnect_attempts: 0,
+            resync_window: 64,
         }
     }
 }
@@ -319,10 +351,38 @@ impl TrainConfig {
                 fd.rank_timeout.as_millis() as usize,
             )? as u64),
             max_restarts: doc.usize_or("fault.max_restarts", fd.max_restarts)?,
+            rejoin_grace: Duration::from_millis(doc.usize_or(
+                "fault.rejoin_grace_ms",
+                fd.rejoin_grace.as_millis() as usize,
+            )? as u64),
+            chaos: ChaosConfig {
+                enabled: doc.bool_or("fault.chaos.enabled", fd.chaos.enabled)?,
+                seed: doc.usize_or("fault.chaos.seed", fd.chaos.seed as usize)? as u64,
+                delay_prob: doc.f64_or("fault.chaos.delay_prob", fd.chaos.delay_prob)?,
+                delay_us_max: doc
+                    .usize_or("fault.chaos.delay_us_max", fd.chaos.delay_us_max as usize)?
+                    as u64,
+                drop_prob: doc.f64_or("fault.chaos.drop_prob", fd.chaos.drop_prob)?,
+                drop_delay_us: doc
+                    .usize_or("fault.chaos.drop_delay_us", fd.chaos.drop_delay_us as usize)?
+                    as u64,
+                dup_prob: doc.f64_or("fault.chaos.dup_prob", fd.chaos.dup_prob)?,
+                reorder_prob: doc.f64_or("fault.chaos.reorder_prob", fd.chaos.reorder_prob)?,
+            },
             inject: None,
         };
         if fault.enabled && fault.rank_timeout.is_zero() {
             bail!("fault.rank_timeout_ms must be > 0 when fault tolerance is enabled");
+        }
+        for (key, p) in [
+            ("fault.chaos.delay_prob", fault.chaos.delay_prob),
+            ("fault.chaos.drop_prob", fault.chaos.drop_prob),
+            ("fault.chaos.dup_prob", fault.chaos.dup_prob),
+            ("fault.chaos.reorder_prob", fault.chaos.reorder_prob),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                bail!("{key} must be a probability in [0, 1], got {p}");
+            }
         }
 
         // Transport ([transport] table; all optional).
@@ -332,12 +392,45 @@ impl TrainConfig {
             bind: doc.str_or("transport.bind", &td.bind)?,
             http: doc.str_or("transport.http", &td.http)?,
             max_frame_bytes: doc.usize_or("transport.max_frame_bytes", td.max_frame_bytes)?,
+            backoff: BackoffConfig {
+                base: Duration::from_millis(doc.usize_or(
+                    "transport.retry_base_ms",
+                    td.backoff.base.as_millis() as usize,
+                )? as u64),
+                max: Duration::from_millis(doc.usize_or(
+                    "transport.retry_max_ms",
+                    td.backoff.max.as_millis() as usize,
+                )? as u64),
+                attempts: doc.usize_or("transport.retry_attempts", td.backoff.attempts as usize)?
+                    as u32,
+                jitter: doc.f64_or("transport.retry_jitter", td.backoff.jitter)?,
+            },
+            reconnect_attempts: doc
+                .usize_or("transport.reconnect_attempts", td.reconnect_attempts as usize)?
+                as u32,
+            resync_window: doc.usize_or("transport.resync_window", td.resync_window)?,
         };
         if transport.mode != "memory" && transport.mode != "tcp" {
             bail!("transport.mode must be \"memory\" or \"tcp\", got {:?}", transport.mode);
         }
         if transport.max_frame_bytes < 64 {
             bail!("transport.max_frame_bytes of {} cannot fit a frame", transport.max_frame_bytes);
+        }
+        if transport.backoff.base.is_zero() || transport.backoff.max < transport.backoff.base {
+            bail!(
+                "transport retry backoff needs 0 < retry_base_ms <= retry_max_ms, got {:?}..{:?}",
+                transport.backoff.base,
+                transport.backoff.max
+            );
+        }
+        if transport.backoff.attempts == 0 {
+            bail!("transport.retry_attempts must be >= 1");
+        }
+        if !(0.0..=1.0).contains(&transport.backoff.jitter) {
+            bail!("transport.retry_jitter must be in [0, 1], got {}", transport.backoff.jitter);
+        }
+        if transport.reconnect_attempts > 0 && transport.resync_window == 0 {
+            bail!("transport.resync_window must be >= 1 when reconnect_attempts > 0");
         }
 
         // LR schedule.
@@ -545,6 +638,71 @@ phases = [[0, 8, 4], [2, 16, 4]]
         let doc = Doc::parse("[transport]\nmode = \"carrier-pigeon\"\n").unwrap();
         assert!(TrainConfig::from_toml(&doc).is_err());
         let doc = Doc::parse("[transport]\nmax_frame_bytes = 16\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn transport_backoff_defaults_and_parses() {
+        let c = TrainConfig::quickstart();
+        assert_eq!(c.transport.backoff, BackoffConfig::default());
+        assert_eq!(c.transport.reconnect_attempts, 0, "reconnect is opt-in");
+        assert_eq!(c.transport.resync_window, 64);
+
+        let doc = Doc::parse(
+            "[transport]\nretry_base_ms = 10\nretry_max_ms = 80\n\
+             retry_attempts = 5\nretry_jitter = 0.5\n\
+             reconnect_attempts = 3\nresync_window = 16\n",
+        )
+        .unwrap();
+        let c = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.transport.backoff.base, Duration::from_millis(10));
+        assert_eq!(c.transport.backoff.max, Duration::from_millis(80));
+        assert_eq!(c.transport.backoff.attempts, 5);
+        assert_eq!(c.transport.backoff.jitter, 0.5);
+        assert_eq!(c.transport.reconnect_attempts, 3);
+        assert_eq!(c.transport.resync_window, 16);
+
+        // degenerate backoff shapes are config errors
+        for bad in [
+            "[transport]\nretry_base_ms = 0\n",
+            "[transport]\nretry_base_ms = 100\nretry_max_ms = 50\n",
+            "[transport]\nretry_attempts = 0\n",
+            "[transport]\nretry_jitter = 1.5\n",
+            "[transport]\nreconnect_attempts = 1\nresync_window = 0\n",
+        ] {
+            assert!(TrainConfig::from_toml(&Doc::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn chaos_and_rejoin_config_defaults_and_parse() {
+        let c = TrainConfig::quickstart();
+        assert!(!c.fault.chaos.enabled, "chaos must default off");
+        assert_eq!(c.fault.rejoin_grace, Duration::ZERO);
+
+        let doc = Doc::parse(
+            "[fault]\nrejoin_grace_ms = 4000\n\
+             [fault.chaos]\nenabled = true\nseed = 99\ndelay_prob = 0.25\n\
+             delay_us_max = 300\ndrop_prob = 0.1\ndrop_delay_us = 700\n\
+             dup_prob = 0.05\nreorder_prob = 0.2\n",
+        )
+        .unwrap();
+        let c = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.fault.rejoin_grace, Duration::from_millis(4000));
+        let ch = &c.fault.chaos;
+        assert!(ch.enabled);
+        assert_eq!(ch.seed, 99);
+        assert_eq!(ch.delay_prob, 0.25);
+        assert_eq!(ch.delay_us_max, 300);
+        assert_eq!(ch.drop_prob, 0.1);
+        assert_eq!(ch.drop_delay_us, 700);
+        assert_eq!(ch.dup_prob, 0.05);
+        assert_eq!(ch.reorder_prob, 0.2);
+
+        // probabilities outside [0,1] are config errors
+        let doc = Doc::parse("[fault.chaos]\ndrop_prob = 1.5\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+        let doc = Doc::parse("[fault.chaos]\ndup_prob = -0.1\n").unwrap();
         assert!(TrainConfig::from_toml(&doc).is_err());
     }
 }

@@ -45,7 +45,10 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::collectives::{self, Collective, Health, Mesh, MeshError, TcpMesh, Transport, Wire};
+use crate::collectives::{
+    self, ChaosConfig, ChaosTransport, Collective, Health, Mesh, MeshError, TcpMesh, TcpOptions,
+    Transport, Wire,
+};
 use crate::config::{TrainConfig, TransportConfig};
 use crate::data::{Augment, Loader, SynthDataset};
 use crate::runtime::{
@@ -72,6 +75,10 @@ pub struct TrainReport {
     /// ranks and was re-planned on the survivors. Empty on a fault-free
     /// run.
     pub recoveries: Vec<RecoveryEvent>,
+    /// Worker-rejoin events: each records a restarted worker re-admitted
+    /// at a phase boundary, with the collective re-planned back *up*
+    /// (process mode only — an in-process rank thread cannot restart).
+    pub rejoins: Vec<RejoinEvent>,
 }
 
 /// One elastic-recovery event: a rank death aborted a phase attempt and
@@ -89,6 +96,24 @@ pub struct RecoveryEvent {
     /// Worker count the phase was re-planned to (global batch preserved).
     pub workers_after: usize,
     /// Per-worker batch after re-planning (`global_batch / workers_after`).
+    pub per_worker_after: usize,
+}
+
+/// One worker-rejoin event: a restarted worker process re-registered over
+/// the control socket and was admitted at a phase boundary, growing the
+/// collective back toward the planned width (the constant-global-batch
+/// re-plan machinery run in reverse).
+#[derive(Debug, Clone)]
+pub struct RejoinEvent {
+    /// Global step index of the first step run at the restored width.
+    pub phase_first_step: usize,
+    /// Control-plane id of the worker that rejoined.
+    pub worker: usize,
+    /// Worker count of the preceding (degraded) attempt.
+    pub workers_before: usize,
+    /// Worker count after re-admission.
+    pub workers_after: usize,
+    /// Per-worker batch after re-admission (`global_batch / workers_after`).
     pub per_worker_after: usize,
 }
 
@@ -531,6 +556,7 @@ impl Trainer {
             lanes,
             max_lane_concurrency: svc.stats().max_concurrent(),
             recoveries,
+            rejoins: Vec::new(),
         })
     }
 
@@ -627,18 +653,46 @@ enum PhaseOutcome {
 /// before the transport layer existed), `"tcp"` runs the same ranks over
 /// loopback sockets, exercising the frame codec and reader threads under
 /// the full training loop. Either way the phase logic above sees only
-/// `dyn Transport`.
-fn build_endpoints(transport: &TransportConfig, n: usize) -> Result<Vec<Box<dyn Transport>>> {
+/// `dyn Transport`. With `[fault.chaos]` enabled every endpoint is
+/// wrapped in a [`ChaosTransport`] injecting the seeded fault schedule;
+/// disabled (the default) the endpoints are returned unwrapped, so the
+/// hot path carries no chaos branches at all.
+fn build_endpoints(
+    transport: &TransportConfig,
+    chaos: &ChaosConfig,
+    n: usize,
+) -> Result<Vec<Box<dyn Transport>>> {
+    fn boxed<T: Transport + 'static>(
+        eps: Vec<T>,
+        chaos: &ChaosConfig,
+    ) -> Vec<Box<dyn Transport>> {
+        if chaos.enabled {
+            let (wrapped, _counters) = ChaosTransport::wrap_all(eps, chaos);
+            wrapped
+                .into_iter()
+                .map(|ep| Box::new(ep) as Box<dyn Transport>)
+                .collect()
+        } else {
+            eps.into_iter()
+                .map(|ep| Box::new(ep) as Box<dyn Transport>)
+                .collect()
+        }
+    }
     match transport.mode.as_str() {
-        "memory" => Ok(Mesh::new(n)
-            .into_iter()
-            .map(|ep| Box::new(ep) as Box<dyn Transport>)
-            .collect()),
-        "tcp" => Ok(TcpMesh::loopback_with(n, transport.max_frame_bytes)
-            .context("building the loopback TCP mesh")?
-            .into_iter()
-            .map(|ep| Box::new(ep) as Box<dyn Transport>)
-            .collect()),
+        "memory" => Ok(boxed(Mesh::new(n), chaos)),
+        "tcp" => {
+            let opts = TcpOptions {
+                max_frame_bytes: transport.max_frame_bytes,
+                backoff: transport.backoff.clone(),
+                reconnect_attempts: transport.reconnect_attempts,
+                resync_window: transport.resync_window,
+                link_policy: None,
+            };
+            Ok(boxed(
+                TcpMesh::loopback_opts(n, opts).context("building the loopback TCP mesh")?,
+                chaos,
+            ))
+        }
         other => bail!("unknown transport.mode {other:?}"),
     }
 }
@@ -666,7 +720,7 @@ fn run_phase_on_mesh(
     state: &WorkerState,
 ) -> PhaseOutcome {
     let n = ctx.workers;
-    let mesh = match build_endpoints(transport, n) {
+    let mesh = match build_endpoints(transport, &ctx.fault.chaos, n) {
         Ok(m) => m,
         Err(err) => {
             // No rank ever started: nothing is dead, nothing to recover —

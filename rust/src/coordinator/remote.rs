@@ -32,8 +32,20 @@
 //! re-planned survivor mesh with the global batch preserved. Stale frames
 //! from an aborted attempt are fenced off by the per-attempt `seq` tag.
 //!
+//! **Rejoin** is recovery's other half: after registration closes, the
+//! coordinator keeps accepting on the control socket, so a restarted
+//! `flashsgd worker --join` re-registers like any first-time joiner and is
+//! admitted at the next phase boundary under a fresh connection id. With
+//! `fault.rejoin_grace > 0` a degraded boundary *waits* up to the grace
+//! for the replacement before re-planning — the replay then runs at full
+//! width, per-worker batch steps back up, and (because the attempt ships
+//! phase-boundary state to every rank and byte-compares every returned
+//! blob) the run's final checkpoint is byte-identical to an undisturbed
+//! run's. Each admission is recorded as a [`RejoinEvent`].
+//!
 //! With `transport.http` set, a plain-HTTP endpoint serves `GET /status`
-//! (run state) and `GET /metrics` (the merged metrics report) as JSON.
+//! (run state, including per-rank heartbeat ages and reconnect counts)
+//! and `GET /metrics` (the merged metrics report) as JSON.
 
 use std::io::{Read as _, Write as _};
 use std::net::{TcpListener, TcpStream};
@@ -46,7 +58,10 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::collectives::transport::{frame, tcp};
-use crate::collectives::{self, Collective, Counters, Health, MeshError, Transport, Wire};
+use crate::collectives::{
+    self, BackoffConfig, ChaosCounters, ChaosTransport, Collective, Counters, Health, MeshError,
+    Transport, Wire,
+};
 use crate::config::TrainConfig;
 use crate::data::{Augment, Loader, SynthDataset};
 use crate::runtime::{ArchManifest, BackendSpec, ComputeClient, ComputeService, HostTensor};
@@ -57,7 +72,7 @@ use crate::util::toml::Doc;
 use super::checkpoint::{self, CheckpointMeta};
 use super::metrics::Metrics;
 use super::worker::{self, PhaseCtx, WorkerOutput, WorkerState};
-use super::{effective_workers, RecoveryEvent, TrainReport, Trainer};
+use super::{effective_workers, RecoveryEvent, RejoinEvent, TrainReport, Trainer};
 
 /// Frame-size cap on the control plane. Control frames are tiny JSON, but
 /// the same stream ships whole-model state blobs, which dwarf any
@@ -65,9 +80,6 @@ use super::{effective_workers, RecoveryEvent, TrainReport, Trainer};
 /// `transport.max_frame_bytes`.
 const CONTROL_MAX_FRAME: usize = 1 << 30;
 
-/// How long a worker keeps re-dialing a coordinator that is not up yet.
-const JOIN_ATTEMPTS: usize = 120;
-const JOIN_RETRY: Duration = Duration::from_millis(250);
 
 /// One event from a control-socket reader thread. Every socket gets a
 /// blocking reader that feeds this into the owner's mpsc queue; all
@@ -141,6 +153,19 @@ struct WorkerConn {
     last_beat: Instant,
     /// Rank-local heartbeat staleness the worker reported with that beat.
     stale_ms: u64,
+    /// Data-mesh link reconnects the worker reported with its last beat.
+    reconnects: u64,
+}
+
+fn new_conn(stream: TcpStream) -> WorkerConn {
+    WorkerConn {
+        stream,
+        usable: true,
+        open: true,
+        last_beat: Instant::now(),
+        stale_ms: 0,
+        reconnects: 0,
+    }
 }
 
 fn send_to(conns: &mut [WorkerConn], id: usize, wbuf: &mut Vec<u8>, j: &Json) {
@@ -249,6 +274,7 @@ fn run_phase_remote(
     ap: &AttemptPlan,
     state: &WorkerState,
     cfg: &TrainConfig,
+    board: &Mutex<StatusBoard>,
 ) -> Result<RemoteOutcome> {
     let workers = ap.workers;
     let state_bytes = checkpoint::encode(
@@ -317,6 +343,7 @@ fn run_phase_remote(
 
     let tick = Duration::from_millis(50);
     while !a.all_resolved() {
+        publish_ranks(board, conns, &a);
         if let Some(dl) = a.drain_deadline {
             if Instant::now() > dl {
                 for r in 0..workers {
@@ -416,6 +443,10 @@ fn run_phase_remote(
                         conns[id].last_beat = Instant::now();
                         conns[id].stale_ms =
                             j.opt("stale_ms").and_then(|s| s.as_f64().ok()).unwrap_or(0.0) as u64;
+                        conns[id].reconnects = j
+                            .opt("reconnects")
+                            .and_then(|s| s.as_f64().ok())
+                            .unwrap_or(0.0) as u64;
                     }
                     "done" => {
                         let metrics = match j.opt("metrics") {
@@ -446,6 +477,7 @@ fn run_phase_remote(
         }
     }
 
+    publish_ranks(board, conns, &a);
     let dead_list: Vec<usize> = (0..workers).filter(|&r| a.dead[r]).collect();
     if dead_list.is_empty() && a.casualty_err.is_none() && a.victim_err.is_none() {
         // Replicated-parameter invariant, process edition: identical
@@ -489,6 +521,129 @@ fn drain_idle_events(rx: &mpsc::Receiver<Event>, conns: &mut [WorkerConn]) {
     }
 }
 
+// ---------------------------------------------------------------------
+// Rejoin: the control socket stays open after registration
+// ---------------------------------------------------------------------
+
+fn is_hello(body: &[u8]) -> bool {
+    let Ok(s) = std::str::from_utf8(body) else { return false };
+    let Ok(j) = Json::parse(s) else { return false };
+    matches!(j.get("type").and_then(|t| t.as_str()), Ok("hello"))
+}
+
+/// Keep accepting on the control listener after registration closed, so a
+/// restarted `flashsgd worker --join` can re-register mid-run. Each dialer
+/// that completes the hello handshake is queued for the coordinator's main
+/// loop, which admits it at the next phase boundary. Runs for the life of
+/// the process (like the http thread); exits if the queue is dropped.
+fn spawn_join_door(listener: TcpListener, join_tx: mpsc::Sender<TcpStream>) {
+    thread::Builder::new()
+        .name("join-door".into())
+        .spawn(move || {
+            let mut body = Vec::new();
+            loop {
+                let Ok((mut s, from)) = listener.accept() else { return };
+                s.set_nodelay(true).ok();
+                // A bounded handshake: a port-scanner that never says hello
+                // must not wedge the door shut for a real rejoiner.
+                let _ = s.set_read_timeout(Some(Duration::from_secs(5)));
+                let ok = matches!(
+                    frame::read_frame(&mut s, CONTROL_MAX_FRAME, &mut body),
+                    Ok(Some(h)) if h.kind == frame::KIND_CONTROL && is_hello(&body)
+                );
+                if !ok {
+                    eprintln!("[coordinator] ignoring a dialer at {from} that sent no hello");
+                    continue;
+                }
+                let _ = s.set_read_timeout(None);
+                if join_tx.send(s).is_err() {
+                    return;
+                }
+            }
+        })
+        .expect("spawning the join-door thread");
+}
+
+/// Welcome one queued rejoiner under a fresh connection id (a dead
+/// machine's id stays dead — arrival order still fixes rank order).
+fn admit_one(
+    mut s: TcpStream,
+    conns: &mut Vec<WorkerConn>,
+    config_text: &str,
+    tx: &mpsc::Sender<Event>,
+    wbuf: &mut Vec<u8>,
+) -> Option<usize> {
+    let id = conns.len();
+    let welcome = obj(vec![
+        ("type", Json::Str("welcome".into())),
+        ("worker", num(id)),
+        ("config", Json::Str(config_text.to_string())),
+    ]);
+    if frame::write_control(&mut s, wbuf, &welcome.to_string()).is_err() {
+        return None;
+    }
+    let reader = s.try_clone().ok()?;
+    spawn_control_reader(id, reader, tx.clone());
+    conns.push(new_conn(s));
+    eprintln!("[coordinator] worker {id} rejoined");
+    Some(id)
+}
+
+/// Admit every queued rejoiner; with a `deadline`, keep waiting for more
+/// while the usable worker count is still short of `target_usable` (the
+/// `fault.rejoin_grace` window — a replay that waits for its replacement
+/// runs at full width, which is what keeps the final checkpoint identical
+/// to an undisturbed run's).
+fn admit_rejoiners(
+    join_rx: &mpsc::Receiver<TcpStream>,
+    conns: &mut Vec<WorkerConn>,
+    config_text: &str,
+    tx: &mpsc::Sender<Event>,
+    wbuf: &mut Vec<u8>,
+    target_usable: usize,
+    deadline: Option<Instant>,
+) -> Vec<usize> {
+    let mut admitted = Vec::new();
+    loop {
+        while let Ok(s) = join_rx.try_recv() {
+            if let Some(id) = admit_one(s, conns, config_text, tx, wbuf) {
+                admitted.push(id);
+            }
+        }
+        let usable = conns.iter().filter(|c| c.usable).count();
+        let Some(dl) = deadline else { return admitted };
+        if usable >= target_usable {
+            return admitted;
+        }
+        let now = Instant::now();
+        if now >= dl {
+            return admitted;
+        }
+        match join_rx.recv_timeout((dl - now).min(Duration::from_millis(100))) {
+            Ok(s) => {
+                if let Some(id) = admit_one(s, conns, config_text, tx, wbuf) {
+                    admitted.push(id);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => return admitted,
+        }
+    }
+}
+
+/// Per-rank liveness of the current attempt, as served on `/status`.
+struct RankStatus {
+    /// Connection id of the worker process behind this rank.
+    worker: usize,
+    usable: bool,
+    /// Control-hop silence: ms since the coordinator last heard a beat.
+    beat_age_ms: u64,
+    /// Rank-local staleness the worker reported with that beat.
+    stale_ms: u64,
+    /// Data-mesh link reconnects the worker has survived so far.
+    reconnects: u64,
+}
+
 /// Live run state served over the HTTP endpoint.
 struct StatusBoard {
     state: String,
@@ -499,7 +654,9 @@ struct StatusBoard {
     phases_total: usize,
     step: usize,
     recoveries: usize,
+    rejoins: usize,
     last_loss: f64,
+    ranks: Vec<RankStatus>,
     /// Pre-rendered `GET /metrics` body (the merged metrics report).
     metrics_json: String,
 }
@@ -515,12 +672,27 @@ impl StatusBoard {
             phases_total,
             step: 0,
             recoveries: 0,
+            rejoins: 0,
             last_loss: f64::NAN,
+            ranks: Vec::new(),
             metrics_json: r#"{"steps":[],"evals":[]}"#.into(),
         }
     }
 
     fn status_json(&self) -> String {
+        let ranks: Vec<Json> = self
+            .ranks
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("worker", num(r.worker)),
+                    ("usable", Json::Bool(r.usable)),
+                    ("beat_age_ms", Json::Num(r.beat_age_ms as f64)),
+                    ("stale_ms", Json::Num(r.stale_ms as f64)),
+                    ("reconnects", Json::Num(r.reconnects as f64)),
+                ])
+            })
+            .collect();
         obj(vec![
             ("state", Json::Str(self.state.clone())),
             ("workers_expected", num(self.workers_expected)),
@@ -530,6 +702,7 @@ impl StatusBoard {
             ("phases_total", num(self.phases_total)),
             ("step", num(self.step)),
             ("recoveries", num(self.recoveries)),
+            ("rejoins", num(self.rejoins)),
             (
                 "last_loss",
                 if self.last_loss.is_finite() {
@@ -538,9 +711,30 @@ impl StatusBoard {
                     Json::Null
                 },
             ),
+            ("ranks", Json::Arr(ranks)),
         ])
         .to_string()
     }
+}
+
+/// Refresh the board's per-rank liveness from the attempt in flight.
+fn publish_ranks(board: &Mutex<StatusBoard>, conns: &[WorkerConn], a: &Attempt<'_>) {
+    let ranks = a
+        .participants
+        .iter()
+        .enumerate()
+        .map(|(r, &id)| {
+            let c = &conns[id];
+            RankStatus {
+                worker: id,
+                usable: c.usable && !a.dead[r],
+                beat_age_ms: c.last_beat.elapsed().as_millis() as u64,
+                stale_ms: c.stale_ms,
+                reconnects: c.reconnects,
+            }
+        })
+        .collect();
+    board.lock().unwrap().ranks = ranks;
 }
 
 /// Serve `GET /status` and `GET /metrics` as JSON over plain HTTP/1.0.
@@ -676,28 +870,81 @@ pub fn run_coordinator(
         ]);
         frame::write_control(&mut s, &mut wbuf, &welcome.to_string())?;
         spawn_control_reader(id, s.try_clone()?, tx.clone());
-        conns.push(WorkerConn {
-            stream: s,
-            usable: true,
-            open: true,
-            last_beat: Instant::now(),
-            stale_ms: 0,
-        });
+        conns.push(new_conn(s));
         eprintln!("[coordinator] worker {id} joined from {from} ({}/{n_workers})", id + 1);
         board.lock().unwrap().workers_joined = id + 1;
     }
 
+    // Registration is over, but the door stays open: late dialers are
+    // rejoiners, admitted at phase boundaries.
+    let (join_tx, join_rx) = mpsc::channel();
+    spawn_join_door(listener.try_clone().context("cloning the control listener")?, join_tx);
+
     let mut all_metrics = Metrics::default();
     let mut restarts_used = 0usize;
     let mut recoveries: Vec<RecoveryEvent> = Vec::new();
+    let mut rejoins: Vec<RejoinEvent> = Vec::new();
     let mut seq: u64 = 0;
     for (pi, plan) in plans.iter().enumerate() {
         let global_batch = plan.per_worker * plan.workers;
         let mut attempt = 0usize;
         loop {
             drain_idle_events(&rx, &mut conns);
+            // Phase boundary: admit rejoiners before re-planning, so a
+            // replacement that is already back (or arrives within the
+            // grace) restores the mesh to full width for this attempt.
+            let usable_pre = conns.iter().filter(|c| c.usable).count();
+            let grace_deadline = if cfg.fault.enabled
+                && usable_pre < plan.workers
+                && cfg.fault.rejoin_grace > Duration::ZERO
+            {
+                Some(Instant::now() + cfg.fault.rejoin_grace)
+            } else {
+                None
+            };
+            let admitted = admit_rejoiners(
+                &join_rx,
+                &mut conns,
+                config_text,
+                &tx,
+                &mut wbuf,
+                plan.workers,
+                grace_deadline,
+            );
+            if !admitted.is_empty() {
+                let usable_post = conns.iter().filter(|c| c.usable).count();
+                let before = effective_workers(
+                    &arch,
+                    plan.workers,
+                    n_workers.saturating_sub(usable_pre),
+                    global_batch,
+                    cfg,
+                )
+                .unwrap_or_else(|_| usable_pre.min(plan.workers));
+                let after = effective_workers(
+                    &arch,
+                    plan.workers,
+                    n_workers.saturating_sub(usable_post),
+                    global_batch,
+                    cfg,
+                )?;
+                for &w in &admitted {
+                    rejoins.push(RejoinEvent {
+                        phase_first_step: plan.first_step,
+                        worker: w,
+                        workers_before: before,
+                        workers_after: after,
+                        per_worker_after: global_batch / after,
+                    });
+                }
+                board.lock().unwrap().rejoins = rejoins.len();
+                eprintln!(
+                    "[coordinator] rejoin: phase at step {} re-planned {before} -> {after} ranks",
+                    plan.first_step
+                );
+            }
             let usable = conns.iter().filter(|c| c.usable).count();
-            let lost = n_workers - usable;
+            let lost = n_workers.saturating_sub(usable);
             let workers = effective_workers(&arch, plan.workers, lost, global_batch, cfg)?;
             let per_worker = global_batch / workers;
             let degraded = workers != plan.workers;
@@ -741,7 +988,7 @@ pub fn run_coordinator(
                 plans.len(),
                 plan.steps
             );
-            match run_phase_remote(&mut conns, &rx, &participants, &ap, &state, cfg)? {
+            match run_phase_remote(&mut conns, &rx, &participants, &ap, &state, cfg, &board)? {
                 RemoteOutcome::Complete { state: st, metrics } => {
                     all_metrics.merge(metrics);
                     state = st;
@@ -773,7 +1020,7 @@ pub fn run_coordinator(
                     let new_workers = effective_workers(
                         &arch,
                         plan.workers,
-                        n_workers - usable_now,
+                        n_workers.saturating_sub(usable_now),
                         global_batch,
                         cfg,
                     )
@@ -850,6 +1097,7 @@ pub fn run_coordinator(
         lanes: 1,
         max_lane_concurrency: svc.stats().max_concurrent(),
         recoveries,
+        rejoins,
     })
 }
 
@@ -857,14 +1105,19 @@ pub fn run_coordinator(
 // Worker
 // ---------------------------------------------------------------------
 
+/// Keep re-dialing a coordinator that is not up yet, with the default
+/// jittered exponential backoff. (The worker cannot use the `[transport]`
+/// backoff keys here: the config itself arrives in the `welcome` frame,
+/// after this dial succeeds.)
 fn dial_coordinator(addr: &str) -> Result<TcpStream> {
+    let backoff = BackoffConfig::default();
     let mut last: Option<std::io::Error> = None;
-    for _ in 0..JOIN_ATTEMPTS {
+    for attempt in 0..backoff.attempts {
         match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
             Err(e) => {
                 last = Some(e);
-                thread::sleep(JOIN_RETRY);
+                thread::sleep(backoff.delay(attempt, 0x10_1D));
             }
         }
     }
@@ -1102,29 +1355,48 @@ fn run_one_phase(
         let client = client.clone();
         let dataset = dataset.clone();
         let health = health.clone();
+        // The beat pump keeps the original Arc so each heartbeat can carry
+        // the link-reconnect count the data mesh has survived so far.
+        let counters = counters.clone();
         let seed = cfg.seed;
         let fault_enabled = cfg.fault.enabled;
         let rank_timeout = cfg.fault.rank_timeout;
-        let max_frame = cfg.transport.max_frame_bytes;
+        let topts = tcp::TcpOptions {
+            max_frame_bytes: cfg.transport.max_frame_bytes,
+            backoff: cfg.transport.backoff.clone(),
+            reconnect_attempts: cfg.transport.reconnect_attempts,
+            resync_window: cfg.transport.resync_window,
+            link_policy: None,
+        };
+        let chaos = cfg.fault.chaos.clone();
         thread::Builder::new()
             .name(format!("rank{rank}"))
             .spawn(move || -> Result<WorkerOutput> {
                 let result = std::panic::catch_unwind(AssertUnwindSafe(
                     || -> Result<WorkerOutput> {
-                        let mut ep = tcp::connect_mesh(
+                        let inner = tcp::connect_mesh_opts(
                             rank,
                             &addrs,
                             &listener,
                             counters,
                             health.clone(),
-                            max_frame,
+                            &topts,
                         )?;
+                        let mut ep: Box<dyn Transport> = if chaos.enabled {
+                            Box::new(ChaosTransport::new(
+                                inner,
+                                chaos.clone(),
+                                Arc::new(ChaosCounters::default()),
+                            ))
+                        } else {
+                            Box::new(inner)
+                        };
                         if fault_enabled {
                             ep.set_recv_deadline(Some(rank_timeout));
                         }
                         let mut loader =
                             Loader::new(dataset, Augment::standard(seed), rank, ctx.workers);
-                        worker::run_phase(&ctx, rank, &mut ep, &client, &mut loader, state)
+                        worker::run_phase(&ctx, rank, &mut *ep, &client, &mut loader, state)
                     },
                 ));
                 match result {
@@ -1196,6 +1468,7 @@ fn run_one_phase(
             ("type", Json::Str("beat".into())),
             ("seq", num(seq as usize)),
             ("stale_ms", Json::Num(health.millis_since_beat(rank) as f64)),
+            ("reconnects", Json::Num(counters.reconnects_seen() as f64)),
         ]);
         let _ = frame::write_control(ctl, wbuf, &beat.to_string());
     }
@@ -1238,4 +1511,51 @@ fn run_one_phase(
         bail!("lost the coordinator mid-phase");
     }
     Ok(!shutdown)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// `/status` must stay machine-parseable: per-rank liveness, recovery
+    /// and rejoin totals all round-trip through the JSON it serves.
+    #[test]
+    fn status_json_reports_per_rank_liveness_and_rejoins() {
+        let mut b = StatusBoard::new(4, 3);
+        b.state = "running".into();
+        b.workers_live = 4;
+        b.recoveries = 1;
+        b.rejoins = 2;
+        b.ranks = vec![
+            RankStatus {
+                worker: 0,
+                usable: true,
+                beat_age_ms: 120,
+                stale_ms: 40,
+                reconnects: 3,
+            },
+            RankStatus {
+                worker: 4,
+                usable: false,
+                beat_age_ms: 9_000,
+                stale_ms: 8_500,
+                reconnects: 0,
+            },
+        ];
+        let j = Json::parse(&b.status_json()).expect("/status body must be valid JSON");
+        assert_eq!(j.get("state").unwrap().as_str().unwrap(), "running");
+        assert_eq!(j.get("workers_expected").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(j.get("recoveries").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("rejoins").unwrap().as_usize().unwrap(), 2);
+        // NAN loss (no steps yet) serializes as null, not as invalid JSON.
+        assert!(matches!(j.get("last_loss").unwrap(), Json::Null));
+        let ranks = j.get("ranks").unwrap().as_arr().unwrap();
+        assert_eq!(ranks.len(), 2);
+        assert_eq!(ranks[0].get("worker").unwrap().as_usize().unwrap(), 0);
+        assert!(matches!(ranks[0].get("usable").unwrap(), Json::Bool(true)));
+        assert_eq!(ranks[0].get("beat_age_ms").unwrap().as_f64().unwrap() as u64, 120);
+        assert_eq!(ranks[0].get("reconnects").unwrap().as_f64().unwrap() as u64, 3);
+        assert!(matches!(ranks[1].get("usable").unwrap(), Json::Bool(false)));
+        assert_eq!(ranks[1].get("stale_ms").unwrap().as_f64().unwrap() as u64, 8_500);
+    }
 }

@@ -259,6 +259,34 @@ impl RecoveryCost {
     }
 }
 
+/// Wall-clock cost of one rejoin event: a killed worker restarts, the
+/// coordinator holds the phase boundary for it (`fault.rejoin_grace`), and
+/// the phase replays at **restored** width. See
+/// [`ClusterModel::rejoin_time`].
+#[derive(Debug, Clone)]
+pub struct RejoinCost {
+    /// Detection plus the boundary hold: the heartbeat `rank_timeout`
+    /// (worst case — a hang) plus the grace spent waiting for the
+    /// replacement to dial back in.
+    pub wait_secs: f64,
+    /// Coordinator control work plus re-shipping the FP32 training state
+    /// to the restored full-width mesh.
+    pub replan_secs: f64,
+    /// Re-running the aborted phase's steps — at full width, which is the
+    /// point of waiting: replay math (and bytes) match the undisturbed run.
+    pub replay_secs: f64,
+}
+
+impl RejoinCost {
+    pub fn total_secs(&self) -> f64 {
+        self.wait_secs + self.replan_secs + self.replay_secs
+    }
+}
+
+/// Coordinator-side control latency of a re-plan (tiny JSON frames, one
+/// round trip per rank) — shared by the recovery and rejoin models.
+const REPLAN_CONTROL_SECS: f64 = 0.05;
+
 /// Per-step time breakdown for a full training step.
 #[derive(Debug, Clone)]
 pub struct StepBreakdown {
@@ -361,7 +389,6 @@ impl ClusterModel {
         replay_steps: usize,
         rank_timeout_secs: f64,
     ) -> RecoveryCost {
-        const REPLAN_CONTROL_SECS: f64 = 0.05;
         let state_bytes = 4.0 * grad_bytes; // fp32 params + momenta vs fp16 grads
         let replan_secs = REPLAN_CONTROL_SECS
             + self
@@ -378,6 +405,40 @@ impl ClusterModel {
             .total_secs();
         RecoveryCost {
             detect_secs: rank_timeout_secs,
+            replan_secs,
+            replay_secs: replay_steps as f64 * step,
+        }
+    }
+
+    /// Price one rejoin event: like [`Self::recovery_time`], but the
+    /// coordinator spends up to `rejoin_grace_secs` holding the phase
+    /// boundary for the restarted worker and then replays at the restored
+    /// **full** width (`ranks`). Rejoin trades boundary-hold time for a
+    /// replay whose arithmetic — and therefore whose final checkpoint —
+    /// is identical to the undisturbed run's; shrinking to the survivors
+    /// instead starts the faster degraded replay immediately. Comparing
+    /// `rejoin_time(...)` against `recovery_time(...)` prices exactly that
+    /// trade.
+    #[allow(clippy::too_many_arguments)]
+    pub fn rejoin_time(
+        &self,
+        algo: Algo,
+        ranks: usize,
+        per_worker_batch: usize,
+        grad_bytes: f64,
+        bn_bytes: f64,
+        replay_steps: usize,
+        rank_timeout_secs: f64,
+        rejoin_grace_secs: f64,
+    ) -> RejoinCost {
+        let state_bytes = 4.0 * grad_bytes; // fp32 params + momenta vs fp16 grads
+        let replan_secs = REPLAN_CONTROL_SECS
+            + self.collective_cost(algo, ranks, state_bytes).total_secs();
+        let step = self
+            .step_time(algo, ranks, per_worker_batch, grad_bytes, bn_bytes)
+            .total_secs();
+        RejoinCost {
+            wait_secs: rank_timeout_secs + rejoin_grace_secs,
             replan_secs,
             replay_secs: replay_steps as f64 * step,
         }
@@ -720,6 +781,60 @@ mod tests {
             30.0,
         );
         assert!(epoch.replay_secs > epoch.detect_secs + epoch.replan_secs);
+    }
+
+    /// Rejoin cost decomposes additively, replay is priced at *restored*
+    /// width, and the grace moves only the wait term — so against
+    /// `recovery_time` on the same world the whole difference is the
+    /// boundary hold.
+    #[test]
+    fn rejoin_time_decomposition() {
+        let m = ClusterModel::abci_v100();
+        let algo = torus_at(1024); // full width again once the worker is back
+        let r = m.rejoin_time(
+            algo,
+            1024,
+            32,
+            RESNET50_GRAD_BYTES_FP16,
+            RESNET50_BN_BYTES_FP32,
+            100,
+            30.0,
+            5.0,
+        );
+        assert_eq!(r.wait_secs, 35.0);
+        assert!((r.total_secs() - (r.wait_secs + r.replan_secs + r.replay_secs)).abs() < 1e-12);
+        // replay = steps × step_time at full width, exactly
+        let step = m
+            .step_time(algo, 1024, 32, RESNET50_GRAD_BYTES_FP16, RESNET50_BN_BYTES_FP32)
+            .total_secs();
+        assert!((r.replay_secs - 100.0 * step).abs() < 1e-9);
+        // vs recovery on the same (full-width) world the grace is the
+        // entire premium: rejoin trades exactly that hold for an
+        // undisturbed-identical replay
+        let rec = m.recovery_time(
+            algo,
+            1024,
+            32,
+            RESNET50_GRAD_BYTES_FP16,
+            RESNET50_BN_BYTES_FP32,
+            100,
+            30.0,
+        );
+        assert!((r.total_secs() - rec.total_secs() - 5.0).abs() < 1e-9);
+        // zero grace + zero steps leaves only detection + replan
+        let r0 = m.rejoin_time(
+            algo,
+            1024,
+            32,
+            RESNET50_GRAD_BYTES_FP16,
+            RESNET50_BN_BYTES_FP32,
+            0,
+            30.0,
+            0.0,
+        );
+        assert_eq!(r0.replay_secs, 0.0);
+        assert_eq!(r0.wait_secs, 30.0);
+        assert!(r0.total_secs() < r.total_secs());
     }
 
     #[test]

@@ -124,6 +124,7 @@ fn dead_rank_unwinds_every_algorithm() {
             match mesh_err.unwrap() {
                 MeshError::PeerDead { rank: dead } => assert_eq!(*dead, 3, "{spec}"),
                 MeshError::Aborted { origin } => assert_eq!(*origin, 3, "{spec}"),
+                other => panic!("{spec}: rank {rank} got unexpected {other:?}"),
             }
         }
     }

@@ -1,0 +1,202 @@
+//! Kill-and-rejoin, end to end over real OS processes: a worker process is
+//! SIGKILLed mid-run, a replacement `flashsgd worker --join` dials back in,
+//! the coordinator admits it at the phase boundary under
+//! `fault.rejoin_grace`, and the replay runs at restored full width — so
+//! the final checkpoint must be **byte-identical** to an undisturbed run's.
+//!
+//! This is the self-healing tentpole's acceptance test. It drives the real
+//! binary (`CARGO_BIN_EXE_flashsgd`), the real control socket, the real
+//! join door, and polls the real `/status` HTTP endpoint to time the kill.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::thread;
+use std::time::{Duration, Instant};
+
+const BIN: &str = env!("CARGO_BIN_EXE_flashsgd");
+const N_WORKERS: usize = 4;
+
+/// Small but not instant: phase 1 has 24 steps, so a kill fired right
+/// after `/status` first reports "running" lands mid-phase.
+fn config_text(bind: &str, http: &str) -> String {
+    format!(
+        r#"
+name = "rejoin-smoke"
+arch = "tiny"
+collective = "torus:2x2"
+grad_wire = "fp16"
+label_smoothing = 0.1
+weight_decay = 5e-5
+seed = 11
+epochs = 2
+train_size = 384
+eval_every = 0
+eval_batches = 2
+bucket_bytes = 8192
+
+[lr]
+kind = "const"
+value = 1.0
+momentum = 0.9
+
+[batch]
+phases = [[0, 4, 4], [1, 8, 4]]
+
+[transport]
+mode = "tcp"
+bind = "{bind}"
+http = "{http}"
+
+[fault]
+enabled = true
+heartbeat_interval_ms = 50
+rank_timeout_ms = 10000
+max_restarts = 3
+rejoin_grace_ms = 20000
+"#
+    )
+}
+
+fn spawn_worker(join: &str) -> Child {
+    Command::new(BIN)
+        .args(["worker", "--join", join])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning a worker process")
+}
+
+/// Minimal HTTP/1.0 GET against the coordinator's status endpoint.
+fn http_get(addr: &str, path: &str) -> Option<String> {
+    let mut s = TcpStream::connect(addr).ok()?;
+    s.set_read_timeout(Some(Duration::from_secs(2))).ok()?;
+    write!(s, "GET {path} HTTP/1.0\r\n\r\n").ok()?;
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).ok()?;
+    buf.split_once("\r\n\r\n").map(|(_, body)| body.to_string())
+}
+
+/// Run one full cluster; when `disturb` is set, kill worker 1 as soon as
+/// `/status` reports the run is underway and immediately start its
+/// replacement. Returns the coordinator's captured stderr.
+fn run_cluster(cfg_path: &std::path::Path, ckpt: &std::path::Path, bind: &str, http: &str, disturb: bool) -> String {
+    let mut coord = Command::new(BIN)
+        .args([
+            "coordinator",
+            "--config",
+            cfg_path.to_str().unwrap(),
+            "--save",
+            ckpt.to_str().unwrap(),
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawning the coordinator");
+    let mut stderr_pipe = coord.stderr.take().expect("piped stderr");
+    let drain = thread::spawn(move || {
+        let mut s = String::new();
+        let _ = stderr_pipe.read_to_string(&mut s);
+        s
+    });
+
+    let mut workers: Vec<Child> = (0..N_WORKERS).map(|_| spawn_worker(bind)).collect();
+
+    if disturb {
+        // Wait for the run to actually be underway before pulling the plug.
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            assert!(Instant::now() < deadline, "run never reached the running state");
+            if let Some(body) = http_get(http, "/status") {
+                if body.contains(r#""state":"running""#) {
+                    break;
+                }
+            }
+            thread::sleep(Duration::from_millis(10));
+        }
+        thread::sleep(Duration::from_millis(50));
+        workers[1].kill().expect("killing worker 1");
+        let _ = workers[1].wait();
+        // The replacement dials the same coordinator; the join door queues
+        // it and the next phase boundary admits it within the grace.
+        workers.push(spawn_worker(bind));
+    }
+
+    // Bounded wait for the coordinator; a wedged cluster must fail the
+    // test, not hang CI.
+    let deadline = Instant::now() + Duration::from_secs(300);
+    let status = loop {
+        match coord.try_wait().expect("polling the coordinator") {
+            Some(st) => break st,
+            None if Instant::now() > deadline => {
+                let _ = coord.kill();
+                for w in &mut workers {
+                    let _ = w.kill();
+                }
+                panic!("coordinator did not finish within the deadline");
+            }
+            None => thread::sleep(Duration::from_millis(50)),
+        }
+    };
+    // Workers exit on the shutdown frame (or on losing the control
+    // socket); reap them, force-killing any straggler.
+    for w in &mut workers {
+        let reap_deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            match w.try_wait() {
+                Ok(Some(_)) => break,
+                _ if Instant::now() > reap_deadline => {
+                    let _ = w.kill();
+                    let _ = w.wait();
+                    break;
+                }
+                _ => thread::sleep(Duration::from_millis(20)),
+            }
+        }
+    }
+    let stderr = drain.join().unwrap_or_default();
+    assert!(
+        status.success(),
+        "coordinator failed (disturb={disturb}); stderr:\n{stderr}"
+    );
+    stderr
+}
+
+#[test]
+fn killed_worker_rejoins_and_checkpoint_matches_undisturbed_run() {
+    let dir = std::env::temp_dir().join(format!("flashsgd-rejoin-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Two clusters on distinct ports so a lingering socket from run A can
+    // never interfere with run B.
+    let (bind_a, http_a) = ("127.0.0.1:7093", "127.0.0.1:7094");
+    let (bind_b, http_b) = ("127.0.0.1:7095", "127.0.0.1:7096");
+    let cfg_a = dir.join("a.toml");
+    let cfg_b = dir.join("b.toml");
+    std::fs::write(&cfg_a, config_text(bind_a, http_a)).unwrap();
+    std::fs::write(&cfg_b, config_text(bind_b, http_b)).unwrap();
+    let ckpt_a = dir.join("undisturbed.ckpt");
+    let ckpt_b = dir.join("disturbed.ckpt");
+
+    let _ = run_cluster(&cfg_a, &ckpt_a, bind_a, http_a, false);
+    let stderr_b = run_cluster(&cfg_b, &ckpt_b, bind_b, http_b, true);
+
+    assert!(
+        stderr_b.contains("rejoined"),
+        "the replacement worker never rejoined; stderr:\n{stderr_b}"
+    );
+    assert!(
+        stderr_b.contains("rejoin:"),
+        "no rejoin re-plan was recorded; stderr:\n{stderr_b}"
+    );
+
+    let a = std::fs::read(&ckpt_a).expect("undisturbed checkpoint");
+    let b = std::fs::read(&ckpt_b).expect("disturbed checkpoint");
+    assert_eq!(
+        a, b,
+        "kill-and-rejoin changed the final checkpoint: the replay did not \
+         run at restored width (or the replica invariant broke)"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# Record the two perf baselines into BENCH_pipeline.json and
+# BENCH_collectives.json at the repo root.
+#
+# Run this from a machine with the Rust toolchain, ideally idle, and
+# commit the refreshed JSON alongside any perf-affecting change. The
+# checked-in files start life as `"recorded": false` sentinels; this
+# script is the only sanctioned way to turn them into numbers.
+#
+# Usage: tools/record_baselines.sh
+set -euo pipefail
+
+root="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$root"
+
+echo "== building benches (release) =="
+cargo bench --no-run
+
+# Each bench writes its JSON into the current working directory; run
+# from the repo root so the baselines land next to this script's parent.
+echo "== step_pipeline =="
+cargo bench --bench step_pipeline
+
+echo "== collectives_micro =="
+cargo bench --bench collectives_micro
+
+for f in BENCH_pipeline.json BENCH_collectives.json; do
+    test -s "$f" || { echo "error: $f was not written" >&2; exit 1; }
+    grep -q '"recorded": *true' "$f" || {
+        echo "error: $f is still a sentinel (recorded != true)" >&2
+        exit 1
+    }
+done
+
+echo
+echo "Baselines recorded:"
+ls -l BENCH_pipeline.json BENCH_collectives.json
+echo "Review the diffs, then commit both files."
