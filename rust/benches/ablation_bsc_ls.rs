@@ -51,6 +51,7 @@ fn run_case(name: &str, ls: f32, bsc: bool, ranks: usize) -> Option<(f64, f64)> 
         bucket_bytes: 8192,
         fault: flashsgd::config::FaultConfig::default(),
         transport: flashsgd::config::TransportConfig::default(),
+        checkpoint: flashsgd::config::CheckpointConfig::default(),
     };
     let trainer = Trainer::new(config).ok()?;
     let report = trainer.run().ok()?;

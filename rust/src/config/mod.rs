@@ -25,6 +25,12 @@ pub enum FaultKind {
     /// The worker goes silent for `millis` (then errors out) — exercises
     /// heartbeat-timeout detection rather than fast error propagation.
     Hang { millis: u64 },
+    /// The worker's local step loss is poisoned to NaN — exercises the
+    /// numeric health guard: every rank sees the NaN through the FP32
+    /// loss reduction and the run fails with a typed
+    /// [`crate::coordinator::NonFiniteError`] naming rank and step,
+    /// instead of silently training on garbage.
+    NanLoss,
 }
 
 /// A deterministic fault injection: rank `rank` dies at global step
@@ -52,6 +58,12 @@ impl InjectedFault {
 
     pub fn hang_at(rank: usize, step: usize, millis: u64) -> Self {
         Self { rank, step, kind: FaultKind::Hang { millis }, attempts: 1 }
+    }
+
+    /// Poison `rank`'s local loss with NaN at global `step` (first
+    /// attempt only) — the numeric-health-guard regression hook.
+    pub fn nan_at(rank: usize, step: usize) -> Self {
+        Self { rank, step, kind: FaultKind::NanLoss, attempts: 1 }
     }
 
     /// Does this injection fire for (`attempt`, `rank`, `global_step`)?
@@ -85,6 +97,14 @@ pub struct FaultConfig {
     /// before the re-plan, so the replay runs at full width and the run
     /// stays byte-identical to an undisturbed one.
     pub rejoin_grace: Duration,
+    /// How long an orphaned worker — one whose *control* link to the
+    /// coordinator died — keeps itself alive and re-dials the join
+    /// address, instead of exiting. Zero (default) = the pre-durability
+    /// behaviour: losing the coordinator is fatal to the worker. Set it
+    /// comfortably above the coordinator's expected restart +
+    /// `--resume` time so a SIGKILL'd coordinator finds its full worker
+    /// set waiting at the join door.
+    pub coordinator_grace: Duration,
     /// Seeded network-chaos injection (`[fault.chaos]`); disabled by
     /// default, in which case the transport path is exactly the
     /// chaos-free code.
@@ -102,6 +122,7 @@ impl Default for FaultConfig {
             rank_timeout: Duration::from_secs(30),
             max_restarts: 1,
             rejoin_grace: Duration::ZERO,
+            coordinator_grace: Duration::ZERO,
             chaos: ChaosConfig::default(),
             inject: None,
         }
@@ -113,6 +134,47 @@ impl FaultConfig {
     /// pre-fault-tolerance behaviour.
     pub fn disabled() -> Self {
         Self { enabled: false, ..Self::default() }
+    }
+}
+
+/// Durable-run knobs (`[checkpoint]` table): the write-ahead run journal
+/// and periodic async snapshots (ROADMAP item 4's durability slice).
+///
+/// With `dir` empty (the default) nothing here runs and the trainer
+/// behaves exactly as before durability existed: checkpoints are only
+/// written on demand via `--save`. With `dir` set, the coordinator keeps
+/// `journal.wal` there, writes `snap-<step>.ckpt` phase-boundary
+/// snapshots through the [`crate::storage::StorageBackend`] on a
+/// background thread, and `--resume <dir>` continues the run from the
+/// newest valid snapshot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CheckpointConfig {
+    /// Snapshot cadence in global steps: at a phase boundary, snapshot
+    /// when at least this many steps passed since the last snapshot.
+    /// 0 = snapshot at every phase boundary.
+    pub every_steps: usize,
+    /// Snapshot generations retained; older ones are garbage-collected
+    /// after each write. At least 1 (2+ recommended — the corrupt-newest
+    /// fallback needs a previous generation to fall back to).
+    pub keep_last: usize,
+    /// Durable directory (journal + snapshots). Empty = durability off.
+    pub dir: String,
+}
+
+impl Default for CheckpointConfig {
+    fn default() -> Self {
+        Self {
+            every_steps: 0,
+            keep_last: 3,
+            dir: String::new(),
+        }
+    }
+}
+
+impl CheckpointConfig {
+    /// Is the durability layer on for this run?
+    pub fn enabled(&self) -> bool {
+        !self.dir.is_empty()
     }
 }
 
@@ -209,6 +271,8 @@ pub struct TrainConfig {
     pub fault: FaultConfig,
     /// Transport selection (in-memory vs TCP) and process-mode addresses.
     pub transport: TransportConfig,
+    /// Durability: run journal + periodic async snapshots (`[checkpoint]`).
+    pub checkpoint: CheckpointConfig,
 }
 
 /// Default gradient-bucket target: ~6–7 tensor-aligned buckets over the
@@ -237,6 +301,7 @@ impl TrainConfig {
             bucket_bytes: DEFAULT_BUCKET_BYTES,
             fault: FaultConfig::default(),
             transport: TransportConfig::default(),
+            checkpoint: CheckpointConfig::default(),
         }
     }
 
@@ -315,6 +380,7 @@ impl TrainConfig {
             bucket_bytes: DEFAULT_BUCKET_BYTES,
             fault: FaultConfig::default(),
             transport: TransportConfig::default(),
+            checkpoint: CheckpointConfig::default(),
         }
     }
 
@@ -354,6 +420,10 @@ impl TrainConfig {
             rejoin_grace: Duration::from_millis(doc.usize_or(
                 "fault.rejoin_grace_ms",
                 fd.rejoin_grace.as_millis() as usize,
+            )? as u64),
+            coordinator_grace: Duration::from_millis(doc.usize_or(
+                "fault.coordinator_grace_ms",
+                fd.coordinator_grace.as_millis() as usize,
             )? as u64),
             chaos: ChaosConfig {
                 enabled: doc.bool_or("fault.chaos.enabled", fd.chaos.enabled)?,
@@ -433,6 +503,17 @@ impl TrainConfig {
             bail!("transport.resync_window must be >= 1 when reconnect_attempts > 0");
         }
 
+        // Durability ([checkpoint] table; all optional, off unless `dir`).
+        let cd = CheckpointConfig::default();
+        let checkpoint = CheckpointConfig {
+            every_steps: doc.usize_or("checkpoint.every_steps", cd.every_steps)?,
+            keep_last: doc.usize_or("checkpoint.keep_last", cd.keep_last)?,
+            dir: doc.str_or("checkpoint.dir", &cd.dir)?,
+        };
+        if checkpoint.enabled() && checkpoint.keep_last == 0 {
+            bail!("checkpoint.keep_last must be >= 1 when checkpoint.dir is set");
+        }
+
         // LR schedule.
         let lr = match doc.str_or("lr.kind", "const")?.as_str() {
             "const" => LrSchedule::Const {
@@ -497,6 +578,7 @@ impl TrainConfig {
             bucket_bytes,
             fault,
             transport,
+            checkpoint,
         })
     }
 }
@@ -704,5 +786,40 @@ phases = [[0, 8, 4], [2, 16, 4]]
         assert!(TrainConfig::from_toml(&doc).is_err());
         let doc = Doc::parse("[fault.chaos]\ndup_prob = -0.1\n").unwrap();
         assert!(TrainConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn checkpoint_config_defaults_and_parses() {
+        let c = TrainConfig::quickstart();
+        assert!(!c.checkpoint.enabled(), "durability must default off");
+        assert_eq!(c.checkpoint.every_steps, 0);
+        assert_eq!(c.checkpoint.keep_last, 3);
+
+        let doc = Doc::parse(
+            "[checkpoint]\nevery_steps = 8\nkeep_last = 2\ndir = \"/tmp/durable\"\n",
+        )
+        .unwrap();
+        let c = TrainConfig::from_toml(&doc).unwrap();
+        assert!(c.checkpoint.enabled());
+        assert_eq!(c.checkpoint.every_steps, 8);
+        assert_eq!(c.checkpoint.keep_last, 2);
+        assert_eq!(c.checkpoint.dir, "/tmp/durable");
+
+        // keep_last = 0 with durability on would GC every snapshot away
+        let doc = Doc::parse("[checkpoint]\ndir = \"/tmp/d\"\nkeep_last = 0\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+        // ...but is harmless while durability is off
+        let doc = Doc::parse("[checkpoint]\nkeep_last = 0\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_ok());
+    }
+
+    #[test]
+    fn coordinator_grace_defaults_and_parses() {
+        let c = TrainConfig::quickstart();
+        assert_eq!(c.fault.coordinator_grace, Duration::ZERO, "orphan hold is opt-in");
+
+        let doc = Doc::parse("[fault]\ncoordinator_grace_ms = 15000\n").unwrap();
+        let c = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.fault.coordinator_grace, Duration::from_millis(15000));
     }
 }

@@ -35,8 +35,10 @@ pub struct CheckpointMeta {
     pub samples: u64,
 }
 
-/// Fletcher-64 checksum (simple, dependency-free integrity check).
-fn fletcher64(bytes: &[u8]) -> u64 {
+/// Fletcher-64 checksum (simple, dependency-free integrity check). Also
+/// the framing checksum of the write-ahead run journal
+/// (`coordinator::journal`) and the config hash recorded in it.
+pub(crate) fn fletcher64(bytes: &[u8]) -> u64 {
     let mut a: u64 = 0;
     let mut b: u64 = 0;
     for chunk in bytes.chunks(4) {

@@ -1,0 +1,434 @@
+//! Write-ahead run journal: the durable, append-only record of a run's
+//! control-plane history.
+//!
+//! Every run with `[checkpoint] dir` set keeps a `journal.wal` in that
+//! directory. Before a control action takes effect — a phase starts, a
+//! recovery re-plan is adopted, a rejoiner is admitted — the coordinator
+//! appends a record describing it and **fsyncs** it; snapshot records are
+//! appended (and fsynced) after the snapshot object is durably in the
+//! store but *before* older snapshots are garbage-collected, so the
+//! journal never names a snapshot that was not fully written and never
+//! loses the name of the snapshot a GC decision depended on.
+//!
+//! Frame format (little-endian), reusing the checkpoint's fletcher-64:
+//!
+//! ```text
+//! u32 body_len | body (compact JSON) | u64 fletcher64(body)
+//! ```
+//!
+//! Replay walks frames until the end of the file or the first torn /
+//! corrupt frame — a torn tail is the *expected* signature of a crash
+//! mid-append, so it truncates the replay rather than failing it, and
+//! re-opening for append truncates the file back to the last valid
+//! frame so new records are never shadowed behind garbage.
+//!
+//! The first record is always [`Record::RunStart`], carrying a
+//! fletcher-64 hash of the config TOML text. `--resume` refuses to
+//! continue a journal whose config hash does not match the config it was
+//! given — resuming under a different schedule would silently break the
+//! byte-identical-replay invariant.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read as _, Seek as _, SeekFrom, Write as _};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::util::json::Json;
+
+use super::checkpoint::fletcher64;
+
+/// File name of the journal inside the checkpoint directory.
+pub const JOURNAL_FILE: &str = "journal.wal";
+
+/// Upper bound on one record body; a corrupt length prefix is rejected
+/// before any allocation (same posture as the wire codec's frame cap).
+const MAX_RECORD: u32 = 1 << 20;
+
+/// One journal record. Steps/samples are exact (they stay far below
+/// 2^53, the JSON number precision limit); the config hash is a full
+/// u64, so it travels as a 16-digit hex string.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Record {
+    /// First record of a run (and of every resumed continuation of it).
+    RunStart { config_hash: u64, name: String },
+    /// A phase attempt is about to start.
+    PhaseStart {
+        phase: usize,
+        attempt: u32,
+        step: u64,
+        samples: u64,
+        workers: usize,
+    },
+    /// An elastic recovery re-plan is about to be adopted.
+    Recovery { phase: usize, dead: Vec<usize> },
+    /// Rejoiners are about to be admitted back to full width.
+    Rejoin { phase: usize, workers: usize },
+    /// A snapshot object is durably in the store under `key`.
+    Snapshot { step: u64, samples: u64, key: String },
+    /// The run finished and wrote its final checkpoint.
+    RunEnd { step: u64, samples: u64 },
+}
+
+impl Record {
+    fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        let mut put = |k: &str, v: Json| {
+            m.insert(k.to_string(), v);
+        };
+        match self {
+            Record::RunStart { config_hash, name } => {
+                put("kind", Json::Str("run_start".into()));
+                put("config_hash", Json::Str(format!("{config_hash:016x}")));
+                put("name", Json::Str(name.clone()));
+            }
+            Record::PhaseStart {
+                phase,
+                attempt,
+                step,
+                samples,
+                workers,
+            } => {
+                put("kind", Json::Str("phase_start".into()));
+                put("phase", Json::Num(*phase as f64));
+                put("attempt", Json::Num(*attempt as f64));
+                put("step", Json::Num(*step as f64));
+                put("samples", Json::Num(*samples as f64));
+                put("workers", Json::Num(*workers as f64));
+            }
+            Record::Recovery { phase, dead } => {
+                put("kind", Json::Str("recovery".into()));
+                put("phase", Json::Num(*phase as f64));
+                put(
+                    "dead",
+                    Json::Arr(dead.iter().map(|&r| Json::Num(r as f64)).collect()),
+                );
+            }
+            Record::Rejoin { phase, workers } => {
+                put("kind", Json::Str("rejoin".into()));
+                put("phase", Json::Num(*phase as f64));
+                put("workers", Json::Num(*workers as f64));
+            }
+            Record::Snapshot { step, samples, key } => {
+                put("kind", Json::Str("snapshot".into()));
+                put("step", Json::Num(*step as f64));
+                put("samples", Json::Num(*samples as f64));
+                put("key", Json::Str(key.clone()));
+            }
+            Record::RunEnd { step, samples } => {
+                put("kind", Json::Str("run_end".into()));
+                put("step", Json::Num(*step as f64));
+                put("samples", Json::Num(*samples as f64));
+            }
+        }
+        Json::Obj(m)
+    }
+
+    fn from_json(j: &Json) -> Result<Record> {
+        let kind = j.get("kind")?.as_str()?;
+        let num = |k: &str| -> Result<u64> { Ok(j.get(k)?.as_usize()? as u64) };
+        Ok(match kind {
+            "run_start" => {
+                let hex = j.get("config_hash")?.as_str()?;
+                let config_hash = u64::from_str_radix(hex, 16)
+                    .with_context(|| format!("bad config_hash {hex:?}"))?;
+                Record::RunStart {
+                    config_hash,
+                    name: j.get("name")?.as_str()?.to_string(),
+                }
+            }
+            "phase_start" => Record::PhaseStart {
+                phase: num("phase")? as usize,
+                attempt: num("attempt")? as u32,
+                step: num("step")?,
+                samples: num("samples")?,
+                workers: num("workers")? as usize,
+            },
+            "recovery" => Record::Recovery {
+                phase: num("phase")? as usize,
+                dead: j
+                    .get("dead")?
+                    .as_arr()?
+                    .iter()
+                    .map(|r| r.as_usize())
+                    .collect::<Result<Vec<_>>>()?,
+            },
+            "rejoin" => Record::Rejoin {
+                phase: num("phase")? as usize,
+                workers: num("workers")? as usize,
+            },
+            "snapshot" => Record::Snapshot {
+                step: num("step")?,
+                samples: num("samples")?,
+                key: j.get("key")?.as_str()?.to_string(),
+            },
+            "run_end" => Record::RunEnd {
+                step: num("step")?,
+                samples: num("samples")?,
+            },
+            other => bail!("unknown journal record kind {other:?}"),
+        })
+    }
+}
+
+/// The result of replaying a journal file: the valid records, and the
+/// byte offset of the end of the last valid frame (everything past it is
+/// a torn or corrupt tail).
+#[derive(Debug)]
+pub struct Replay {
+    pub records: Vec<Record>,
+    pub valid_len: u64,
+    /// True when bytes past `valid_len` were discarded.
+    pub torn_tail: bool,
+}
+
+/// Decode frames from `bytes` until the end or the first invalid frame.
+pub fn replay_bytes(bytes: &[u8]) -> Replay {
+    let mut records = Vec::new();
+    let mut pos = 0usize;
+    loop {
+        let rest = &bytes[pos..];
+        if rest.len() < 4 {
+            break;
+        }
+        let len = u32::from_le_bytes(rest[..4].try_into().unwrap());
+        if len == 0 || len > MAX_RECORD {
+            break;
+        }
+        let len = len as usize;
+        if rest.len() < 4 + len + 8 {
+            break; // torn mid-frame
+        }
+        let body = &rest[4..4 + len];
+        let want = u64::from_le_bytes(rest[4 + len..4 + len + 8].try_into().unwrap());
+        if fletcher64(body) != want {
+            break;
+        }
+        let parsed = std::str::from_utf8(body)
+            .ok()
+            .and_then(|s| Json::parse(s).ok())
+            .and_then(|j| Record::from_json(&j).ok());
+        match parsed {
+            Some(r) => records.push(r),
+            None => break, // checksummed but unintelligible: stop, do not skip
+        }
+        pos += 4 + len + 8;
+    }
+    Replay {
+        records,
+        valid_len: pos as u64,
+        torn_tail: pos != bytes.len(),
+    }
+}
+
+/// An open journal, ready to append. Shared behind `Arc<Mutex<_>>`
+/// between the coordinator loop and the background snapshotter.
+#[derive(Debug)]
+pub struct Journal {
+    file: File,
+    path: PathBuf,
+}
+
+impl Journal {
+    /// Path of the journal inside a checkpoint directory.
+    pub fn path_in(dir: &Path) -> PathBuf {
+        dir.join(JOURNAL_FILE)
+    }
+
+    /// Replay whatever journal exists under `dir` (empty replay if none).
+    pub fn replay_dir(dir: &Path) -> Result<Replay> {
+        let path = Self::path_in(dir);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+        };
+        Ok(replay_bytes(&bytes))
+    }
+
+    /// Open `dir`'s journal for appending, creating the directory and
+    /// file if needed and truncating any torn tail left by a crash.
+    /// Returns the journal and the records that were already there.
+    pub fn open(dir: &Path) -> Result<(Journal, Vec<Record>)> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        let path = Self::path_in(dir);
+        let replay = Self::replay_dir(dir)?;
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(&path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        if replay.torn_tail {
+            file.set_len(replay.valid_len)
+                .with_context(|| format!("truncating torn tail of {}", path.display()))?;
+            file.sync_all()?;
+        }
+        file.seek(SeekFrom::End(0))?;
+        Ok((Journal { file, path }, replay.records))
+    }
+
+    /// Append one record and fsync it. Returns only once the record is
+    /// durable — callers invoke this *before* the action it describes.
+    pub fn append(&mut self, rec: &Record) -> Result<()> {
+        let body = rec.to_json().to_string().into_bytes();
+        if body.len() as u32 > MAX_RECORD {
+            bail!("journal record too large ({} bytes)", body.len());
+        }
+        let mut frame = Vec::with_capacity(body.len() + 12);
+        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&body);
+        frame.extend_from_slice(&fletcher64(&body).to_le_bytes());
+        self.file
+            .write_all(&frame)
+            .with_context(|| format!("appending to {}", self.path.display()))?;
+        self.file
+            .sync_data()
+            .with_context(|| format!("fsyncing {}", self.path.display()))?;
+        Ok(())
+    }
+
+    /// Number of records written so far this process (for `/status`,
+    /// callers track counts themselves; this reads the file length as a
+    /// cross-check helper in tests).
+    pub fn len_bytes(&self) -> Result<u64> {
+        Ok(self.file.metadata()?.len())
+    }
+}
+
+/// Hash of the config TOML text, as recorded in [`Record::RunStart`].
+pub fn config_hash(config_text: &str) -> u64 {
+    fletcher64(config_text.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "flashsgd-journal-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample_records() -> Vec<Record> {
+        vec![
+            Record::RunStart {
+                config_hash: 0xDEAD_BEEF_0123_4567,
+                name: "smoke".into(),
+            },
+            Record::PhaseStart {
+                phase: 0,
+                attempt: 0,
+                step: 0,
+                samples: 0,
+                workers: 4,
+            },
+            Record::Recovery {
+                phase: 0,
+                dead: vec![1, 3],
+            },
+            Record::Rejoin { phase: 1, workers: 4 },
+            Record::Snapshot {
+                step: 4,
+                samples: 64,
+                key: "snap-00000004.ckpt".into(),
+            },
+            Record::RunEnd { step: 28, samples: 448 },
+        ]
+    }
+
+    #[test]
+    fn append_replay_round_trip() {
+        let dir = scratch("roundtrip");
+        let (mut j, existing) = Journal::open(&dir).unwrap();
+        assert!(existing.is_empty());
+        for r in sample_records() {
+            j.append(&r).unwrap();
+        }
+        drop(j);
+
+        let replay = Journal::replay_dir(&dir).unwrap();
+        assert!(!replay.torn_tail);
+        assert_eq!(replay.records, sample_records());
+
+        // Re-opening returns the same records and keeps appending.
+        let (mut j, records) = Journal::open(&dir).unwrap();
+        assert_eq!(records, sample_records());
+        j.append(&Record::RunEnd { step: 99, samples: 1 }).unwrap();
+        let replay = Journal::replay_dir(&dir).unwrap();
+        assert_eq!(replay.records.len(), sample_records().len() + 1);
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_not_fatal() {
+        let dir = scratch("torn");
+        let (mut j, _) = Journal::open(&dir).unwrap();
+        for r in sample_records() {
+            j.append(&r).unwrap();
+        }
+        drop(j);
+        let path = Journal::path_in(&dir);
+        let full = std::fs::read(&path).unwrap();
+
+        // Crash mid-append: chop the last frame in half.
+        std::fs::write(&path, &full[..full.len() - 7]).unwrap();
+        let replay = Journal::replay_dir(&dir).unwrap();
+        assert!(replay.torn_tail);
+        assert_eq!(replay.records.len(), sample_records().len() - 1);
+
+        // Re-opening truncates the garbage and appends cleanly after it.
+        let (mut j, records) = Journal::open(&dir).unwrap();
+        assert_eq!(records.len(), sample_records().len() - 1);
+        j.append(&Record::RunEnd { step: 1, samples: 2 }).unwrap();
+        drop(j);
+        let replay = Journal::replay_dir(&dir).unwrap();
+        assert!(!replay.torn_tail);
+        assert_eq!(replay.records.len(), sample_records().len());
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_frame_stops_replay() {
+        let dir = scratch("corrupt");
+        let (mut j, _) = Journal::open(&dir).unwrap();
+        for r in sample_records() {
+            j.append(&r).unwrap();
+        }
+        drop(j);
+        let path = Journal::path_in(&dir);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip a byte in the *second* frame's body.
+        let first_len = 4 + u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize + 8;
+        bytes[first_len + 6] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+
+        let replay = Journal::replay_dir(&dir).unwrap();
+        assert!(replay.torn_tail);
+        assert_eq!(replay.records.len(), 1, "replay must stop at the corrupt frame");
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn config_hash_tracks_text() {
+        let a = config_hash("epochs = 2");
+        assert_eq!(a, config_hash("epochs = 2"));
+        assert_ne!(a, config_hash("epochs = 3"));
+    }
+
+    #[test]
+    fn missing_journal_replays_empty() {
+        let dir = scratch("missing");
+        let replay = Journal::replay_dir(&dir).unwrap();
+        assert!(replay.records.is_empty());
+        assert!(!replay.torn_tail);
+    }
+}

@@ -32,16 +32,20 @@
 //! once at the end of the run.
 
 pub mod checkpoint;
+pub mod journal;
 pub mod metrics;
 pub mod remote;
+pub mod snapshot;
 pub mod worker;
 
 pub use checkpoint::CheckpointMeta;
 pub use metrics::{EvalMetric, Metrics, StepMetric, Summary};
+pub use snapshot::SnapshotStats;
+pub use worker::NonFiniteError;
 
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
@@ -54,8 +58,11 @@ use crate::data::{Augment, Loader, SynthDataset};
 use crate::runtime::{
     ArchManifest, BackendSpec, ComputeClient, ComputeService, HostTensor, Manifest,
 };
+use crate::storage::{self, LocalDir};
 use crate::util::timer::Stopwatch;
 
+use journal::{Journal, Record};
+use snapshot::Snapshotter;
 use worker::{PhaseCtx, WorkerOutput, WorkerState};
 
 /// Result of a full training run.
@@ -79,6 +86,11 @@ pub struct TrainReport {
     /// at a phase boundary, with the collective re-planned back *up*
     /// (process mode only — an in-process rank thread cannot restart).
     pub rejoins: Vec<RejoinEvent>,
+    /// Background-snapshot counters (`[checkpoint]`): how many snapshots
+    /// landed and how long the *background* thread spent writing them.
+    /// That time is reported here precisely because it is NOT part of any
+    /// step's latency — snapshots are written off the step path.
+    pub snapshots: SnapshotStats,
 }
 
 /// One elastic-recovery event: a rank death aborted a phase attempt and
@@ -127,12 +139,27 @@ impl TrainReport {
             ),
             None => "no eval".to_string(),
         };
+        let snaps = if self.snapshots.written + self.snapshots.failed > 0 {
+            format!(
+                "\n  snapshots: {} written, {} failed ({:.2}s off the step path{})",
+                self.snapshots.written,
+                self.snapshots.failed,
+                self.snapshots.write_secs,
+                match self.snapshots.last_step {
+                    Some(s) => format!(", newest at step {s}"),
+                    None => String::new(),
+                }
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "[{}] {}\n  final: {}  (wall {:.1}s)",
+            "[{}] {}\n  final: {}  (wall {:.1}s){}",
             self.config_name,
             self.summary.format(),
             eval,
-            self.wall_secs
+            self.wall_secs,
+            snaps
         )
     }
 }
@@ -280,61 +307,28 @@ impl Trainer {
         // Checkpoint resume: restore state, drop the already-trained prefix
         // of the plan (partially-consumed phases record `skipped` so the
         // workers can replay their loaders to the exact sample position).
+        // `--resume` takes either a checkpoint file or a durable directory
+        // (journal + snapshots); the directory form verifies the journal's
+        // config hash and falls back past corrupt snapshots.
+        let cfg_hash = run_config_hash(cfg);
+        let resuming_dir = self.resume_from.as_ref().is_some_and(|p| p.is_dir());
         let resumed: Option<(WorkerState, checkpoint::CheckpointMeta)> = self
             .resume_from
             .as_ref()
-            .map(|p| checkpoint::load(p).with_context(|| format!("resuming from {p:?}")))
-            .transpose()?;
+            .map(|p| load_resume(p, cfg_hash))
+            .transpose()?
+            .flatten();
         if let Some((st, meta)) = &resumed {
-            if st.params.len() != arch.n_params() {
-                bail!(
-                    "checkpoint has {} params, arch {} has {} — wrong model?",
-                    st.params.len(),
-                    arch.name,
-                    arch.n_params()
-                );
-            }
-            let mut skip = meta.step as usize;
-            plans.retain_mut(|p| {
-                if skip == 0 {
-                    true
-                } else if skip >= p.steps {
-                    skip -= p.steps;
-                    false
-                } else {
-                    let batch = (p.per_worker * p.workers) as u64;
-                    p.skipped = skip;
-                    p.steps -= skip;
-                    p.first_step += skip;
-                    p.samples_before += skip as u64 * batch;
-                    skip = 0;
-                    true
-                }
-            });
-            if plans.is_empty() {
-                bail!(
-                    "checkpoint step {} is already at/past the end of this schedule",
-                    meta.step
-                );
-            }
-            // Cross-check the recomputed sample position against the
-            // checkpoint's own accounting: `meta.step` under a *different*
-            // batch schedule lands at a different sample count, and
-            // silently resuming there would desync the data stream from
-            // the saved run.
-            let resumed_samples = plans[0].samples_before;
-            if resumed_samples != meta.samples {
-                bail!(
-                    "checkpoint mismatch: checkpoint says step {} = {} samples, but \
-                     this schedule reaches step {} after {} samples — was the \
-                     checkpoint taken under a different batch schedule?",
-                    meta.step,
-                    meta.samples,
-                    meta.step,
-                    resumed_samples
-                );
-            }
+            apply_resume(&mut plans, &arch, st, meta)?;
         }
+
+        // Durability: open the run journal + background snapshotter when
+        // `[checkpoint] dir` is set. The RunStart record (fsynced before
+        // any training happens) stamps the config hash every later resume
+        // is verified against.
+        let durable = open_durability(cfg, cfg_hash, resuming_dir)?;
+        let journal = durable.as_ref().map(|d| d.journal.clone());
+        let mut snapshotter = durable.map(|d| d.snapshotter);
 
         let preload = self.preload_names(&plans)?;
         let preload_refs: Vec<&str> = preload.iter().map(|s| s.as_str()).collect();
@@ -401,7 +395,7 @@ impl Trainer {
         let mut lost = 0usize;
         let mut restarts_used = 0usize;
         let mut recoveries: Vec<RecoveryEvent> = Vec::new();
-        for plan in &plans {
+        for (phase_idx, plan) in plans.iter().enumerate() {
             let global_batch = plan.per_worker * plan.workers;
             let mut attempt = 0usize;
             loop {
@@ -441,6 +435,18 @@ impl Trainer {
                     fault: cfg.fault.clone(),
                 });
 
+                // Write-ahead: the phase start is durable before any step
+                // of it runs.
+                if let Some(j) = &journal {
+                    j.lock().unwrap().append(&Record::PhaseStart {
+                        phase: phase_idx,
+                        attempt: attempt as u32,
+                        step: plan.first_step as u64,
+                        samples: plan.samples_before,
+                        workers,
+                    })?;
+                }
+
                 match run_phase_on_mesh(&ctx, &cfg.transport, &client, &dataset, cfg.seed, &state) {
                     PhaseOutcome::Complete(mut outputs) => {
                         // Parameters are replicated: identical reduced
@@ -471,6 +477,19 @@ impl Trainer {
                         let o = outputs.swap_remove(0);
                         all_metrics.merge(o.metrics);
                         state = o.state;
+                        // Boundary snapshot: hand the state to the
+                        // background writer and move on — the next phase
+                        // starts immediately, never waiting on disk.
+                        if let Some(s) = &mut snapshotter {
+                            s.offer_state(
+                                &state,
+                                checkpoint::CheckpointMeta {
+                                    step: (plan.first_step + plan.steps) as u64,
+                                    samples: plan.samples_before
+                                        + (plan.steps * plan.per_worker * plan.workers) as u64,
+                                },
+                            );
+                        }
                         break;
                     }
                     PhaseOutcome::Failed { dead, err } => {
@@ -479,6 +498,15 @@ impl Trainer {
                              dead ranks {dead:?})",
                             plan.first_step
                         ));
+                        if worker::error_is_non_finite(&err) {
+                            // The numeric health guard is deterministic: a
+                            // replay from the same boundary state reproduces
+                            // the same NaN/Inf. Fail now instead of burning
+                            // the restart budget on guaranteed repeats.
+                            return Err(err.context(
+                                "numeric health guard tripped (deterministic — not retried)",
+                            ));
+                        }
                         if !cfg.fault.enabled {
                             return Err(err);
                         }
@@ -498,6 +526,14 @@ impl Trainer {
                         let new_workers =
                             effective_workers(&arch, plan.workers, lost, global_batch, cfg)
                                 .map_err(|e| e.context(err))?;
+                        // Write-ahead: the recovery is durable before the
+                        // re-plan it describes is adopted.
+                        if let Some(j) = &journal {
+                            j.lock().unwrap().append(&Record::Recovery {
+                                phase: phase_idx,
+                                dead: dead.clone(),
+                            })?;
+                        }
                         recoveries.push(RecoveryEvent {
                             phase_first_step: plan.first_step,
                             dead_ranks: dead,
@@ -546,6 +582,19 @@ impl Trainer {
                 .with_context(|| format!("saving checkpoint to {path:?}"))?;
         }
 
+        // Seal the durable run: drain the background snapshotter (bounded —
+        // only queued writes), then append RunEnd so it is the journal's
+        // final record and a later resume can see the run completed.
+        let snapshots = snapshotter.take().map(Snapshotter::finish).unwrap_or_default();
+        if let Some(j) = &journal {
+            let last = plans.last().unwrap();
+            j.lock().unwrap().append(&Record::RunEnd {
+                step: (last.first_step + last.steps) as u64,
+                samples: last.samples_before
+                    + (last.steps * last.per_worker * last.workers) as u64,
+            })?;
+        }
+
         let summary = all_metrics.summary();
         Ok(TrainReport {
             config_name: cfg.name.clone(),
@@ -557,6 +606,7 @@ impl Trainer {
             max_lane_concurrency: svc.stats().max_concurrent(),
             recoveries,
             rejoins: Vec::new(),
+            snapshots,
         })
     }
 
@@ -632,6 +682,196 @@ fn effective_workers(
         "cannot re-plan a {global_batch}-sample global batch onto {cap} survivors: \
          no divisor of the batch has a grad executable in the manifest"
     )
+}
+
+/// The hash a durable run stamps into its journal's `RunStart` record and
+/// every `--resume <dir>` is verified against. Both run modes hash the
+/// same thing — the resolved [`TrainConfig`]'s `Debug` rendering — so the
+/// in-process [`Trainer`] and the `coordinator` subcommand agree on what
+/// "same config" means without either needing the original TOML text.
+pub(crate) fn run_config_hash(cfg: &TrainConfig) -> u64 {
+    journal::config_hash(&format!("{cfg:?}"))
+}
+
+/// Load resume state from `path`: a checkpoint *file* (the original
+/// `--resume run.ckpt` form) loads directly; a durable *directory*
+/// (journal + snapshots) verifies the journal's config hash, then picks
+/// the newest snapshot whose checksum holds, falling back past corrupt or
+/// torn ones. A durable directory whose journal proves the run started
+/// but holds no usable snapshot resumes as a fresh run (`Ok(None)`) — no
+/// progress was durable, so step 0 is the truth.
+pub(crate) fn load_resume(
+    path: &std::path::Path,
+    cfg_hash: u64,
+) -> Result<Option<(WorkerState, CheckpointMeta)>> {
+    if !path.is_dir() {
+        let loaded = checkpoint::load(path)
+            .with_context(|| format!("loading checkpoint from {}", path.display()))?;
+        return Ok(Some(loaded));
+    }
+    let replay = Journal::replay_dir(path)?;
+    if replay.records.is_empty() {
+        bail!(
+            "--resume {}: no run journal found — is this a durable run directory \
+             (one a run with [checkpoint] dir wrote)?",
+            path.display()
+        );
+    }
+    verify_run_start(&replay.records, cfg_hash, path)?;
+    let backend = LocalDir::create(path)?;
+    match snapshot::latest_valid_snapshot(&backend)? {
+        Some((state, meta, key)) => {
+            eprintln!(
+                "[resume] restored snapshot '{key}' (step {}, {} samples) from {}",
+                meta.step,
+                meta.samples,
+                path.display()
+            );
+            Ok(Some((state, meta)))
+        }
+        None => {
+            eprintln!(
+                "[resume] journal found but no usable snapshot in {} — \
+                 replaying the run from step 0",
+                path.display()
+            );
+            Ok(None)
+        }
+    }
+}
+
+/// Restore a resume position into `plans`: verify the state fits `arch`,
+/// drop the already-trained prefix of the schedule (a partially-consumed
+/// phase records `skipped`, which the workers replay their loaders
+/// through via `seek_samples` to the exact sample position), and
+/// cross-check the recomputed sample position against the checkpoint's
+/// own accounting — `meta.step` under a *different* batch schedule lands
+/// at a different sample count, and silently resuming there would desync
+/// the data stream from the saved run. Shared by both run modes.
+pub(crate) fn apply_resume(
+    plans: &mut Vec<PhasePlan>,
+    arch: &ArchManifest,
+    st: &WorkerState,
+    meta: &CheckpointMeta,
+) -> Result<()> {
+    if st.params.len() != arch.n_params() {
+        bail!(
+            "checkpoint has {} params, arch {} has {} — wrong model?",
+            st.params.len(),
+            arch.name,
+            arch.n_params()
+        );
+    }
+    let mut skip = meta.step as usize;
+    plans.retain_mut(|p| {
+        if skip == 0 {
+            true
+        } else if skip >= p.steps {
+            skip -= p.steps;
+            false
+        } else {
+            let batch = (p.per_worker * p.workers) as u64;
+            p.skipped = skip;
+            p.steps -= skip;
+            p.first_step += skip;
+            p.samples_before += skip as u64 * batch;
+            skip = 0;
+            true
+        }
+    });
+    if plans.is_empty() {
+        bail!(
+            "checkpoint step {} is already at/past the end of this schedule",
+            meta.step
+        );
+    }
+    let resumed_samples = plans[0].samples_before;
+    if resumed_samples != meta.samples {
+        bail!(
+            "checkpoint mismatch: checkpoint says step {} = {} samples, but \
+             this schedule reaches step {} after {} samples — was the \
+             checkpoint taken under a different batch schedule?",
+            meta.step,
+            meta.samples,
+            meta.step,
+            resumed_samples
+        );
+    }
+    Ok(())
+}
+
+/// The durable-run plumbing: the write-ahead journal (shared with the
+/// background snapshotter, which appends `snapshot` records into it) and
+/// the snapshotter itself.
+pub(crate) struct Durability {
+    pub(crate) journal: Arc<Mutex<Journal>>,
+    pub(crate) snapshotter: Snapshotter,
+}
+
+/// Open (or continue) the durable-run machinery when `[checkpoint] dir`
+/// is set; `None` otherwise. A fresh run refuses a directory that already
+/// holds a journal — continuing one is what `--resume` is for — and a
+/// resume verifies the existing journal's config hash. Either way a new
+/// `RunStart` record is appended and fsynced before any training runs.
+pub(crate) fn open_durability(
+    cfg: &TrainConfig,
+    cfg_hash: u64,
+    resuming: bool,
+) -> Result<Option<Durability>> {
+    if !cfg.checkpoint.enabled() {
+        return Ok(None);
+    }
+    let dir = storage::local_path(&cfg.checkpoint.dir).to_path_buf();
+    let (mut journal, records) = Journal::open(&dir)?;
+    if !records.is_empty() {
+        if !resuming {
+            bail!(
+                "{} already contains a run journal; pass --resume {} to continue \
+                 that run, or point [checkpoint] dir at a fresh directory",
+                dir.display(),
+                dir.display()
+            );
+        }
+        verify_run_start(&records, cfg_hash, &dir)?;
+    }
+    journal.append(&Record::RunStart {
+        config_hash: cfg_hash,
+        name: cfg.name.clone(),
+    })?;
+    let backend = storage::open_backend(&cfg.checkpoint.dir)?;
+    let journal = Arc::new(Mutex::new(journal));
+    let snapshotter = Snapshotter::start(
+        backend,
+        Some(journal.clone()),
+        cfg.checkpoint.every_steps,
+        cfg.checkpoint.keep_last,
+    );
+    Ok(Some(Durability { journal, snapshotter }))
+}
+
+/// Check a replayed journal's `RunStart` against this run's config hash.
+fn verify_run_start(
+    records: &[Record],
+    cfg_hash: u64,
+    dir: &std::path::Path,
+) -> Result<()> {
+    let recorded = records.iter().find_map(|r| match r {
+        Record::RunStart { config_hash, .. } => Some(*config_hash),
+        _ => None,
+    });
+    match recorded {
+        Some(h) if h != cfg_hash => bail!(
+            "config hash mismatch: the journal in {} was written under config \
+             {h:016x}, this run resolves to {cfg_hash:016x} — resuming under a \
+             different config would silently change the schedule",
+            dir.display()
+        ),
+        Some(_) => Ok(()),
+        None => bail!(
+            "journal in {} has records but no run_start — corrupt or foreign file",
+            dir.display()
+        ),
+    }
 }
 
 /// Outcome of one phase attempt across the mesh.

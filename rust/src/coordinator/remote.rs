@@ -43,9 +43,23 @@
 //! blob) the run's final checkpoint is byte-identical to an undisturbed
 //! run's. Each admission is recorded as a [`RejoinEvent`].
 //!
+//! **Durability** (the crash/resume half of robustness): with
+//! `[checkpoint] dir` set the coordinator keeps a write-ahead run journal
+//! and hands rank 0's phase-boundary blobs to the background snapshotter
+//! (they are already the exact checkpoint byte format — no re-encode).
+//! `flashsgd coordinator --resume <dir>` replays the journal, restores
+//! the newest valid snapshot, and re-enters the schedule at the saved
+//! position via the same plan-trimming as the in-process trainer — so a
+//! SIGKILL'd-and-resumed run's final checkpoint is byte-identical to an
+//! undisturbed run's. Workers are **orphan-safe**: a worker whose control
+//! link dies holds on for `[fault] coordinator_grace_ms`, re-dials, and
+//! re-registers with the restarted coordinator through the join door
+//! instead of exiting.
+//!
 //! With `transport.http` set, a plain-HTTP endpoint serves `GET /status`
-//! (run state, including per-rank heartbeat ages and reconnect counts)
-//! and `GET /metrics` (the merged metrics report) as JSON.
+//! (run state, including per-rank heartbeat ages, reconnect counts, the
+//! newest durable snapshot step, and the journal position) and
+//! `GET /metrics` (the merged metrics report) as JSON.
 
 use std::io::{Read as _, Write as _};
 use std::net::{TcpListener, TcpStream};
@@ -70,9 +84,14 @@ use crate::util::timer::Stopwatch;
 use crate::util::toml::Doc;
 
 use super::checkpoint::{self, CheckpointMeta};
+use super::journal::Record;
 use super::metrics::Metrics;
+use super::snapshot::Snapshotter;
 use super::worker::{self, PhaseCtx, WorkerOutput, WorkerState};
-use super::{effective_workers, RecoveryEvent, RejoinEvent, TrainReport, Trainer};
+use super::{
+    apply_resume, effective_workers, load_resume, open_durability, run_config_hash, RecoveryEvent,
+    RejoinEvent, TrainReport, Trainer,
+};
 
 /// Frame-size cap on the control plane. Control frames are tiny JSON, but
 /// the same stream ships whole-model state blobs, which dwarf any
@@ -193,8 +212,14 @@ struct AttemptPlan {
 
 enum RemoteOutcome {
     /// Every rank finished and all state blobs were byte-identical;
-    /// `state` is rank 0's decoded phase-boundary state.
-    Complete { state: WorkerState, metrics: Metrics },
+    /// `state` is rank 0's decoded phase-boundary state and `blob` the
+    /// raw bytes it was decoded from (already the checkpoint format —
+    /// the snapshotter stores them without re-encoding).
+    Complete {
+        state: WorkerState,
+        metrics: Metrics,
+        blob: Vec<u8>,
+    },
     /// The attempt lost ranks (indices local to the attempt's mesh).
     Failed { dead: Vec<usize>, err: anyhow::Error },
 }
@@ -500,7 +525,11 @@ fn run_phase_remote(
         let (st, _meta) =
             checkpoint::decode(&bytes).context("decoding rank 0's phase-boundary state")?;
         let metrics = a.done_meta[0].take().unwrap_or_default();
-        Ok(RemoteOutcome::Complete { state: st, metrics })
+        Ok(RemoteOutcome::Complete {
+            state: st,
+            metrics,
+            blob: bytes,
+        })
     } else {
         let err = a
             .casualty_err
@@ -656,6 +685,11 @@ struct StatusBoard {
     recoveries: usize,
     rejoins: usize,
     last_loss: f64,
+    /// Step of the newest durable snapshot (`null` until one lands).
+    last_snapshot: Option<u64>,
+    /// Byte length of the run journal (0 when durability is off) — a
+    /// monotone progress cursor an external watcher can poll.
+    journal_bytes: u64,
     ranks: Vec<RankStatus>,
     /// Pre-rendered `GET /metrics` body (the merged metrics report).
     metrics_json: String,
@@ -674,6 +708,8 @@ impl StatusBoard {
             recoveries: 0,
             rejoins: 0,
             last_loss: f64::NAN,
+            last_snapshot: None,
+            journal_bytes: 0,
             ranks: Vec::new(),
             metrics_json: r#"{"steps":[],"evals":[]}"#.into(),
         }
@@ -711,6 +747,14 @@ impl StatusBoard {
                     Json::Null
                 },
             ),
+            (
+                "last_snapshot",
+                match self.last_snapshot {
+                    Some(step) => Json::Num(step as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("journal_bytes", Json::Num(self.journal_bytes as f64)),
             ("ranks", Json::Arr(ranks)),
         ])
         .to_string()
@@ -737,10 +781,107 @@ fn publish_ranks(board: &Mutex<StatusBoard>, conns: &[WorkerConn], a: &Attempt<'
     board.lock().unwrap().ranks = ranks;
 }
 
+/// Bind a TCP listener with `SO_REUSEADDR` set, so a *restarted*
+/// coordinator can reclaim its control and status ports immediately.
+/// Without the option, the previous instance's dying worker connections
+/// hold the port in `TIME_WAIT`/`FIN_WAIT` for up to ~60 s and the
+/// crash-resume path stalls on `EADDRINUSE` — longer than any sane
+/// `coordinator_grace_ms`. The raw FFI goes straight at the platform C
+/// library (the dependency tree has no libc crate): std's
+/// `TcpListener::bind` offers no hook between `socket()` and `bind()`.
+#[cfg(target_os = "linux")]
+fn listen_reuseaddr(addr: &str) -> std::io::Result<TcpListener> {
+    use std::net::SocketAddr;
+    use std::os::raw::{c_int, c_uint, c_void};
+    use std::os::unix::io::FromRawFd;
+
+    // Non-IPv4 specs (hostnames, IPv6) fall back to the std path: the
+    // reuse guarantee is only needed on the fixed numeric addresses a
+    // coordinator publishes to its workers.
+    let Ok(SocketAddr::V4(v4)) = addr.parse::<SocketAddr>() else {
+        return TcpListener::bind(addr);
+    };
+
+    extern "C" {
+        fn socket(domain: c_int, ty: c_int, protocol: c_int) -> c_int;
+        fn setsockopt(
+            fd: c_int,
+            level: c_int,
+            name: c_int,
+            value: *const c_void,
+            len: c_uint,
+        ) -> c_int;
+        fn bind(fd: c_int, addr: *const c_void, len: c_uint) -> c_int;
+        fn listen(fd: c_int, backlog: c_int) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+    const AF_INET: c_int = 2;
+    const SOCK_STREAM: c_int = 1;
+    const SOL_SOCKET: c_int = 1;
+    const SO_REUSEADDR: c_int = 2;
+    /// `struct sockaddr_in` (Linux ABI): family, then port and address in
+    /// network byte order, then padding.
+    #[repr(C)]
+    struct SockaddrIn {
+        family: u16,
+        port_be: u16,
+        addr_be: u32,
+        zero: [u8; 8],
+    }
+
+    // Capture errno, close the half-made socket, hand back the error.
+    let fail = |fd: c_int| -> std::io::Error {
+        let e = std::io::Error::last_os_error();
+        unsafe { close(fd) };
+        e
+    };
+    unsafe {
+        let fd = socket(AF_INET, SOCK_STREAM, 0);
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        let one: c_int = 1;
+        if setsockopt(
+            fd,
+            SOL_SOCKET,
+            SO_REUSEADDR,
+            (&one as *const c_int).cast(),
+            std::mem::size_of::<c_int>() as c_uint,
+        ) != 0
+        {
+            return Err(fail(fd));
+        }
+        let sin = SockaddrIn {
+            family: AF_INET as u16,
+            port_be: v4.port().to_be(),
+            // octets() is already big-endian byte order; store verbatim
+            addr_be: u32::from_ne_bytes(v4.ip().octets()),
+            zero: [0; 8],
+        };
+        if bind(
+            fd,
+            (&sin as *const SockaddrIn).cast(),
+            std::mem::size_of::<SockaddrIn>() as c_uint,
+        ) != 0
+        {
+            return Err(fail(fd));
+        }
+        if listen(fd, 128) != 0 {
+            return Err(fail(fd));
+        }
+        Ok(TcpListener::from_raw_fd(fd))
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn listen_reuseaddr(addr: &str) -> std::io::Result<TcpListener> {
+    TcpListener::bind(addr)
+}
+
 /// Serve `GET /status` and `GET /metrics` as JSON over plain HTTP/1.0.
 /// The accept loop runs on a daemon thread for the life of the process.
 fn serve_http(addr: &str, board: Arc<Mutex<StatusBoard>>) -> Result<()> {
-    let listener = TcpListener::bind(addr)
+    let listener = listen_reuseaddr(addr)
         .with_context(|| format!("binding the http status endpoint on {addr}"))?;
     let bound = listener.local_addr()?;
     eprintln!("[coordinator] status endpoint at http://{bound}/status");
@@ -779,17 +920,41 @@ fn serve_http(addr: &str, board: Arc<Mutex<StatusBoard>>) -> Result<()> {
 /// [`TrainReport`] the in-process trainer produces. `config_text` is the
 /// TOML the config was parsed from — it is shipped verbatim to every
 /// worker, so all processes train the identical configuration.
+/// `resume_from` takes a checkpoint file or a durable run directory
+/// (journal + snapshots) — the crash/resume path.
 pub fn run_coordinator(
     cfg: &TrainConfig,
     config_text: &str,
     save_to: Option<&Path>,
+    resume_from: Option<&Path>,
 ) -> Result<TrainReport> {
     let trainer = Trainer::new(cfg.clone())?;
-    let plans = trainer.plan_phases();
+    let mut plans = trainer.plan_phases();
     if plans.is_empty() {
         bail!("schedule produced zero steps");
     }
     let arch = trainer.manifest.arch(&cfg.arch)?.clone();
+
+    // Crash/resume: restore the newest valid snapshot (or a checkpoint
+    // file) and drop the already-trained prefix of the schedule — the
+    // same journal verification and plan trimming as the in-process
+    // trainer, so a run started in one mode resumes in the other.
+    let cfg_hash = run_config_hash(cfg);
+    let resuming_dir = resume_from.is_some_and(|p| p.is_dir());
+    let resumed = resume_from
+        .map(|p| load_resume(p, cfg_hash))
+        .transpose()?
+        .flatten();
+    if let Some((st, meta)) = &resumed {
+        apply_resume(&mut plans, &arch, st, meta)?;
+    }
+
+    // Durability: run journal + background snapshotter when
+    // `[checkpoint] dir` is set.
+    let durable = open_durability(cfg, cfg_hash, resuming_dir)?;
+    let journal = durable.as_ref().map(|d| d.journal.clone());
+    let mut snapshotter = durable.map(|d| d.snapshotter);
+
     let n_workers = plans.iter().map(|p| p.workers).max().unwrap_or(1);
 
     let board = Arc::new(Mutex::new(StatusBoard::new(n_workers, plans.len())));
@@ -811,33 +976,39 @@ pub fn run_coordinator(
     let client = svc.client();
     let mut sw = Stopwatch::new();
 
-    // Deterministic He init (paper init per [10]) — process mode has no
-    // checkpoint-resume path yet; it always starts from the init artifact.
-    let mut state = {
-        let params = client.run(
-            &format!("{}/init", cfg.arch),
-            vec![HostTensor::i32(vec![1], vec![cfg.seed as i32])],
-        )?;
-        let momenta: Vec<HostTensor> = params
-            .iter()
-            .map(|p| HostTensor::f32(p.shape().to_vec(), vec![0.0; p.elems()]))
-            .collect();
-        let bn_running: Vec<HostTensor> = arch
-            .bn_layers
-            .iter()
-            .map(|b| HostTensor::f32(vec![2, b.width], vec![0.0; 2 * b.width]))
-            .collect();
-        WorkerState {
-            params,
-            momenta,
-            bn_running,
-            bn_steps: 0,
+    // Initial state: the resumed snapshot, or the deterministic He init
+    // (paper init per [10]). Because snapshots are exact phase-boundary
+    // states, a resume replays from a boundary — the remaining phases ship
+    // the restored blob instead of the init artifact and the sample stream
+    // continues at the saved position.
+    let mut state = match resumed {
+        Some((st, _)) => st,
+        None => {
+            let params = client.run(
+                &format!("{}/init", cfg.arch),
+                vec![HostTensor::i32(vec![1], vec![cfg.seed as i32])],
+            )?;
+            let momenta: Vec<HostTensor> = params
+                .iter()
+                .map(|p| HostTensor::f32(p.shape().to_vec(), vec![0.0; p.elems()]))
+                .collect();
+            let bn_running: Vec<HostTensor> = arch
+                .bn_layers
+                .iter()
+                .map(|b| HostTensor::f32(vec![2, b.width], vec![0.0; 2 * b.width]))
+                .collect();
+            WorkerState {
+                params,
+                momenta,
+                bn_running,
+                bn_steps: 0,
+            }
         }
     };
 
     // Registration: accept exactly the widest phase's worker count, in
     // arrival order (arrival order fixes rank order for every phase).
-    let listener = TcpListener::bind(&cfg.transport.bind).with_context(|| {
+    let listener = listen_reuseaddr(&cfg.transport.bind).with_context(|| {
         format!(
             "binding the coordinator control socket on {}",
             cfg.transport.bind
@@ -928,6 +1099,14 @@ pub fn run_coordinator(
                     global_batch,
                     cfg,
                 )?;
+                // Write-ahead: the admission is durable before the attempt
+                // that runs at the restored width.
+                if let Some(j) = &journal {
+                    j.lock().unwrap().append(&Record::Rejoin {
+                        phase: pi,
+                        workers: after,
+                    })?;
+                }
                 for &w in &admitted {
                     rejoins.push(RejoinEvent {
                         phase_first_step: plan.first_step,
@@ -988,13 +1167,43 @@ pub fn run_coordinator(
                 plans.len(),
                 plan.steps
             );
+            // Write-ahead: the phase start is durable before any step runs.
+            if let Some(j) = &journal {
+                j.lock().unwrap().append(&Record::PhaseStart {
+                    phase: pi,
+                    attempt: attempt as u32,
+                    step: plan.first_step as u64,
+                    samples: plan.samples_before,
+                    workers,
+                })?;
+            }
             match run_phase_remote(&mut conns, &rx, &participants, &ap, &state, cfg, &board)? {
-                RemoteOutcome::Complete { state: st, metrics } => {
+                RemoteOutcome::Complete { state: st, metrics, blob } => {
                     all_metrics.merge(metrics);
                     state = st;
+                    // Boundary snapshot: rank 0's done-blob is already the
+                    // exact checkpoint byte format — hand it to the
+                    // background writer unre-encoded and move on.
+                    if let Some(s) = &mut snapshotter {
+                        s.offer_bytes(
+                            CheckpointMeta {
+                                step: (plan.first_step + plan.steps) as u64,
+                                samples: plan.samples_before
+                                    + (plan.steps * plan.per_worker * plan.workers) as u64,
+                            },
+                            move || blob,
+                        );
+                    }
+                    let last_snapshot = snapshotter.as_ref().and_then(|s| s.stats().last_step);
+                    let journal_bytes = journal
+                        .as_ref()
+                        .and_then(|j| j.lock().unwrap().len_bytes().ok())
+                        .unwrap_or(0);
                     let mut b = board.lock().unwrap();
                     b.last_loss = all_metrics.steps.last().map(|s| s.loss).unwrap_or(f64::NAN);
                     b.metrics_json = all_metrics.to_json().to_string();
+                    b.last_snapshot = last_snapshot;
+                    b.journal_bytes = journal_bytes;
                     break;
                 }
                 RemoteOutcome::Failed { dead, err } => {
@@ -1003,6 +1212,14 @@ pub fn run_coordinator(
                          dead ranks {dead:?})",
                         plan.first_step
                     ));
+                    if worker::error_is_non_finite(&err) {
+                        // Deterministic: a replay from the same boundary
+                        // state reproduces the same NaN/Inf — fail now
+                        // instead of burning the restart budget.
+                        return Err(err.context(
+                            "numeric health guard tripped (deterministic — not retried)",
+                        ));
+                    }
                     if !cfg.fault.enabled {
                         return Err(err);
                     }
@@ -1025,6 +1242,14 @@ pub fn run_coordinator(
                         cfg,
                     )
                     .map_err(|e| e.context(err))?;
+                    // Write-ahead: the recovery is durable before the
+                    // re-plan it describes is adopted.
+                    if let Some(j) = &journal {
+                        j.lock().unwrap().append(&Record::Recovery {
+                            phase: pi,
+                            dead: dead.clone(),
+                        })?;
+                    }
                     recoveries.push(RecoveryEvent {
                         phase_first_step: plan.first_step,
                         dead_ranks: dead,
@@ -1082,10 +1307,22 @@ pub fn run_coordinator(
             .with_context(|| format!("saving checkpoint to {path:?}"))?;
     }
 
+    // Seal the durable run: drain the background snapshotter, then append
+    // RunEnd so it is the journal's final record.
+    let snapshots = snapshotter.take().map(Snapshotter::finish).unwrap_or_default();
+    if let Some(j) = &journal {
+        let last = plans.last().unwrap();
+        j.lock().unwrap().append(&Record::RunEnd {
+            step: (last.first_step + last.steps) as u64,
+            samples: last.samples_before + (last.steps * last.per_worker * last.workers) as u64,
+        })?;
+    }
+
     {
         let mut b = board.lock().unwrap();
         b.state = "done".into();
         b.metrics_json = all_metrics.to_json().to_string();
+        b.last_snapshot = snapshots.last_step;
     }
     let summary = all_metrics.summary();
     Ok(TrainReport {
@@ -1098,6 +1335,7 @@ pub fn run_coordinator(
         max_lane_concurrency: svc.stats().max_concurrent(),
         recoveries,
         rejoins,
+        snapshots,
     })
 }
 
@@ -1143,11 +1381,80 @@ fn send_failed(
     let _ = frame::write_control(ctl, wbuf, &j.to_string());
 }
 
+/// How one coordinator session ended, as seen by the worker.
+enum SessionEnd {
+    /// The coordinator said `shutdown` — the run is over.
+    Shutdown,
+    /// The control link died. `grace` is the `[fault] coordinator_grace`
+    /// window the session's config allows for re-registering with a
+    /// restarted coordinator (zero = the pre-durability fatal behavior).
+    Lost { grace: Duration },
+}
+
+/// How one phase assignment ended on the worker.
+enum PhaseEnd {
+    /// Phase reported (done or failed); keep serving assignments.
+    Continue,
+    /// The coordinator said shutdown — exit cleanly.
+    Shutdown,
+    /// The control link died; the phase attempt was aborted locally.
+    Lost,
+}
+
 /// Run a worker process: join the coordinator at `join`, receive the run
 /// configuration, then serve phase assignments until `shutdown`. Blocks
 /// for the life of the run.
+///
+/// Orphan safety: when the control link dies and the config grants a
+/// `[fault] coordinator_grace_ms` window, the worker does not exit — it
+/// holds, re-dials `join` until the window closes, and re-registers with
+/// a fresh `hello` (the restarted coordinator's registration loop, or a
+/// surviving coordinator's join door, admits it like any joiner). Any
+/// in-flight phase attempt was already aborted locally; the coordinator
+/// replays it from the last durable boundary.
 pub fn run_worker(join: &str) -> Result<()> {
     let mut ctl = dial_coordinator(join)?;
+    loop {
+        match run_worker_session(ctl)? {
+            SessionEnd::Shutdown => return Ok(()),
+            SessionEnd::Lost { grace } => {
+                if grace.is_zero() {
+                    bail!("lost the coordinator control connection");
+                }
+                eprintln!(
+                    "[worker] lost the coordinator; holding for {} ms and re-dialing {join}",
+                    grace.as_millis()
+                );
+                ctl = redial_within(join, grace)?;
+            }
+        }
+    }
+}
+
+/// Re-dial the coordinator until `grace` runs out — the orphaned worker's
+/// bounded hold. A coordinator restarted inside the window gets its
+/// cluster back without any worker restarts; past it the worker exits.
+fn redial_within(addr: &str, grace: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + grace;
+    let mut last: Option<std::io::Error> = None;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = Some(e),
+        }
+        if Instant::now() >= deadline {
+            return Err(anyhow!(last.expect("at least one dial attempt")).context(format!(
+                "coordinator did not come back on {addr} within the {} ms grace window",
+                grace.as_millis()
+            )));
+        }
+        thread::sleep(Duration::from_millis(200));
+    }
+}
+
+/// One control-connection lifetime: hello/welcome handshake, then serve
+/// phase assignments until shutdown or link loss.
+fn run_worker_session(mut ctl: TcpStream) -> Result<SessionEnd> {
     ctl.set_nodelay(true).ok();
     let mut wbuf = Vec::new();
     frame::write_control(&mut ctl, &mut wbuf, r#"{"type":"hello"}"#)?;
@@ -1165,7 +1472,7 @@ pub fn run_worker(join: &str) -> Result<()> {
     let config_text = welcome.get("config")?.as_str()?.to_string();
     let cfg = TrainConfig::from_toml(&Doc::parse(&config_text)?)
         .context("parsing the config shipped by the coordinator")?;
-    eprintln!("[worker {worker_id}] joined {join}, config \"{}\"", cfg.name);
+    eprintln!("[worker {worker_id}] joined, config \"{}\"", cfg.name);
 
     let manifest = crate::runtime::builtin_manifest();
     let arch = manifest.arch(&cfg.arch)?.clone();
@@ -1194,25 +1501,29 @@ pub fn run_worker(join: &str) -> Result<()> {
     let (tx, rx) = mpsc::channel();
     spawn_control_reader(0, ctl.try_clone()?, tx);
 
+    let lost = || SessionEnd::Lost {
+        grace: cfg.fault.coordinator_grace,
+    };
     loop {
         match rx.recv() {
-            Err(_) | Ok(Event::Closed(_)) => bail!("lost the coordinator control connection"),
+            Err(_) | Ok(Event::Closed(_)) => return Ok(lost()),
             Ok(Event::Blob(..)) => bail!("unexpected state blob outside a phase"),
             Ok(Event::Control(_, j)) => match j.get("type")?.as_str()? {
                 "shutdown" => {
                     eprintln!("[worker {worker_id}] shutdown");
-                    return Ok(());
+                    return Ok(SessionEnd::Shutdown);
                 }
                 // A straggling abort from an attempt this worker already
                 // reported on — nothing is running, nothing to do.
                 "abort" => {}
                 "prepare" => {
-                    let keep = run_one_phase(
+                    match run_one_phase(
                         &j, &rx, &mut ctl, &mut wbuf, &cfg, &arch, &client, &dataset, wire,
                         worker_id,
-                    )?;
-                    if !keep {
-                        return Ok(());
+                    )? {
+                        PhaseEnd::Continue => {}
+                        PhaseEnd::Shutdown => return Ok(SessionEnd::Shutdown),
+                        PhaseEnd::Lost => return Ok(lost()),
                     }
                 }
                 other => bail!("unexpected control message {other:?}"),
@@ -1223,8 +1534,9 @@ pub fn run_worker(join: &str) -> Result<()> {
 
 /// Execute one phase assignment end to end: decode the shipped state, form
 /// the data mesh, run the phase on its own thread (pumping heartbeats and
-/// relaying aborts from this one), and report the outcome. Returns `false`
-/// when the run is over and the process should exit.
+/// relaying aborts from this one), and report the outcome. The returned
+/// [`PhaseEnd`] tells the session loop whether to keep serving, exit, or
+/// enter the orphaned-worker hold.
 #[allow(clippy::too_many_arguments)]
 fn run_one_phase(
     prep: &Json,
@@ -1237,7 +1549,7 @@ fn run_one_phase(
     dataset: &SynthDataset,
     wire: Wire,
     worker_id: usize,
-) -> Result<bool> {
+) -> Result<PhaseEnd> {
     let seq = prep.get("seq")?.as_usize()? as u64;
     let rank = prep.get("rank")?.as_usize()?;
     let workers = prep.get("workers")?.as_usize()?;
@@ -1262,7 +1574,10 @@ fn run_one_phase(
                     .0;
             }
             Ok(Event::Control(..)) => continue, // straggler from the previous attempt
-            Ok(Event::Closed(_)) | Err(_) => bail!("lost the coordinator mid-prepare"),
+            Ok(Event::Closed(_)) | Err(_) => {
+                eprintln!("[worker {worker_id}] lost the coordinator mid-prepare");
+                return Ok(PhaseEnd::Lost);
+            }
         }
     };
 
@@ -1333,15 +1648,16 @@ fn run_one_phase(
                         // The attempt died before the mesh formed; report
                         // back as a victim and return to the idle loop.
                         send_failed(ctl, wbuf, seq, rank, true, "phase cancelled before start");
-                        return Ok(true);
+                        return Ok(PhaseEnd::Continue);
                     }
-                    "shutdown" => return Ok(false),
+                    "shutdown" => return Ok(PhaseEnd::Shutdown),
                     _ => {}
                 }
             }
             Ok(Event::Blob(..)) => {}
             Ok(Event::Closed(_)) | Err(mpsc::RecvTimeoutError::Disconnected) => {
-                bail!("lost the coordinator while waiting for start");
+                eprintln!("[worker {worker_id}] lost the coordinator while waiting for start");
+                return Ok(PhaseEnd::Lost);
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {}
         }
@@ -1508,9 +1824,9 @@ fn run_one_phase(
         }
     }
     if lost_coordinator {
-        bail!("lost the coordinator mid-phase");
+        return Ok(PhaseEnd::Lost);
     }
-    Ok(!shutdown)
+    Ok(if shutdown { PhaseEnd::Shutdown } else { PhaseEnd::Continue })
 }
 
 #[cfg(test)]
@@ -1526,6 +1842,8 @@ mod tests {
         b.workers_live = 4;
         b.recoveries = 1;
         b.rejoins = 2;
+        b.last_snapshot = Some(24);
+        b.journal_bytes = 512;
         b.ranks = vec![
             RankStatus {
                 worker: 0,
@@ -1549,6 +1867,11 @@ mod tests {
         assert_eq!(j.get("rejoins").unwrap().as_usize().unwrap(), 2);
         // NAN loss (no steps yet) serializes as null, not as invalid JSON.
         assert!(matches!(j.get("last_loss").unwrap(), Json::Null));
+        assert_eq!(j.get("last_snapshot").unwrap().as_usize().unwrap(), 24);
+        assert_eq!(j.get("journal_bytes").unwrap().as_usize().unwrap(), 512);
+        // A board with no snapshot yet serves null, not a bogus 0.
+        let fresh = Json::parse(&StatusBoard::new(1, 1).status_json()).unwrap();
+        assert!(matches!(fresh.get("last_snapshot").unwrap(), Json::Null));
         let ranks = j.get("ranks").unwrap().as_arr().unwrap();
         assert_eq!(ranks.len(), 2);
         assert_eq!(ranks[0].get("worker").unwrap().as_usize().unwrap(), 0);

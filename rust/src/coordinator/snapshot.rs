@@ -1,0 +1,370 @@
+//! Background snapshotter + durable-dir resume.
+//!
+//! The step loop never writes a snapshot itself: at a phase boundary the
+//! coordinator *offers* the boundary state (or, in process mode, the
+//! already-encoded checkpoint bytes rank 0 shipped) and moves on. A
+//! dedicated thread encodes, pushes the object through the
+//! [`StorageBackend`] with the PR-6 backoff retry loop, appends the
+//! `snapshot` record to the run journal, and garbage-collects old
+//! snapshots down to `keep_last` — in that order, so the journal never
+//! names a snapshot that is not durably in the store, and GC never runs
+//! ahead of the journal.
+//!
+//! Resume ([`latest_valid_snapshot`]) walks the `snap-*` objects newest
+//! first and returns the first one whose checksum verifies — a snapshot
+//! torn or corrupted mid-write costs one generation of progress, never
+//! the run.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context as _, Result};
+
+use crate::storage::{put_with_retry, snapshot_backoff, StorageBackend};
+
+use super::checkpoint::{self, CheckpointMeta};
+use super::journal::{Journal, Record};
+use super::worker::WorkerState;
+
+/// Key prefix of snapshot objects; the zero-padded step makes
+/// lexicographic order == step order.
+const SNAP_PREFIX: &str = "snap-";
+
+/// Object key of the snapshot at `step`.
+pub fn snapshot_key(step: u64) -> String {
+    format!("{SNAP_PREFIX}{step:08}.ckpt")
+}
+
+/// Counters the background thread maintains; surfaced in
+/// `TrainReport` and `/status`. All time is spent *off* the step path.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SnapshotStats {
+    /// Snapshots durably written.
+    pub written: usize,
+    /// Snapshots that failed even after the retry budget (the run
+    /// continues; the next boundary tries again).
+    pub failed: usize,
+    /// Wall seconds the background thread spent encoding + writing.
+    pub write_secs: f64,
+    /// Step of the newest durable snapshot.
+    pub last_step: Option<u64>,
+}
+
+enum Job {
+    /// Boundary state to encode and store (in-process mode).
+    State(Box<WorkerState>, CheckpointMeta),
+    /// Pre-encoded checkpoint bytes (process mode reuses rank 0's
+    /// boundary blob — already the exact on-disk format).
+    Bytes(Vec<u8>, CheckpointMeta),
+}
+
+/// Handle to the background snapshot thread.
+pub struct Snapshotter {
+    tx: Option<mpsc::Sender<Job>>,
+    handle: Option<JoinHandle<()>>,
+    stats: Arc<Mutex<SnapshotStats>>,
+    every_steps: usize,
+    keep_last: usize,
+    /// Step of the last snapshot *offered* (not necessarily durable yet) —
+    /// the cadence gate runs on the offering side.
+    last_offered: Option<u64>,
+}
+
+impl Snapshotter {
+    /// Spawn the background writer. `journal` (when present) receives a
+    /// `snapshot` record after each durable write.
+    pub fn start(
+        backend: Box<dyn StorageBackend>,
+        journal: Option<Arc<Mutex<Journal>>>,
+        every_steps: usize,
+        keep_last: usize,
+    ) -> Self {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let stats = Arc::new(Mutex::new(SnapshotStats::default()));
+        let stats_bg = stats.clone();
+        let keep = keep_last.max(1);
+        let handle = std::thread::Builder::new()
+            .name("snapshotter".to_string())
+            .spawn(move || {
+                let backoff = snapshot_backoff();
+                while let Ok(job) = rx.recv() {
+                    let t0 = Instant::now();
+                    let (bytes, meta) = match job {
+                        Job::Bytes(b, m) => (Ok(b), m),
+                        Job::State(st, m) => (checkpoint::encode(&st, m), m),
+                    };
+                    let outcome = bytes.and_then(|bytes| {
+                        let key = snapshot_key(meta.step);
+                        put_with_retry(&*backend, &key, &bytes, &backoff)?;
+                        if let Some(j) = &journal {
+                            j.lock().unwrap().append(&Record::Snapshot {
+                                step: meta.step,
+                                samples: meta.samples,
+                                key: key.clone(),
+                            })?;
+                        }
+                        gc_old_snapshots(&*backend, keep)?;
+                        Ok(())
+                    });
+                    let mut s = stats_bg.lock().unwrap();
+                    s.write_secs += t0.elapsed().as_secs_f64();
+                    match outcome {
+                        Ok(()) => {
+                            s.written += 1;
+                            s.last_step = Some(meta.step);
+                        }
+                        Err(e) => {
+                            s.failed += 1;
+                            eprintln!("snapshot at step {} failed: {e:#}", meta.step);
+                        }
+                    }
+                }
+            })
+            .expect("spawning the snapshotter thread");
+        Self {
+            tx: Some(tx),
+            handle: Some(handle),
+            stats,
+            every_steps,
+            keep_last: keep,
+            last_offered: None,
+        }
+    }
+
+    /// Cadence gate: the first boundary always snapshots; after that a
+    /// boundary snapshots when ≥ `every_steps` steps have passed since
+    /// the last offered one (`every_steps = 0` → every boundary).
+    fn due(&self, step: u64) -> bool {
+        match self.last_offered {
+            None => true,
+            Some(last) => step > last && (step - last) as usize >= self.every_steps,
+        }
+    }
+
+    /// Offer boundary state (in-process mode). Clones the state only when
+    /// a snapshot is actually due. Returns whether a job was enqueued.
+    pub fn offer_state(&mut self, state: &WorkerState, meta: CheckpointMeta) -> bool {
+        if !self.due(meta.step) {
+            return false;
+        }
+        self.last_offered = Some(meta.step);
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(Job::State(Box::new(state.clone()), meta));
+        }
+        true
+    }
+
+    /// Offer pre-encoded checkpoint bytes (process mode). The caller
+    /// clones the blob only after `due` says yes, via the closure.
+    pub fn offer_bytes(
+        &mut self,
+        meta: CheckpointMeta,
+        bytes: impl FnOnce() -> Vec<u8>,
+    ) -> bool {
+        if !self.due(meta.step) {
+            return false;
+        }
+        self.last_offered = Some(meta.step);
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(Job::Bytes(bytes(), meta));
+        }
+        true
+    }
+
+    /// Current counters (the background thread updates them as it goes).
+    pub fn stats(&self) -> SnapshotStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// The configured retention depth.
+    pub fn keep_last(&self) -> usize {
+        self.keep_last
+    }
+
+    /// Close the queue and wait for in-flight snapshots to land; returns
+    /// the final counters. Called once, after the run's final checkpoint
+    /// logic — never from the step path.
+    pub fn finish(mut self) -> SnapshotStats {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        *self.stats.lock().unwrap()
+    }
+}
+
+impl Drop for Snapshotter {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// All snapshot keys in the store, sorted ascending by step.
+pub fn list_snapshots(backend: &dyn StorageBackend) -> Result<Vec<String>> {
+    let mut keys = backend.list(SNAP_PREFIX)?;
+    keys.sort();
+    Ok(keys)
+}
+
+/// Delete snapshots beyond the newest `keep`.
+fn gc_old_snapshots(backend: &dyn StorageBackend, keep: usize) -> Result<()> {
+    let keys = list_snapshots(backend)?;
+    if keys.len() > keep {
+        for key in &keys[..keys.len() - keep] {
+            backend.delete(key)?;
+        }
+    }
+    Ok(())
+}
+
+/// Newest snapshot that decodes and checksums cleanly, or `None` when no
+/// valid snapshot exists. A corrupt or torn newer file is *skipped with a
+/// warning* — falling back to the previous generation is the whole point
+/// of keeping more than one.
+pub fn latest_valid_snapshot(
+    backend: &dyn StorageBackend,
+) -> Result<Option<(WorkerState, CheckpointMeta, String)>> {
+    let keys = list_snapshots(backend)?;
+    for key in keys.iter().rev() {
+        let bytes = match backend.get(key) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("snapshot {key} unreadable ({e:#}); falling back");
+                continue;
+            }
+        };
+        match checkpoint::decode(&bytes) {
+            Ok((state, meta)) => return Ok(Some((state, meta, key.clone()))),
+            Err(e) => {
+                eprintln!("snapshot {key} invalid ({e:#}); falling back to the previous one");
+            }
+        }
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostTensor;
+    use crate::storage::LocalDir;
+
+    fn scratch(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "flashsgd-snapshot-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn state(x: f32) -> WorkerState {
+        WorkerState {
+            params: vec![HostTensor::f32(vec![2], vec![x, x + 1.0])],
+            momenta: vec![HostTensor::f32(vec![2], vec![0.0, 0.0])],
+            bn_running: vec![],
+            bn_steps: 0,
+        }
+    }
+
+    fn store(dir: &std::path::Path) -> Box<dyn StorageBackend> {
+        Box::new(LocalDir::create(dir).unwrap())
+    }
+
+    #[test]
+    fn writes_snapshots_and_keeps_last() {
+        let dir = scratch("gc");
+        let mut s = Snapshotter::start(store(&dir), None, 0, 2);
+        for step in [4u64, 8, 12] {
+            let enq = s.offer_state(&state(step as f32), CheckpointMeta { step, samples: step * 16 });
+            assert!(enq);
+        }
+        let stats = s.finish();
+        assert_eq!(stats.written, 3);
+        assert_eq!(stats.failed, 0);
+        assert_eq!(stats.last_step, Some(12));
+        assert!(stats.write_secs >= 0.0);
+
+        let backend = store(&dir);
+        assert_eq!(
+            list_snapshots(&*backend).unwrap(),
+            vec![snapshot_key(8), snapshot_key(12)],
+            "keep_last = 2 must GC the oldest"
+        );
+        let (st, meta, key) = latest_valid_snapshot(&*backend).unwrap().unwrap();
+        assert_eq!(meta, CheckpointMeta { step: 12, samples: 192 });
+        assert_eq!(key, snapshot_key(12));
+        assert_eq!(st.params, state(12.0).params);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cadence_gates_on_every_steps() {
+        let dir = scratch("cadence");
+        let mut s = Snapshotter::start(store(&dir), None, 8, 4);
+        assert!(s.offer_state(&state(0.0), CheckpointMeta { step: 4, samples: 0 }));
+        // Only 4 steps since the last snapshot: not due yet.
+        assert!(!s.offer_state(&state(1.0), CheckpointMeta { step: 8, samples: 0 }));
+        assert!(s.offer_state(&state(2.0), CheckpointMeta { step: 12, samples: 0 }));
+        let stats = s.finish();
+        assert_eq!(stats.written, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_newest_snapshot_falls_back_to_previous() {
+        let dir = scratch("fallback");
+        let mut s = Snapshotter::start(store(&dir), None, 0, 4);
+        s.offer_state(&state(1.0), CheckpointMeta { step: 4, samples: 64 });
+        s.offer_state(&state(2.0), CheckpointMeta { step: 8, samples: 128 });
+        s.finish();
+
+        // Truncate the newest file mid-write (the crash signature).
+        let newest = dir.join(snapshot_key(8));
+        let bytes = std::fs::read(&newest).unwrap();
+        std::fs::write(&newest, &bytes[..bytes.len() / 2]).unwrap();
+
+        let backend = store(&dir);
+        let (st, meta, key) = latest_valid_snapshot(&*backend).unwrap().unwrap();
+        assert_eq!(key, snapshot_key(4), "must fall back past the corrupt newest");
+        assert_eq!(meta, CheckpointMeta { step: 4, samples: 64 });
+        assert_eq!(st.params, state(1.0).params);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn no_valid_snapshot_is_none_not_error() {
+        let dir = scratch("none");
+        let backend = store(&dir);
+        assert!(latest_valid_snapshot(&*backend).unwrap().is_none());
+        backend.put(&snapshot_key(4), b"garbage").unwrap();
+        assert!(latest_valid_snapshot(&*backend).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn journal_records_each_durable_snapshot() {
+        let dir = scratch("journal");
+        let (journal, _) = Journal::open(&dir).unwrap();
+        let journal = Arc::new(Mutex::new(journal));
+        let mut s = Snapshotter::start(store(&dir), Some(journal.clone()), 0, 4);
+        s.offer_state(&state(1.0), CheckpointMeta { step: 4, samples: 64 });
+        s.finish();
+
+        let replay = Journal::replay_dir(&dir).unwrap();
+        assert_eq!(
+            replay.records,
+            vec![Record::Snapshot {
+                step: 4,
+                samples: 64,
+                key: snapshot_key(4),
+            }]
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

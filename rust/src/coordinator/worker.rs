@@ -56,6 +56,45 @@ use crate::util::timer::Stopwatch;
 
 use super::metrics::{EvalMetric, Metrics, StepMetric};
 
+/// Typed numeric-health failure: a step's reduced loss or gradient norm
+/// came back NaN/Inf. Like [`crate::collectives::MeshError`], it travels
+/// through normal `Result` chains and is found with `downcast_ref`, so
+/// the coordinator can distinguish "the math broke" (deterministic —
+/// a replay would reproduce it, so don't burn restarts on it) from "a
+/// rank died" (recoverable). All ranks observe the same reduced values,
+/// so every rank raises this in lockstep — no one is left stranded in a
+/// collective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NonFiniteError {
+    /// Rank reporting the failure (every rank reports; the reduction made
+    /// the poison global, whichever rank originated it).
+    pub rank: usize,
+    /// Global optimizer step at which the value went non-finite.
+    pub step: usize,
+    /// Which quantity broke: "step loss" or "reduced gradient norm".
+    pub what: &'static str,
+}
+
+impl std::fmt::Display for NonFiniteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "non-finite {} at rank {} step {} (NaN/Inf — training on garbage)",
+            self.what, self.rank, self.step
+        )
+    }
+}
+
+impl std::error::Error for NonFiniteError {}
+
+/// Is this failure the numeric health guard firing? Checks the typed
+/// payload first; falls back to the rendered chain so the verdict
+/// survives a process boundary (the remote worker ships its error as a
+/// string in the `failed` frame).
+pub(crate) fn error_is_non_finite(err: &anyhow::Error) -> bool {
+    err.downcast_ref::<NonFiniteError>().is_some() || format!("{err:#}").contains("non-finite")
+}
+
 /// Static per-phase context shared by all workers.
 pub struct PhaseCtx {
     pub arch: ArchManifest,
@@ -318,6 +357,7 @@ pub fn run_phase(
             // covers the compute-heavy stretch between collectives).
             ep.heartbeat();
             // Deterministic fault injection: this rank dies here, this attempt.
+            let mut poison_loss = false;
             if let Some(inj) = ctx.fault.inject {
                 if inj.fires(ctx.attempt, rank, global_step) {
                     match inj.kind {
@@ -332,6 +372,12 @@ pub fn run_phase(
                         }
                         FaultKind::Error => {
                             bail!("injected fault: rank {rank} dies at step {global_step}")
+                        }
+                        FaultKind::NanLoss => {
+                            // Poison this rank's local loss below; the FP32
+                            // reduction makes it global, and the health guard
+                            // must trip on every rank.
+                            poison_loss = true;
                         }
                     }
                 }
@@ -367,6 +413,10 @@ pub fn run_phase(
             };
             staging.begin();
             let mut pending_applies = Vec::with_capacity(plan.len());
+            // Numeric health: ‖reduced grad‖² accumulated in f64 across the
+            // buckets — identical on every rank (the reduction is), so a
+            // NaN/Inf trips the guard below on all ranks in lockstep.
+            let mut grad_norm_sq = 0.0f64;
             let mut t_compute = 0.0f64; // stalled on the backward pass
             let mut t_comm = 0.0f64; // exposed communication
             let mut t_comm_hidden = 0.0f64; // reductions overlapped with backprop
@@ -406,6 +456,7 @@ pub fn run_phase(
                 tag += span;
                 for g in flat.iter_mut() {
                     *g *= inv_n;
+                    grad_norm_sq += f64::from(*g) * f64::from(*g);
                 }
                 let reduce_secs = red0.elapsed().as_secs_f64();
                 let grads = staging.take_bucket(&plan, k)?;
@@ -442,7 +493,11 @@ pub fn run_phase(
             }
             batch.images = img_back.into_f32()?;
             batch.labels = lab_back.into_i32()?;
-            let loss_local = outs[0].scalar()?;
+            let loss_local = if poison_loss {
+                f32::NAN
+            } else {
+                outs[0].scalar()?
+            };
             let bn_stats = &outs[1..1 + n_bn];
 
             // 4. BN-stat all-reduce (FP32 wire, paper §3.2). The scalar step
@@ -459,6 +514,29 @@ pub fn run_phase(
                 *s *= inv_n;
             }
             t_comm += bn0.elapsed().as_secs_f64();
+
+            // Numeric health guard: a NaN/Inf in the reduced loss or the
+            // reduced gradient norm means the run is training on garbage —
+            // fail loudly, naming rank and step. Both quantities are
+            // post-reduction and therefore identical on every rank, so all
+            // ranks bail here together (after the step's last collective):
+            // no peer is left blocking in a mesh that will never drain.
+            if !loss_mean.is_finite() {
+                return Err(NonFiniteError {
+                    rank,
+                    step: global_step,
+                    what: "step loss",
+                }
+                .into());
+            }
+            if !grad_norm_sq.is_finite() {
+                return Err(NonFiniteError {
+                    rank,
+                    step: global_step,
+                    what: "reduced gradient norm",
+                }
+                .into());
+            }
             // Synced-stat aggregate for the eval path. The paper's "BN without
             // moving average" uses *current* statistics; for evaluation we keep
             // a recent-weighted EMA of the cross-worker synced stats (early-

@@ -62,6 +62,27 @@
 //! stream. `simnet::ClusterModel::recovery_time` prices the
 //! detect + re-plan + replay cost. See `README.md` § Fault tolerance.
 //!
+//! The stack is also **durable**: a run with `[checkpoint] dir` set keeps
+//! a write-ahead **run journal** (`coordinator::journal` — an
+//! append-only, fletcher-64-checksummed record of the config hash, phase
+//! starts, recoveries, rejoins and snapshot completions, fsynced before
+//! the action it describes takes effect) and writes **periodic
+//! phase-boundary snapshots on a background thread** through the
+//! pluggable [`storage::StorageBackend`] trait (`storage::LocalDir`
+//! today, S3-shaped later), so the step loop never stalls on disk.
+//! `flashsgd coordinator --resume <dir>` (or `train --resume <dir>`)
+//! replays the journal plus the latest *valid* snapshot — a corrupt
+//! newest file falls back to the previous good one — reconstructs the
+//! exact phase/step/sample position via the same `seek_samples`
+//! machinery the in-process resume uses, and re-admits **orphaned
+//! workers**, which hold their mesh for `[fault] coordinator_grace_ms`
+//! and re-register through the join door instead of exiting. The
+//! invariant, enforced in CI: a SIGKILL'd-and-resumed run's final
+//! checkpoint is byte-identical to an undisturbed run's.
+//! `simnet::ClusterModel::restart_time` prices the coordinator-restart
+//! path (detect + resume + replay-from-snapshot). See `README.md`
+//! § Durable runs.
+//!
 //! Python never runs at training time under either backend; the
 //! coordinator drives everything from Rust worker threads.
 //!
@@ -78,6 +99,7 @@ pub mod repro;
 pub mod runtime;
 pub mod sched;
 pub mod simnet;
+pub mod storage;
 pub mod util;
 
 /// Locate the AOT artifacts directory: `$FLASHSGD_ARTIFACTS`, then
@@ -114,4 +136,5 @@ pub mod prelude {
     };
     pub use crate::sched::{BatchSchedule, LrSchedule, Phase};
     pub use crate::simnet::{Algo, ClusterModel};
+    pub use crate::storage::{LocalDir, StorageBackend};
 }

@@ -133,9 +133,10 @@ USAGE:
   flashsgd train [--preset quickstart | --twin <run> | --config <file>]
                  [--ranks N] [--epochs E] [--arch tiny]
                  [--steps N] [--collective torus|ring|hierarchical:<g>|halving-doubling]
-                 [--csv out.csv] [--save ckpt] [--resume ckpt]
+                 [--csv out.csv] [--save ckpt] [--resume <ckpt|durable-dir>]
                  [--artifacts DIR   (pjrt feature only; default backend is pure Rust)]
   flashsgd coordinator --config <file> [--bind addr] [--http addr] [--save ckpt]
+                       [--resume <ckpt|durable-dir>   (replay journal + newest snapshot)]
   flashsgd worker [--join addr   (default 127.0.0.1:7070)]
   flashsgd simulate [--gpus N] [--batch B] [--collective ...]
   flashsgd reproduce --table 1|2|3|4|5|6
@@ -212,7 +213,8 @@ fn cmd_coordinator(args: &Args) -> Result<()> {
         config.transport.http = http.to_string();
     }
     let save = args.get("save").map(std::path::Path::new);
-    let report = flashsgd::coordinator::remote::run_coordinator(&config, &text, save)?;
+    let resume = args.get("resume").map(std::path::Path::new);
+    let report = flashsgd::coordinator::remote::run_coordinator(&config, &text, save, resume)?;
     println!("{}", report.format());
     for (step, loss) in report.metrics.loss_curve(10) {
         println!("  step {step:>5}  loss {loss:.4}");

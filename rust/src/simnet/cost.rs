@@ -283,6 +283,31 @@ impl RejoinCost {
     }
 }
 
+/// Wall-clock cost of one coordinator crash/resume event: the whole
+/// cluster idles through the coordinator's down time, the restarted
+/// process replays the run journal and restores the newest snapshot, and
+/// the interrupted phase replays from that snapshot's boundary. See
+/// [`ClusterModel::restart_time`].
+#[derive(Debug, Clone)]
+pub struct RestartCost {
+    /// Coordinator down time: crash-to-restart latency (supervisor /
+    /// operator), during which the orphaned workers hold in their
+    /// `fault.coordinator_grace` window.
+    pub detect_secs: f64,
+    /// Journal replay + snapshot restore + re-registering the held
+    /// workers and re-shipping the restored FP32 state to full width.
+    pub resume_secs: f64,
+    /// Re-running the steps between the restored snapshot and the crash —
+    /// the work the snapshot cadence (`[checkpoint] every_steps`) forfeits.
+    pub replay_secs: f64,
+}
+
+impl RestartCost {
+    pub fn total_secs(&self) -> f64 {
+        self.detect_secs + self.resume_secs + self.replay_secs
+    }
+}
+
 /// Coordinator-side control latency of a re-plan (tiny JSON frames, one
 /// round trip per rank) — shared by the recovery and rejoin models.
 const REPLAN_CONTROL_SECS: f64 = 0.05;
@@ -440,6 +465,40 @@ impl ClusterModel {
         RejoinCost {
             wait_secs: rank_timeout_secs + rejoin_grace_secs,
             replan_secs,
+            replay_secs: replay_steps as f64 * step,
+        }
+    }
+
+    /// Price one coordinator crash/resume event: like
+    /// [`Self::rejoin_time`], but the dead process is the *coordinator* —
+    /// the durability tentpole's scenario. The cluster idles for
+    /// `coordinator_down_secs` (the workers hold under
+    /// `fault.coordinator_grace`), the restarted coordinator replays the
+    /// journal and restores the newest snapshot (control work plus one
+    /// full-state redistribution to the restored full-width mesh), then
+    /// replays the `replay_steps` between that snapshot and the crash.
+    /// Sweeping `replay_steps` against the snapshot cadence prices the
+    /// `[checkpoint] every_steps` overhead/recovery trade directly.
+    #[allow(clippy::too_many_arguments)]
+    pub fn restart_time(
+        &self,
+        algo: Algo,
+        ranks: usize,
+        per_worker_batch: usize,
+        grad_bytes: f64,
+        bn_bytes: f64,
+        replay_steps: usize,
+        coordinator_down_secs: f64,
+    ) -> RestartCost {
+        let state_bytes = 4.0 * grad_bytes; // fp32 params + momenta vs fp16 grads
+        let resume_secs = REPLAN_CONTROL_SECS
+            + self.collective_cost(algo, ranks, state_bytes).total_secs();
+        let step = self
+            .step_time(algo, ranks, per_worker_batch, grad_bytes, bn_bytes)
+            .total_secs();
+        RestartCost {
+            detect_secs: coordinator_down_secs,
+            resume_secs,
             replay_secs: replay_steps as f64 * step,
         }
     }
@@ -835,6 +894,62 @@ mod tests {
         assert_eq!(r0.replay_secs, 0.0);
         assert_eq!(r0.wait_secs, 30.0);
         assert!(r0.total_secs() < r.total_secs());
+    }
+
+    /// Coordinator crash/resume cost decomposes additively, the replay is
+    /// priced at full width (the held workers all come back), and the
+    /// replay term scales one-for-one with the snapshot gap — the knob
+    /// `[checkpoint] every_steps` controls.
+    #[test]
+    fn restart_time_decomposition() {
+        let m = ClusterModel::abci_v100();
+        let algo = torus_at(1024);
+        let r = m.restart_time(
+            algo,
+            1024,
+            32,
+            RESNET50_GRAD_BYTES_FP16,
+            RESNET50_BN_BYTES_FP32,
+            100,
+            10.0,
+        );
+        assert_eq!(r.detect_secs, 10.0);
+        assert!((r.total_secs() - (r.detect_secs + r.resume_secs + r.replay_secs)).abs() < 1e-12);
+        // replay = steps-since-snapshot × full-width step time, exactly
+        let step = m
+            .step_time(algo, 1024, 32, RESNET50_GRAD_BYTES_FP16, RESNET50_BN_BYTES_FP32)
+            .total_secs();
+        assert!((r.replay_secs - 100.0 * step).abs() < 1e-9);
+        // resume pays the control constant plus a full-state (4× fp16
+        // grads) redistribution — strictly more than one gradient window
+        let one_grad = m
+            .collective_cost(algo, 1024, RESNET50_GRAD_BYTES_FP16)
+            .total_secs();
+        assert!(r.resume_secs > one_grad);
+        // a snapshot at every boundary (zero gap) leaves only the outage
+        // and the resume work — the durability subsystem's floor
+        let r0 = m.restart_time(
+            algo,
+            1024,
+            32,
+            RESNET50_GRAD_BYTES_FP16,
+            RESNET50_BN_BYTES_FP32,
+            0,
+            10.0,
+        );
+        assert_eq!(r0.replay_secs, 0.0);
+        assert!(r0.total_secs() < r.total_secs());
+        // halving the snapshot cadence halves the expected replay term
+        let r_half = m.restart_time(
+            algo,
+            1024,
+            32,
+            RESNET50_GRAD_BYTES_FP16,
+            RESNET50_BN_BYTES_FP32,
+            50,
+            10.0,
+        );
+        assert!((r.replay_secs - 2.0 * r_half.replay_secs).abs() < 1e-9);
     }
 
     #[test]

@@ -20,7 +20,8 @@ pub mod linkmodel;
 
 pub use compute::{ComputeModel, RESNET50_BN_BYTES_FP32, RESNET50_GRAD_BYTES_FP16};
 pub use cost::{
-    Algo, ClusterModel, CollectiveCost, OverlappedStep, RecoveryCost, RejoinCost, StepBreakdown,
+    Algo, ClusterModel, CollectiveCost, OverlappedStep, RecoveryCost, RejoinCost, RestartCost,
+    StepBreakdown,
 };
 pub use event::{simulate_collective, simulate_collective_events};
 pub use linkmodel::LinkModel;

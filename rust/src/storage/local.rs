@@ -1,0 +1,167 @@
+//! Local-directory [`StorageBackend`]: one object per file under a root
+//! directory, with the same tmp-write + fsync + rename discipline as
+//! `coordinator::checkpoint::save` so a crash mid-`put` never leaves a
+//! partially visible object.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context as _, Result};
+
+use super::StorageBackend;
+
+/// Suffix of in-flight temp files; `list` hides them so a reader never
+/// mistakes a write in progress for an object.
+const TMP_SUFFIX: &str = ".inflight";
+
+#[derive(Debug, Clone)]
+pub struct LocalDir {
+    root: PathBuf,
+}
+
+impl LocalDir {
+    /// Open `root` as a store, creating the directory if needed.
+    pub fn create(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        fs::create_dir_all(&root)
+            .with_context(|| format!("creating storage dir {}", root.display()))?;
+        Ok(Self { root })
+    }
+
+    /// The directory this store writes into.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Keys are single path components: a key that is empty, contains a
+    /// separator, or names `.`/`..` could escape the root, so reject it
+    /// here once for every verb.
+    fn path_for(&self, key: &str) -> Result<PathBuf> {
+        if key.is_empty()
+            || key == "."
+            || key == ".."
+            || key.contains('/')
+            || key.contains('\\')
+            || key.ends_with(TMP_SUFFIX)
+        {
+            bail!("invalid storage key '{key}'");
+        }
+        Ok(self.root.join(key))
+    }
+}
+
+impl StorageBackend for LocalDir {
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        let path = self.path_for(key)?;
+        let tmp = self.root.join(format!("{key}{TMP_SUFFIX}"));
+        {
+            let mut f = fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(bytes)
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            // Durability point: the bytes must be on disk *before* the
+            // rename publishes them, or a crash could publish garbage.
+            f.sync_all()
+                .with_context(|| format!("syncing {}", tmp.display()))?;
+        }
+        fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing {}", path.display()))?;
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        let path = self.path_for(key)?;
+        fs::read(&path).with_context(|| format!("reading {}", path.display()))
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        let mut keys = Vec::new();
+        let entries = fs::read_dir(&self.root)
+            .with_context(|| format!("listing {}", self.root.display()))?;
+        for entry in entries {
+            let entry = entry.with_context(|| format!("listing {}", self.root.display()))?;
+            let name = match entry.file_name().into_string() {
+                Ok(n) => n,
+                Err(_) => continue, // non-UTF-8 names are never our objects
+            };
+            if name.ends_with(TMP_SUFFIX) || !name.starts_with(prefix) {
+                continue;
+            }
+            if entry.file_type().map(|t| t.is_file()).unwrap_or(false) {
+                keys.push(name);
+            }
+        }
+        Ok(keys)
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        let path = self.path_for(key)?;
+        match fs::remove_file(&path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e).with_context(|| format!("deleting {}", path.display())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "flashsgd-localdir-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn put_get_list_delete_round_trip() {
+        let root = scratch("roundtrip");
+        let store = LocalDir::create(&root).unwrap();
+        store.put("snap-00000004.ckpt", b"abc").unwrap();
+        store.put("snap-00000008.ckpt", b"defg").unwrap();
+        store.put("other.bin", b"x").unwrap();
+
+        assert_eq!(store.get("snap-00000004.ckpt").unwrap(), b"abc");
+
+        let mut snaps = store.list("snap-").unwrap();
+        snaps.sort();
+        assert_eq!(snaps, vec!["snap-00000004.ckpt", "snap-00000008.ckpt"]);
+
+        store.delete("snap-00000004.ckpt").unwrap();
+        // Deleting a missing key is fine — GC races are benign.
+        store.delete("snap-00000004.ckpt").unwrap();
+        assert_eq!(store.list("snap-").unwrap(), vec!["snap-00000008.ckpt"]);
+
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn put_replaces_atomically_and_hides_inflight() {
+        let root = scratch("atomic");
+        let store = LocalDir::create(&root).unwrap();
+        store.put("obj", b"v1").unwrap();
+        store.put("obj", b"v2-longer").unwrap();
+        assert_eq!(store.get("obj").unwrap(), b"v2-longer");
+
+        // A stale in-flight temp (crash mid-put) is invisible to list.
+        fs::write(root.join(format!("torn{TMP_SUFFIX}")), b"partial").unwrap();
+        assert_eq!(store.list("").unwrap(), vec!["obj"]);
+
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn rejects_escaping_keys() {
+        let root = scratch("keys");
+        let store = LocalDir::create(&root).unwrap();
+        for bad in ["", ".", "..", "a/b", "a\\b", "x.inflight"] {
+            assert!(store.put(bad, b"x").is_err(), "key '{bad}' must be rejected");
+        }
+        let _ = fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,201 @@
+//! Pluggable checkpoint/snapshot storage (ROADMAP item 4's I/O plane).
+//!
+//! The durability layer never talks to the filesystem directly — it goes
+//! through [`StorageBackend`], a four-verb object store shaped like S3
+//! (`put`/`get`/`list`/`delete` on flat string keys). [`LocalDir`] is the
+//! only implementation today; an S3-shaped backend can slot in later
+//! without touching the snapshot or resume code.
+//!
+//! Writes are where durability lives, so they get two extra guarantees:
+//!
+//! * **Atomicity** — [`LocalDir::put`] writes a temp file, fsyncs it, and
+//!   renames it into place, so a crash mid-write can never leave a
+//!   half-visible object (a torn snapshot shows up as *absent*, not
+//!   corrupt — though resume tolerates corrupt too; see
+//!   `coordinator::journal`).
+//! * **Retry** — [`put_with_retry`] wraps `put` in the PR-6
+//!   [`BackoffConfig`] jittered-backoff loop, so a transient I/O error
+//!   (full pipe, NFS hiccup) costs a delay instead of a lost snapshot.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::collectives::transport::BackoffConfig;
+
+pub mod local;
+
+pub use local::LocalDir;
+
+/// Deterministic-jitter salt for snapshot-write retries (cf. the dial
+/// salt `0x10_1D` in `coordinator::remote`).
+const PUT_RETRY_SALT: u64 = 0x57_0F_A6E;
+
+/// A flat key/value object store. Keys are plain relative names (no `/`
+/// semantics are promised beyond what [`list`](StorageBackend::list)'s
+/// prefix match gives you); values are opaque byte blobs.
+///
+/// Implementations must be safe to call from a background thread while
+/// the training loop runs — the snapshotter holds one behind an `Arc`.
+pub trait StorageBackend: Send + Sync {
+    /// Store `bytes` under `key`, replacing any existing object. Must be
+    /// atomic: a reader (or a crash) sees either the old object or the
+    /// complete new one, never a prefix.
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()>;
+
+    /// Fetch the object under `key`.
+    fn get(&self, key: &str) -> Result<Vec<u8>>;
+
+    /// All keys starting with `prefix`, in unspecified order.
+    fn list(&self, prefix: &str) -> Result<Vec<String>>;
+
+    /// Remove the object under `key`. Deleting a missing key is not an
+    /// error (delete is the GC verb; races with a concurrent GC are
+    /// benign).
+    fn delete(&self, key: &str) -> Result<()>;
+}
+
+/// `put` with the transport's jittered exponential backoff on failure.
+/// Returns the number of attempts that were needed (1 = first try).
+pub fn put_with_retry(
+    backend: &dyn StorageBackend,
+    key: &str,
+    bytes: &[u8],
+    backoff: &BackoffConfig,
+) -> Result<u32> {
+    let mut last_err = None;
+    for attempt in 0..backoff.attempts.max(1) {
+        match backend.put(key, bytes) {
+            Ok(()) => return Ok(attempt + 1),
+            Err(e) => {
+                last_err = Some(e);
+                if attempt + 1 < backoff.attempts.max(1) {
+                    std::thread::sleep(backoff.delay(attempt, PUT_RETRY_SALT));
+                }
+            }
+        }
+    }
+    Err(last_err
+        .unwrap_or_else(|| anyhow::anyhow!("storage put failed with zero attempts configured"))
+        .context(format!("storing '{key}' after {} attempts", backoff.attempts.max(1))))
+}
+
+/// Resolve a storage spec to a backend. A plain path or a `file://` URL
+/// maps to [`LocalDir`] (created if absent); any other scheme is
+/// rejected here, in one place, so adding `s3://` later is a one-arm
+/// change.
+pub fn open_backend(spec: &str) -> Result<Box<dyn StorageBackend>> {
+    if let Some(rest) = spec.strip_prefix("file://") {
+        return Ok(Box::new(LocalDir::create(rest)?));
+    }
+    if let Some((scheme, _)) = spec.split_once("://") {
+        anyhow::bail!("unsupported storage scheme '{scheme}://' (only local paths and file:// are available)");
+    }
+    Ok(Box::new(LocalDir::create(spec)?))
+}
+
+/// The local filesystem path behind a storage spec (a plain path or a
+/// `file://` URL) — where file-bound artifacts like the run journal
+/// live, next to the backend's objects.
+pub fn local_path(spec: &str) -> &std::path::Path {
+    std::path::Path::new(spec.strip_prefix("file://").unwrap_or(spec))
+}
+
+/// A conservative backoff for snapshot writes: fewer attempts than a
+/// dial (the run can make progress without this snapshot; the *next*
+/// one will try again) but the same growth curve.
+pub fn snapshot_backoff() -> BackoffConfig {
+    BackoffConfig {
+        base: Duration::from_millis(50),
+        max: Duration::from_millis(1000),
+        attempts: 5,
+        jitter: 0.25,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+    use std::sync::Mutex;
+
+    /// A backend that fails the first `fail_first` puts, for retry tests.
+    struct Flaky {
+        fail_first: u32,
+        calls: AtomicU32,
+        stored: Mutex<Vec<(String, Vec<u8>)>>,
+    }
+
+    impl StorageBackend for Flaky {
+        fn put(&self, key: &str, bytes: &[u8]) -> Result<()> {
+            let n = self.calls.fetch_add(1, Ordering::SeqCst);
+            if n < self.fail_first {
+                anyhow::bail!("injected put failure #{n}");
+            }
+            self.stored.lock().unwrap().push((key.to_string(), bytes.to_vec()));
+            Ok(())
+        }
+        fn get(&self, _key: &str) -> Result<Vec<u8>> {
+            anyhow::bail!("not used")
+        }
+        fn list(&self, _prefix: &str) -> Result<Vec<String>> {
+            Ok(Vec::new())
+        }
+        fn delete(&self, _key: &str) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    fn fast_backoff(attempts: u32) -> BackoffConfig {
+        BackoffConfig {
+            base: Duration::from_millis(1),
+            max: Duration::from_millis(2),
+            attempts,
+            jitter: 0.0,
+        }
+    }
+
+    #[test]
+    fn put_with_retry_survives_transient_failures() {
+        let b = Flaky {
+            fail_first: 2,
+            calls: AtomicU32::new(0),
+            stored: Mutex::new(Vec::new()),
+        };
+        let attempts = put_with_retry(&b, "k", b"v", &fast_backoff(5)).unwrap();
+        assert_eq!(attempts, 3);
+        let stored = b.stored.lock().unwrap();
+        assert_eq!(stored.as_slice(), &[("k".to_string(), b"v".to_vec())]);
+    }
+
+    #[test]
+    fn put_with_retry_gives_up_after_budget() {
+        let b = Flaky {
+            fail_first: u32::MAX,
+            calls: AtomicU32::new(0),
+            stored: Mutex::new(Vec::new()),
+        };
+        let err = put_with_retry(&b, "k", b"v", &fast_backoff(3)).unwrap_err();
+        assert!(err.to_string().contains("storing 'k' after 3 attempts"), "{err}");
+        assert_eq!(b.calls.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn open_backend_rejects_unknown_schemes() {
+        let err = open_backend("s3://bucket/prefix").unwrap_err();
+        assert!(err.to_string().contains("unsupported storage scheme 's3://'"), "{err}");
+    }
+
+    #[test]
+    fn open_backend_accepts_paths_and_file_urls() {
+        let dir = std::env::temp_dir().join(format!("flashsgd-storage-open-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let plain = open_backend(dir.join("plain").to_str().unwrap()).unwrap();
+        plain.put("a", b"1").unwrap();
+        let url = open_backend(&format!("file://{}", dir.join("url").display())).unwrap();
+        url.put("b", b"2").unwrap();
+        assert_eq!(plain.get("a").unwrap(), b"1");
+        assert_eq!(url.get("b").unwrap(), b"2");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,242 @@
+//! Coordinator crash/resume, end to end over real OS processes: a durable
+//! cluster's coordinator is SIGKILLed mid-run, the orphaned workers hold
+//! in their `fault.coordinator_grace_ms` window and re-dial, a fresh
+//! `flashsgd coordinator --resume <dir>` replays the run journal plus the
+//! newest snapshot — and the final checkpoint must be **byte-identical**
+//! to an undisturbed memory-mode run's.
+//!
+//! This is the durability tentpole's acceptance test. It drives the real
+//! binary (`CARGO_BIN_EXE_flashsgd`), the real control socket, the real
+//! write-ahead journal and snapshot files on disk, and a real `kill -9`.
+
+use std::io::Read;
+use std::process::{Child, Command, Stdio};
+use std::thread;
+use std::time::{Duration, Instant};
+
+const BIN: &str = env!("CARGO_BIN_EXE_flashsgd");
+const N_WORKERS: usize = 4;
+
+// Distinct from rejoin_process.rs's 7093-7096 so the two process suites
+// can never collide on a lingering socket.
+const BIND: &str = "127.0.0.1:7097";
+const HTTP: &str = "127.0.0.1:7098";
+
+/// Two phases; the boundary between them is where the snapshot lands.
+/// Phase 1 is a full two epochs (24 steps) so the SIGKILL — fired the
+/// moment the boundary snapshot appears on disk — lands mid-phase.
+fn config_text(snap_dir: Option<&std::path::Path>) -> String {
+    let durable = match snap_dir {
+        Some(dir) => format!(
+            "\n[checkpoint]\nevery_steps = 0\nkeep_last = 2\ndir = \"{}\"\n",
+            dir.display()
+        ),
+        None => String::new(),
+    };
+    format!(
+        r#"
+name = "durable-smoke"
+arch = "tiny"
+collective = "torus:2x2"
+grad_wire = "fp16"
+label_smoothing = 0.1
+weight_decay = 5e-5
+seed = 11
+epochs = 3
+train_size = 384
+eval_every = 0
+eval_batches = 2
+bucket_bytes = 8192
+
+[lr]
+kind = "const"
+value = 1.0
+momentum = 0.9
+
+[batch]
+phases = [[0, 4, 4], [1, 8, 4]]
+
+[transport]
+mode = "tcp"
+bind = "{BIND}"
+http = "{HTTP}"
+
+[fault]
+enabled = true
+heartbeat_interval_ms = 50
+rank_timeout_ms = 10000
+max_restarts = 3
+rejoin_grace_ms = 20000
+coordinator_grace_ms = 120000
+{durable}"#
+    )
+}
+
+fn spawn_worker() -> Child {
+    Command::new(BIN)
+        .args(["worker", "--join", BIND])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning a worker process")
+}
+
+fn spawn_coordinator(cfg: &std::path::Path, ckpt: &std::path::Path, resume: Option<&std::path::Path>) -> Child {
+    let mut args = vec![
+        "coordinator".to_string(),
+        "--config".into(),
+        cfg.to_str().unwrap().into(),
+        "--save".into(),
+        ckpt.to_str().unwrap().into(),
+    ];
+    if let Some(dir) = resume {
+        args.push("--resume".into());
+        args.push(dir.to_str().unwrap().into());
+    }
+    Command::new(BIN)
+        .args(&args)
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawning the coordinator")
+}
+
+/// First `snap-*.ckpt` visible in the durable dir, if any.
+fn snapshot_on_disk(dir: &std::path::Path) -> Option<String> {
+    let entries = std::fs::read_dir(dir).ok()?;
+    entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .find(|n| n.starts_with("snap-") && n.ends_with(".ckpt"))
+}
+
+/// Bounded wait for a process; panics (after killing the stragglers) if
+/// the deadline passes, so a wedged cluster fails CI instead of hanging.
+fn wait_bounded(coord: &mut Child, workers: &mut [Child], secs: u64) -> std::process::ExitStatus {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    loop {
+        match coord.try_wait().expect("polling the coordinator") {
+            Some(st) => return st,
+            None if Instant::now() > deadline => {
+                let _ = coord.kill();
+                for w in workers.iter_mut() {
+                    let _ = w.kill();
+                }
+                panic!("coordinator did not finish within {secs}s");
+            }
+            None => thread::sleep(Duration::from_millis(50)),
+        }
+    }
+}
+
+fn reap(workers: &mut [Child]) {
+    for w in workers.iter_mut() {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            match w.try_wait() {
+                Ok(Some(_)) => break,
+                _ if Instant::now() > deadline => {
+                    let _ = w.kill();
+                    let _ = w.wait();
+                    break;
+                }
+                _ => thread::sleep(Duration::from_millis(20)),
+            }
+        }
+    }
+}
+
+fn drain_stderr(child: &mut Child) -> String {
+    let mut s = String::new();
+    if let Some(mut pipe) = child.stderr.take() {
+        let _ = pipe.read_to_string(&mut s);
+    }
+    s
+}
+
+#[test]
+fn sigkilled_coordinator_resumes_byte_identical() {
+    let dir = std::env::temp_dir().join(format!("flashsgd-durable-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let snaps = dir.join("snaps");
+
+    // Undisturbed baseline: the same schedule in memory mode (the `train`
+    // subcommand ignores [transport]; no [checkpoint] section, so no
+    // journal exists to collide with the cluster's).
+    let cfg_base = dir.join("base.toml");
+    std::fs::write(&cfg_base, config_text(None)).unwrap();
+    let base_ckpt = dir.join("base.ckpt");
+    let st = Command::new(BIN)
+        .args([
+            "train",
+            "--config",
+            cfg_base.to_str().unwrap(),
+            "--save",
+            base_ckpt.to_str().unwrap(),
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .status()
+        .expect("running the memory-mode baseline");
+    assert!(st.success(), "baseline run failed");
+
+    // Durable cluster: coordinator + 4 workers, journal + snapshots on.
+    let cfg = dir.join("durable.toml");
+    std::fs::write(&cfg, config_text(Some(&snaps))).unwrap();
+    let final_ckpt = dir.join("resumed.ckpt");
+    let mut coord = spawn_coordinator(&cfg, &final_ckpt, None);
+    let mut workers: Vec<Child> = (0..N_WORKERS).map(|_| spawn_worker()).collect();
+
+    // Pull the plug the moment the phase-boundary snapshot is durable on
+    // disk: phase 1 (24 steps) has only just started, so the kill lands
+    // mid-phase with real progress in the journal behind it.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        assert!(
+            Instant::now() < deadline,
+            "no snapshot ever appeared in {}",
+            snaps.display()
+        );
+        if snapshot_on_disk(&snaps).is_some() {
+            break;
+        }
+        thread::sleep(Duration::from_millis(5));
+    }
+    assert!(
+        coord.try_wait().expect("polling the coordinator").is_none(),
+        "coordinator finished before the kill — lengthen the schedule"
+    );
+    coord.kill().expect("SIGKILLing the coordinator");
+    let _ = coord.wait();
+
+    // The orphaned workers are now inside their 120 s coordinator_grace
+    // window, re-dialing the join address. Restart the coordinator with
+    // --resume: it replays the journal, restores the newest snapshot,
+    // re-registers the held workers, and finishes the run.
+    let mut coord2 = spawn_coordinator(&cfg, &final_ckpt, Some(&snaps));
+    let status = wait_bounded(&mut coord2, &mut workers, 300);
+    reap(&mut workers);
+    let stderr = drain_stderr(&mut coord2);
+    assert!(
+        status.success(),
+        "resumed coordinator failed; stderr:\n{stderr}"
+    );
+    assert!(
+        stderr.contains("[resume] restored snapshot"),
+        "the resume never restored a snapshot; stderr:\n{stderr}"
+    );
+
+    // The invariant the whole subsystem exists for: a SIGKILL-and-resume
+    // run ends bit-identical to one that was never disturbed.
+    let base = std::fs::read(&base_ckpt).expect("baseline checkpoint");
+    let resumed = std::fs::read(&final_ckpt).expect("resumed checkpoint");
+    assert_eq!(
+        base, resumed,
+        "crash/resume changed the final checkpoint: the replay did not \
+         restore the boundary state (or the journal/snapshot pipeline \
+         fed resume the wrong position)"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -45,6 +45,7 @@ fn base_config(name: &str, ranks: usize, steps: usize) -> TrainConfig {
         bucket_bytes: 8192,
         fault: FaultConfig::default(),
         transport: flashsgd::config::TransportConfig::default(),
+        checkpoint: flashsgd::config::CheckpointConfig::default(),
     }
 }
 
@@ -306,6 +307,45 @@ fn max_restarts_exhaustion_is_fatal() {
     assert!(
         msg.contains("max_restarts"),
         "error must name the exhausted budget: {msg}"
+    );
+}
+
+/// Numeric health guard: a NaN loss is *deterministic* — the FP32 loss
+/// reduction hands every rank the same poisoned value, and a phase replay
+/// would reproduce it exactly — so the coordinator must fail the run
+/// immediately, naming rank and step, instead of spending restart budget
+/// on it. The injection fires on attempt 0 only: if the coordinator
+/// wrongly burned a restart, the replay would *succeed* and `run()`
+/// would return `Ok` — so the `unwrap_err` below is itself the proof
+/// that no restart was consumed.
+#[test]
+fn nan_loss_trips_health_guard_without_burning_restarts() {
+    let mut cfg = base_config("ft-nan", 4, 8);
+    // Fault tolerance ON with budget to spare: the guard must still
+    // refuse to retry a deterministic failure.
+    cfg.fault.max_restarts = 3;
+    cfg.fault.inject = Some(InjectedFault::nan_at(1, 4));
+    let t0 = Instant::now();
+    let err = Trainer::new(cfg).unwrap().run().unwrap_err();
+    assert!(
+        t0.elapsed() < UNWIND_BOUND,
+        "guard took {:?} to fail the run",
+        t0.elapsed()
+    );
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("non-finite step loss"),
+        "error must name the broken quantity: {msg}"
+    );
+    // Every rank raises in lockstep (the reduction made the NaN global);
+    // whichever report surfaces must name its rank and the exact step.
+    assert!(
+        msg.contains("at rank") && msg.contains("step 4"),
+        "error must name rank and step: {msg}"
+    );
+    assert!(
+        msg.contains("numeric health guard tripped"),
+        "the deterministic-failure gate must fire, not the recovery ladder: {msg}"
     );
 }
 

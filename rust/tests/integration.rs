@@ -32,6 +32,7 @@ fn base_config(name: &str, ranks: usize, steps: usize) -> TrainConfig {
         bucket_bytes: 8192,
         fault: flashsgd::config::FaultConfig::default(),
         transport: flashsgd::config::TransportConfig::default(),
+        checkpoint: flashsgd::config::CheckpointConfig::default(),
     }
 }
 
