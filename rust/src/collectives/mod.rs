@@ -40,8 +40,9 @@ pub use primitives::Wire;
 pub use ring::RingAllReduce;
 pub use torus2d::TorusAllReduce;
 pub use transport::{
-    BackoffConfig, ChaosConfig, ChaosCounters, ChaosTransport, Counters, Endpoint, Health,
-    LinkPolicy, Mesh, MeshError, Payload, TcpEndpoint, TcpMesh, TcpOptions, Transport,
+    presumed_wedged, BackoffConfig, ChaosConfig, ChaosCounters, ChaosTransport, Counters,
+    Endpoint, Health, LinkPolicy, Mesh, MeshError, Payload, TcpEndpoint, TcpMesh, TcpOptions,
+    Transport,
 };
 
 use anyhow::Result;

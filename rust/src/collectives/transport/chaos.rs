@@ -56,6 +56,13 @@ pub struct ChaosConfig {
     pub dup_prob: f64,
     /// Probability a frame is held and released behind the next send.
     pub reorder_prob: f64,
+    /// Probability a *rank* is a chronic straggler: every injected delay
+    /// on frames it sends is stretched by `slow_factor`. Decided once per
+    /// rank as a pure function of `(seed, rank)` — a heterogeneous-cluster
+    /// model, not per-frame noise.
+    pub slow_prob: f64,
+    /// Delay stretch applied to a slow rank's injected delays (≥ 1).
+    pub slow_factor: f64,
 }
 
 impl Default for ChaosConfig {
@@ -69,6 +76,8 @@ impl Default for ChaosConfig {
             drop_delay_us: 2000,
             dup_prob: 0.0,
             reorder_prob: 0.0,
+            slow_prob: 0.0,
+            slow_factor: 4.0,
         }
     }
 }
@@ -86,7 +95,7 @@ pub struct LinkPlan {
 }
 
 /// Map a hash to a uniform float in `[0, 1)`.
-fn unit(h: u64) -> f64 {
+pub(crate) fn unit(h: u64) -> f64 {
     (h >> 11) as f64 / (1u64 << 53) as f64
 }
 
@@ -111,6 +120,22 @@ impl ChaosConfig {
             drop: unit(mix64(key ^ 3)) < self.drop_prob,
             dup: unit(mix64(key ^ 4)) < self.dup_prob,
             reorder: unit(mix64(key ^ 5)) < self.reorder_prob,
+        }
+    }
+
+    /// Per-rank slowdown multiplier for injected delays: `slow_factor` when
+    /// the seed elects `rank` a straggler, else 1. Pure function of
+    /// `(seed, rank)` — every endpoint of a mesh agrees on who is slow, and
+    /// the same seed always elects the same ranks.
+    pub fn rank_slow_multiplier(&self, rank: usize) -> f64 {
+        if !self.enabled || self.slow_prob <= 0.0 {
+            return 1.0;
+        }
+        let key = mix64(self.seed ^ mix64(rank as u64 ^ 0x5106_C0DE));
+        if unit(key) < self.slow_prob {
+            self.slow_factor.max(1.0)
+        } else {
+            1.0
         }
     }
 }
@@ -237,14 +262,21 @@ impl<T: Transport> Transport for ChaosTransport<T> {
 
     fn send(&mut self, dst: usize, tag: u64, payload: Payload) -> Result<()> {
         let plan = self.cfg.plan(self.inner.rank(), dst, tag);
+        // Heterogeneity model: a seed-elected slow rank pays a stretched
+        // version of every injected delay on its outgoing edges.
+        let slow = self.cfg.rank_slow_multiplier(self.inner.rank());
         if plan.delay_us > 0 {
             self.counters.delays.fetch_add(1, Ordering::Relaxed);
-            std::thread::sleep(Duration::from_micros(plan.delay_us));
+            std::thread::sleep(Duration::from_micros(
+                (plan.delay_us as f64 * slow) as u64,
+            ));
         }
         if plan.drop {
             // Loss on a reliable link = a retransmit penalty, then delivery.
             self.counters.drops.fetch_add(1, Ordering::Relaxed);
-            std::thread::sleep(Duration::from_micros(self.cfg.drop_delay_us));
+            std::thread::sleep(Duration::from_micros(
+                (self.cfg.drop_delay_us as f64 * slow) as u64,
+            ));
         }
         if plan.reorder && self.held.is_none() {
             self.counters.reorders.fetch_add(1, Ordering::Relaxed);
@@ -298,6 +330,8 @@ mod tests {
             drop_delay_us: 100,
             dup_prob: 0.2,
             reorder_prob: 0.3,
+            slow_prob: 0.0,
+            slow_factor: 4.0,
         }
     }
 
@@ -329,6 +363,41 @@ mod tests {
                 LinkPlan { delay_us: 0, drop: false, dup: false, reorder: false }
             );
         }
+    }
+
+    /// The straggler election is a pure function of `(seed, rank)`: same
+    /// seed ⇒ same slow set on every call; `slow_prob` spans the obvious
+    /// extremes; disabled chaos never slows anyone.
+    #[test]
+    fn rank_slow_multiplier_is_deterministic_per_seed() {
+        let mut cfg = noisy(0xBEEF);
+        cfg.slow_prob = 0.25;
+        cfg.slow_factor = 6.0;
+        let first: Vec<f64> = (0..64).map(|r| cfg.rank_slow_multiplier(r)).collect();
+        let again: Vec<f64> = (0..64).map(|r| cfg.rank_slow_multiplier(r)).collect();
+        assert_eq!(first, again, "election must be pure");
+        assert!(first.iter().all(|&m| m == 1.0 || m == 6.0));
+        assert!(
+            first.iter().any(|&m| m > 1.0),
+            "a 25% rate over 64 ranks should elect someone"
+        );
+        assert!(
+            first.iter().any(|&m| m == 1.0),
+            "a 25% rate over 64 ranks should spare someone"
+        );
+        // a different seed elects a different set
+        let mut other = noisy(0xBEE0);
+        other.slow_prob = 0.25;
+        other.slow_factor = 6.0;
+        let theirs: Vec<f64> = (0..64).map(|r| other.rank_slow_multiplier(r)).collect();
+        assert_ne!(first, theirs, "seeds must decorrelate the slow set");
+        // extremes and the disabled path
+        cfg.slow_prob = 1.0;
+        assert_eq!(cfg.rank_slow_multiplier(3), 6.0);
+        cfg.slow_prob = 0.0;
+        assert_eq!(cfg.rank_slow_multiplier(3), 1.0);
+        let off = ChaosConfig { enabled: false, slow_prob: 1.0, ..noisy(1) };
+        assert_eq!(off.rank_slow_multiplier(0), 1.0);
     }
 
     #[test]

@@ -100,16 +100,23 @@ impl Endpoint {
         self.core.recv_deadline = d;
     }
 
-    /// Send `payload` to `dst` under `tag`. Never blocks (inboxes are
-    /// unbounded); fails fast when `dst` is already marked dead or the
-    /// mesh is aborting.
+    /// Send `payload` to `dst` under `tag`. Never blocks; fails fast when
+    /// `dst` is already marked dead, the mesh is aborting, or the
+    /// destination inbox is at its high-water cap
+    /// ([`MeshError::InboxOverflow`](super::MeshError::InboxOverflow)).
     pub fn send(&mut self, dst: usize, tag: u64, payload: Payload) -> Result<()> {
         self.core.check_send(dst)?;
         let bytes = payload.wire_bytes();
         self.peers
             .get(dst)
             .ok_or_else(|| anyhow!("send to out-of-range rank {dst} (n={})", self.core.n))?
-            .push(Msg { src: self.core.rank, tag, payload });
+            .push(Msg { src: self.core.rank, tag, payload })
+            .map_err(|e| {
+                anyhow!(e).context(format!(
+                    "rank {} send to {dst} tag {tag}",
+                    self.core.rank
+                ))
+            })?;
         self.core.note_sent(tag, bytes);
         Ok(())
     }
@@ -475,6 +482,24 @@ mod tests {
         assert!(health.is_done(0));
         health.mark_dead(0);
         waiter.join().unwrap();
+    }
+
+    /// Regression (bounded inboxes): a sender flooding a peer that never
+    /// drains hits the high-water cap and gets the typed overflow error
+    /// instead of growing the pending queue without bound.
+    #[test]
+    fn send_surfaces_inbox_overflow_at_the_cap() {
+        use super::super::INBOX_CAP;
+        let mut eps = Mesh::new(2);
+        let mut a = eps.remove(0);
+        for i in 0..INBOX_CAP as u64 {
+            a.send_f32(1, i, &[0.0]).unwrap();
+        }
+        let err = a.send_f32(1, 0, &[0.0]).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<MeshError>(),
+            Some(&MeshError::InboxOverflow { len: INBOX_CAP, cap: INBOX_CAP })
+        );
     }
 
     /// A self-send loops back through this rank's own inbox like any

@@ -72,6 +72,11 @@ pub enum MeshError {
     /// The stream ended (or the declared length was impossibly short)
     /// partway through a frame: `got` of `want` bytes were available.
     Truncated { got: usize, want: usize },
+    /// A receiver's inbox hit its high-water cap and refused the message.
+    /// Healthy schedules never come near the cap; it exists so a runaway
+    /// flood (a chaos dup/reorder storm, a buggy schedule) surfaces as a
+    /// typed error instead of unbounded memory growth.
+    InboxOverflow { len: usize, cap: usize },
 }
 
 impl std::fmt::Display for MeshError {
@@ -86,6 +91,9 @@ impl std::fmt::Display for MeshError {
             }
             MeshError::Truncated { got, want } => {
                 write!(f, "truncated frame: got {got} of {want} bytes")
+            }
+            MeshError::InboxOverflow { len, cap } => {
+                write!(f, "inbox overflow: {len} queued messages at cap {cap}")
             }
         }
     }
@@ -182,6 +190,18 @@ pub struct Health {
     abort: AtomicBool,
     /// First rank marked dead (`usize::MAX` = none yet).
     first_dead: AtomicUsize,
+    /// Straggler telemetry: last completed global step + 1 per rank
+    /// (0 = none on this mesh yet).
+    steps: Vec<AtomicU64>,
+    /// EWMA of each rank's per-step **local work** time (compute + apply +
+    /// data, communication excluded), in microseconds. In a synchronous
+    /// collective every rank's *total* step time converges to the slowest
+    /// rank's pace, so only the local-work split identifies the straggler.
+    work_ewma_us: Vec<AtomicU64>,
+    /// How many steps have fed each rank's EWMA.
+    step_samples: Vec<AtomicU64>,
+    /// Millis-since-`start` of each rank's last completed step (0 = none).
+    progress: Vec<AtomicU64>,
 }
 
 impl Health {
@@ -193,6 +213,10 @@ impl Health {
             dead: (0..n).map(|_| AtomicBool::new(false)).collect(),
             abort: AtomicBool::new(false),
             first_dead: AtomicUsize::new(usize::MAX),
+            steps: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            work_ewma_us: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            step_samples: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            progress: (0..n).map(|_| AtomicU64::new(0)).collect(),
         }
     }
 
@@ -210,6 +234,55 @@ impl Health {
     pub fn millis_since_beat(&self, rank: usize) -> u64 {
         let now = self.start.elapsed().as_millis() as u64;
         now.saturating_sub(self.beats[rank].load(Ordering::Relaxed))
+    }
+
+    /// Record a completed step for `rank`. `work` is the step's local work
+    /// time (communication excluded): it feeds the straggler EWMA
+    /// (α = 1/4, integer micros — deterministic) and the progress clock
+    /// that the wedged-vs-slow heuristic reads. Also counts as a beat.
+    pub fn note_step(&self, rank: usize, global_step: u64, work: Duration) {
+        let us = work.as_micros().min(u64::MAX as u128) as u64;
+        let n = self.step_samples[rank].fetch_add(1, Ordering::Relaxed);
+        let next = if n == 0 {
+            us
+        } else {
+            let prev = self.work_ewma_us[rank].load(Ordering::Relaxed);
+            (3 * prev + us) / 4
+        };
+        self.work_ewma_us[rank].store(next, Ordering::Relaxed);
+        self.steps[rank].store(global_step + 1, Ordering::Relaxed);
+        self.progress[rank]
+            .store(self.start.elapsed().as_millis() as u64, Ordering::Relaxed);
+        self.beat(rank);
+    }
+
+    /// Last completed global step `rank` reported on this mesh.
+    pub fn last_step(&self, rank: usize) -> Option<u64> {
+        match self.steps[rank].load(Ordering::Relaxed) {
+            0 => None,
+            s => Some(s - 1),
+        }
+    }
+
+    /// EWMA of `rank`'s per-step local work, in milliseconds.
+    pub fn step_ewma_ms(&self, rank: usize) -> Option<f64> {
+        if self.step_samples[rank].load(Ordering::Relaxed) == 0 {
+            None
+        } else {
+            Some(self.work_ewma_us[rank].load(Ordering::Relaxed) as f64 / 1000.0)
+        }
+    }
+
+    /// How many steps have fed `rank`'s EWMA on this mesh.
+    pub fn step_samples(&self, rank: usize) -> u64 {
+        self.step_samples[rank].load(Ordering::Relaxed)
+    }
+
+    /// Millis since `rank` last completed a step — measured from mesh
+    /// creation while no step has completed yet.
+    pub fn millis_since_progress(&self, rank: usize) -> u64 {
+        let now = self.start.elapsed().as_millis() as u64;
+        now.saturating_sub(self.progress[rank].load(Ordering::Relaxed))
     }
 
     /// Mark `rank`'s worker thread as exited (cleanly or not): the monitor
@@ -270,6 +343,31 @@ impl Health {
         }
         Ok(())
     }
+}
+
+/// The wedged-vs-slow heuristic behind every death declaration that rests
+/// on *silence* rather than a dropped socket. A rank is presumed wedged
+/// only when BOTH its heartbeat is stale past `timeout_ms` AND it has not
+/// completed a step within its progress allowance: `timeout_ms + 2 × its
+/// own step-time EWMA` once steps have been reported, or `3 × timeout_ms`
+/// before the first step lands (a phase's opening step gets triple the
+/// timeout). A slow-but-advancing rank therefore survives timeouts shorter
+/// than its step time, while a genuinely hung rank is still declared dead
+/// in bounded time.
+pub fn presumed_wedged(
+    staleness_ms: u64,
+    timeout_ms: u64,
+    advance_age_ms: u64,
+    step_ms_ewma: Option<f64>,
+) -> bool {
+    if staleness_ms <= timeout_ms {
+        return false;
+    }
+    let allowance = match step_ms_ewma {
+        Some(e) => timeout_ms as f64 + 2.0 * e,
+        None => 3.0 * timeout_ms as f64,
+    };
+    advance_age_ms as f64 > allowance
 }
 
 /// Wire payload. FP32 is the paper's BN-stat path; FP16 the gradient path.
@@ -352,20 +450,65 @@ impl Counters {
     }
 }
 
+/// Default high-water cap on one rank's inbox. Sized far above any
+/// legitimate schedule's in-flight message count (the bucketed pipeline
+/// keeps a handful of tag windows open; chaos dup/reorder at most doubles
+/// them), so a healthy run never touches it — it exists to convert a
+/// runaway flood into a typed [`MeshError::InboxOverflow`] instead of
+/// unbounded memory growth.
+pub const INBOX_CAP: usize = 8192;
+
 /// One rank's inbox: a condvar-fronted queue. Producers (in-memory peer
 /// sends, TCP reader threads) push and notify; the single consumer (the
 /// rank's `recv` loop) parks on the condvar instead of sleep-polling, so a
-/// blocked rank burns no CPU and wakes the moment a message lands.
-#[derive(Debug, Default)]
+/// blocked rank burns no CPU and wakes the moment a message lands. The
+/// queue is bounded by a high-water `cap`: a push at the cap is refused
+/// with a typed error, and the `dropped` / `high_water` tallies record
+/// exactly what the bound did.
+#[derive(Debug)]
 pub(crate) struct Inbox {
     q: Mutex<VecDeque<Msg>>,
     cv: Condvar,
+    cap: usize,
+    /// Messages refused at the cap.
+    pub(crate) dropped: AtomicU64,
+    /// Deepest the queue has ever been.
+    pub(crate) high_water: AtomicU64,
+}
+
+impl Default for Inbox {
+    fn default() -> Self {
+        Self::with_cap(INBOX_CAP)
+    }
 }
 
 impl Inbox {
-    pub(crate) fn push(&self, msg: Msg) {
-        self.q.lock().unwrap().push_back(msg);
+    pub(crate) fn with_cap(cap: usize) -> Self {
+        Self {
+            q: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            cap,
+            dropped: AtomicU64::new(0),
+            high_water: AtomicU64::new(0),
+        }
+    }
+
+    pub(crate) fn push(&self, msg: Msg) -> Result<(), MeshError> {
+        let mut q = self.q.lock().unwrap();
+        if q.len() >= self.cap {
+            drop(q);
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return Err(MeshError::InboxOverflow {
+                len: self.cap,
+                cap: self.cap,
+            });
+        }
+        q.push_back(msg);
+        let depth = q.len() as u64;
+        drop(q);
+        self.high_water.fetch_max(depth, Ordering::Relaxed);
         self.cv.notify_one();
+        Ok(())
     }
 
     /// Pop the oldest message, parking for at most `slice` when empty.
@@ -549,7 +692,7 @@ impl Core {
                 .fetch_add(p.wire_bytes(), Ordering::Relaxed);
             return Ok(p);
         }
-        let deadline = self.recv_deadline.map(|d| Instant::now() + d);
+        let mut deadline = self.recv_deadline.map(|d| Instant::now() + d);
         loop {
             match self.inbox.pop_timeout(WAIT_SLICE) {
                 Some(msg) => {
@@ -573,10 +716,26 @@ impl Core {
                         .with_context(|| {
                             format!("rank {} recv from {src} tag {tag}", self.rank)
                         })?;
-                    if let Some(dl) = deadline {
+                    if let (Some(dl), Some(d)) = (deadline, self.recv_deadline) {
                         if Instant::now() >= dl {
-                            // The peer outlasted the hard bound: declare it
-                            // dead so the rest of the mesh unwinds too.
+                            // The peer outlasted the hard bound — but a peer
+                            // that is provably *advancing* (a slow step, not
+                            // a hang) gets the deadline re-armed instead of
+                            // a death sentence. With no telemetry for it
+                            // (separate-process peers), the allowance decays
+                            // to the legacy hard bound.
+                            let timeout_ms = d.as_millis() as u64;
+                            if !presumed_wedged(
+                                self.health.millis_since_beat(src),
+                                timeout_ms,
+                                self.health.millis_since_progress(src),
+                                self.health.step_ewma_ms(src),
+                            ) {
+                                deadline = Some(Instant::now() + d);
+                                continue;
+                            }
+                            // Declare it dead so the rest of the mesh
+                            // unwinds too.
                             self.health.mark_dead(src);
                             return Err(anyhow::Error::new(MeshError::PeerDead {
                                 rank: src,
@@ -650,6 +809,14 @@ pub trait Transport: Send {
     /// in `recv` — call it once per step so compute-heavy gaps still beat).
     fn heartbeat(&self) {
         self.health().beat(self.rank());
+    }
+
+    /// Record a completed training step: `global_step` finished and took
+    /// `work` of local work time (communication excluded). Feeds the
+    /// shared [`Health`] straggler telemetry — call it once per step,
+    /// after the optimizer apply.
+    fn note_step(&self, global_step: u64, work: Duration) {
+        self.health().note_step(self.rank(), global_step, work);
     }
 
     /// Declare a peer (or this rank itself) dead; aborts the whole mesh.
@@ -760,5 +927,71 @@ mod tests {
         assert!(e.to_string().contains("max_frame_bytes"));
         let e = MeshError::Truncated { got: 3, want: 17 };
         assert!(e.to_string().contains("3 of 17"));
+        let e = MeshError::InboxOverflow { len: 8, cap: 8 };
+        assert!(e.to_string().contains("cap 8"));
+    }
+
+    /// Regression (bounded inboxes): pushes at the high-water cap are
+    /// refused with the typed overflow error, the dropped / high-water
+    /// tallies record exactly what happened, and the queue stays at the
+    /// cap instead of growing without bound.
+    #[test]
+    fn inbox_refuses_pushes_past_its_cap_and_counts_them() {
+        let inbox = Inbox::with_cap(4);
+        let msg = |i: u64| Msg {
+            src: 0,
+            tag: i,
+            payload: Payload::F32(vec![i as f32]),
+        };
+        for i in 0..4 {
+            inbox.push(msg(i)).unwrap();
+        }
+        for i in 4..7 {
+            let err = inbox.push(msg(i)).unwrap_err();
+            assert_eq!(err, MeshError::InboxOverflow { len: 4, cap: 4 });
+        }
+        assert_eq!(inbox.dropped.load(Ordering::Relaxed), 3);
+        assert_eq!(inbox.high_water.load(Ordering::Relaxed), 4);
+        // Draining one slot re-admits exactly one message.
+        assert!(inbox.pop_timeout(Duration::from_millis(1)).is_some());
+        inbox.push(msg(7)).unwrap();
+        assert!(inbox.push(msg(8)).is_err());
+        assert_eq!(inbox.dropped.load(Ordering::Relaxed), 4);
+    }
+
+    /// Step telemetry: the EWMA warms up from the first sample, tracks
+    /// later ones at α = 1/4, and the step / progress clocks advance.
+    #[test]
+    fn health_step_telemetry_tracks_ewma_and_progress() {
+        let h = Health::new(2);
+        assert_eq!(h.last_step(1), None);
+        assert_eq!(h.step_ewma_ms(1), None);
+        assert_eq!(h.step_samples(1), 0);
+        h.note_step(1, 10, Duration::from_millis(100));
+        assert_eq!(h.last_step(1), Some(10));
+        assert_eq!(h.step_ewma_ms(1), Some(100.0));
+        // α = 1/4: 0.75 × 100ms + 0.25 × 20ms = 80ms
+        h.note_step(1, 11, Duration::from_millis(20));
+        assert_eq!(h.step_ewma_ms(1), Some(80.0));
+        assert_eq!(h.step_samples(1), 2);
+        assert!(h.millis_since_progress(1) < 1000);
+        // rank 0 never stepped: its progress age is the mesh age
+        assert_eq!(h.last_step(0), None);
+    }
+
+    /// The wedged-vs-slow heuristic: a stale-but-advancing rank is spared,
+    /// a stale rank past its progress allowance is not, and the no-sample
+    /// fallback grants triple the timeout.
+    #[test]
+    fn presumed_wedged_spares_advancing_ranks() {
+        // Heartbeat fresh: never wedged, however old the progress.
+        assert!(!presumed_wedged(100, 100, 10_000, None));
+        // Stale but advanced recently relative to its own pace.
+        assert!(!presumed_wedged(500, 300, 450, Some(400.0)));
+        // Stale and silent past timeout + 2 × EWMA: wedged.
+        assert!(presumed_wedged(2000, 300, 1200, Some(400.0)));
+        // No samples yet: allowance is 3 × timeout.
+        assert!(!presumed_wedged(500, 300, 850, None));
+        assert!(presumed_wedged(500, 300, 950, None));
     }
 }

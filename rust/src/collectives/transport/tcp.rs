@@ -458,11 +458,19 @@ fn drain_stream(
                         if let Some(link) = counted {
                             link.state.lock().unwrap().rcvd += 1;
                         }
-                        inbox.push(Msg {
-                            src: h.src as usize,
-                            tag: h.tag,
-                            payload,
-                        });
+                        // An inbox at its high-water cap means the receiver
+                        // has stopped draining (flood or wedge) — tear the
+                        // link down rather than queue without bound.
+                        if inbox
+                            .push(Msg {
+                                src: h.src as usize,
+                                tag: h.tag,
+                                payload,
+                            })
+                            .is_err()
+                        {
+                            break;
+                        }
                     }
                     // A malformed frame means the stream is out of sync —
                     // unrecoverable for this connection.
@@ -1027,7 +1035,10 @@ impl TcpEndpoint {
         if dst == self.core.rank {
             // Self-edge: loop back through the inbox like the in-memory
             // mesh (no socket exists to ourselves).
-            self.core.inbox.push(Msg { src: dst, tag, payload });
+            self.core
+                .inbox
+                .push(Msg { src: dst, tag, payload })
+                .map_err(|e| anyhow!(e).context("self-send"))?;
             self.core.note_sent(tag, bytes);
             return Ok(());
         }

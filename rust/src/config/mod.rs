@@ -31,6 +31,11 @@ pub enum FaultKind {
     /// [`crate::coordinator::NonFiniteError`] naming rank and step,
     /// instead of silently training on garbage.
     NanLoss,
+    /// The worker sleeps `millis` extra on **every** step from `step`
+    /// onward (chronic, unlike the one-shot kinds above) — the seeded
+    /// straggler: numerics are untouched, only the clock suffers.
+    /// Exercises slow-rank telemetry and the `[fault.straggler]` policy.
+    Slow { millis: u64 },
 }
 
 /// A deterministic fault injection: rank `rank` dies at global step
@@ -66,9 +71,79 @@ impl InjectedFault {
         Self { rank, step, kind: FaultKind::NanLoss, attempts: 1 }
     }
 
-    /// Does this injection fire for (`attempt`, `rank`, `global_step`)?
+    /// Make `rank` chronically slow: `millis` of extra sleep on every step
+    /// from global `step` onward (first attempt only).
+    pub fn slow_at(rank: usize, step: usize, millis: u64) -> Self {
+        Self { rank, step, kind: FaultKind::Slow { millis }, attempts: 1 }
+    }
+
+    /// Does this injection fire *fatally* for (`attempt`, `rank`,
+    /// `global_step`)? Always false for [`FaultKind::Slow`] — slowness is
+    /// chronic and non-fatal; see [`Self::slow_millis`].
     pub fn fires(&self, attempt: usize, rank: usize, global_step: usize) -> bool {
-        attempt < self.attempts && rank == self.rank && global_step == self.step
+        !matches!(self.kind, FaultKind::Slow { .. })
+            && attempt < self.attempts
+            && rank == self.rank
+            && global_step == self.step
+    }
+
+    /// Extra per-step sleep for (`attempt`, `rank`, `global_step`), if
+    /// this is a [`FaultKind::Slow`] injection in effect: unlike
+    /// [`Self::fires`] the condition is `global_step >= step` — a
+    /// straggler stays slow, it does not stumble once.
+    pub fn slow_millis(&self, attempt: usize, rank: usize, global_step: usize) -> Option<u64> {
+        match self.kind {
+            FaultKind::Slow { millis }
+                if attempt < self.attempts && rank == self.rank && global_step >= self.step =>
+            {
+                Some(millis)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// What to do about a rank whose step-time EWMA is chronically above
+/// `slow_factor ×` the cluster median (see [`StragglerConfig`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StragglerPolicy {
+    /// Telemetry only: score and report stragglers, never act.
+    Observe,
+    /// Drain the straggler at the next phase boundary via the elastic
+    /// re-plan (constant global batch, no mid-collective abort); it may
+    /// rejoin through the join door once healthy.
+    Demote,
+    /// Remove the straggler permanently: no rejoin window is held for it.
+    Evict,
+}
+
+/// `[fault.straggler]` — slow-rank detection and mitigation. A rank is a
+/// *straggler* when its local-work EWMA (compute + apply, comm excluded —
+/// in a synchronous collective everyone's total step time converges to
+/// the slowest rank's, so only local work identifies the culprit) exceeds
+/// `slow_factor ×` the median of live ranks' EWMAs for `grace` of
+/// wall-clock, with at least `min_samples` steps observed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StragglerConfig {
+    /// EWMA threshold relative to the cluster median (> 1).
+    pub slow_factor: f64,
+    /// Steps a rank must have reported before it can be judged.
+    pub min_samples: u64,
+    /// How long the rank must stay over threshold before the policy acts
+    /// (one slow step is noise; a straggler is a *trend*).
+    pub grace: Duration,
+    /// What to do once a straggler is confirmed.
+    pub policy: StragglerPolicy,
+}
+
+impl Default for StragglerConfig {
+    fn default() -> Self {
+        Self {
+            slow_factor: 2.0,
+            min_samples: 8,
+            grace: Duration::ZERO,
+            policy: StragglerPolicy::Observe,
+        }
     }
 }
 
@@ -109,6 +184,9 @@ pub struct FaultConfig {
     /// default, in which case the transport path is exactly the
     /// chaos-free code.
     pub chaos: ChaosConfig,
+    /// Slow-rank detection + mitigation (`[fault.straggler]`). Defaults
+    /// to `Observe` with zero grace — pure telemetry, no behaviour change.
+    pub straggler: StragglerConfig,
     /// Deterministic fault injection (tests / chaos runs); `None` in
     /// production configs.
     pub inject: Option<InjectedFault>,
@@ -124,6 +202,7 @@ impl Default for FaultConfig {
             rejoin_grace: Duration::ZERO,
             coordinator_grace: Duration::ZERO,
             chaos: ChaosConfig::default(),
+            straggler: StragglerConfig::default(),
             inject: None,
         }
     }
@@ -438,8 +517,52 @@ impl TrainConfig {
                     as u64,
                 dup_prob: doc.f64_or("fault.chaos.dup_prob", fd.chaos.dup_prob)?,
                 reorder_prob: doc.f64_or("fault.chaos.reorder_prob", fd.chaos.reorder_prob)?,
+                slow_prob: doc.f64_or("fault.chaos.slow_prob", fd.chaos.slow_prob)?,
+                slow_factor: doc.f64_or("fault.chaos.slow_factor", fd.chaos.slow_factor)?,
             },
-            inject: None,
+            straggler: StragglerConfig {
+                slow_factor: doc
+                    .f64_or("fault.straggler.slow_factor", fd.straggler.slow_factor)?,
+                min_samples: doc.usize_or(
+                    "fault.straggler.min_samples",
+                    fd.straggler.min_samples as usize,
+                )? as u64,
+                grace: Duration::from_millis(doc.usize_or(
+                    "fault.straggler.grace_ms",
+                    fd.straggler.grace.as_millis() as usize,
+                )? as u64),
+                policy: match doc.str_or("fault.straggler.policy", "observe")?.as_str() {
+                    "observe" => StragglerPolicy::Observe,
+                    "demote" => StragglerPolicy::Demote,
+                    "evict" => StragglerPolicy::Evict,
+                    p => bail!(
+                        "fault.straggler.policy must be observe | demote | evict, got {p:?}"
+                    ),
+                },
+            },
+            // Deterministic injection from TOML (CI / chaos configs): flat
+            // `inject_*` keys, present only when `inject_kind` is set.
+            inject: match doc.get("fault.inject_kind") {
+                None => None,
+                Some(v) => {
+                    let rank = doc.usize_or("fault.inject_rank", 0)?;
+                    let step = doc.usize_or("fault.inject_step", 0)?;
+                    let millis = doc.usize_or("fault.inject_millis", 0)? as u64;
+                    let attempts = doc.usize_or("fault.inject_attempts", 1)?;
+                    let kind = match v.as_str()? {
+                        "error" => FaultKind::Error,
+                        "panic" => FaultKind::Panic,
+                        "hang" => FaultKind::Hang { millis },
+                        "nan" => FaultKind::NanLoss,
+                        "slow" => FaultKind::Slow { millis },
+                        k => bail!(
+                            "fault.inject_kind must be error | panic | hang | nan | slow, \
+                             got {k:?}"
+                        ),
+                    };
+                    Some(InjectedFault { rank, step, kind, attempts })
+                }
+            },
         };
         if fault.enabled && fault.rank_timeout.is_zero() {
             bail!("fault.rank_timeout_ms must be > 0 when fault tolerance is enabled");
@@ -449,10 +572,27 @@ impl TrainConfig {
             ("fault.chaos.drop_prob", fault.chaos.drop_prob),
             ("fault.chaos.dup_prob", fault.chaos.dup_prob),
             ("fault.chaos.reorder_prob", fault.chaos.reorder_prob),
+            ("fault.chaos.slow_prob", fault.chaos.slow_prob),
         ] {
             if !(0.0..=1.0).contains(&p) {
                 bail!("{key} must be a probability in [0, 1], got {p}");
             }
+        }
+        if fault.chaos.slow_factor < 1.0 {
+            bail!(
+                "fault.chaos.slow_factor must be >= 1, got {}",
+                fault.chaos.slow_factor
+            );
+        }
+        if fault.straggler.slow_factor <= 1.0 {
+            bail!(
+                "fault.straggler.slow_factor must be > 1 (a threshold at or below the \
+                 median flags half the cluster), got {}",
+                fault.straggler.slow_factor
+            );
+        }
+        if fault.straggler.min_samples == 0 {
+            bail!("fault.straggler.min_samples must be >= 1");
         }
 
         // Transport ([transport] table; all optional).
@@ -693,6 +833,73 @@ phases = [[0, 8, 4], [2, 16, 4]]
     }
 
     #[test]
+    fn slow_injection_is_chronic_and_never_fatal() {
+        let inj = InjectedFault::slow_at(1, 5, 40);
+        // never a fatal fault, at any step
+        assert!(!inj.fires(0, 1, 5));
+        assert!(!inj.fires(0, 1, 50));
+        // chronic from `step` onward, on the afflicted rank + attempt only
+        assert_eq!(inj.slow_millis(0, 1, 4), None, "not before its step");
+        assert_eq!(inj.slow_millis(0, 1, 5), Some(40));
+        assert_eq!(inj.slow_millis(0, 1, 99), Some(40), "stays slow");
+        assert_eq!(inj.slow_millis(0, 0, 9), None, "wrong rank");
+        assert_eq!(inj.slow_millis(1, 1, 9), None, "attempt exhausted");
+        // one-shot kinds never report slowness
+        assert_eq!(InjectedFault::error_at(1, 5).slow_millis(0, 1, 5), None);
+    }
+
+    #[test]
+    fn straggler_config_defaults_and_parses() {
+        let c = TrainConfig::quickstart();
+        assert_eq!(c.fault.straggler, StragglerConfig::default());
+        assert_eq!(c.fault.straggler.policy, StragglerPolicy::Observe);
+        assert!(c.fault.inject.is_none());
+
+        let doc = Doc::parse(
+            "[fault.straggler]\npolicy = \"demote\"\nslow_factor = 3.0\n\
+             min_samples = 4\ngrace_ms = 250\n",
+        )
+        .unwrap();
+        let s = TrainConfig::from_toml(&doc).unwrap().fault.straggler;
+        assert_eq!(s.policy, StragglerPolicy::Demote);
+        assert_eq!(s.slow_factor, 3.0);
+        assert_eq!(s.min_samples, 4);
+        assert_eq!(s.grace, Duration::from_millis(250));
+
+        // degenerate thresholds and unknown policies are config errors
+        for bad in [
+            "[fault.straggler]\npolicy = \"maim\"\n",
+            "[fault.straggler]\nslow_factor = 1.0\n",
+            "[fault.straggler]\nmin_samples = 0\n",
+        ] {
+            assert!(TrainConfig::from_toml(&Doc::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn inject_keys_parse_a_seeded_fault() {
+        let doc = Doc::parse(
+            "[fault]\ninject_kind = \"slow\"\ninject_rank = 2\n\
+             inject_step = 3\ninject_millis = 80\n",
+        )
+        .unwrap();
+        let inj = TrainConfig::from_toml(&doc).unwrap().fault.inject.unwrap();
+        assert_eq!(inj, InjectedFault::slow_at(2, 3, 80));
+
+        let doc = Doc::parse(
+            "[fault]\ninject_kind = \"hang\"\ninject_rank = 1\n\
+             inject_step = 6\ninject_millis = 500\ninject_attempts = 2\n",
+        )
+        .unwrap();
+        let inj = TrainConfig::from_toml(&doc).unwrap().fault.inject.unwrap();
+        assert_eq!(inj.kind, FaultKind::Hang { millis: 500 });
+        assert_eq!(inj.attempts, 2);
+
+        let doc = Doc::parse("[fault]\ninject_kind = \"meteor\"\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
     fn toml_rejects_bad_wire() {
         let doc = Doc::parse("grad_wire = \"fp8\"\n").unwrap();
         assert!(TrainConfig::from_toml(&doc).is_err());
@@ -766,7 +973,8 @@ phases = [[0, 8, 4], [2, 16, 4]]
             "[fault]\nrejoin_grace_ms = 4000\n\
              [fault.chaos]\nenabled = true\nseed = 99\ndelay_prob = 0.25\n\
              delay_us_max = 300\ndrop_prob = 0.1\ndrop_delay_us = 700\n\
-             dup_prob = 0.05\nreorder_prob = 0.2\n",
+             dup_prob = 0.05\nreorder_prob = 0.2\nslow_prob = 0.3\n\
+             slow_factor = 5.0\n",
         )
         .unwrap();
         let c = TrainConfig::from_toml(&doc).unwrap();
@@ -780,11 +988,17 @@ phases = [[0, 8, 4], [2, 16, 4]]
         assert_eq!(ch.drop_delay_us, 700);
         assert_eq!(ch.dup_prob, 0.05);
         assert_eq!(ch.reorder_prob, 0.2);
+        assert_eq!(ch.slow_prob, 0.3);
+        assert_eq!(ch.slow_factor, 5.0);
 
         // probabilities outside [0,1] are config errors
         let doc = Doc::parse("[fault.chaos]\ndrop_prob = 1.5\n").unwrap();
         assert!(TrainConfig::from_toml(&doc).is_err());
         let doc = Doc::parse("[fault.chaos]\ndup_prob = -0.1\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+        let doc = Doc::parse("[fault.chaos]\nslow_prob = 2.0\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+        let doc = Doc::parse("[fault.chaos]\nslow_factor = 0.5\n").unwrap();
         assert!(TrainConfig::from_toml(&doc).is_err());
     }
 

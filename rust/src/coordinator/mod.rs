@@ -50,10 +50,10 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Context, Result};
 
 use crate::collectives::{
-    self, ChaosConfig, ChaosTransport, Collective, Health, Mesh, MeshError, TcpMesh, TcpOptions,
-    Transport, Wire,
+    self, presumed_wedged, ChaosConfig, ChaosTransport, Collective, Health, Mesh, MeshError,
+    TcpMesh, TcpOptions, Transport, Wire,
 };
-use crate::config::{TrainConfig, TransportConfig};
+use crate::config::{StragglerPolicy, TrainConfig, TransportConfig};
 use crate::data::{Augment, Loader, SynthDataset};
 use crate::runtime::{
     ArchManifest, BackendSpec, ComputeClient, ComputeService, HostTensor, Manifest,
@@ -86,6 +86,12 @@ pub struct TrainReport {
     /// at a phase boundary, with the collective re-planned back *up*
     /// (process mode only — an in-process rank thread cannot restart).
     pub rejoins: Vec<RejoinEvent>,
+    /// Straggler-demotion events (`[fault.straggler]` with `policy =
+    /// demote | evict`): each records a chronically slow rank drained at a
+    /// phase boundary through the elastic re-plan — never a mid-collective
+    /// abort, never a charge against `fault.max_restarts`. Empty under
+    /// `policy = observe` or on a homogeneous run.
+    pub demotions: Vec<DemotionEvent>,
     /// Background-snapshot counters (`[checkpoint]`): how many snapshots
     /// landed and how long the *background* thread spent writing them.
     /// That time is reported here precisely because it is NOT part of any
@@ -109,6 +115,28 @@ pub struct RecoveryEvent {
     pub workers_after: usize,
     /// Per-worker batch after re-planning (`global_batch / workers_after`).
     pub per_worker_after: usize,
+}
+
+/// One straggler demotion: a rank whose local-work EWMA stayed above
+/// `slow_factor ×` the cluster median for `grace_ms` was drained at a
+/// phase boundary (policy `demote`), or removed outright (policy `evict`).
+#[derive(Debug, Clone)]
+pub struct DemotionEvent {
+    /// Global step index of the boundary at which the straggler was
+    /// drained (the first step run without it, unless readmitted).
+    pub phase_first_step: usize,
+    /// Mesh rank of the straggler in the afflicted phase.
+    pub rank: usize,
+    /// The straggler's local-work EWMA at confirmation, milliseconds.
+    pub step_ms_ewma: f64,
+    /// The live-cluster median EWMA it was judged against, milliseconds.
+    pub median_ms: f64,
+    /// Permanently removed (policy `evict`): no rejoin window is held.
+    pub evicted: bool,
+    /// Immediately readmitted at the same boundary (policy `demote` with
+    /// `fault.rejoin_grace_ms` > 0): telemetry resets, the width never
+    /// changes, and the run stays byte-identical to an undisturbed one.
+    pub readmitted: bool,
 }
 
 /// One worker-rejoin event: a restarted worker process re-registered over
@@ -395,6 +423,7 @@ impl Trainer {
         let mut lost = 0usize;
         let mut restarts_used = 0usize;
         let mut recoveries: Vec<RecoveryEvent> = Vec::new();
+        let mut demotions: Vec<DemotionEvent> = Vec::new();
         for (phase_idx, plan) in plans.iter().enumerate() {
             let global_batch = plan.per_worker * plan.workers;
             let mut attempt = 0usize;
@@ -448,7 +477,7 @@ impl Trainer {
                 }
 
                 match run_phase_on_mesh(&ctx, &cfg.transport, &client, &dataset, cfg.seed, &state) {
-                    PhaseOutcome::Complete(mut outputs) => {
+                    PhaseOutcome::Complete { mut outputs, stragglers } => {
                         // Parameters are replicated: identical reduced
                         // gradients plus an identical update must leave
                         // every rank with bit-identical state. Enforce the
@@ -489,6 +518,36 @@ impl Trainer {
                                         + (plan.steps * plan.per_worker * plan.workers) as u64,
                                 },
                             );
+                        }
+                        // Straggler demotion happens here — at the phase
+                        // boundary, after the phase completed cleanly — so
+                        // the mitigation never aborts a collective and never
+                        // charges the restart budget. Under `demote` with a
+                        // rejoin grace the rank is readmitted on the spot
+                        // (the event is the record; the world keeps its
+                        // width, so the numerics are untouched). Without
+                        // grace, or under `evict`, the rank leaves the world
+                        // through the same elastic re-plan a death uses.
+                        if cfg.fault.enabled
+                            && cfg.fault.straggler.policy != StragglerPolicy::Observe
+                        {
+                            for s in &stragglers {
+                                let evicted =
+                                    cfg.fault.straggler.policy == StragglerPolicy::Evict;
+                                let readmitted =
+                                    !evicted && !cfg.fault.rejoin_grace.is_zero();
+                                if !readmitted {
+                                    lost += 1;
+                                }
+                                demotions.push(DemotionEvent {
+                                    phase_first_step: plan.first_step + plan.steps,
+                                    rank: s.rank,
+                                    step_ms_ewma: s.step_ms_ewma,
+                                    median_ms: s.median_ms,
+                                    evicted,
+                                    readmitted,
+                                });
+                            }
                         }
                         break;
                     }
@@ -606,6 +665,7 @@ impl Trainer {
             max_lane_concurrency: svc.stats().max_concurrent(),
             recoveries,
             rejoins: Vec::new(),
+            demotions,
             snapshots,
         })
     }
@@ -874,10 +934,32 @@ fn verify_run_start(
     }
 }
 
+/// One confirmed straggler observation: the monitor saw `rank`'s
+/// local-work EWMA above threshold vs the live median for the configured
+/// grace. Carried out of the phase so mitigation can act at the boundary.
+#[derive(Debug, Clone, Copy)]
+struct StragglerReading {
+    rank: usize,
+    step_ms_ewma: f64,
+    median_ms: f64,
+}
+
+/// Lower median of a non-empty sample (deterministic, outlier-robust: with
+/// one straggler among n the straggler's own EWMA never drags the
+/// reference point it is judged against).
+fn median_ms(mut v: Vec<f64>) -> f64 {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    v[(v.len() - 1) / 2]
+}
+
 /// Outcome of one phase attempt across the mesh.
 enum PhaseOutcome {
-    /// Every rank finished; outputs carry the exported states.
-    Complete(Vec<WorkerOutput>),
+    /// Every rank finished; outputs carry the exported states, and
+    /// `stragglers` any chronically slow ranks the monitor confirmed.
+    Complete {
+        outputs: Vec<WorkerOutput>,
+        stragglers: Vec<StragglerReading>,
+    },
     /// At least one rank errored or panicked. `dead` lists the ranks the
     /// health layer declared dead (genuine casualties — not the victims
     /// that merely unwound with a [`MeshError`] because a peer died);
@@ -971,21 +1053,70 @@ fn run_phase_on_mesh(
     let health: Arc<Health> = mesh[0].health_arc();
 
     // Heartbeat monitor: flags ranks whose heartbeat goes stale (a hang —
-    // e.g. stuck compute — never trips the channel-level detection).
+    // e.g. stuck compute — never trips the channel-level detection). A
+    // stale rank that is still *completing steps* at its own recorded pace
+    // is slow, not wedged — `presumed_wedged` spares it (the satellite fix
+    // for false-positive kills on long steps). The same scan doubles as
+    // the straggler detector: a rank whose local-work EWMA stays above
+    // `slow_factor ×` the live median for `straggler.grace` is confirmed
+    // into `stragglers` for the boundary policy to act on.
     let monitor_stop = Arc::new(AtomicBool::new(false));
+    let stragglers: Arc<Mutex<Vec<StragglerReading>>> = Arc::new(Mutex::new(Vec::new()));
     let monitor = if ctx.fault.enabled {
         let health = health.clone();
         let stop = monitor_stop.clone();
         let interval = ctx.fault.heartbeat_interval;
         let timeout_ms = ctx.fault.rank_timeout.as_millis() as u64;
+        let scfg = ctx.fault.straggler;
+        let confirmed = stragglers.clone();
         Some(std::thread::spawn(move || {
+            let n = health.n_ranks();
+            let mut slow_since: Vec<Option<std::time::Instant>> = vec![None; n];
+            let mut flagged = vec![false; n];
             while !stop.load(Ordering::Acquire) {
-                for r in 0..health.n_ranks() {
+                for r in 0..n {
                     if health.is_done(r) || health.is_dead(r) {
                         continue;
                     }
-                    if health.millis_since_beat(r) > timeout_ms {
+                    if presumed_wedged(
+                        health.millis_since_beat(r),
+                        timeout_ms,
+                        health.millis_since_progress(r),
+                        health.step_ewma_ms(r),
+                    ) {
                         health.mark_dead(r);
+                    }
+                }
+                // Straggler scan (telemetry is free; action is gated on the
+                // policy at the phase boundary).
+                let judged: Vec<f64> = (0..n)
+                    .filter(|&r| !health.is_dead(r) && health.step_samples(r) >= scfg.min_samples)
+                    .filter_map(|r| health.step_ewma_ms(r))
+                    .collect();
+                if judged.len() >= 2 {
+                    let med = median_ms(judged);
+                    for r in 0..n {
+                        if flagged[r] || health.is_dead(r) || health.is_done(r) {
+                            continue;
+                        }
+                        let over = med > 0.0
+                            && health.step_samples(r) >= scfg.min_samples
+                            && health
+                                .step_ewma_ms(r)
+                                .is_some_and(|e| e > scfg.slow_factor * med);
+                        if !over {
+                            slow_since[r] = None;
+                            continue;
+                        }
+                        let since = *slow_since[r].get_or_insert_with(std::time::Instant::now);
+                        if since.elapsed() >= scfg.grace {
+                            flagged[r] = true;
+                            confirmed.lock().unwrap().push(StragglerReading {
+                                rank: r,
+                                step_ms_ewma: health.step_ewma_ms(r).unwrap_or(0.0),
+                                median_ms: med,
+                            });
+                        }
                     }
                 }
                 std::thread::sleep(interval);
@@ -1098,7 +1229,10 @@ fn run_phase_on_mesh(
     }
 
     match casualty_err.or(victim_err) {
-        None => PhaseOutcome::Complete(outputs),
+        None => PhaseOutcome::Complete {
+            outputs,
+            stragglers: stragglers.lock().unwrap().clone(),
+        },
         Some(err) => PhaseOutcome::Failed {
             dead: health.dead_ranks(),
             err,

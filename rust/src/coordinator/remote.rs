@@ -73,10 +73,10 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::collectives::transport::{frame, tcp};
 use crate::collectives::{
-    self, BackoffConfig, ChaosCounters, ChaosTransport, Collective, Counters, Health, MeshError,
-    Transport, Wire,
+    self, presumed_wedged, BackoffConfig, ChaosCounters, ChaosTransport, Collective, Counters,
+    Health, MeshError, Transport, Wire,
 };
-use crate::config::TrainConfig;
+use crate::config::{StragglerPolicy, TrainConfig};
 use crate::data::{Augment, Loader, SynthDataset};
 use crate::runtime::{ArchManifest, BackendSpec, ComputeClient, ComputeService, HostTensor};
 use crate::util::json::Json;
@@ -89,8 +89,8 @@ use super::metrics::Metrics;
 use super::snapshot::Snapshotter;
 use super::worker::{self, PhaseCtx, WorkerOutput, WorkerState};
 use super::{
-    apply_resume, effective_workers, load_resume, open_durability, run_config_hash, RecoveryEvent,
-    RejoinEvent, TrainReport, Trainer,
+    apply_resume, effective_workers, load_resume, median_ms, open_durability, run_config_hash,
+    DemotionEvent, RecoveryEvent, RejoinEvent, StragglerReading, TrainReport, Trainer,
 };
 
 /// Frame-size cap on the control plane. Control frames are tiny JSON, but
@@ -174,6 +174,16 @@ struct WorkerConn {
     stale_ms: u64,
     /// Data-mesh link reconnects the worker reported with its last beat.
     reconnects: u64,
+    /// Last completed-step index the worker's beats have reported (the
+    /// step-progress signal that distinguishes *slow* from *wedged*).
+    last_step: u64,
+    /// When `last_step` last moved (or the worker was handed a phase).
+    last_advance: Instant,
+    /// Local-work EWMA the worker reported with its last beat, ms.
+    step_ms_ewma: Option<f64>,
+    /// How many steps back that EWMA — stragglers are only judged once
+    /// `fault.straggler.min_samples` steps have been observed.
+    step_samples: u64,
 }
 
 fn new_conn(stream: TcpStream) -> WorkerConn {
@@ -184,6 +194,10 @@ fn new_conn(stream: TcpStream) -> WorkerConn {
         last_beat: Instant::now(),
         stale_ms: 0,
         reconnects: 0,
+        last_step: 0,
+        last_advance: Instant::now(),
+        step_ms_ewma: None,
+        step_samples: 0,
     }
 }
 
@@ -219,6 +233,10 @@ enum RemoteOutcome {
         state: WorkerState,
         metrics: Metrics,
         blob: Vec<u8>,
+        /// Stragglers the attempt confirmed (chronically over the slow
+        /// threshold for the grace window) — handed to the boundary
+        /// policy, never acted on mid-phase.
+        stragglers: Vec<StragglerReading>,
     },
     /// The attempt lost ranks (indices local to the attempt's mesh).
     Failed { dead: Vec<usize>, err: anyhow::Error },
@@ -349,6 +367,7 @@ fn run_phase_remote(
         let c = &mut conns[id];
         c.last_beat = Instant::now();
         c.stale_ms = 0;
+        c.last_advance = Instant::now();
         let sent = c.open
             && frame::write_control(&mut c.stream, &mut a.wbuf, &prep.to_string()).is_ok()
             && frame::write_blob(&mut c.stream, &mut a.wbuf, &state_bytes).is_ok();
@@ -367,6 +386,11 @@ fn run_phase_remote(
     }
 
     let tick = Duration::from_millis(50);
+    let scfg = cfg.fault.straggler;
+    let mut stragglers: Vec<StragglerReading> = Vec::new();
+    let mut slow_since: Vec<Option<Instant>> = vec![None; workers];
+    let mut flagged = vec![false; workers];
+    let mut last_scan = Instant::now();
     while !a.all_resolved() {
         publish_ranks(board, conns, &a);
         if let Some(dl) = a.drain_deadline {
@@ -383,30 +407,74 @@ fn run_phase_remote(
                 break;
             }
         }
-        let ev = match rx.recv_timeout(tick) {
-            Ok(ev) => ev,
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                // A hung worker never closes its socket — only its silence
-                // gives it away. Effective staleness stacks the control-hop
-                // silence on the staleness the last beat itself reported.
-                if cfg.fault.enabled {
-                    for r in 0..workers {
-                        if a.resolved(r) {
-                            continue;
-                        }
-                        let c = &conns[a.participants[r]];
-                        let staleness = c.last_beat.elapsed().as_millis() as u64 + c.stale_ms;
-                        if staleness > rank_timeout_ms {
-                            a.declare_dead(
-                                conns,
-                                r,
-                                anyhow!("rank {r} heartbeat stale for {staleness} ms"),
-                            );
-                        }
+        // Liveness + straggler scan, throttled to the tick (a busy control
+        // socket keeps events flowing, so this cannot live only in the
+        // recv-timeout arm). A hung worker never closes its socket — only
+        // its silence gives it away. Effective staleness stacks the
+        // control-hop silence on the staleness the last beat reported; a
+        // rank whose beats still report *step progress* at its own recorded
+        // pace is slow, not wedged, and is spared the death sentence.
+        if cfg.fault.enabled && last_scan.elapsed() >= tick {
+            last_scan = Instant::now();
+            for r in 0..workers {
+                if a.resolved(r) {
+                    continue;
+                }
+                let c = &conns[a.participants[r]];
+                let staleness = c.last_beat.elapsed().as_millis() as u64 + c.stale_ms;
+                let advance_age = c.last_advance.elapsed().as_millis() as u64;
+                if presumed_wedged(staleness, rank_timeout_ms, advance_age, c.step_ms_ewma) {
+                    a.declare_dead(
+                        conns,
+                        r,
+                        anyhow!(
+                            "rank {r} heartbeat stale for {staleness} ms with no step \
+                             progress for {advance_age} ms"
+                        ),
+                    );
+                }
+            }
+            // Straggler detection is telemetry (policy acts only at the
+            // boundary): a rank judged against the live-cluster median,
+            // sustained over `grace`, is confirmed once per attempt.
+            let judged: Vec<f64> = (0..workers)
+                .filter(|&r| !a.dead[r] && conns[a.participants[r]].step_samples >= scfg.min_samples)
+                .filter_map(|r| conns[a.participants[r]].step_ms_ewma)
+                .collect();
+            if judged.len() >= 2 {
+                let med = median_ms(judged);
+                for r in 0..workers {
+                    if flagged[r] || a.resolved(r) {
+                        continue;
+                    }
+                    let c = &conns[a.participants[r]];
+                    let over = med > 0.0
+                        && c.step_samples >= scfg.min_samples
+                        && c.step_ms_ewma.is_some_and(|e| e > scfg.slow_factor * med);
+                    if !over {
+                        slow_since[r] = None;
+                        continue;
+                    }
+                    let since = *slow_since[r].get_or_insert_with(Instant::now);
+                    if since.elapsed() >= scfg.grace {
+                        flagged[r] = true;
+                        stragglers.push(StragglerReading {
+                            rank: r,
+                            step_ms_ewma: c.step_ms_ewma.unwrap_or(0.0),
+                            median_ms: med,
+                        });
+                        eprintln!(
+                            "[coordinator] rank {r} confirmed as a straggler \
+                             ({:.1} ms/step vs {med:.1} ms median)",
+                            c.step_ms_ewma.unwrap_or(0.0)
+                        );
                     }
                 }
-                continue;
             }
+        }
+        let ev = match rx.recv_timeout(tick) {
+            Ok(ev) => ev,
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
             Err(mpsc::RecvTimeoutError::Disconnected) => bail!("control event channel closed"),
         };
         match ev {
@@ -465,13 +533,31 @@ fn run_phase_remote(
                         }
                     }
                     "beat" => {
-                        conns[id].last_beat = Instant::now();
-                        conns[id].stale_ms =
+                        let c = &mut conns[id];
+                        c.last_beat = Instant::now();
+                        c.stale_ms =
                             j.opt("stale_ms").and_then(|s| s.as_f64().ok()).unwrap_or(0.0) as u64;
-                        conns[id].reconnects = j
+                        c.reconnects = j
                             .opt("reconnects")
                             .and_then(|s| s.as_f64().ok())
                             .unwrap_or(0.0) as u64;
+                        // Step-progress telemetry: a changed completed-step
+                        // index is what lets the monitor tell *advancing
+                        // slowly* apart from *wedged*.
+                        if let Some(step) =
+                            j.opt("step").and_then(|s| s.as_f64().ok()).map(|s| s as u64)
+                        {
+                            if step != c.last_step {
+                                c.last_step = step;
+                                c.last_advance = Instant::now();
+                            }
+                        }
+                        if let Some(ms) = j.opt("step_ms").and_then(|s| s.as_f64().ok()) {
+                            c.step_ms_ewma = Some(ms);
+                        }
+                        if let Some(n) = j.opt("step_samples").and_then(|s| s.as_f64().ok()) {
+                            c.step_samples = n as u64;
+                        }
                     }
                     "done" => {
                         let metrics = match j.opt("metrics") {
@@ -529,6 +615,7 @@ fn run_phase_remote(
             state: st,
             metrics,
             blob: bytes,
+            stragglers,
         })
     } else {
         let err = a
@@ -671,6 +758,12 @@ struct RankStatus {
     stale_ms: u64,
     /// Data-mesh link reconnects the worker has survived so far.
     reconnects: u64,
+    /// Local-work EWMA the rank last reported, ms (`null` until it has
+    /// completed a step).
+    step_ms_ewma: Option<f64>,
+    /// `step_ms_ewma / median(live ranks)` — > 1 means slower than the
+    /// cluster, `fault.straggler.slow_factor` is the demotion threshold.
+    straggler_score: Option<f64>,
 }
 
 /// Live run state served over the HTTP endpoint.
@@ -684,6 +777,7 @@ struct StatusBoard {
     step: usize,
     recoveries: usize,
     rejoins: usize,
+    demotions: usize,
     last_loss: f64,
     /// Step of the newest durable snapshot (`null` until one lands).
     last_snapshot: Option<u64>,
@@ -707,6 +801,7 @@ impl StatusBoard {
             step: 0,
             recoveries: 0,
             rejoins: 0,
+            demotions: 0,
             last_loss: f64::NAN,
             last_snapshot: None,
             journal_bytes: 0,
@@ -726,6 +821,14 @@ impl StatusBoard {
                     ("beat_age_ms", Json::Num(r.beat_age_ms as f64)),
                     ("stale_ms", Json::Num(r.stale_ms as f64)),
                     ("reconnects", Json::Num(r.reconnects as f64)),
+                    (
+                        "step_ms_ewma",
+                        r.step_ms_ewma.map(Json::Num).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "straggler_score",
+                        r.straggler_score.map(Json::Num).unwrap_or(Json::Null),
+                    ),
                 ])
             })
             .collect();
@@ -739,6 +842,7 @@ impl StatusBoard {
             ("step", num(self.step)),
             ("recoveries", num(self.recoveries)),
             ("rejoins", num(self.rejoins)),
+            ("demotions", num(self.demotions)),
             (
                 "last_loss",
                 if self.last_loss.is_finite() {
@@ -763,6 +867,16 @@ impl StatusBoard {
 
 /// Refresh the board's per-rank liveness from the attempt in flight.
 fn publish_ranks(board: &Mutex<StatusBoard>, conns: &[WorkerConn], a: &Attempt<'_>) {
+    // Straggler scores are relative to the live cluster: each rank's EWMA
+    // over the median of every live rank that has reported one.
+    let live: Vec<f64> = a
+        .participants
+        .iter()
+        .enumerate()
+        .filter(|&(r, &id)| !a.dead[r] && conns[id].step_ms_ewma.is_some())
+        .filter_map(|(_, &id)| conns[id].step_ms_ewma)
+        .collect();
+    let med = if live.is_empty() { 0.0 } else { median_ms(live) };
     let ranks = a
         .participants
         .iter()
@@ -775,6 +889,11 @@ fn publish_ranks(board: &Mutex<StatusBoard>, conns: &[WorkerConn], a: &Attempt<'
                 beat_age_ms: c.last_beat.elapsed().as_millis() as u64,
                 stale_ms: c.stale_ms,
                 reconnects: c.reconnects,
+                step_ms_ewma: c.step_ms_ewma,
+                straggler_score: match (c.step_ms_ewma, med > 0.0) {
+                    (Some(e), true) => Some(e / med),
+                    _ => None,
+                },
             }
         })
         .collect();
@@ -1055,6 +1174,7 @@ pub fn run_coordinator(
     let mut restarts_used = 0usize;
     let mut recoveries: Vec<RecoveryEvent> = Vec::new();
     let mut rejoins: Vec<RejoinEvent> = Vec::new();
+    let mut demotions: Vec<DemotionEvent> = Vec::new();
     let mut seq: u64 = 0;
     for (pi, plan) in plans.iter().enumerate() {
         let global_batch = plan.per_worker * plan.workers;
@@ -1178,9 +1298,55 @@ pub fn run_coordinator(
                 })?;
             }
             match run_phase_remote(&mut conns, &rx, &participants, &ap, &state, cfg, &board)? {
-                RemoteOutcome::Complete { state: st, metrics, blob } => {
+                RemoteOutcome::Complete { state: st, metrics, blob, stragglers } => {
                     all_metrics.merge(metrics);
                     state = st;
+                    // Straggler demotion: acted on here — after the phase
+                    // completed cleanly — so no collective is ever aborted
+                    // and no restart budget is burned. Under `demote` with
+                    // a rejoin grace the rank is readmitted on the spot
+                    // (the event is the record; the width never changes).
+                    // Otherwise the worker is retired like a dead machine
+                    // and the next boundary re-plans around it — though a
+                    // demoted (not evicted) process may still come back
+                    // through the join door.
+                    if cfg.fault.enabled
+                        && cfg.fault.straggler.policy != StragglerPolicy::Observe
+                    {
+                        for s in &stragglers {
+                            let evicted =
+                                cfg.fault.straggler.policy == StragglerPolicy::Evict;
+                            let readmitted = !evicted && !cfg.fault.rejoin_grace.is_zero();
+                            if !readmitted {
+                                conns[participants[s.rank]].usable = false;
+                            }
+                            eprintln!(
+                                "[coordinator] rank {} (worker {}) {} at step {} \
+                                 ({:.1} ms/step vs {:.1} ms median)",
+                                s.rank,
+                                participants[s.rank],
+                                if evicted {
+                                    "evicted as a straggler"
+                                } else if readmitted {
+                                    "demoted and readmitted as a straggler"
+                                } else {
+                                    "demoted as a straggler"
+                                },
+                                plan.first_step + plan.steps,
+                                s.step_ms_ewma,
+                                s.median_ms,
+                            );
+                            demotions.push(DemotionEvent {
+                                phase_first_step: plan.first_step + plan.steps,
+                                rank: s.rank,
+                                step_ms_ewma: s.step_ms_ewma,
+                                median_ms: s.median_ms,
+                                evicted,
+                                readmitted,
+                            });
+                        }
+                        board.lock().unwrap().demotions = demotions.len();
+                    }
                     // Boundary snapshot: rank 0's done-blob is already the
                     // exact checkpoint byte format — hand it to the
                     // background writer unre-encoded and move on.
@@ -1335,6 +1501,7 @@ pub fn run_coordinator(
         max_lane_concurrency: svc.stats().max_concurrent(),
         recoveries,
         rejoins,
+        demotions,
         snapshots,
     })
 }
@@ -1779,14 +1946,25 @@ fn run_one_phase(
         }
         // Forward liveness: the rank beats its local table from inside
         // compute/recv loops; this relays how stale that is, and the
-        // coordinator stacks its own control-hop silence on top.
-        let beat = obj(vec![
+        // coordinator stacks its own control-hop silence on top. Beats
+        // also carry step telemetry — the last completed step index (the
+        // slow-vs-wedged signal) and the local-work EWMA (the straggler
+        // signal) — because this process's Health table only tracks its
+        // own rank; the coordinator is where cluster-wide medians live.
+        let mut pairs = vec![
             ("type", Json::Str("beat".into())),
             ("seq", num(seq as usize)),
             ("stale_ms", Json::Num(health.millis_since_beat(rank) as f64)),
             ("reconnects", Json::Num(counters.reconnects_seen() as f64)),
-        ]);
-        let _ = frame::write_control(ctl, wbuf, &beat.to_string());
+        ];
+        if let Some(step) = health.last_step(rank) {
+            pairs.push(("step", Json::Num(step as f64)));
+        }
+        if let Some(ewma) = health.step_ewma_ms(rank) {
+            pairs.push(("step_ms", Json::Num(ewma)));
+            pairs.push(("step_samples", Json::Num(health.step_samples(rank) as f64)));
+        }
+        let _ = frame::write_control(ctl, wbuf, &obj(pairs).to_string());
     }
 
     match phase.join() {
@@ -1842,6 +2020,7 @@ mod tests {
         b.workers_live = 4;
         b.recoveries = 1;
         b.rejoins = 2;
+        b.demotions = 1;
         b.last_snapshot = Some(24);
         b.journal_bytes = 512;
         b.ranks = vec![
@@ -1851,6 +2030,8 @@ mod tests {
                 beat_age_ms: 120,
                 stale_ms: 40,
                 reconnects: 3,
+                step_ms_ewma: Some(31.25),
+                straggler_score: Some(1.0),
             },
             RankStatus {
                 worker: 4,
@@ -1858,6 +2039,8 @@ mod tests {
                 beat_age_ms: 9_000,
                 stale_ms: 8_500,
                 reconnects: 0,
+                step_ms_ewma: None,
+                straggler_score: None,
             },
         ];
         let j = Json::parse(&b.status_json()).expect("/status body must be valid JSON");
@@ -1865,6 +2048,7 @@ mod tests {
         assert_eq!(j.get("workers_expected").unwrap().as_usize().unwrap(), 4);
         assert_eq!(j.get("recoveries").unwrap().as_usize().unwrap(), 1);
         assert_eq!(j.get("rejoins").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("demotions").unwrap().as_usize().unwrap(), 1);
         // NAN loss (no steps yet) serializes as null, not as invalid JSON.
         assert!(matches!(j.get("last_loss").unwrap(), Json::Null));
         assert_eq!(j.get("last_snapshot").unwrap().as_usize().unwrap(), 24);
@@ -1878,7 +2062,16 @@ mod tests {
         assert!(matches!(ranks[0].get("usable").unwrap(), Json::Bool(true)));
         assert_eq!(ranks[0].get("beat_age_ms").unwrap().as_f64().unwrap() as u64, 120);
         assert_eq!(ranks[0].get("reconnects").unwrap().as_f64().unwrap() as u64, 3);
+        // Straggler telemetry rides the same rank objects: the EWMA and
+        // the median-relative score round-trip as numbers...
+        assert_eq!(ranks[0].get("step_ms_ewma").unwrap().as_f64().unwrap(), 31.25);
+        assert_eq!(ranks[0].get("straggler_score").unwrap().as_f64().unwrap(), 1.0);
         assert!(matches!(ranks[1].get("usable").unwrap(), Json::Bool(false)));
         assert_eq!(ranks[1].get("stale_ms").unwrap().as_f64().unwrap() as u64, 8_500);
+        // ...and a rank that has not completed a step serves null, not 0
+        // (a zero would read as "infinitely fast" to a median-relative
+        // score consumer).
+        assert!(matches!(ranks[1].get("step_ms_ewma").unwrap(), Json::Null));
+        assert!(matches!(ranks[1].get("straggler_score").unwrap(), Json::Null));
     }
 }

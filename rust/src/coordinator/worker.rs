@@ -352,6 +352,7 @@ pub fn run_phase(
 
         for local_step in 0..ctx.steps {
             let mut sw = Stopwatch::new();
+            let step_start = Instant::now();
             let global_step = ctx.first_step + local_step;
             // Per-step liveness tick (recv waits beat on their own; this one
             // covers the compute-heavy stretch between collectives).
@@ -359,6 +360,11 @@ pub fn run_phase(
             // Deterministic fault injection: this rank dies here, this attempt.
             let mut poison_loss = false;
             if let Some(inj) = ctx.fault.inject {
+                // Chronic slowness first: the rank survives, it just pays an
+                // extra sleep every step — local work the telemetry must see.
+                if let Some(ms) = inj.slow_millis(ctx.attempt, rank, global_step) {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
                 if inj.fires(ctx.attempt, rank, global_step) {
                     match inj.kind {
                         FaultKind::Panic => {
@@ -379,6 +385,9 @@ pub fn run_phase(
                             // must trip on every rank.
                             poison_loss = true;
                         }
+                        // Non-fatal by construction: `fires` is false for
+                        // Slow (handled above via `slow_millis`).
+                        FaultKind::Slow { .. } => unreachable!("Slow never fires fatally"),
                     }
                 }
             }
@@ -566,6 +575,15 @@ pub fn run_phase(
                     .with_context(|| format!("rank {rank} step {global_step}: apply_step"))?;
             }
             let t_apply = apply0.elapsed().as_secs_f64();
+
+            // Straggler telemetry: record this step's *local work* (elapsed
+            // minus every reduction window). In a synchronous collective the
+            // total step time converges to the slowest rank's pace, so only
+            // the comm-excluded share identifies the culprit. Recorded before
+            // rank 0's in-phase eval so eval time never inflates the EWMA.
+            let work_secs =
+                (step_start.elapsed().as_secs_f64() - t_comm - t_comm_hidden).max(0.0);
+            ep.note_step(global_step as u64, Duration::from_secs_f64(work_secs));
 
             if rank == 0 {
                 metrics.push(StepMetric {

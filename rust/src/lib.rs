@@ -83,6 +83,25 @@
 //! path (detect + resume + replay-from-snapshot). See `README.md`
 //! § Durable runs.
 //!
+//! The stack also **defends against stragglers** — ranks that are slow,
+//! not dead, which synchronous SGD otherwise lets tax every step. Each
+//! rank's *local work* time (comm excluded) feeds a per-rank EWMA in the
+//! [`collectives::Health`] table; heartbeats carry step progress, so a
+//! stale-but-advancing rank is never presumed wedged
+//! ([`collectives::presumed_wedged`]), and `/status` scores every rank
+//! against the live-cluster median. Under `[fault.straggler]`
+//! (`config::StragglerConfig` — `slow_factor` / `min_samples` /
+//! `grace_ms` / `policy = observe|demote|evict`) a confirmed chronic
+//! straggler is drained at the next **phase boundary** via the elastic
+//! re-plan (no aborted collective, no restart budget; readmitted on the
+//! spot under `rejoin_grace_ms`, keeping the run byte-identical) and
+//! recorded in `TrainReport::demotions`.
+//! `simnet::HeteroModel` models heterogeneous clusters (per-rank
+//! compute/link jitter plus a seeded straggler election shared with the
+//! chaos harness), and `simnet::ClusterModel::{hetero_step_time,
+//! straggler_time}` price the straggler tax and the tolerate-vs-demote
+//! decision. See `README.md` § Straggler mitigation.
+//!
 //! Python never runs at training time under either backend; the
 //! coordinator drives everything from Rust worker threads.
 //!

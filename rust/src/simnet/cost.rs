@@ -19,7 +19,7 @@
 use crate::cluster::LinkClass;
 
 use super::compute::ComputeModel;
-use super::linkmodel::LinkModel;
+use super::linkmodel::{HeteroModel, LinkModel};
 
 /// Collective algorithm, as priced by the model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -308,6 +308,58 @@ impl RestartCost {
     }
 }
 
+/// Wall-clock comparison of the two straggler policies over the remainder
+/// of a run: **tolerate** (keep the slow rank; every synchronous step runs
+/// at its pace) vs **demote** (detect it, drain it at a phase boundary,
+/// finish at healthy pace on the shrunk world). See
+/// [`ClusterModel::straggler_time`].
+#[derive(Debug, Clone)]
+pub struct StragglerCost {
+    /// Keeping the straggler: all remaining steps at its pace.
+    pub tolerate_secs: f64,
+    /// Time to confirm the straggler: `min_samples` steps of telemetry
+    /// plus the sustained-over-threshold grace — all spent at its pace,
+    /// because synchrony means detection happens while being slowed.
+    pub detect_secs: f64,
+    /// Boundary re-plan: control work + redistributing the FP32 state on
+    /// the shrunk world (same shape as a recovery re-plan, but with no
+    /// aborted steps to replay — demotion drains at a boundary).
+    pub replan_secs: f64,
+    /// The steps left after detection, at healthy pace on the survivors
+    /// (global batch preserved, per-worker batch stepped up).
+    pub healthy_secs: f64,
+}
+
+impl StragglerCost {
+    /// Total wall of the demote policy.
+    pub fn demote_secs(&self) -> f64 {
+        self.detect_secs + self.replan_secs + self.healthy_secs
+    }
+
+    /// Whether demoting beats tolerating for this remainder.
+    pub fn demotion_pays(&self) -> bool {
+        self.demote_secs() < self.tolerate_secs
+    }
+}
+
+/// One synchronous step on a heterogeneous cluster: per-rank step times
+/// under a [`HeteroModel`], and the tax the slowest rank levies on
+/// everyone. See [`ClusterModel::hetero_step_time`].
+#[derive(Debug, Clone)]
+pub struct HeteroStep {
+    /// Median rank's step time — the pace a homogeneous cluster of the
+    /// typical machine would run at.
+    pub median_secs: f64,
+    /// The slowest rank's step time — under synchronous SGD, *the* step
+    /// time: every collective waits for it.
+    pub slowest_secs: f64,
+    /// Which rank sets the pace.
+    pub slowest_rank: usize,
+    /// `slowest − median`: the per-step wall-clock cost of synchrony on
+    /// this cluster (what straggler mitigation can win back).
+    pub straggler_tax_secs: f64,
+}
+
 /// Coordinator-side control latency of a re-plan (tiny JSON frames, one
 /// round trip per rank) — shared by the recovery and rejoin models.
 const REPLAN_CONTROL_SECS: f64 = 0.05;
@@ -500,6 +552,102 @@ impl ClusterModel {
             detect_secs: coordinator_down_secs,
             resume_secs,
             replay_secs: replay_steps as f64 * step,
+        }
+    }
+
+    /// One synchronous step on a cluster whose ranks carry per-rank
+    /// compute/link multipliers from a [`HeteroModel`]. Rank `r`'s own
+    /// step costs `compute × compute_multiplier(r) + comm ×
+    /// link_multiplier(r)`; the *synchronous* step is the slowest rank's,
+    /// and `straggler_tax_secs` is what that slowest rank costs everyone
+    /// per step relative to the cluster median.
+    pub fn hetero_step_time(
+        &self,
+        algo: Algo,
+        n_ranks: usize,
+        per_worker_batch: usize,
+        grad_bytes: f64,
+        bn_bytes: f64,
+        hetero: &HeteroModel,
+    ) -> HeteroStep {
+        let base = self.step_time(algo, n_ranks, per_worker_batch, grad_bytes, bn_bytes);
+        let comm = base.grad_comm_secs + base.bn_comm_secs;
+        let per_rank: Vec<f64> = (0..n_ranks)
+            .map(|r| {
+                base.compute_secs * hetero.compute_multiplier(r)
+                    + comm * hetero.link_multiplier(r)
+            })
+            .collect();
+        let slowest_rank = per_rank
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(r, _)| r)
+            .unwrap_or(0);
+        let slowest_secs = per_rank[slowest_rank];
+        let mut sorted = per_rank;
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let median_secs = sorted[(sorted.len() - 1) / 2];
+        HeteroStep {
+            median_secs,
+            slowest_secs,
+            slowest_rank,
+            straggler_tax_secs: slowest_secs - median_secs,
+        }
+    }
+
+    /// Price the straggler-defense trade for a run with `remaining_steps`
+    /// left when one rank goes `slow_factor ×` slow on compute:
+    ///
+    /// - **tolerate**: every remaining synchronous step runs at the
+    ///   straggler's pace (compute stretched, comm unchanged).
+    /// - **demote**: `detect_steps` steps of telemetry plus `grace_secs`
+    ///   of sustained-over-threshold confirmation (all at straggler pace),
+    ///   one boundary re-plan (control + FP32 state redistribution on the
+    ///   survivors — no aborted work to replay, demotion drains at a
+    ///   boundary), then the rest at healthy pace on `n_ranks − 1` ranks
+    ///   with the global batch preserved.
+    ///
+    /// Comparing the two (`StragglerCost::demotion_pays`) is the analytic
+    /// form of the `[fault.straggler]` policy choice, and the
+    /// heterogeneous-cluster half of the simnet roadmap item.
+    #[allow(clippy::too_many_arguments)]
+    pub fn straggler_time(
+        &self,
+        algo_full: Algo,
+        algo_after: Algo,
+        n_ranks: usize,
+        per_worker_batch: usize,
+        grad_bytes: f64,
+        bn_bytes: f64,
+        remaining_steps: usize,
+        slow_factor: f64,
+        detect_steps: usize,
+        grace_secs: f64,
+    ) -> StragglerCost {
+        let base = self.step_time(algo_full, n_ranks, per_worker_batch, grad_bytes, bn_bytes);
+        // Synchrony: the straggler's stretched compute sets everyone's pace.
+        let slow_step = base.compute_secs * slow_factor.max(1.0)
+            + base.grad_comm_secs
+            + base.bn_comm_secs;
+        let survivors = (n_ranks - 1).max(1);
+        // Constant global batch: the survivors absorb the drained rank's
+        // share, so their per-worker batch (and compute) steps up.
+        let per_worker_after = (per_worker_batch * n_ranks).div_ceil(survivors);
+        let state_bytes = 4.0 * grad_bytes; // fp32 params + momenta vs fp16 grads
+        let replan_secs = REPLAN_CONTROL_SECS
+            + self
+                .collective_cost(algo_after, survivors, state_bytes)
+                .total_secs();
+        let healthy_step = self
+            .step_time(algo_after, survivors, per_worker_after, grad_bytes, bn_bytes)
+            .total_secs();
+        let detect = detect_steps.min(remaining_steps);
+        StragglerCost {
+            tolerate_secs: remaining_steps as f64 * slow_step,
+            detect_secs: detect as f64 * slow_step + grace_secs,
+            replan_secs,
+            healthy_secs: (remaining_steps - detect) as f64 * healthy_step,
         }
     }
 
@@ -950,6 +1098,127 @@ mod tests {
             10.0,
         );
         assert!((r.replay_secs - 2.0 * r_half.replay_secs).abs() < 1e-9);
+    }
+
+    /// Straggler pricing decomposes additively, tolerate scales linearly
+    /// with the remainder, and the policy comparison flips the right way:
+    /// demotion pays for a long remainder at a big slow factor, tolerating
+    /// wins when the run is nearly over.
+    #[test]
+    fn straggler_time_decomposition_and_tradeoff() {
+        let m = ClusterModel::abci_v100();
+        let n = 1024usize;
+        let algo = torus_at(n);
+        let algo_after = torus_at(n - 1);
+        let s = m.straggler_time(
+            algo,
+            algo_after,
+            n,
+            32,
+            RESNET50_GRAD_BYTES_FP16,
+            RESNET50_BN_BYTES_FP32,
+            10_000,
+            4.0,
+            8,
+            2.0,
+        );
+        assert!(
+            (s.demote_secs() - (s.detect_secs + s.replan_secs + s.healthy_secs)).abs() < 1e-12
+        );
+        // tolerate = remaining × slow step, exactly: twice the remainder is
+        // twice the tolerate bill
+        let s2 = m.straggler_time(
+            algo,
+            algo_after,
+            n,
+            32,
+            RESNET50_GRAD_BYTES_FP16,
+            RESNET50_BN_BYTES_FP32,
+            20_000,
+            4.0,
+            8,
+            2.0,
+        );
+        assert!((s2.tolerate_secs - 2.0 * s.tolerate_secs).abs() < 1e-9);
+        // a 4× straggler over 10k remaining steps: draining it pays
+        assert!(s.demotion_pays(), "demote {} !< tolerate {}", s.demote_secs(), s.tolerate_secs);
+        // ...but with almost nothing left to run, the re-plan is pure loss
+        let tail = m.straggler_time(
+            algo,
+            algo_after,
+            n,
+            32,
+            RESNET50_GRAD_BYTES_FP16,
+            RESNET50_BN_BYTES_FP32,
+            8,
+            4.0,
+            8,
+            2.0,
+        );
+        assert!(!tail.demotion_pays());
+        // detection never exceeds the remainder; with detect >= remaining
+        // there is nothing left to run at healthy pace
+        assert_eq!(tail.healthy_secs, 0.0);
+        // a slow_factor at 1 (no straggler) makes tolerate the healthy
+        // baseline: demote can only add re-plan overhead on fewer ranks
+        let none = m.straggler_time(
+            algo,
+            algo_after,
+            n,
+            32,
+            RESNET50_GRAD_BYTES_FP16,
+            RESNET50_BN_BYTES_FP32,
+            10_000,
+            1.0,
+            8,
+            0.0,
+        );
+        assert!(!none.demotion_pays());
+    }
+
+    /// The heterogeneous step model: the slowest rank sets the synchronous
+    /// pace, the tax is slowest − median, and a uniform cluster pays none.
+    #[test]
+    fn hetero_step_exposes_the_straggler_tax() {
+        let m = ClusterModel::abci_v100();
+        let n = 256usize;
+        let algo = torus_at(n);
+        let hetero = HeteroModel {
+            seed: 42,
+            compute_jitter: 0.05,
+            link_jitter: 0.05,
+            straggler_prob: 0.1,
+            straggler_factor: 4.0,
+        };
+        let h = m.hetero_step_time(
+            algo,
+            n,
+            32,
+            RESNET50_GRAD_BYTES_FP16,
+            RESNET50_BN_BYTES_FP32,
+            &hetero,
+        );
+        let base = m
+            .step_time(algo, n, 32, RESNET50_GRAD_BYTES_FP16, RESNET50_BN_BYTES_FP32)
+            .total_secs();
+        // the elected straggler dominates: the sync step carries roughly
+        // its 4× compute, and the pace-setter is an elected rank
+        assert!(h.slowest_secs > h.median_secs);
+        assert!(hetero.is_straggler(h.slowest_rank));
+        assert!((h.straggler_tax_secs - (h.slowest_secs - h.median_secs)).abs() < 1e-12);
+        // jitter alone keeps the median within a few percent of nominal
+        assert!(h.median_secs >= base && h.median_secs < base * 1.2);
+        // a uniform cluster pays no tax and runs at the nominal step
+        let u = m.hetero_step_time(
+            algo,
+            n,
+            32,
+            RESNET50_GRAD_BYTES_FP16,
+            RESNET50_BN_BYTES_FP32,
+            &HeteroModel::uniform(0),
+        );
+        assert!((u.straggler_tax_secs).abs() < 1e-12);
+        assert!((u.slowest_secs - base).abs() < 1e-9);
     }
 
     #[test]

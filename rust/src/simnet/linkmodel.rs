@@ -17,6 +17,78 @@
 //! per row.
 
 use crate::cluster::LinkClass;
+use crate::collectives::transport::chaos::unit;
+use crate::collectives::transport::mix64;
+
+/// Per-rank hardware heterogeneity: deterministic compute/link speed
+/// multipliers, plus a seeded election of chronic stragglers.
+///
+/// Real clusters are never uniform — thermal throttling, a flaky DIMM, a
+/// shared-rack neighbour, one oversubscribed leaf switch — and under
+/// *synchronous* SGD the whole cluster converges to the slowest rank's
+/// pace. This model prices that: every rank gets a jitter multiplier that
+/// is a pure function of `(seed, rank)` (so the functional and analytic
+/// paths agree on who is slow), and a `straggler_prob` fraction of ranks
+/// is elected chronically slow by `straggler_factor`. The election uses
+/// the **same key schedule as the chaos harness**
+/// (`ChaosConfig::rank_slow_multiplier`), so a chaos run and its simnet
+/// projection pick the same victims for the same seed.
+#[derive(Debug, Clone)]
+pub struct HeteroModel {
+    pub seed: u64,
+    /// Peak relative compute jitter across healthy ranks: each rank's
+    /// compute multiplier is uniform in `[1, 1 + compute_jitter)`.
+    pub compute_jitter: f64,
+    /// Peak relative link jitter: link multiplier in `[1, 1 + link_jitter)`.
+    pub link_jitter: f64,
+    /// Fraction of ranks elected chronic stragglers.
+    pub straggler_prob: f64,
+    /// Extra compute multiplier an elected straggler carries.
+    pub straggler_factor: f64,
+}
+
+/// Rank-election key salt — keep identical to the chaos harness's
+/// `rank_slow_multiplier` so both paths elect the same slow ranks.
+const SLOW_ELECTION_SALT: u64 = 0x5106_C0DE;
+
+impl HeteroModel {
+    /// A perfectly homogeneous cluster (all multipliers exactly 1).
+    pub fn uniform(seed: u64) -> Self {
+        Self {
+            seed,
+            compute_jitter: 0.0,
+            link_jitter: 0.0,
+            straggler_prob: 0.0,
+            straggler_factor: 1.0,
+        }
+    }
+
+    /// Whether `rank` is elected a chronic straggler under this seed.
+    pub fn is_straggler(&self, rank: usize) -> bool {
+        if self.straggler_prob <= 0.0 {
+            return false;
+        }
+        let key = mix64(self.seed ^ mix64(rank as u64 ^ SLOW_ELECTION_SALT));
+        unit(key) < self.straggler_prob
+    }
+
+    /// Compute-speed multiplier for `rank` (≥ 1; 1 = nominal V100 pace).
+    pub fn compute_multiplier(&self, rank: usize) -> f64 {
+        let key = mix64(self.seed ^ mix64(rank as u64 ^ 0xC0_FFEE));
+        let base = 1.0 + self.compute_jitter.max(0.0) * unit(key);
+        if self.is_straggler(rank) {
+            base * self.straggler_factor.max(1.0)
+        } else {
+            base
+        }
+    }
+
+    /// Link-time multiplier for `rank`'s hops (≥ 1; 1 = nominal fabric).
+    pub fn link_multiplier(&self, rank: usize) -> f64 {
+        let key = mix64(self.seed ^ mix64(rank as u64 ^ 0x11_4B));
+        1.0 + self.link_jitter.max(0.0) * unit(key)
+    }
+}
 
 /// α-β parameters for one cluster fabric.
 #[derive(Debug, Clone)]
@@ -95,6 +167,77 @@ impl LinkModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn hetero_multipliers_are_deterministic_and_bounded() {
+        let h = HeteroModel {
+            seed: 7,
+            compute_jitter: 0.05,
+            link_jitter: 0.10,
+            straggler_prob: 0.25,
+            straggler_factor: 3.0,
+        };
+        let n = 64usize;
+        let comp: Vec<f64> = (0..n).map(|r| h.compute_multiplier(r)).collect();
+        let link: Vec<f64> = (0..n).map(|r| h.link_multiplier(r)).collect();
+        // pure functions of (seed, rank)
+        assert_eq!(comp, (0..n).map(|r| h.compute_multiplier(r)).collect::<Vec<_>>());
+        assert_eq!(link, (0..n).map(|r| h.link_multiplier(r)).collect::<Vec<_>>());
+        // healthy ranks jitter inside [1, 1+jitter); stragglers carry the
+        // factor on top of their jitter
+        for r in 0..n {
+            if h.is_straggler(r) {
+                assert!(comp[r] >= 3.0 && comp[r] < 3.0 * 1.05, "rank {r}: {}", comp[r]);
+            } else {
+                assert!(comp[r] >= 1.0 && comp[r] < 1.05, "rank {r}: {}", comp[r]);
+            }
+            assert!(link[r] >= 1.0 && link[r] < 1.10);
+        }
+        // ~25% of ranks elected; not none, not all
+        let slow = (0..n).filter(|&r| h.is_straggler(r)).count();
+        assert!(slow > 0 && slow < n / 2, "{slow} stragglers of {n}");
+        // a different seed elects a different set
+        let other = HeteroModel { seed: 8, ..h.clone() };
+        assert_ne!(
+            (0..n).map(|r| h.is_straggler(r)).collect::<Vec<_>>(),
+            (0..n).map(|r| other.is_straggler(r)).collect::<Vec<_>>(),
+        );
+        // the uniform cluster is exactly multiplier-free
+        let u = HeteroModel::uniform(7);
+        for r in 0..n {
+            assert_eq!(u.compute_multiplier(r), 1.0);
+            assert_eq!(u.link_multiplier(r), 1.0);
+            assert!(!u.is_straggler(r));
+        }
+    }
+
+    /// The simnet election and the chaos harness's must agree rank-by-rank
+    /// for the same seed — a chaos run and its analytic projection pick the
+    /// same victims.
+    #[test]
+    fn hetero_election_matches_chaos_harness() {
+        let h = HeteroModel {
+            seed: 42,
+            compute_jitter: 0.0,
+            link_jitter: 0.0,
+            straggler_prob: 0.25,
+            straggler_factor: 4.0,
+        };
+        let chaos = crate::collectives::ChaosConfig {
+            enabled: true,
+            slow_prob: 0.25,
+            slow_factor: 4.0,
+            seed: 42,
+            ..Default::default()
+        };
+        for r in 0..64 {
+            assert_eq!(
+                h.is_straggler(r),
+                chaos.rank_slow_multiplier(r) > 1.0,
+                "rank {r} election diverged between simnet and chaos"
+            );
+        }
+    }
 
     #[test]
     fn congestion_kicks_in_past_free_zone() {

@@ -12,6 +12,13 @@
 //! * [`cost`]     — closed-form per-phase collective pricing → Tables 2 & 6,
 //! * [`event`]    — hop-by-hop discrete-event replay validating the closed
 //!   form.
+//!
+//! Clusters are also modelled as *heterogeneous*: [`HeteroModel`] gives
+//! every rank deterministic compute/link multipliers (seeded jitter plus a
+//! chronic-straggler election that matches the chaos harness key-for-key),
+//! [`ClusterModel::hetero_step_time`] exposes the per-step straggler tax
+//! synchrony levies, and [`ClusterModel::straggler_time`] prices the
+//! tolerate-vs-demote policy choice behind `[fault.straggler]`.
 
 pub mod compute;
 pub mod cost;
@@ -20,8 +27,8 @@ pub mod linkmodel;
 
 pub use compute::{ComputeModel, RESNET50_BN_BYTES_FP32, RESNET50_GRAD_BYTES_FP16};
 pub use cost::{
-    Algo, ClusterModel, CollectiveCost, OverlappedStep, RecoveryCost, RejoinCost, RestartCost,
-    StepBreakdown,
+    Algo, ClusterModel, CollectiveCost, HeteroStep, OverlappedStep, RecoveryCost, RejoinCost,
+    RestartCost, StepBreakdown, StragglerCost,
 };
 pub use event::{simulate_collective, simulate_collective_events};
-pub use linkmodel::LinkModel;
+pub use linkmodel::{HeteroModel, LinkModel};

@@ -79,6 +79,8 @@ fn noisy(seed: u64) -> ChaosConfig {
         drop_delay_us: 500,
         dup_prob: 0.2,
         reorder_prob: 0.25,
+        slow_prob: 0.0,
+        slow_factor: 4.0,
     }
 }
 
@@ -211,6 +213,29 @@ fn bucketed_pipeline_is_bit_identical_under_chaos() {
         }
     }
     assert_eq!(clean_next, chaos_next, "next-tag watermark moved under chaos");
+    assert!(chaos_ctr.total() > 0, "noisy seed injected nothing");
+}
+
+/// A seed-elected slow rank only stretches injected sleeps — a
+/// heterogeneous cluster must still produce bit-identical reductions
+/// (straggling changes *when*, never *what*).
+#[test]
+fn slow_ranks_are_bit_identical_to_a_clean_run() {
+    let n = 4usize;
+    let seed = 0xC4A0_510Au64;
+    let ins = inputs(seed, n, 257);
+    let coll: Arc<dyn Collective> = Arc::from(by_name("halving-doubling", n).unwrap());
+    let (clean_out, _, clean_tag) =
+        run_schedule(TcpMesh::loopback(n).unwrap(), &coll, &ins, Wire::F16);
+    let mut cfg = noisy(seed);
+    cfg.slow_prob = 1.0; // every rank elected slow — worst case
+    cfg.slow_factor = 3.0;
+    let (eps, chaos_ctr) = chaotic_mesh(n, &cfg);
+    let (slow_out, _, slow_tag) = run_schedule(eps, &coll, &ins, Wire::F16);
+    for (rank, (c, s)) in clean_out.iter().zip(&slow_out).enumerate() {
+        assert_eq!(bits(c), bits(s), "rank {rank} diverges under slowdown");
+    }
+    assert_eq!(clean_tag, slow_tag, "tag watermark moved under slowdown");
     assert!(chaos_ctr.total() > 0, "noisy seed injected nothing");
 }
 

@@ -1,0 +1,221 @@
+//! Straggler-defense tests: telemetry, graceful demotion, and the
+//! no-perturbation guarantees.
+//!
+//! The injected slowdown ([`InjectedFault::slow_at`]) is a pure
+//! `thread::sleep` in the step loop — it never touches numerics — so every
+//! scenario here has a bit-identity oracle:
+//!
+//!   * a chronically *slow but advancing* rank must survive
+//!     `fault.rank_timeout` (the false-positive fix: step progress in the
+//!     heartbeat telemetry suppresses the death sentence while the rank is
+//!     provably advancing),
+//!   * under `policy = "demote"` with a rejoin grace the straggler is
+//!     confirmed, recorded in [`TrainReport::demotions`] and readmitted at
+//!     the same boundary — so the final checkpoint stays byte-identical to
+//!     an undisturbed run's,
+//!   * the demotion decision is seeded/deterministic: two identical runs
+//!     demote the same rank at the same phase boundaries,
+//!   * detection enabled with no straggler present changes nothing:
+//!     checkpoints are byte-identical to the subsystem being off.
+
+use std::time::Duration;
+
+use flashsgd::config::{FaultConfig, InjectedFault, StragglerPolicy, TrainConfig};
+use flashsgd::coordinator::Trainer;
+use flashsgd::sched::{BatchSchedule, LrSchedule};
+
+fn base_config(name: &str, ranks: usize, steps: usize) -> TrainConfig {
+    TrainConfig {
+        name: name.into(),
+        arch: "tiny".into(),
+        collective: "torus".into(),
+        grad_wire: "fp16".into(),
+        label_smoothing: 0.1,
+        lr: LrSchedule::Const { lr: 0.5, momentum: 0.9 },
+        batch: BatchSchedule::constant(8, ranks, 8),
+        weight_decay: 5e-5,
+        seed: 7,
+        max_steps: steps,
+        eval_every: 0,
+        eval_batches: 4,
+        train_size: 2048,
+        compute_lanes: 0,
+        bucket_bytes: 8192,
+        fault: FaultConfig::default(),
+        transport: flashsgd::config::TransportConfig::default(),
+        checkpoint: flashsgd::config::CheckpointConfig::default(),
+    }
+}
+
+/// Train `cfg` with a checkpoint and return (report, checkpoint bytes).
+fn run_with_ckpt(cfg: TrainConfig, dir: &std::path::Path) -> (flashsgd::coordinator::TrainReport, Vec<u8>) {
+    let ckpt = dir.join(format!("{}.ckpt", cfg.name));
+    let report = Trainer::new(cfg).unwrap().with_checkpoint(&ckpt).run().unwrap();
+    (report, std::fs::read(&ckpt).unwrap())
+}
+
+/// The heartbeat false-positive fix: a rank sleeping far past
+/// `rank_timeout` every step — but completing steps, with its telemetry
+/// showing the pace — must NOT be declared dead. Pre-fix, staleness alone
+/// was a death sentence and this run would burn a recovery (or die).
+#[test]
+fn slow_but_advancing_rank_survives_rank_timeout() {
+    let dir = std::env::temp_dir().join(format!("fsgd-slow-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut cfg = base_config("slow-advancing", 4, 6);
+    cfg.fault.heartbeat_interval = Duration::from_millis(25);
+    cfg.fault.rank_timeout = Duration::from_millis(400);
+    // Every step, rank 1 sleeps 600 ms — 1.5× the rank timeout. Its beats
+    // go stale mid-step, but its completed-step telemetry keeps advancing.
+    cfg.fault.inject = Some(InjectedFault::slow_at(1, 0, 600));
+    let (report, slow_bytes) = run_with_ckpt(cfg, &dir);
+    assert_eq!(report.summary.steps, 6);
+    assert!(
+        report.recoveries.is_empty(),
+        "a slow-but-advancing rank must not be declared dead: {:?}",
+        report.recoveries
+    );
+    assert!(report.demotions.is_empty(), "policy observe never demotes");
+
+    // The slowdown is a pure sleep and the default policy is observe-only:
+    // the run must be byte-identical to an undisturbed run with the whole
+    // fault subsystem off.
+    let mut clean = base_config("slow-advancing-clean", 4, 6);
+    clean.fault = FaultConfig::disabled();
+    let (_, clean_bytes) = run_with_ckpt(clean, &dir);
+    assert_eq!(
+        slow_bytes, clean_bytes,
+        "observe-policy telemetry must be a zero-numerics-impact feature"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Straggler config for the demotion tests: judge after 3 steps, confirm
+/// immediately (zero grace), demote.
+fn demote_fault(slow_rank: usize, millis: u64) -> FaultConfig {
+    let mut f = FaultConfig::default();
+    f.heartbeat_interval = Duration::from_millis(10);
+    f.rank_timeout = Duration::from_secs(10);
+    // Readmit-at-the-boundary mode: the demotion is recorded but the world
+    // keeps its width, so the run's numerics never change.
+    f.rejoin_grace = Duration::from_secs(20);
+    f.straggler.policy = StragglerPolicy::Demote;
+    f.straggler.slow_factor = 2.0;
+    f.straggler.min_samples = 3;
+    f.straggler.grace = Duration::ZERO;
+    f.inject = Some(InjectedFault::slow_at(slow_rank, 0, 100));
+    f
+}
+
+/// Under `policy = "demote"` with a rejoin grace: the seeded slow rank is
+/// confirmed and recorded, the drain happens at a phase boundary (no
+/// mid-collective abort, no restart burned), and because the rank is
+/// readmitted on the spot the final checkpoint is byte-identical to an
+/// undisturbed run's.
+#[test]
+fn demoted_straggler_is_recorded_at_a_boundary_and_checkpoint_unchanged() {
+    let dir = std::env::temp_dir().join(format!("fsgd-demote-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // 16 steps = two 8-step phases; rank 1 sleeps 400 ms/step — far past
+    // 2× a debug-mode tiny-arch step — so its local-work EWMA crosses the
+    // threshold within `min_samples` steps of each phase.
+    let mut cfg = base_config("demote-grace", 4, 16);
+    cfg.fault = demote_fault(1, 400);
+    let (report, demoted_bytes) = run_with_ckpt(cfg, &dir);
+    assert_eq!(report.summary.steps, 16);
+    assert!(
+        report.recoveries.is_empty(),
+        "demotion must not burn the restart budget: {:?}",
+        report.recoveries
+    );
+    assert!(
+        !report.demotions.is_empty(),
+        "the seeded straggler must be confirmed and recorded"
+    );
+    for d in &report.demotions {
+        assert_eq!(d.rank, 1, "only the seeded slow rank may be demoted");
+        assert!(d.readmitted && !d.evicted, "grace mode readmits in place");
+        // drained at a phase boundary: step 8 or 16, never mid-phase
+        assert!(
+            d.phase_first_step == 8 || d.phase_first_step == 16,
+            "demotion at step {} is not a phase boundary",
+            d.phase_first_step
+        );
+        assert!(
+            d.step_ms_ewma > d.median_ms,
+            "a demoted rank must be over the median ({} vs {})",
+            d.step_ms_ewma,
+            d.median_ms
+        );
+    }
+
+    // Byte-identity oracle: the sleep never touched numerics and the
+    // readmission kept the width, so the checkpoint matches a run with the
+    // fault subsystem off entirely.
+    let mut clean = base_config("demote-grace-clean", 4, 16);
+    clean.fault = FaultConfig::disabled();
+    let (_, clean_bytes) = run_with_ckpt(clean, &dir);
+    assert_eq!(
+        demoted_bytes, clean_bytes,
+        "demote+rejoin_grace must keep the final checkpoint byte-identical"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Seeded determinism: the same config produces the same demotion decision
+/// — same rank, same phase boundaries — run after run. (The EWMA values
+/// are wall-clock and may wiggle; the *decision* may not.)
+#[test]
+fn seeded_slowdown_demotes_deterministically() {
+    let dir = std::env::temp_dir().join(format!("fsgd-det-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let run = |name: &str| {
+        let mut cfg = base_config(name, 4, 16);
+        cfg.fault = demote_fault(1, 400);
+        let (report, bytes) = run_with_ckpt(cfg, &dir);
+        let decisions: Vec<(usize, usize, bool, bool)> = report
+            .demotions
+            .iter()
+            .map(|d| (d.rank, d.phase_first_step, d.evicted, d.readmitted))
+            .collect();
+        (decisions, bytes)
+    };
+    let (first, bytes_a) = run("det-a");
+    let (second, bytes_b) = run("det-b");
+    assert!(!first.is_empty(), "the seeded straggler must be demoted");
+    assert_eq!(first, second, "same seed, same config => same demotions");
+    assert_eq!(bytes_a, bytes_b, "and bit-identical training output");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Detection armed but nothing slow: the straggler machinery must be
+/// invisible — no demotions, and training output bit-identical to the
+/// whole fault subsystem being off.
+#[test]
+fn armed_detection_with_no_straggler_is_bit_identical() {
+    let dir = std::env::temp_dir().join(format!("fsgd-nostrag-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut armed = base_config("armed", 4, 10);
+    armed.fault = demote_fault(1, 400);
+    armed.fault.inject = None; // armed, but nobody is slow
+    let (report, armed_bytes) = run_with_ckpt(armed, &dir);
+    assert!(
+        report.demotions.is_empty(),
+        "a healthy cluster must never be demoted: {:?}",
+        report.demotions
+    );
+    assert!(report.recoveries.is_empty());
+
+    let mut off = base_config("armed-off", 4, 10);
+    off.fault = FaultConfig::disabled();
+    let (_, off_bytes) = run_with_ckpt(off, &dir);
+    assert_eq!(
+        armed_bytes, off_bytes,
+        "armed straggler detection must be a zero-numerics-impact feature"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
